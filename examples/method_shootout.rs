@@ -1,0 +1,81 @@
+//! Method shootout: fine-tune every method in the zoo on one task family
+//! and print a ranked comparison — a fast way to reproduce the paper's
+//! headline ordering on your own machine.
+//!
+//! Run: `cargo run --release --example method_shootout -- [--task gsm] [--steps 150]`
+
+use lift::data::tasks::{TaskFamily, TaskMixSource, TaskSet};
+use lift::lift::LiftCfg;
+use lift::methods::{make_method, Method, Scope};
+use lift::runtime::{model_exec::ModelExec, Runtime};
+use lift::train::{eval, pretrain, train, TrainCfg};
+use lift::util::cli::Args;
+
+fn family_of(name: &str) -> TaskFamily {
+    match name {
+        "gsm" => TaskFamily::GsmHard,
+        "addsub" => TaskFamily::AddSub,
+        "boolq" => TaskFamily::BoolQ,
+        "arc" => TaskFamily::ArcC,
+        "gpqa" => TaskFamily::Gpqa,
+        _ => TaskFamily::GsmHard,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    lift::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let steps = args.usize("steps", 150);
+    let rank = args.usize("rank", 32);
+    let fam = family_of(&args.str("task", "gsm"));
+
+    let rt = Runtime::from_default()?;
+    let exec = ModelExec::load(&rt, "tiny")?;
+    let base = pretrain::ensure_pretrained(&rt, &exec, 1500, 1)?;
+    let corpus = pretrain::world(&exec);
+    let set = TaskSet::generate(fam, &corpus.vocab, &corpus.kg, 800, 100, 1);
+    println!(
+        "task {} | {} train / {} test | rank {rank} | {steps} steps\n",
+        fam.name(),
+        set.train.len(),
+        set.test.len()
+    );
+
+    let mut board: Vec<(String, f64, usize)> = Vec::new();
+    for m in [
+        "lift", "full", "lora", "dora", "pissa", "s2ft", "sift", "spiel",
+        "weight_mag", "grad_mag", "movement", "random",
+    ] {
+        let mut params = base.clone();
+        let mut src = TaskMixSource {
+            sets: vec![set.clone()],
+            batch: exec.preset.batch,
+            seq: exec.preset.seq,
+        };
+        let mut ctx = pretrain::make_ctx(&rt, &exec, 1);
+        let mut method = make_method(
+            m,
+            rank,
+            LiftCfg { rank, ..Default::default() },
+            100,
+            Scope::default(),
+        )?;
+        let cfg = TrainCfg {
+            steps,
+            lr: lift::exp::harness::default_lr(m),
+            warmup_frac: 0.03,
+            log_every: 0,
+            seed: 1,
+        };
+        train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg)?;
+        let acc = eval::accuracy(&exec, &params, &set.test)?;
+        println!("  finished {:<18} acc {acc:.2}", method.name());
+        board.push((method.name(), acc, method.trainable()));
+    }
+    board.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    println!("\n==== leaderboard ({}) ====", fam.name());
+    for (i, (name, acc, trainable)) in board.iter().enumerate() {
+        println!("{:>2}. {:<18} {acc:>7.2}%   ({trainable} trainable)", i + 1, name);
+    }
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Perturbation probe (the paper's §4 intuition, interactively):
+//! noise the principal weights of the pretrained model and watch fact
+//! recall collapse while weight-magnitude/random noise barely moves it.
+//!
+//! Run: `cargo run --release --example perturbation_probe [-- --scale 0.02]`
+
+use lift::analysis::perturb;
+use lift::lift::{LiftCfg, Selector};
+use lift::runtime::{model_exec::ModelExec, Linalg, Runtime};
+use lift::train::{eval, pretrain};
+use lift::util::cli::Args;
+use lift::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    lift::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let scale = args.f32("scale", 0.02);
+    let frac = args.f32("frac", 0.05) as f64;
+
+    let rt = Runtime::from_default()?;
+    let exec = ModelExec::load(&rt, "tiny")?;
+    let params = pretrain::ensure_pretrained(&rt, &exec, 1500, 1)?;
+    let corpus = pretrain::world(&exec);
+    let la = Linalg::new(&rt.client);
+    let total: usize = lift::model::trainable_matrices(&exec.preset, false)
+        .iter()
+        .map(|&i| params[i].len())
+        .sum();
+    let n = (total as f64 * frac) as usize;
+
+    println!("perturbing {n} of {total} matrix params (scale {scale}):\n");
+    let ppl0 = eval::perplexity(&exec, &params, &corpus, 4, 99)?;
+    let rec0 = eval::fact_recall(&rt, &exec, &params, &corpus, 50, 7)?;
+    println!("{:<14} {:>10} {:>12}", "selector", "ppl", "P(answer)");
+    println!("{:<14} {:>10.3} {:>12.4}   (clean model)", "-", ppl0, rec0);
+    for (name, sel) in [
+        ("lift", Selector::Lift),
+        ("weight_mag", Selector::WeightMag),
+        ("random", Selector::Random),
+    ] {
+        let mut rng = Rng::new(7);
+        let cfg = LiftCfg { rank: 32, ..Default::default() };
+        let noisy = perturb::perturb(&la, &exec.preset, &params, sel, &cfg, n, scale, &mut rng)?;
+        let ppl = eval::perplexity(&exec, &noisy, &corpus, 4, 99)?;
+        let rec = eval::fact_recall(&rt, &exec, &noisy, &corpus, 50, 7)?;
+        println!("{name:<14} {ppl:>10.3} {rec:>12.4}");
+    }
+    println!("\n(the LIFT row should be dramatically worse — those are the principal weights)");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! Quickstart: the smallest complete LIFT workflow.
+//!
+//! 1. load the `tiny` preset's AOT artifacts,
+//! 2. pretrain (or load the cached checkpoint),
+//! 3. fine-tune the top-5%-principal weights with LIFT on arithmetic,
+//! 4. evaluate, and show the memory ledger.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use lift::data::tasks::{TaskFamily, TaskMixSource, TaskSet};
+use lift::lift::LiftCfg;
+use lift::methods::{make_method, Method, Scope};
+use lift::runtime::{model_exec::ModelExec, Runtime};
+use lift::train::{eval, pretrain, train, TrainCfg};
+
+fn main() -> anyhow::Result<()> {
+    lift::util::logging::init();
+    let rt = Runtime::from_default()?;
+    let exec = ModelExec::load(&rt, "tiny")?;
+    println!(
+        "model: {} ({:.2}M params, d={}, {} layers)",
+        exec.preset.name,
+        exec.preset.n_params() as f64 / 1e6,
+        exec.preset.d,
+        exec.preset.layers
+    );
+
+    // pretrained base (cached under runs/ after the first call)
+    let mut params = pretrain::ensure_pretrained(&rt, &exec, 1500, 1)?;
+    let corpus = pretrain::world(&exec);
+    println!(
+        "pretrained held-out ppl: {:.2}",
+        eval::perplexity(&exec, &params, &corpus, 4, 99)?
+    );
+
+    // fine-tune with LIFT on two arithmetic families
+    let families = [TaskFamily::AddSub, TaskFamily::GsmHard];
+    let sets: Vec<TaskSet> = families
+        .iter()
+        .map(|&f| TaskSet::generate(f, &corpus.vocab, &corpus.kg, 800, 100, 1))
+        .collect();
+    println!("\nbefore fine-tuning:");
+    for s in &sets {
+        println!("  {:<10} {:.1}%", s.family.name(), eval::accuracy(&exec, &params, &s.test)?);
+    }
+
+    let mut src = TaskMixSource {
+        sets: sets.clone(),
+        batch: exec.preset.batch,
+        seq: exec.preset.seq,
+    };
+    let mut ctx = pretrain::make_ctx(&rt, &exec, 1);
+    let mut method = make_method(
+        "lift",
+        32,
+        LiftCfg { rank: 32, ..Default::default() },
+        100,
+        Scope::default(),
+    )?;
+    let cfg = TrainCfg {
+        steps: 300,
+        lr: 1e-3,
+        warmup_frac: 0.03,
+        log_every: 50,
+        seed: 1,
+    };
+    let log = train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg)?;
+
+    println!("\nafter {} LIFT steps ({:.0}s):", cfg.steps, log.seconds);
+    for s in &sets {
+        println!("  {:<10} {:.1}%", s.family.name(), eval::accuracy(&exec, &params, &s.test)?);
+    }
+    println!(
+        "\ntrainable: {} of {} params ({:.1}%), optimizer state: {} KiB",
+        method.trainable(),
+        exec.preset.n_params(),
+        100.0 * method.trainable() as f64 / exec.preset.n_params() as f64,
+        method.opt_bytes() / 1024
+    );
+    Ok(())
+}

@@ -1,0 +1,163 @@
+"""AOT compiler: lower every L1/L2 graph to HLO text + write the manifest.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (in --outdir, default ../artifacts):
+    <preset>.train_step.hlo.txt     loss + full grads
+    <preset>.eval_step.hlo.txt      loss + greedy predictions
+    <preset>.logits_probe.hlo.txt   next-token distribution probe (Fig 2b)
+    svd_<m>x<n>_r<rp>.hlo.txt       subspace-iteration factors (q, b)
+    mask_<m>x<n>_r<rp>.hlo.txt      fused lowrank reconstruct+threshold mask
+    sparse_adam_<k>.hlo.txt         packed AdamW step, bucketed k
+    manifest.json                   the rust-side contract (shapes, order)
+
+Run: ``cd python && python -m compile.aot --outdir ../artifacts``
+(idempotent; the Makefile skips it when inputs are unchanged).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import PRESETS, make_lowered
+from .kernels.lowrank_mask import lowrank_mask
+from .kernels.sparse_adam import sparse_adam_step
+from .kernels.subspace_iter import svd_lowrank
+
+# LoRA-rank-equivalent ranks the canonical artifacts are built for; other
+# ranks run through the rust XlaBuilder path (runtime/linalg.rs), which is
+# cross-checked against these artifacts in rust/tests/.
+KERNEL_RANKS = (32, 128)
+OVERSAMPLE = 8
+POWER_ITERS = 2
+ADAM_BUCKETS = (4096, 16384, 65536, 262144, 1048576)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(outdir, name, text):
+    path = os.path.join(outdir, name)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {name}  ({len(text) / 1e6:.2f} MB)")
+    return name
+
+
+def lower_kernels(outdir, shapes):
+    """SVD + mask kernels per distinct trainable-matrix shape and rank."""
+    entries = {}
+    for (m, n) in sorted(shapes):
+        for r in KERNEL_RANKS:
+            rp = r + OVERSAMPLE
+            if rp > min(m, n):
+                continue
+            w = jax.ShapeDtypeStruct((m, n), jnp.float32)
+            g0 = jax.ShapeDtypeStruct((n, rp), jnp.float32)
+            low = jax.jit(
+                lambda w, g0: svd_lowrank(w, g0, power_iters=POWER_ITERS)
+            ).lower(w, g0)
+            name = f"svd_{m}x{n}_r{rp}"
+            entries[name] = _write(outdir, name + ".hlo.txt", to_hlo_text(low))
+
+            u = jax.ShapeDtypeStruct((m, rp), jnp.float32)
+            v = jax.ShapeDtypeStruct((n, rp), jnp.float32)
+            thr = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+            low = jax.jit(lambda u, v, t: lowrank_mask(u, v, t)).lower(u, v, thr)
+            name = f"mask_{m}x{n}_r{rp}"
+            entries[name] = _write(outdir, name + ".hlo.txt", to_hlo_text(low))
+    return entries
+
+
+def lower_sparse_adam(outdir):
+    entries = {}
+    for k in ADAM_BUCKETS:
+        vec = jax.ShapeDtypeStruct((k,), jnp.float32)
+        sc = jax.ShapeDtypeStruct((1, 8), jnp.float32)
+        low = jax.jit(sparse_adam_step).lower(vec, vec, vec, vec, sc)
+        name = f"sparse_adam_{k}"
+        entries[name] = _write(outdir, name + ".hlo.txt", to_hlo_text(low))
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--presets",
+        default="tiny,small,base",
+        help="comma list; 'e2e' (~100M params) is built on demand by "
+        "`make artifacts-e2e`",
+    )
+    ap.add_argument("--skip-kernels", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    mpath = os.path.join(args.outdir, "manifest.json")
+    manifest = {"presets": {}, "kernels": {}, "adam_buckets": list(ADAM_BUCKETS)}
+    if os.path.exists(mpath):
+        # incremental: keep already-built presets not in this invocation
+        with open(mpath) as fh:
+            old = json.load(fh)
+        manifest["presets"] = old.get("presets", {})
+        manifest["kernels"] = old.get("kernels", {})
+
+    shapes = set()
+    for pname in [p for p in args.presets.split(",") if p]:
+        preset = PRESETS[pname]
+        print(f"preset {pname}: ~{preset.n_params() / 1e6:.1f}M params")
+        execs = {}
+        for which in ("train_step", "eval_step", "logits_probe"):
+            low = make_lowered(preset, which)
+            execs[which] = _write(
+                args.outdir, f"{pname}.{which}.hlo.txt", to_hlo_text(low)
+            )
+        manifest["presets"][pname] = {
+            "d": preset.d,
+            "layers": preset.layers,
+            "ffn": preset.ffn,
+            "vocab": preset.vocab,
+            "seq": preset.seq,
+            "batch": preset.batch,
+            "heads": preset.heads,
+            "params": [
+                {"name": n, "shape": list(s)} for n, s in preset.param_spec()
+            ],
+            "executables": execs,
+        }
+        d, f = preset.d, preset.ffn
+        shapes |= {(d, d), (d, f), (f, d)}
+
+    if not args.skip_kernels:
+        manifest["kernels"].update(lower_kernels(args.outdir, shapes))
+        manifest["kernels"].update(lower_sparse_adam(args.outdir))
+        manifest["kernel_ranks"] = list(KERNEL_RANKS)
+        manifest["oversample"] = OVERSAMPLE
+        manifest["power_iters"] = POWER_ITERS
+
+    with open(mpath, "w") as fh:
+        json.dump(manifest, fh, indent=1, sort_keys=True)
+    print(f"wrote {mpath}")
+
+    # cross-language numerics fixtures (rust/tests/integration.rs)
+    from . import fixtures
+
+    fixture_presets = [p for p in ("tiny",) if p in manifest["presets"]]
+    if fixture_presets:
+        fixtures.emit(args.outdir, fixture_presets)
+
+
+if __name__ == "__main__":
+    main()

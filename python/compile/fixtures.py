@@ -1,0 +1,63 @@
+"""Cross-language numerics fixtures.
+
+Both sides construct identical inputs from closed-form formulas (no RNG to
+keep in sync), python records the jax-computed expectations in
+artifacts/fixtures.json, and rust/tests/integration.rs replays the same
+inputs through the compiled artifact and compares. This pins the whole
+AOT chain: lowering, text round-trip, rust literal marshalling, execution.
+"""
+
+import json
+import math
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from .model import PRESETS, eval_step
+
+
+def deterministic_params(preset):
+    """params[t] flat[k] = 0.02 * sin(0.37 k + t) — mirrored in rust."""
+    out = []
+    for t, (_, shape) in enumerate(preset.param_spec()):
+        n = int(np.prod(shape))
+        k = np.arange(n, dtype=np.float64)
+        vals = 0.02 * np.sin(0.37 * k + t)
+        out.append(jnp.asarray(vals.astype(np.float32)).reshape(shape))
+    return out
+
+
+def deterministic_batch(preset):
+    """tokens[i] = (7 i + 3) % vocab, targets shifted by 1, full mask."""
+    n = preset.batch * preset.seq
+    toks = ((7 * np.arange(n) + 3) % preset.vocab).astype(np.int32)
+    tgts = ((7 * (np.arange(n) + 1) + 3) % preset.vocab).astype(np.int32)
+    msk = np.ones(n, dtype=np.float32)
+    shape = (preset.batch, preset.seq)
+    return (
+        jnp.asarray(toks).reshape(shape),
+        jnp.asarray(tgts).reshape(shape),
+        jnp.asarray(msk).reshape(shape),
+    )
+
+
+def expectations(preset):
+    params = deterministic_params(preset)
+    tok, tgt, msk = deterministic_batch(preset)
+    loss, preds = eval_step(params, tok, tgt, msk, preset)
+    flat = np.asarray(preds).reshape(-1)
+    return {
+        "loss": float(loss),
+        "preds_head": [int(x) for x in flat[:32]],
+        "preds_sum": int(flat.astype(np.int64).sum()),
+    }
+
+
+def emit(outdir, preset_names=("tiny",)):
+    fix = {name: expectations(PRESETS[name]) for name in preset_names}
+    path = os.path.join(outdir, "fixtures.json")
+    with open(path, "w") as fh:
+        json.dump(fix, fh, indent=1)
+    print(f"  wrote fixtures.json ({list(fix)})")
+    return path

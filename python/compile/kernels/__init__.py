@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels for LIFT.
+
+Every kernel here is authored for TPU semantics (BlockSpec = HBM->VMEM
+schedule, MXU-shaped matmul tiles, VPU elementwise lanes) and lowered with
+``interpret=True`` so the resulting HLO runs on the CPU PJRT client (real
+TPU lowering emits Mosaic custom-calls the CPU plugin cannot execute).
+
+Kernels:
+  - lowrank_mask:   fused rank-r reconstruct + |.| >= threshold mask + count
+                    (the LIFT principal-weight selection hot-spot; never
+                    materializes W' in HBM)
+  - block_matmul:   tiled matmul used by the truncated-SVD subspace iteration
+  - sparse_adam:    packed sparse AdamW step (Algorithm 1, lines 13-18)
+  - flash_attn:     causal tiled attention with online softmax (model fwd)
+
+``ref.py`` carries the pure-jnp oracles; pytest + hypothesis sweep shapes
+and assert allclose.
+"""
+
+from . import ref  # noqa: F401
+from .lowrank_mask import lowrank_mask, lowrank_reconstruct  # noqa: F401
+from .block_matmul import block_matmul  # noqa: F401
+from .sparse_adam import sparse_adam_step  # noqa: F401
+from .flash_attn import flash_attention  # noqa: F401
+from .subspace_iter import svd_lowrank, orthonormalize  # noqa: F401

@@ -1,0 +1,117 @@
+"""Causal flash attention (forward) as a Pallas kernel + custom VJP.
+
+The model's fwd hot-spot. TPU adaptation of the FlashAttention schedule:
+instead of a threadblock per (head, q-tile) staging K/V through shared
+memory, the BlockSpec grid is (batch*heads, q-tiles); K and V for the head
+live in VMEM (seq <= 512 in our presets, so S*dh*4B <= 128 KiB) and the
+kernel streams kv-tiles with an online-softmax carry (m, l, acc) in
+registers/VMEM — numerically identical to materializing the (S, S) score
+matrix but with O(bq * S) live memory instead of O(S^2).
+
+Backward is a recompute VJP in plain jnp (the classic memory/compute trade:
+nothing but q, k, v is saved), so ``jax.grad`` through the model lowers the
+Pallas forward into the same HLO module as the rest of the train step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, bq, bkv, seq, scale):
+    qi = pl.program_id(1)
+    q = q_ref[0] * scale  # (bq, dh)
+    dh = q.shape[-1]
+    qpos = qi * bq + jax.lax.iota(jnp.int32, bq)  # absolute query rows
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k_blk = jax.lax.dynamic_slice(k_ref[0], (j * bkv, 0), (bkv, dh))
+        v_blk = jax.lax.dynamic_slice(v_ref[0], (j * bkv, 0), (bkv, dh))
+        s = jax.lax.dot_general(
+            q, k_blk, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (bq, bkv)
+        kpos = j * bkv + jax.lax.iota(jnp.int32, bkv)
+        causal = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(causal, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        return acc, m_new, l_new
+
+    acc = jnp.zeros((bq, dh), jnp.float32)
+    m_i = jnp.full((bq,), NEG_INF, jnp.float32)
+    l_i = jnp.zeros((bq,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, seq // bkv, body, (acc, m_i, l_i))
+    o_ref[0] = acc / l_i[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bkv"))
+def _flash_fwd(q, k, v, *, bq=128, bkv=128):
+    bh, seq, dh = q.shape
+    bq = min(bq, seq)
+    bkv = min(bkv, seq)
+    assert seq % bq == 0 and seq % bkv == 0, (seq, bq, bkv)
+    scale = 1.0 / (dh**0.5)
+    kernel = functools.partial(
+        _attn_fwd_kernel, bq=bq, bkv=bkv, seq=seq, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, seq // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, seq, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, seq, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def _attn_ref(q, k, v):
+    """Materializing causal attention (used by the recompute backward)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / (dh**0.5)
+    seq = q.shape[1]
+    causal = jnp.tril(jnp.ones((seq, seq), bool))
+    s = jnp.where(causal[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p, jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+@jax.custom_vjp
+def flash_attention(q, k, v):
+    """Causal attention over (batch*heads, seq, head_dim)."""
+    return _flash_fwd(q, k, v)
+
+
+def _vjp_fwd(q, k, v):
+    return _flash_fwd(q, k, v), (q, k, v)
+
+
+def _vjp_bwd(res, do):
+    q, k, v = res
+    dh = q.shape[-1]
+    scale = 1.0 / (dh**0.5)
+    p, _ = _attn_ref(q, k, v)
+    dv = jnp.einsum("bqk,bqd->bkd", p, do)
+    dp = jnp.einsum("bqd,bkd->bqk", do, v)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bqk,bkd->bqd", ds, k) * scale
+    dk = jnp.einsum("bqk,bqd->bkd", ds, q) * scale
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

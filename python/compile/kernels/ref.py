@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+pytest (python/tests/) asserts kernel-vs-ref allclose across hypothesis
+shape/rank sweeps; these functions are also the spec the rust side mirrors
+(rust/tests/ cross-checks runtime numerics against values exported here).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def lowrank_mask_ref(u, v, thr):
+    """Mask + count oracle for kernels.lowrank_mask (whole-matrix)."""
+    w = u @ v.T
+    mask = (jnp.abs(w) >= thr).astype(jnp.float32)
+    return mask, jnp.sum(mask).astype(jnp.int32)
+
+
+def lowrank_reconstruct_ref(u, v):
+    return u @ v.T
+
+
+def block_matmul_ref(x, y):
+    return x @ y
+
+
+def sparse_adam_ref(p, g, m, v, lr, b1, b2, eps, wd, step):
+    """AdamW oracle matching kernels.sparse_adam_step semantics."""
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    mhat = m_new / (1.0 - b1**step)
+    vhat = v_new / (1.0 - b2**step)
+    p_new = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p_new, m_new, v_new
+
+
+def attention_ref(q, k, v):
+    """Causal softmax attention over (bh, seq, dh)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / (dh**0.5)
+    seq = q.shape[1]
+    causal = jnp.tril(jnp.ones((seq, seq), bool))
+    s = jnp.where(causal[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def svd_lowrank_ref(w, r):
+    """Exact rank-r approximation via LAPACK (build-time oracle only)."""
+    u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+    return (u[:, :r] * s[:r]) @ vt[:r]
+
+
+def principal_mask_ref(w, r, k):
+    """End-to-end LIFT selection oracle: exact SVD_r -> top-k magnitude."""
+    wr = svd_lowrank_ref(w, r)
+    flat = jnp.abs(wr).reshape(-1)
+    thr = jnp.sort(flat)[-k]
+    return (jnp.abs(wr) >= thr).astype(jnp.float32)

@@ -1,0 +1,90 @@
+"""Packed sparse AdamW step — Algorithm 1 (lines 13-18) of the paper.
+
+LIFT stores optimizer state only for masked ("principal") weights, packed
+into contiguous vectors of length k. That packing is what makes the state
+VPU-friendly: a GPU implementation scatters through irregular indices; here
+the gather/scatter lives at the mask boundary (host / L3) and the optimizer
+math streams over dense lanes.
+
+All scalars (lr, betas, eps, weight decay, bias corrections) arrive in one
+(1, 8) SMEM-style block so a single executable serves every step t — the
+host precomputes 1 - beta^t.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# scalar slot layout in the (1, 8) control block
+LR, B1, B2, EPS, WD, BC1, BC2, _PAD = range(8)
+
+
+def _adam_kernel(p_ref, g_ref, m_ref, v_ref, s_ref, po_ref, mo_ref, vo_ref):
+    g = g_ref[...]
+    p = p_ref[...]
+    lr = s_ref[0, LR]
+    b1 = s_ref[0, B1]
+    b2 = s_ref[0, B2]
+    eps = s_ref[0, EPS]
+    wd = s_ref[0, WD]
+    bc1 = s_ref[0, BC1]
+    bc2 = s_ref[0, BC2]
+
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    mhat = m / bc1
+    vhat = v / bc2
+    update = mhat / (jnp.sqrt(vhat) + eps) + wd * p
+    po_ref[...] = p - lr * update
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("bk",))
+def sparse_adam_step(p, g, m, v, scalars, *, bk=4096):
+    """One AdamW step over packed principal-weight vectors.
+
+    Args:
+      p, g, m, v: (k,) packed params / grads / first / second moments.
+      scalars: (1, 8) [lr, b1, b2, eps, wd, 1-b1^t, 1-b2^t, pad].
+
+    Returns:
+      (p_new, m_new, v_new), each (k,).
+    """
+    (k,) = p.shape
+    bk = min(bk, k)
+    while k % bk:
+        bk -= 1
+    grid = (k // bk,)
+    return pl.pallas_call(
+        _adam_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((1, 8), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((bk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,
+    )(p, g, m, v, scalars)
+
+
+def pack_scalars(lr, b1, b2, eps, wd, step):
+    """Host-side helper mirrored in rust (runtime/sparse_adam.rs)."""
+    return jnp.array(
+        [[lr, b1, b2, eps, wd, 1.0 - b1**step, 1.0 - b2**step, 0.0]],
+        dtype=jnp.float32,
+    )

@@ -1,0 +1,100 @@
+"""Truncated SVD by blocked randomized subspace iteration.
+
+The HLO-text interchange (see DESIGN.md §3) cannot carry LAPACK
+custom-calls, so ``jnp.linalg.svd`` is off the table for anything that must
+execute from rust. This module builds the rank-r approximation from pure
+matmuls — which is exactly what the MXU wants anyway:
+
+    G0 ~ N(0, 1) (n, r+p)                      (host-supplied, fixed seed)
+    Y  = W G;  Q = orth(Y)                      range finder
+    repeat q times:  Q = orth(W orth(W^T Q))    power iterations
+    B  = Q^T W  (r+p, n)                        projection
+    top-r of W  ~=  Q[:, :r] B[:r, :]           (after small-side rotation)
+
+Orthonormalization is LAPACK-free too: ``orth(Y) = Y (Y^T Y + eps I)^{-1/2}``
+with the inverse square root of the small (r+p, r+p) Gram matrix computed by
+a Newton–Schulz iteration (matmuls only, quadratic convergence).
+
+The small-side rotation diagonalizes B B^T with a Jacobi sweep *on the
+host at build time only* — at runtime rust mirrors this with its own Jacobi
+eigensolver (util/eigh.rs). For mask selection the rotation is optional:
+the mask depends on Q Q^T W which is rotation-invariant.
+
+The heavy products W G / W^T Q go through the ``block_matmul`` Pallas
+kernel, so the whole factorization lowers into MXU-tiled HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .block_matmul import block_matmul
+
+_NEWTON_ITERS = 24
+# trace-relative ridge: keeps Newton-Schulz inside its convergence domain
+# even when Y is rank-deficient (true rank < rank + oversample).
+_EPS_REL = 1e-6
+
+
+def invsqrt_psd(a, iters=_NEWTON_ITERS):
+    """(A + eps I)^{-1/2} for small PSD A via coupled Newton–Schulz.
+
+    Denman–Beavers style coupling: Y -> A^{1/2}, Z -> A^{-1/2}; scaled so
+    the initial spectral radius is < sqrt(3) (convergence domain).
+    """
+    r = a.shape[0]
+    eye = jnp.eye(r, dtype=a.dtype)
+    a = a + (_EPS_REL * jnp.trace(a) + 1e-30) * eye
+    # trace bound: ||A||_2 <= tr(A), cheap and safe for PSD
+    c = jnp.trace(a)
+    y = a / c
+    z = eye
+
+    def body(_, yz):
+        y, z = yz
+        t = 0.5 * (3.0 * eye - z @ y)
+        return y @ t, t @ z
+
+    y, z = jax.lax.fori_loop(0, iters, body, (y, z))
+    return z / jnp.sqrt(c)
+
+
+def _orth_once(y):
+    g = jax.lax.dot_general(
+        y, y, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    return y @ invsqrt_psd(g)
+
+
+def orthonormalize(y):
+    """Column-orthonormalize via Gram inverse square root (matmul only).
+
+    Two passes: the second repairs the residual non-orthogonality the ridge
+    leaves behind when Y is rank-deficient (standard randomized-SVD trick).
+    """
+    return _orth_once(_orth_once(y))
+
+
+@functools.partial(jax.jit, static_argnames=("power_iters", "use_pallas"))
+def svd_lowrank(w, g0, *, power_iters=2, use_pallas=True):
+    """Rank-(r+p) factors of w: returns (q, b) with w ~= q @ b.
+
+    Args:
+      w: (m, n) matrix.
+      g0: (n, r+p) gaussian test matrix (host-seeded for determinism).
+      power_iters: number of (W W^T) power iterations (accuracy knob).
+      use_pallas: route the large matmuls through the Pallas tile kernel.
+
+    Returns:
+      q: (m, r+p) orthonormal range basis.
+      b: (r+p, n) projection Q^T W.
+    """
+    mm = block_matmul if use_pallas else (lambda x, y: x @ y)
+    y = mm(w, g0)  # (m, r+p)
+    q = orthonormalize(y)
+    for _ in range(power_iters):
+        z = orthonormalize(mm(w.T, q))  # (n, r+p)
+        q = orthonormalize(mm(w, z))
+    b = mm(q.T, w)  # (r+p, n)
+    return q, b

@@ -1,0 +1,196 @@
+"""Layer-2: the JAX transformer (fwd/bwd) that the rust coordinator drives.
+
+A LLaMA-shaped decoder-only LM — pre-norm RMSNorm, rotary attention, SwiGLU
+MLP, tied embeddings — so the paper's per-layer-type analyses (Query / Key /
+Value / Output / Gate / Up / Down) transfer verbatim. Attention routes
+through the Pallas flash kernel (kernels.flash_attn) with a recompute VJP,
+so ``jax.grad`` lowers kernel + model into one HLO module.
+
+Parameter order is the interchange contract with rust (model/preset.rs):
+
+    embed (V, d)
+    per layer l in 0..L:
+        attn_norm (d,)
+        wq (d, d)   wk (d, d)   wv (d, d)   wo (d, d)
+        mlp_norm (d,)
+        wgate (d, f)   wup (d, f)   wdown (f, d)
+    final_norm (d,)
+
+Everything is f32; matrices are stored (in, out) and applied as ``x @ W``.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_attn import flash_attention
+from .kernels.ref import attention_ref
+
+HEAD_DIM = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class Preset:
+    name: str
+    d: int
+    layers: int
+    ffn: int
+    vocab: int
+    seq: int
+    batch: int
+
+    @property
+    def heads(self) -> int:
+        assert self.d % HEAD_DIM == 0
+        return self.d // HEAD_DIM
+
+    def param_spec(self):
+        """[(name, shape)] in canonical interchange order."""
+        spec = [("embed", (self.vocab, self.d))]
+        for l in range(self.layers):
+            spec += [
+                (f"l{l}.attn_norm", (self.d,)),
+                (f"l{l}.wq", (self.d, self.d)),
+                (f"l{l}.wk", (self.d, self.d)),
+                (f"l{l}.wv", (self.d, self.d)),
+                (f"l{l}.wo", (self.d, self.d)),
+                (f"l{l}.mlp_norm", (self.d,)),
+                (f"l{l}.wgate", (self.d, self.ffn)),
+                (f"l{l}.wup", (self.d, self.ffn)),
+                (f"l{l}.wdown", (self.ffn, self.d)),
+            ]
+        spec.append(("final_norm", (self.d,)))
+        return spec
+
+    def n_params(self) -> int:
+        return sum(
+            int(jnp.prod(jnp.array(s, dtype=jnp.int64))) for _, s in self.param_spec()
+        )
+
+
+# Sized for a 1-core CPU box (DESIGN.md §3): `tiny`/`small` drive the
+# experiment tables, `base` the analyses, `e2e` is the ~100M-param preset
+# for the end-to-end example.
+PRESETS = {
+    "tiny": Preset("tiny", d=128, layers=4, ffn=352, vocab=512, seq=64, batch=16),
+    "small": Preset("small", d=256, layers=6, ffn=704, vocab=1024, seq=64, batch=8),
+    "base": Preset("base", d=384, layers=8, ffn=1024, vocab=4096, seq=128, batch=8),
+    "e2e": Preset("e2e", d=768, layers=12, ffn=2048, vocab=16384, seq=256, batch=4),
+}
+
+
+def rmsnorm(x, scale, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope(x):
+    """Rotary embedding over (B, S, H, hd)."""
+    b, s, h, hd = x.shape
+    half = hd // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(s, dtype=jnp.float32)
+    ang = t[:, None] * freqs[None, :]  # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(q, k, v, use_flash):
+    """(B, S, H, hd) -> (B, S, H, hd), causal."""
+    b, s, h, hd = q.shape
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    unfold = lambda t: t.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    if use_flash:
+        return unfold(flash_attention(fold(q), fold(k), fold(v)))
+    return unfold(attention_ref(fold(q), fold(k), fold(v)))
+
+
+def forward(params, tokens, preset: Preset, use_flash=True):
+    """Token ids (B, S) -> logits (B, S, V)."""
+    p = list(params)
+    embed = p[0]
+    final_norm = p[-1]
+    x = jnp.take(embed, tokens, axis=0)  # (B, S, d)
+    b, s, d = x.shape
+    h = preset.heads
+    for l in range(preset.layers):
+        base = 1 + 9 * l
+        attn_norm, wq, wk, wv, wo, mlp_norm, wgate, wup, wdown = p[base : base + 9]
+        hpre = rmsnorm(x, attn_norm)
+        q = rope((hpre @ wq).reshape(b, s, h, HEAD_DIM))
+        k = rope((hpre @ wk).reshape(b, s, h, HEAD_DIM))
+        v = (hpre @ wv).reshape(b, s, h, HEAD_DIM)
+        o = _attention(q, k, v, use_flash).reshape(b, s, d)
+        x = x + o @ wo
+        hpre = rmsnorm(x, mlp_norm)
+        x = x + (jax.nn.silu(hpre @ wgate) * (hpre @ wup)) @ wdown
+    x = rmsnorm(x, final_norm)
+    return x @ embed.T
+
+
+def masked_loss(params, tokens, targets, loss_mask, preset, use_flash=True):
+    """Mean masked cross-entropy (next-token targets pre-shifted by host)."""
+    logits = forward(params, tokens, preset, use_flash)
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logz, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    return jnp.sum(nll * loss_mask) / denom
+
+
+def train_step(params, tokens, targets, loss_mask, preset, use_flash=True):
+    """-> (loss, grad_0, ..., grad_{P-1}) in param_spec order."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: masked_loss(ps, tokens, targets, loss_mask, preset, use_flash)
+    )(list(params))
+    return (loss, *grads)
+
+
+def eval_step(params, tokens, targets, loss_mask, preset, use_flash=True):
+    """-> (loss, preds (B, S) i32): loss + greedy predictions."""
+    logits = forward(params, tokens, preset, use_flash)
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logz, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(loss_mask), 1.0)
+    loss = jnp.sum(nll * loss_mask) / denom
+    preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return loss, preds
+
+
+def logits_probe(params, tokens, pos, preset, use_flash=True):
+    """-> (V,) next-token distribution at position `pos` of row 0 (Fig 2b)."""
+    logits = forward(params, tokens, preset, use_flash)
+    return jax.nn.softmax(logits[0, pos], axis=-1)
+
+
+def make_lowered(preset: Preset, which: str, use_flash=None):
+    """Lower one graph with this preset's static shapes (aot.py entry).
+
+    Per-backend attention choice (§Perf): the *train* graph keeps the
+    Pallas flash kernel (the architecture contribution; wins on TPU where
+    the kernel is compiled for the MXU). The no-grad eval/probe graphs
+    default to the materializing attention, which is ~1.3x faster under
+    interpret-lowered HLO on CPU at our sequence lengths.
+    """
+    if use_flash is None:
+        use_flash = which == "train_step"
+    P = preset.param_spec()
+    pspecs = tuple(jax.ShapeDtypeStruct(s, jnp.float32) for _, s in P)
+    tok = jax.ShapeDtypeStruct((preset.batch, preset.seq), jnp.int32)
+    msk = jax.ShapeDtypeStruct((preset.batch, preset.seq), jnp.float32)
+    if which == "train_step":
+        fn = lambda *a: train_step(a[: len(P)], a[-3], a[-2], a[-1], preset, use_flash)
+        args = (*pspecs, tok, tok, msk)
+    elif which == "eval_step":
+        fn = lambda *a: eval_step(a[: len(P)], a[-3], a[-2], a[-1], preset, use_flash)
+        args = (*pspecs, tok, tok, msk)
+    elif which == "logits_probe":
+        tok1 = jax.ShapeDtypeStruct((1, preset.seq), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = lambda *a: (logits_probe(a[: len(P)], a[-2], a[-1], preset, use_flash),)
+        args = (*pspecs, tok1, pos)
+    else:
+        raise ValueError(which)
+    return jax.jit(fn).lower(*args)

@@ -1,0 +1,200 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+Each Pallas kernel (interpret=True) must match its pure-jnp oracle in
+ref.py across shape/rank/block sweeps (hypothesis where the space is big,
+parametrize where it is enumerable).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    block_matmul,
+    flash_attention,
+    lowrank_mask,
+    lowrank_reconstruct,
+    orthonormalize,
+    ref,
+    sparse_adam_step,
+    svd_lowrank,
+)
+from compile.kernels.sparse_adam import pack_scalars
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- matmul
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(4, 96),
+    k=st.integers(4, 96),
+    n=st.integers(4, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_block_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rnd(rng, m, k), rnd(rng, k, n)
+    got = block_matmul(x, y, bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(got, ref.block_matmul_ref(x, y), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (128, 128, 128), (16, 64, 32)])
+def test_block_matmul_block_sweep(blocks):
+    rng = np.random.default_rng(0)
+    x, y = rnd(rng, 64, 48), rnd(rng, 48, 80)
+    bm, bn, bk = blocks
+    got = block_matmul(x, y, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, x @ y, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------- lowrank mask
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(8, 128),
+    n=st.integers(8, 128),
+    r=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lowrank_mask_matches_ref(m, n, r, seed):
+    rng = np.random.default_rng(seed)
+    u, v = rnd(rng, m, r), rnd(rng, n, r)
+    thr = jnp.asarray([[0.5]], dtype=jnp.float32)
+    mask, counts = lowrank_mask(u, v, thr, bm=32, bn=32)
+    ref_mask, ref_count = ref.lowrank_mask_ref(u, v, 0.5)
+    np.testing.assert_array_equal(mask, ref_mask)
+    assert int(jnp.sum(counts)) == int(ref_count)
+
+
+def test_lowrank_mask_threshold_extremes():
+    rng = np.random.default_rng(1)
+    u, v = rnd(rng, 32, 4), rnd(rng, 24, 4)
+    lo = lowrank_mask(u, v, jnp.zeros((1, 1)))[0]
+    assert float(jnp.mean(lo)) == 1.0  # threshold 0 selects everything
+    hi = lowrank_mask(u, v, jnp.full((1, 1), 1e9))[0]
+    assert float(jnp.mean(hi)) == 0.0
+
+
+def test_lowrank_reconstruct_matches_product():
+    rng = np.random.default_rng(2)
+    u, v = rnd(rng, 96, 8), rnd(rng, 72, 8)
+    got = lowrank_reconstruct(u, v, bm=32, bn=24)
+    np.testing.assert_allclose(got, u @ v.T, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------- sparse adam
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(8, 3000),
+    step=st.integers(1, 50),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparse_adam_matches_ref(k, step, seed):
+    rng = np.random.default_rng(seed)
+    p, g, m, v = (rnd(rng, k) for _ in range(4))
+    v = jnp.abs(v)  # second moment must be nonnegative
+    lr, b1, b2, eps, wd = 1e-3, 0.9, 0.999, 1e-8, 0.01
+    sc = pack_scalars(lr, b1, b2, eps, wd, step)
+    pn, mn, vn = sparse_adam_step(p, g, m, v, sc, bk=256)
+    rp, rm, rv = ref.sparse_adam_ref(p, g, m, v, lr, b1, b2, eps, wd, step)
+    np.testing.assert_allclose(pn, rp, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(mn, rm, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(vn, rv, rtol=1e-5, atol=1e-6)
+
+
+def test_sparse_adam_zero_grad_is_decay_only():
+    k = 64
+    p = jnp.ones((k,))
+    z = jnp.zeros((k,))
+    sc = pack_scalars(0.1, 0.9, 0.999, 1e-8, 0.5, 1)
+    pn, mn, vn = sparse_adam_step(p, z, z, z, sc)
+    np.testing.assert_allclose(pn, p - 0.1 * 0.5 * p, rtol=1e-6)
+    np.testing.assert_allclose(mn, z)
+
+
+# ------------------------------------------------------- flash attention
+@settings(max_examples=10, deadline=None)
+@given(
+    bh=st.integers(1, 4),
+    seq=st.sampled_from([16, 32, 64, 128]),
+    dh=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_matches_ref(bh, seq, dh, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (rnd(rng, bh, seq, dh) for _ in range(3))
+    got = flash_attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_is_causal():
+    # future tokens must not influence earlier outputs
+    rng = np.random.default_rng(3)
+    q, k, v = (rnd(rng, 2, 32, 16) for _ in range(3))
+    o1 = flash_attention(q, k, v)
+    k2 = k.at[:, -1].set(99.0)
+    v2 = v.at[:, -1].set(-99.0)
+    o2 = flash_attention(q, k2, v2)
+    np.testing.assert_allclose(o1[:, :-1], o2[:, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_gradients_match_ref():
+    rng = np.random.default_rng(4)
+    q, k, v = (rnd(rng, 2, 32, 16) for _ in range(3))
+
+    def loss_flash(q, k, v):
+        return jnp.sum(flash_attention(q, k, v) ** 2)
+
+    def loss_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v) ** 2)
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(a, b, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------- subspace svd
+def test_orthonormalize_produces_orthonormal_columns():
+    rng = np.random.default_rng(5)
+    y = rnd(rng, 64, 12)
+    q = orthonormalize(y)
+    np.testing.assert_allclose(q.T @ q, np.eye(12), atol=5e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    m=st.integers(24, 128),
+    n=st.integers(24, 128),
+    r=st.integers(2, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_svd_lowrank_error_close_to_exact(m, n, r, seed):
+    rng = np.random.default_rng(seed)
+    w = rnd(rng, m, r) @ rnd(rng, n, r).T + 0.01 * rnd(rng, m, n)
+    g0 = rnd(rng, n, r + 8)
+    q, b = svd_lowrank(w, g0, power_iters=2)
+    err_rand = float(jnp.linalg.norm(w - q @ b))
+    err_exact = float(jnp.linalg.norm(w - ref.svd_lowrank_ref(w, r + 8)))
+    assert err_rand <= err_exact * 1.2 + 1e-3
+
+
+def test_principal_mask_pipeline_against_exact_oracle():
+    # end-to-end: randomized factors + threshold kernel vs exact SVD top-k
+    rng = np.random.default_rng(6)
+    m, n, r, k = 96, 64, 4, 300
+    w = rnd(rng, m, r) @ rnd(rng, n, r).T + 0.02 * rnd(rng, m, n)
+    g0 = rnd(rng, n, r + 8)
+    q, b = svd_lowrank(w, g0, power_iters=3)
+    wr = np.asarray(q @ b)
+    thr = np.sort(np.abs(wr).ravel())[-k]
+    mask, counts = lowrank_mask(q, jnp.asarray(b.T), jnp.full((1, 1), thr))
+    exact = np.asarray(ref.principal_mask_ref(w, r + 8, k))
+    overlap = float((np.asarray(mask) * exact).sum() / exact.sum())
+    assert overlap > 0.9, overlap
+    assert abs(int(counts.sum()) - k) <= k * 0.02 + 2

@@ -1,0 +1,171 @@
+"""L2 model correctness: shapes, loss/grad semantics, flash-vs-ref parity,
+and the preset/manifest contract the rust side depends on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    HEAD_DIM,
+    PRESETS,
+    Preset,
+    eval_step,
+    forward,
+    logits_probe,
+    masked_loss,
+    rope,
+    train_step,
+)
+
+TEST_PRESET = Preset("test", d=64, layers=2, ffn=96, vocab=128, seq=16, batch=2)
+
+
+def make_params(preset, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        jnp.asarray(rng.normal(0, 0.02, s).astype(np.float32))
+        for _, s in preset.param_spec()
+    ]
+
+
+def make_batch(preset, seed=0):
+    rng = np.random.default_rng(seed)
+    tok = jnp.asarray(
+        rng.integers(0, preset.vocab, (preset.batch, preset.seq)), dtype=jnp.int32
+    )
+    tgt = jnp.asarray(
+        rng.integers(0, preset.vocab, (preset.batch, preset.seq)), dtype=jnp.int32
+    )
+    msk = jnp.ones((preset.batch, preset.seq), jnp.float32)
+    return tok, tgt, msk
+
+
+def test_param_spec_order_is_the_contract():
+    spec = TEST_PRESET.param_spec()
+    assert spec[0][0] == "embed"
+    assert spec[-1][0] == "final_norm"
+    names = [n for n, _ in spec]
+    assert names[1:10] == [
+        "l0.attn_norm",
+        "l0.wq",
+        "l0.wk",
+        "l0.wv",
+        "l0.wo",
+        "l0.mlp_norm",
+        "l0.wgate",
+        "l0.wup",
+        "l0.wdown",
+    ]
+    assert len(spec) == 2 + 9 * TEST_PRESET.layers
+
+
+@pytest.mark.parametrize("name", list(PRESETS))
+def test_presets_are_consistent(name):
+    p = PRESETS[name]
+    assert p.d % HEAD_DIM == 0
+    assert p.seq % 16 == 0
+    # e2e preset is the ~100M model of the e2e example
+    if name == "e2e":
+        assert 80e6 < p.n_params() < 150e6
+
+
+def test_forward_shapes_and_finiteness():
+    params = make_params(TEST_PRESET)
+    tok, _, _ = make_batch(TEST_PRESET)
+    logits = forward(params, tok, TEST_PRESET, use_flash=False)
+    assert logits.shape == (2, 16, 128)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_flash_and_ref_forward_agree():
+    params = make_params(TEST_PRESET)
+    tok, _, _ = make_batch(TEST_PRESET)
+    lf = forward(params, tok, TEST_PRESET, use_flash=True)
+    lr = forward(params, tok, TEST_PRESET, use_flash=False)
+    np.testing.assert_allclose(lf, lr, rtol=1e-4, atol=1e-4)
+
+
+def test_train_step_outputs_loss_plus_all_grads():
+    params = make_params(TEST_PRESET)
+    tok, tgt, msk = make_batch(TEST_PRESET)
+    out = train_step(params, tok, tgt, msk, TEST_PRESET)
+    assert len(out) == 1 + len(params)
+    for g, p in zip(out[1:], params):
+        assert g.shape == p.shape
+    assert float(out[0]) > 0
+
+
+def test_grads_match_flash_vs_ref():
+    params = make_params(TEST_PRESET)
+    tok, tgt, msk = make_batch(TEST_PRESET)
+    of = train_step(params, tok, tgt, msk, TEST_PRESET, use_flash=True)
+    orf = train_step(params, tok, tgt, msk, TEST_PRESET, use_flash=False)
+    np.testing.assert_allclose(of[0], orf[0], rtol=1e-5)
+    for gf, gr in zip(of[1:], orf[1:]):
+        np.testing.assert_allclose(gf, gr, rtol=1e-3, atol=1e-6)
+
+
+def test_loss_mask_restricts_loss():
+    params = make_params(TEST_PRESET)
+    tok, tgt, _ = make_batch(TEST_PRESET)
+    # mask only position 3; loss must ignore changes elsewhere
+    msk = jnp.zeros((2, 16)).at[:, 3].set(1.0)
+    l1 = masked_loss(params, tok, tgt, msk, TEST_PRESET, use_flash=False)
+    tgt2 = tgt.at[:, 10].set((tgt[:, 10] + 1) % 128)
+    l2 = masked_loss(params, tok, tgt2, msk, TEST_PRESET, use_flash=False)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+
+
+def test_causality_of_the_full_model():
+    params = make_params(TEST_PRESET)
+    tok, _, _ = make_batch(TEST_PRESET)
+    la = forward(params, tok, TEST_PRESET, use_flash=False)
+    tok2 = tok.at[:, -1].set((tok[:, -1] + 5) % 128)
+    lb = forward(params, tok2, TEST_PRESET, use_flash=False)
+    np.testing.assert_allclose(la[:, :-1], lb[:, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_eval_step_preds_are_argmax():
+    params = make_params(TEST_PRESET)
+    tok, tgt, msk = make_batch(TEST_PRESET)
+    loss, preds = eval_step(params, tok, tgt, msk, TEST_PRESET, use_flash=False)
+    logits = forward(params, tok, TEST_PRESET, use_flash=False)
+    np.testing.assert_array_equal(preds, jnp.argmax(logits, -1).astype(jnp.int32))
+    assert float(loss) > 0
+
+
+def test_logits_probe_is_a_distribution():
+    params = make_params(TEST_PRESET)
+    tok, _, _ = make_batch(TEST_PRESET)
+    probs = logits_probe(params, tok[:1], 5, TEST_PRESET, use_flash=False)
+    assert probs.shape == (128,)
+    np.testing.assert_allclose(float(jnp.sum(probs)), 1.0, rtol=1e-5)
+    assert float(jnp.min(probs)) >= 0
+
+
+def test_rope_preserves_norm_and_relative_structure():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 8, 2, 32)).astype(np.float32))
+    y = rope(x)
+    # rotation preserves per-position norms
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1), rtol=1e-5
+    )
+    # position 0 is unrotated
+    np.testing.assert_allclose(y[:, 0], x[:, 0], rtol=1e-6)
+
+
+def test_training_reduces_loss():
+    # a few SGD steps on a fixed batch must reduce the loss
+    params = make_params(TEST_PRESET)
+    tok, tgt, msk = make_batch(TEST_PRESET)
+    step = jax.jit(
+        lambda ps: train_step(ps, tok, tgt, msk, TEST_PRESET, use_flash=False)
+    )
+    out0 = step(params)
+    l0 = float(out0[0])
+    for _ in range(10):
+        out = step(params)
+        params = [p - 0.5 * g for p, g in zip(params, out[1:])]
+    assert float(step(params)[0]) < l0

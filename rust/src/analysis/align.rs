@@ -1,0 +1,85 @@
+//! Eigenspace alignment score (paper Appendix H.1, Fig. 12).
+//!
+//! For the top-n right singular vectors V (before) and V' (after
+//! fine-tuning): d_i = sum_j (v'_i . v_j)^2 = ||V^T v'_i||^2, and the
+//! score is mean_i d_i in [0, 1]. 1 = the fine-tuned top eigenspace lies
+//! inside the pretrained one; 0 = orthogonal.
+
+use crate::tensor::Tensor;
+use crate::util::eigh;
+
+/// Top-`k` right singular vectors as rows (k x n).
+pub fn top_right_vectors(w: &Tensor, k: usize) -> Vec<f32> {
+    let (m, n) = w.dims2();
+    let (_, _, vt) = eigh::svd(&w.data, m, n);
+    let k = k.min(m.min(n));
+    vt[..k * n].to_vec()
+}
+
+/// Alignment between two top-k right-singular subspaces.
+pub fn alignment_score(w_before: &Tensor, w_after: &Tensor, k: usize) -> f64 {
+    let (_, n) = w_before.dims2();
+    let vb = top_right_vectors(w_before, k);
+    let va = top_right_vectors(w_after, k);
+    let k = va.len() / n;
+    let kb = vb.len() / n;
+    // d_i = sum_j ( va_i . vb_j )^2
+    let mut total = 0.0f64;
+    for i in 0..k {
+        let vi = &va[i * n..(i + 1) * n];
+        let mut di = 0.0f64;
+        for j in 0..kb {
+            let vj = &vb[j * n..(j + 1) * n];
+            let dot: f64 = vi.iter().zip(vj).map(|(a, b)| *a as f64 * *b as f64).sum();
+            di += dot * dot;
+        }
+        total += di;
+    }
+    total / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identical_matrices_align_to_one() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[24, 16], 1.0, &mut rng);
+        let s = alignment_score(&w, &w, 8);
+        assert!((s - 1.0).abs() < 1e-3, "s={s}");
+    }
+
+    #[test]
+    fn unrelated_matrices_align_partially() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(&[40, 30], 1.0, &mut rng);
+        let b = Tensor::randn(&[40, 30], 1.0, &mut rng);
+        // top-8 of 30 dims: random subspaces overlap ~ k/n
+        let s = alignment_score(&a, &b, 8);
+        assert!(s < 0.7, "s={s}");
+        assert!(s > 0.05, "s={s}");
+    }
+
+    #[test]
+    fn small_perturbation_keeps_alignment_high() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&[24, 16], 1.0, &mut rng);
+        let mut b = a.clone();
+        b.add_scaled(&Tensor::randn(&[24, 16], 1.0, &mut rng), 1e-3);
+        let s = alignment_score(&a, &b, 6);
+        assert!(s > 0.99, "s={s}");
+    }
+
+    #[test]
+    fn score_bounded() {
+        let mut rng = Rng::new(4);
+        for _ in 0..5 {
+            let a = Tensor::randn(&[12, 10], 1.0, &mut rng);
+            let b = Tensor::randn(&[12, 10], 1.0, &mut rng);
+            let s = alignment_score(&a, &b, 5);
+            assert!((0.0..=1.0 + 1e-6).contains(&s));
+        }
+    }
+}

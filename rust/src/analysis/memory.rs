@@ -1,0 +1,191 @@
+//! Analytic fine-tuning memory model (Fig. 6).
+//!
+//! Fig. 6 in the paper is arithmetic over tensor shapes x dtypes measured
+//! on real GPUs; we compute the same breakdown exactly for the *real*
+//! LLaMA-2-7B / LLaMA-3-8B architectures (shapes public), so this panel
+//! reproduces at full scale despite the simulator substrate.
+//!
+//! Conventions (matching the paper's training setup): bf16 weights and
+//! gradients (2 B), fp32 Adam moments (8 B/param), activations estimated
+//! for batch x seq tokens with standard checkpointing (per-layer boundary
+//! activations + one layer's working set).
+
+/// A transformer architecture's shape inventory.
+#[derive(Clone, Debug)]
+pub struct ArchSpec {
+    pub name: &'static str,
+    pub vocab: usize,
+    pub d: usize,
+    pub layers: usize,
+    pub ffn: usize,
+    /// kv projection width (GQA: < d)
+    pub kv_dim: usize,
+}
+
+pub const LLAMA2_7B: ArchSpec = ArchSpec {
+    name: "LLaMA-2-7B",
+    vocab: 32000,
+    d: 4096,
+    layers: 32,
+    ffn: 11008,
+    kv_dim: 4096,
+};
+
+pub const LLAMA3_8B: ArchSpec = ArchSpec {
+    name: "LLaMA-3-8B",
+    vocab: 128256,
+    d: 4096,
+    layers: 32,
+    ffn: 14336,
+    kv_dim: 1024,
+};
+
+impl ArchSpec {
+    /// (m, n) of every trainable projection matrix.
+    pub fn matrices(&self) -> Vec<(usize, usize, &'static str)> {
+        let mut v = Vec::new();
+        for _ in 0..self.layers {
+            v.push((self.d, self.d, "wq"));
+            v.push((self.d, self.kv_dim, "wk"));
+            v.push((self.d, self.kv_dim, "wv"));
+            v.push((self.d, self.d, "wo"));
+            v.push((self.d, self.ffn, "wgate"));
+            v.push((self.d, self.ffn, "wup"));
+            v.push((self.ffn, self.d, "wdown"));
+        }
+        v
+    }
+
+    pub fn matrix_params(&self) -> usize {
+        self.matrices().iter().map(|(m, n, _)| m * n).sum()
+    }
+
+    pub fn mlp_params(&self) -> usize {
+        self.matrices()
+            .iter()
+            .filter(|(_, _, k)| matches!(*k, "wgate" | "wup" | "wdown"))
+            .map(|(m, n, _)| m * n)
+            .sum()
+    }
+
+    pub fn total_params(&self) -> usize {
+        // embedding (tied) + norms + matrices
+        self.vocab * self.d + (2 * self.layers + 1) * self.d + self.matrix_params()
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemoryBreakdown {
+    pub weights_gb: f64,
+    pub grads_gb: f64,
+    pub optimizer_gb: f64,
+    pub activations_gb: f64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> f64 {
+        self.weights_gb + self.grads_gb + self.optimizer_gb + self.activations_gb
+    }
+}
+
+const GB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+fn activations_gb(arch: &ArchSpec, batch: usize, seq: usize) -> f64 {
+    // gradient checkpointing: boundary activations per layer + one layer's
+    // working set (attn scores flash-style, so O(b s d) not O(b s^2))
+    let tokens = batch * seq;
+    let boundary = arch.layers * tokens * arch.d;
+    let working = tokens * (4 * arch.d + 2 * arch.ffn);
+    ((boundary + working) as f64) * 2.0 / GB
+}
+
+/// Full fine-tuning: dense everything.
+pub fn full_ft(arch: &ArchSpec, batch: usize, seq: usize) -> MemoryBreakdown {
+    let n = arch.total_params() as f64;
+    MemoryBreakdown {
+        weights_gb: n * 2.0 / GB,
+        grads_gb: n * 2.0 / GB,
+        optimizer_gb: n * 8.0 / GB,
+        activations_gb: activations_gb(arch, batch, seq),
+    }
+}
+
+/// LoRA at rank r on all projection matrices.
+pub fn lora(arch: &ArchSpec, rank: usize, batch: usize, seq: usize) -> MemoryBreakdown {
+    let n = arch.total_params() as f64;
+    let adapter: usize = arch.matrices().iter().map(|(m, nn, _)| rank * (m + nn)).sum();
+    MemoryBreakdown {
+        weights_gb: (n + adapter as f64) * 2.0 / GB,
+        grads_gb: adapter as f64 * 2.0 / GB,
+        optimizer_gb: adapter as f64 * 8.0 / GB,
+        activations_gb: activations_gb(arch, batch, seq),
+    }
+}
+
+/// LIFT at LoRA-rank-equivalent budget (Algorithm 1): Adam moments are
+/// packed fp32 vectors of length k plus a bitmask per matrix; gradients
+/// are gathered layer-by-layer during the backward pass (Eq. 3), so the
+/// dense gradient buffer is transient — only one matrix's dense grad plus
+/// the packed masked gradient are live at a time.
+pub fn lift(arch: &ArchSpec, rank: usize, batch: usize, seq: usize, mlp_only: bool) -> MemoryBreakdown {
+    let n = arch.total_params() as f64;
+    let mats = arch.matrices();
+    let scoped = mats
+        .iter()
+        .filter(|(_, _, kind)| !mlp_only || matches!(*kind, "wgate" | "wup" | "wdown"));
+    let mut k = 0usize;
+    let mut mask_bits = 0usize;
+    let mut largest = 0usize;
+    for (m, nn, _) in scoped {
+        k += rank * (m + nn);
+        mask_bits += m * nn;
+        largest = largest.max(m * nn);
+    }
+    MemoryBreakdown {
+        weights_gb: n * 2.0 / GB,
+        grads_gb: (k as f64 * 2.0 + largest as f64 * 2.0) / GB,
+        optimizer_gb: (k as f64 * 8.0 + mask_bits as f64 / 8.0) / GB,
+        activations_gb: activations_gb(arch, batch, seq),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_public_numbers() {
+        let n7 = LLAMA2_7B.total_params() as f64 / 1e9;
+        assert!((6.0..7.5).contains(&n7), "llama-2-7b params {n7}B");
+        let n8 = LLAMA3_8B.total_params() as f64 / 1e9;
+        assert!((7.0..8.5).contains(&n8), "llama-3-8b params {n8}B");
+    }
+
+    #[test]
+    fn full_ft_optimizer_dominates() {
+        let m = full_ft(&LLAMA2_7B, 8, 1024);
+        assert!(m.optimizer_gb > m.weights_gb);
+        // ~27 GB half-precision-trainables * 8B... paper reports 27GB for
+        // the 7B optimizer; ours counts all params: should land 20..60
+        assert!((20.0..60.0).contains(&m.optimizer_gb), "{}", m.optimizer_gb);
+    }
+
+    #[test]
+    fn lift_optimizer_under_5_percent_of_full() {
+        let f = full_ft(&LLAMA2_7B, 8, 1024);
+        let l = lift(&LLAMA2_7B, 128, 8, 1024, false);
+        // paper: ~5% (27 GB -> 1.3 GB); our accounting adds the bitmask
+        let ratio = l.optimizer_gb / f.optimizer_gb;
+        assert!(ratio < 0.08, "optimizer ratio {ratio}");
+        assert!(l.total() < f.total() * 0.5);
+    }
+
+    #[test]
+    fn lift_close_to_lora_and_mlp_variant_smaller() {
+        let lo = lora(&LLAMA2_7B, 128, 8, 1024);
+        let li = lift(&LLAMA2_7B, 128, 8, 1024, false);
+        let li_mlp = lift(&LLAMA2_7B, 128, 8, 1024, true);
+        assert!(li.total() < lo.total() * 1.4, "{} vs {}", li.total(), lo.total());
+        assert!(li_mlp.total() < li.total());
+    }
+}

@@ -1,0 +1,10 @@
+//! Analysis toolkit behind the paper's §4 and §7 studies.
+
+pub mod align;
+pub mod memory;
+pub mod perturb;
+pub mod update;
+
+pub use align::alignment_score;
+pub use memory::{ArchSpec, MemoryBreakdown};
+pub use update::{update_histogram, update_rank};

@@ -1,0 +1,86 @@
+//! Weight-update analyses: ΔW magnitude histograms (Fig. 5) and ΔW rank
+//! (Fig. 13, singular values above 10x the torch default threshold).
+
+use crate::tensor::Tensor;
+use crate::util::eigh;
+use crate::util::stats;
+
+/// Histogram of ΔW entries over [-lim, lim] (Fig. 5 panels).
+pub fn update_histogram(before: &Tensor, after: &Tensor, lim: f32, bins: usize) -> Vec<usize> {
+    let delta: Vec<f32> = after
+        .data
+        .iter()
+        .zip(&before.data)
+        .map(|(a, b)| a - b)
+        .collect();
+    stats::histogram(&delta, -lim, lim, bins)
+}
+
+/// Max |ΔW| entry and fraction of exactly-unchanged entries.
+pub fn update_stats(before: &Tensor, after: &Tensor) -> (f32, f64) {
+    let mut maxabs = 0.0f32;
+    let mut unchanged = 0usize;
+    for (a, b) in after.data.iter().zip(&before.data) {
+        let d = (a - b).abs();
+        if d == 0.0 {
+            unchanged += 1;
+        }
+        maxabs = maxabs.max(d);
+    }
+    (maxabs, unchanged as f64 / before.len() as f64)
+}
+
+/// Rank of ΔW: #singular values > tau, tau = mult * max(m,n) * smax * eps
+/// (paper Appendix G.3 uses mult = 10).
+pub fn update_rank(before: &Tensor, after: &Tensor, mult: f32) -> usize {
+    let delta = after.sub(before);
+    let (m, n) = delta.dims2();
+    eigh::rank_above(&delta.data, m, n, mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn histogram_centers_on_zero_for_no_update() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&[10, 10], 1.0, &mut rng);
+        let h = update_histogram(&w, &w, 0.1, 5);
+        assert_eq!(h[2], 100); // all mass in the middle bin
+    }
+
+    #[test]
+    fn sparse_update_leaves_spike() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&[20, 20], 1.0, &mut rng);
+        let mut w2 = w.clone();
+        for i in 0..20 {
+            w2.data[i * 7 % 400] += 0.5;
+        }
+        let (maxabs, unchanged) = update_stats(&w, &w2);
+        assert!(maxabs >= 0.5);
+        assert!(unchanged > 0.9);
+    }
+
+    #[test]
+    fn lora_style_update_has_low_rank() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&[32, 24], 1.0, &mut rng);
+        let a = Tensor::randn(&[32, 4], 1.0, &mut rng);
+        let b = Tensor::randn(&[4, 24], 1.0, &mut rng);
+        let mut w2 = w.clone();
+        w2.add_scaled(&a.matmul(&b), 0.1);
+        assert_eq!(update_rank(&w, &w2, 10.0), 4);
+    }
+
+    #[test]
+    fn dense_update_has_full_rank() {
+        let mut rng = Rng::new(4);
+        let w = Tensor::randn(&[16, 12], 1.0, &mut rng);
+        let mut w2 = w.clone();
+        w2.add_scaled(&Tensor::randn(&[16, 12], 1.0, &mut rng), 0.1);
+        assert_eq!(update_rank(&w, &w2, 10.0), 12);
+    }
+}

@@ -1,0 +1,215 @@
+//! Pretraining corpus generator (the "source domain").
+//!
+//! A mixture of (a) KG fact sentences — frequent facts oversampled ~5x,
+//! plus occasional 2-hop compositions so multi-hop tasks are learnable,
+//! (b) arithmetic equations — the numeracy the arithmetic tasks build on,
+//! and (c) Zipf-ish filler sentences for generic language statistics.
+//! Sentences are packed back-to-back into rows (standard LM packing).
+
+use super::vocab::*;
+use super::{BatchSource, Kg, Vocab};
+use crate::runtime::model_exec::Batch;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct CorpusGen {
+    pub vocab: Vocab,
+    pub kg: Kg,
+    pub batch: usize,
+    pub seq: usize,
+    /// mixture weights in percent: facts / arithmetic / filler
+    pub mix: [u64; 3],
+}
+
+impl CorpusGen {
+    pub fn new(vocab: Vocab, kg: Kg, batch: usize, seq: usize) -> CorpusGen {
+        CorpusGen {
+            vocab,
+            kg,
+            batch,
+            seq,
+            mix: [50, 30, 20],
+        }
+    }
+
+    /// One sentence, BOS..EOS.
+    pub fn sentence(&self, rng: &mut Rng) -> Vec<i32> {
+        let roll = rng.next_u64() % 100;
+        if roll < self.mix[0] {
+            self.fact_sentence(rng)
+        } else if roll < self.mix[0] + self.mix[1] {
+            self.arith_sentence(rng)
+        } else {
+            self.filler_sentence(rng)
+        }
+    }
+
+    fn fact_sentence(&self, rng: &mut Rng) -> Vec<i32> {
+        // frequent facts are oversampled: 70% of fact sentences draw from
+        // the frequent tier (~25% of facts)
+        let frequent = rng.chance(0.7);
+        if rng.chance(0.1) {
+            // 2-hop composition sentence: e r1 r2 -> t
+            let (e, r1, _m, r2, t) = self.kg.sample_2hop(rng);
+            vec![
+                BOS,
+                self.vocab.entity(e),
+                self.vocab.relation(r1),
+                self.vocab.relation(r2),
+                self.vocab.entity(t),
+                EOS,
+            ]
+        } else {
+            let (e, r, t) = self.kg.sample_fact_tier(rng, frequent);
+            vec![
+                BOS,
+                self.vocab.entity(e),
+                self.vocab.relation(r),
+                self.vocab.entity(t),
+                EOS,
+            ]
+        }
+    }
+
+    fn arith_sentence(&self, rng: &mut Rng) -> Vec<i32> {
+        // ranges matched to the task suites (data/tasks.rs) so fine-tuning
+        // builds on pretrained numeracy rather than fighting it
+        let a = rng.range(0, 30);
+        let b = rng.range(0, 30);
+        let (op, c) = match rng.below(3) {
+            0 => (PLUS, a + b),
+            1 => (SUB, a - b),
+            _ => {
+                let a = a % 10;
+                let b = b % 10;
+                return self.equation(a, MUL, b, a * b);
+            }
+        };
+        self.equation(a, op, b, c)
+    }
+
+    fn equation(&self, a: i64, op: i32, b: i64, c: i64) -> Vec<i32> {
+        let mut s = vec![BOS];
+        s.extend(self.vocab.number(a));
+        s.push(op);
+        s.extend(self.vocab.number(b));
+        s.push(EQ);
+        s.extend(self.vocab.number(c));
+        s.push(EOS);
+        s
+    }
+
+    fn filler_sentence(&self, rng: &mut Rng) -> Vec<i32> {
+        let len = 3 + rng.below(8);
+        let mut s = vec![BOS];
+        for _ in 0..len {
+            // Zipf-ish: squash uniform to favor low filler ids
+            let u = rng.next_f64();
+            let idx = ((u * u) * self.vocab.n_filler as f64) as usize;
+            s.push(self.vocab.filler(idx.min(self.vocab.n_filler - 1)));
+        }
+        s.push(EOS);
+        s
+    }
+
+    /// Held-out evaluation batches (fixed seed stream disjoint from train).
+    pub fn eval_batches(&self, n: usize, seed: u64) -> Vec<Batch> {
+        let mut rng = Rng::new(seed ^ 0x5eed_e7a1);
+        (0..n).map(|_| self.pack_batch(&mut rng)).collect()
+    }
+
+    fn pack_batch(&self, rng: &mut Rng) -> Batch {
+        let (b, s) = (self.batch, self.seq);
+        let mut batch = Batch::empty(b, s);
+        for row in 0..b {
+            let mut buf: Vec<i32> = Vec::with_capacity(s + 16);
+            while buf.len() < s + 1 {
+                buf.extend(self.sentence(rng));
+            }
+            let toks = &buf[..s + 1];
+            for i in 0..s {
+                batch.tokens[row * s + i] = toks[i];
+                batch.targets[row * s + i] = toks[i + 1];
+                batch.loss_mask[row * s + i] = 1.0;
+            }
+        }
+        batch
+    }
+}
+
+impl BatchSource for CorpusGen {
+    fn next_batch(&mut self, rng: &mut Rng) -> Batch {
+        self.pack_batch(rng)
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.batch, self.seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> CorpusGen {
+        let v = Vocab::new(512);
+        let kg = Kg::new(7, v.n_entities, v.n_relations);
+        CorpusGen::new(v, kg, 4, 32)
+    }
+
+    #[test]
+    fn sentences_are_well_formed() {
+        let g = gen();
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let s = g.sentence(&mut rng);
+            assert_eq!(s[0], BOS);
+            assert_eq!(*s.last().unwrap(), EOS);
+            assert!(s.len() >= 3);
+            for &t in &s {
+                assert!((t as usize) < g.vocab.size, "token {t} out of vocab");
+            }
+        }
+    }
+
+    #[test]
+    fn batches_have_shifted_targets() {
+        let mut g = gen();
+        let mut rng = Rng::new(2);
+        let b = g.next_batch(&mut rng);
+        assert_eq!(b.tokens.len(), 4 * 32);
+        for row in 0..4 {
+            for i in 0..31 {
+                assert_eq!(b.targets[row * 32 + i], b.tokens[row * 32 + i + 1]);
+            }
+        }
+        assert!(b.loss_mask.iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn fact_sentences_respect_kg() {
+        let g = gen();
+        let mut rng = Rng::new(3);
+        let mut checked = 0;
+        for _ in 0..500 {
+            let s = g.sentence(&mut rng);
+            if s.len() == 5 && g.vocab.is_entity(s[1]) {
+                let e = g.vocab.entity_index(s[1]).unwrap();
+                let r = (s[2] - REL0) as usize;
+                let t = g.vocab.entity_index(s[3]).unwrap();
+                assert_eq!(g.kg.lookup(e, r), Some(t));
+                checked += 1;
+            }
+        }
+        assert!(checked > 50, "only {checked} fact sentences seen");
+    }
+
+    #[test]
+    fn eval_stream_is_deterministic() {
+        let g = gen();
+        let a = g.eval_batches(2, 9);
+        let b = g.eval_batches(2, 9);
+        assert_eq!(a[0].tokens, b[0].tokens);
+        assert_eq!(a[1].tokens, b[1].tokens);
+    }
+}

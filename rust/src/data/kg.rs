@@ -1,0 +1,172 @@
+//! Deterministic knowledge graph — the "world" the model pretrains on.
+//!
+//! A functional KG: each (entity, relation) pair maps to at most one target
+//! entity, decided by a seeded hash, with a coverage knob (not every pair
+//! holds a fact) and a frequency tier (a minority of facts are "frequent"
+//! in the corpus; the rare tier feeds the OBQA-analog task and matches the
+//! paper's framing — Sharma et al.'s rank-reduction recovers *infrequent*
+//! knowledge, which is exactly what LIFT's principal weights should carry).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Kg {
+    pub seed: u64,
+    pub n_entities: usize,
+    pub n_relations: usize,
+    /// fraction of (e, r) pairs that hold a fact, in percent
+    pub coverage_pct: u64,
+}
+
+fn mix(seed: u64, a: u64, b: u64) -> u64 {
+    let mut x = seed ^ a.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ b.wrapping_mul(0xc2b2_ae3d_27d4_eb4f);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+impl Kg {
+    pub fn new(seed: u64, n_entities: usize, n_relations: usize) -> Kg {
+        Kg {
+            seed,
+            n_entities,
+            n_relations,
+            coverage_pct: 60,
+        }
+    }
+
+    /// The unique target of (e, r), if the fact exists.
+    pub fn lookup(&self, e: usize, r: usize) -> Option<usize> {
+        let h = mix(self.seed, e as u64, r as u64);
+        if h % 100 < self.coverage_pct {
+            Some((mix(self.seed ^ 0xfac7, e as u64, r as u64) % self.n_entities as u64) as usize)
+        } else {
+            None
+        }
+    }
+
+    /// Frequent tier: ~25% of existing facts appear often in the corpus.
+    pub fn is_frequent(&self, e: usize, r: usize) -> bool {
+        mix(self.seed ^ 0xf4e9, e as u64, r as u64) % 100 < 25
+    }
+
+    /// Sample a uniformly random existing fact.
+    pub fn sample_fact(&self, rng: &mut Rng) -> (usize, usize, usize) {
+        loop {
+            let e = rng.below(self.n_entities);
+            let r = rng.below(self.n_relations);
+            if let Some(t) = self.lookup(e, r) {
+                return (e, r, t);
+            }
+        }
+    }
+
+    /// Sample a fact whose frequency tier matches `frequent`.
+    pub fn sample_fact_tier(&self, rng: &mut Rng, frequent: bool) -> (usize, usize, usize) {
+        loop {
+            let (e, r, t) = self.sample_fact(rng);
+            if self.is_frequent(e, r) == frequent {
+                return (e, r, t);
+            }
+        }
+    }
+
+    /// Sample a 2-hop composition e -r1-> m -r2-> t.
+    pub fn sample_2hop(&self, rng: &mut Rng) -> (usize, usize, usize, usize, usize) {
+        loop {
+            let (e, r1, m) = self.sample_fact(rng);
+            let r2 = rng.below(self.n_relations);
+            if let Some(t) = self.lookup(m, r2) {
+                return (e, r1, m, r2, t);
+            }
+        }
+    }
+
+    /// Sample a 3-hop composition (GPQA-analog difficulty).
+    #[allow(clippy::type_complexity)]
+    pub fn sample_3hop(&self, rng: &mut Rng) -> (usize, usize, usize, usize, usize, usize, usize) {
+        loop {
+            let (e, r1, m1, r2, m2) = self.sample_2hop(rng);
+            let r3 = rng.below(self.n_relations);
+            if let Some(t) = self.lookup(m2, r3) {
+                return (e, r1, m1, r2, m2, r3, t);
+            }
+        }
+    }
+
+    /// A wrong-answer entity distinct from `correct` (for choices/negatives).
+    pub fn distractor(&self, rng: &mut Rng, correct: usize) -> usize {
+        loop {
+            let d = rng.below(self.n_entities);
+            if d != correct {
+                return d;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_is_deterministic_and_functional() {
+        let kg = Kg::new(7, 200, 24);
+        for e in 0..50 {
+            for r in 0..24 {
+                assert_eq!(kg.lookup(e, r), kg.lookup(e, r));
+                if let Some(t) = kg.lookup(e, r) {
+                    assert!(t < 200);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn coverage_close_to_knob() {
+        let kg = Kg::new(3, 256, 24);
+        let total = 256 * 24;
+        let hits = (0..256)
+            .flat_map(|e| (0..24).map(move |r| (e, r)))
+            .filter(|&(e, r)| kg.lookup(e, r).is_some())
+            .count();
+        let pct = 100.0 * hits as f64 / total as f64;
+        assert!((52.0..68.0).contains(&pct), "coverage {pct}%");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = Kg::new(1, 200, 24);
+        let b = Kg::new(2, 200, 24);
+        let diff = (0..200)
+            .flat_map(|e| (0..24).map(move |r| (e, r)))
+            .filter(|&(e, r)| a.lookup(e, r) != b.lookup(e, r))
+            .count();
+        assert!(diff > 1000);
+    }
+
+    #[test]
+    fn multihop_chains_are_consistent() {
+        let kg = Kg::new(5, 300, 24);
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let (e, r1, m, r2, t) = kg.sample_2hop(&mut rng);
+            assert_eq!(kg.lookup(e, r1), Some(m));
+            assert_eq!(kg.lookup(m, r2), Some(t));
+        }
+        let (e, r1, m1, r2, m2, r3, t) = kg.sample_3hop(&mut rng);
+        assert_eq!(kg.lookup(e, r1), Some(m1));
+        assert_eq!(kg.lookup(m1, r2), Some(m2));
+        assert_eq!(kg.lookup(m2, r3), Some(t));
+    }
+
+    #[test]
+    fn tiers_partition_facts() {
+        let kg = Kg::new(9, 200, 24);
+        let mut rng = Rng::new(2);
+        let (e, r, _) = kg.sample_fact_tier(&mut rng, true);
+        assert!(kg.is_frequent(e, r));
+        let (e, r, _) = kg.sample_fact_tier(&mut rng, false);
+        assert!(!kg.is_frequent(e, r));
+    }
+}

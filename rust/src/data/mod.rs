@@ -1,0 +1,33 @@
+//! Synthetic-language substrate.
+//!
+//! The paper fine-tunes LLaMA/Qwen/DeBERTa on public corpora; none of that
+//! fits this box (DESIGN.md §3). This module builds the closest synthetic
+//! equivalent that exercises identical code paths:
+//!
+//!   * a deterministic world (knowledge graph + arithmetic grammar) that a
+//!     model *pretrains* on — this is the "source domain" whose retention
+//!     Fig. 4 measures and whose facts the Fig. 2b probe queries;
+//!   * task families mirroring each benchmark suite: 7 arithmetic
+//!     (MATH-10K analogs), 8 relational-QA (Commonsense-170K analogs),
+//!     8 sequence-classification (GLUE analogs), plus GPQA / code-gen /
+//!     StrategyQA analogs — each with disjoint train/test splits.
+
+pub mod corpus;
+pub mod kg;
+pub mod tasks;
+pub mod vocab;
+
+pub use corpus::CorpusGen;
+pub use kg::Kg;
+pub use tasks::{Sample, TaskFamily, TaskSet};
+pub use vocab::Vocab;
+
+use crate::runtime::model_exec::Batch;
+use crate::util::rng::Rng;
+
+/// Anything the trainer can pull batches from.
+pub trait BatchSource {
+    fn next_batch(&mut self, rng: &mut Rng) -> Batch;
+    /// rows are (batch, seq) — must match the preset.
+    fn shape(&self) -> (usize, usize);
+}

@@ -1,0 +1,933 @@
+//! Task families — synthetic analogs of every benchmark suite the paper
+//! evaluates on (DESIGN.md §3 maps each analog to its original).
+//!
+//! Uniform sample format: `prompt … ANS answer-tokens`; fine-tuning masks
+//! the loss to the answer span; eval counts a sample correct iff *every*
+//! answer token is greedy-predicted (teacher-forced exact match).
+//! Train/test splits are disjoint by construction: a hash of the prompt
+//! decides the split, and duplicates are filtered.
+
+use std::collections::HashSet;
+
+use super::vocab::*;
+use super::{BatchSource, Kg, Vocab};
+use crate::runtime::model_exec::Batch;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskFamily {
+    // arithmetic — MATH-10K analogs (Table 2)
+    MultiArith,
+    GsmHard,
+    AddSub,
+    AQuA,
+    SingleEq,
+    Svamp,
+    Mawps,
+    // relational QA — Commonsense-170K analogs (Table 1)
+    BoolQ,
+    Piqa,
+    Siqa,
+    HellaSwag,
+    Winogrande,
+    ArcE,
+    ArcC,
+    Obqa,
+    // sequence classification — GLUE analogs (Table 3)
+    Mnli,
+    Sst2,
+    Mrpc,
+    Cola,
+    Qnli,
+    Qqp,
+    Rte,
+    Stsb,
+    // extras
+    Gpqa,       // 3-hop, 4-choice (Table 4)
+    CodeGen,    // transformation programs (Table 12)
+    StrategyQa, // 2-hop yes/no (Table 13)
+}
+
+pub const ARITH: [TaskFamily; 7] = [
+    TaskFamily::MultiArith,
+    TaskFamily::GsmHard,
+    TaskFamily::AddSub,
+    TaskFamily::AQuA,
+    TaskFamily::SingleEq,
+    TaskFamily::Svamp,
+    TaskFamily::Mawps,
+];
+
+pub const COMMONSENSE: [TaskFamily; 8] = [
+    TaskFamily::BoolQ,
+    TaskFamily::Piqa,
+    TaskFamily::Siqa,
+    TaskFamily::HellaSwag,
+    TaskFamily::Winogrande,
+    TaskFamily::ArcE,
+    TaskFamily::ArcC,
+    TaskFamily::Obqa,
+];
+
+pub const NLU: [TaskFamily; 8] = [
+    TaskFamily::Mnli,
+    TaskFamily::Sst2,
+    TaskFamily::Mrpc,
+    TaskFamily::Cola,
+    TaskFamily::Qnli,
+    TaskFamily::Qqp,
+    TaskFamily::Rte,
+    TaskFamily::Stsb,
+];
+
+impl TaskFamily {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskFamily::MultiArith => "MultiArith",
+            TaskFamily::GsmHard => "GSM8K",
+            TaskFamily::AddSub => "AddSub",
+            TaskFamily::AQuA => "AQuA",
+            TaskFamily::SingleEq => "SingleEQ",
+            TaskFamily::Svamp => "SVAMP",
+            TaskFamily::Mawps => "MAWPS",
+            TaskFamily::BoolQ => "BoolQ",
+            TaskFamily::Piqa => "PIQA",
+            TaskFamily::Siqa => "SIQA",
+            TaskFamily::HellaSwag => "HellaSwag",
+            TaskFamily::Winogrande => "Wino",
+            TaskFamily::ArcE => "ARC-e",
+            TaskFamily::ArcC => "ARC-c",
+            TaskFamily::Obqa => "OBQA",
+            TaskFamily::Mnli => "MNLI",
+            TaskFamily::Sst2 => "SST-2",
+            TaskFamily::Mrpc => "MRPC",
+            TaskFamily::Cola => "CoLA",
+            TaskFamily::Qnli => "QNLI",
+            TaskFamily::Qqp => "QQP",
+            TaskFamily::Rte => "RTE",
+            TaskFamily::Stsb => "STSB",
+            TaskFamily::Gpqa => "GPQA",
+            TaskFamily::CodeGen => "Humaneval",
+            TaskFamily::StrategyQa => "StrategyQA",
+        }
+    }
+
+    /// "hard" target-domain tasks (Fig. 4 grouping).
+    pub fn is_hard(&self) -> bool {
+        matches!(
+            self,
+            TaskFamily::GsmHard | TaskFamily::AQuA | TaskFamily::Svamp | TaskFamily::ArcC | TaskFamily::Gpqa
+        )
+    }
+}
+
+/// One task sample: `tokens[answer_start..answer_start+answer_len]` is the
+/// answer span (always preceded by the ANS marker).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Sample {
+    pub tokens: Vec<i32>,
+    pub answer_start: usize,
+    pub answer_len: usize,
+}
+
+impl Sample {
+    fn close(mut prompt: Vec<i32>, answer: Vec<i32>) -> Sample {
+        prompt.push(ANS);
+        let answer_start = prompt.len();
+        let answer_len = answer.len();
+        prompt.extend(answer);
+        Sample {
+            tokens: prompt,
+            answer_start,
+            answer_len,
+        }
+    }
+
+    pub fn prompt(&self) -> &[i32] {
+        &self.tokens[..self.answer_start]
+    }
+
+    pub fn answer(&self) -> &[i32] {
+        &self.tokens[self.answer_start..self.answer_start + self.answer_len]
+    }
+}
+
+/// A generated family with disjoint splits.
+#[derive(Clone, Debug)]
+pub struct TaskSet {
+    pub family: TaskFamily,
+    pub train: Vec<Sample>,
+    pub test: Vec<Sample>,
+}
+
+fn split_hash(prompt: &[i32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &t in prompt {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+impl TaskSet {
+    /// Generate `n_train`/`n_test` deduplicated samples; ~80/20 split by
+    /// prompt hash so the two sides can never share a question.
+    pub fn generate(
+        family: TaskFamily,
+        vocab: &Vocab,
+        kg: &Kg,
+        n_train: usize,
+        n_test: usize,
+        seed: u64,
+    ) -> TaskSet {
+        let mut rng = Rng::new(seed ^ split_hash(&[family as i32]));
+        let mut train = Vec::with_capacity(n_train);
+        let mut test = Vec::with_capacity(n_test);
+        let mut seen: HashSet<u64> = HashSet::new();
+        let mut attempts = 0usize;
+        let budget = (n_train + n_test) * 400;
+        while (train.len() < n_train || test.len() < n_test) && attempts < budget {
+            attempts += 1;
+            let s = gen_sample(family, vocab, kg, &mut rng);
+            let h = split_hash(s.prompt());
+            let is_test = h % 10 >= 8;
+            // dedupe across both splits (identical prompts carry identical
+            // answers by construction, but keep sets clean anyway)
+            if !seen.insert(h) {
+                continue;
+            }
+            if is_test {
+                if test.len() < n_test {
+                    test.push(s);
+                }
+            } else if train.len() < n_train {
+                train.push(s);
+            }
+        }
+        TaskSet {
+            family,
+            train,
+            test,
+        }
+    }
+}
+
+/// Generate one sample of the family.
+pub fn gen_sample(family: TaskFamily, vocab: &Vocab, kg: &Kg, rng: &mut Rng) -> Sample {
+    use TaskFamily::*;
+    match family {
+        // ---------- arithmetic ----------
+        MultiArith => {
+            let (a, b, c) = (rng.range(0, 7), rng.range(0, 7), rng.range(0, 7));
+            let mut p = vec![BOS];
+            p.extend(vocab.number(a));
+            p.push(PLUS);
+            p.extend(vocab.number(b));
+            p.push(PLUS);
+            p.extend(vocab.number(c));
+            p.push(EQ);
+            Sample::close(p, vocab.number(a + b + c))
+        }
+        GsmHard => {
+            let (a, b) = (rng.range(0, 7), rng.range(0, 7));
+            let c = rng.range(2, 5);
+            let d = rng.range(0, 10);
+            let mut p = vec![BOS, LPAR];
+            p.extend(vocab.number(a));
+            p.push(PLUS);
+            p.extend(vocab.number(b));
+            p.push(RPAR);
+            p.push(MUL);
+            p.extend(vocab.number(c));
+            p.push(SUB);
+            p.extend(vocab.number(d));
+            p.push(EQ);
+            Sample::close(p, vocab.number((a + b) * c - d))
+        }
+        AddSub => {
+            let (a, b) = (rng.range(0, 25), rng.range(0, 25));
+            let mut p = vec![BOS];
+            p.extend(vocab.number(a));
+            p.push(SUB);
+            p.extend(vocab.number(b));
+            p.push(EQ);
+            Sample::close(p, vocab.number(a - b))
+        }
+        AQuA => {
+            let (a, b) = (rng.range(0, 25), rng.range(0, 25));
+            let ans = a + b;
+            let correct = rng.below(5);
+            let mut p = vec![BOS];
+            p.extend(vocab.number(a));
+            p.push(PLUS);
+            p.extend(vocab.number(b));
+            p.push(QMARK);
+            for (i, &label) in CHOICE.iter().enumerate() {
+                p.push(label);
+                let v = if i == correct {
+                    ans
+                } else {
+                    // distinct distractor near the answer
+                    let mut v = ans + rng.range(1, 10) * if rng.chance(0.5) { 1 } else { -1 };
+                    if v == ans {
+                        v += 1;
+                    }
+                    v
+                };
+                p.extend(vocab.number(v));
+            }
+            Sample::close(p, vec![CHOICE[correct]])
+        }
+        SingleEq => {
+            let (a, x) = (rng.range(0, 15), rng.range(0, 15));
+            let c = a + x;
+            let mut p = vec![BOS];
+            p.extend(vocab.number(a));
+            p.push(PLUS);
+            p.push(VAR_X);
+            p.push(EQ);
+            p.extend(vocab.number(c));
+            p.push(QMARK);
+            Sample::close(p, vocab.number(x))
+        }
+        Svamp => {
+            let (a, b) = (rng.range(0, 8), rng.range(0, 8));
+            let c = rng.range(0, 12);
+            let mut p = vec![BOS];
+            p.extend(vocab.number(a));
+            p.push(MUL);
+            p.extend(vocab.number(b));
+            p.push(PLUS);
+            p.extend(vocab.number(c));
+            p.push(EQ);
+            Sample::close(p, vocab.number(a * b + c))
+        }
+        Mawps => {
+            // word-problem surface: filler context around two numbers
+            let (a, b) = (rng.range(0, 15), rng.range(0, 15));
+            let f = |rng: &mut Rng| vocab.filler(rng.below(40));
+            let mut p = vec![BOS, f(rng), f(rng)];
+            p.extend(vocab.number(a));
+            p.push(f(rng));
+            p.extend(vocab.number(b));
+            p.push(f(rng));
+            p.push(QMARK);
+            Sample::close(p, vocab.number(a + b))
+        }
+        // ---------- relational QA ----------
+        BoolQ => {
+            let (e, r, t) = kg.sample_fact(rng);
+            let truthy = rng.chance(0.5);
+            let shown = if truthy { t } else { kg.distractor(rng, t) };
+            let p = vec![
+                BOS,
+                QMARK,
+                vocab.entity(e),
+                vocab.relation(r),
+                vocab.entity(shown),
+            ];
+            Sample::close(p, vec![if truthy { YES } else { NO }])
+        }
+        Piqa => {
+            let (e, r, t) = kg.sample_fact(rng);
+            let d = kg.distractor(rng, t);
+            let correct = rng.below(2);
+            let (ca, cb) = if correct == 0 { (t, d) } else { (d, t) };
+            let p = vec![
+                BOS,
+                vocab.entity(e),
+                vocab.relation(r),
+                SEP,
+                CHOICE[0],
+                vocab.entity(ca),
+                CHOICE[1],
+                vocab.entity(cb),
+            ];
+            Sample::close(p, vec![CHOICE[correct]])
+        }
+        Siqa => {
+            // which relation connects e to t?
+            let (e, r, t) = kg.sample_fact(rng);
+            let correct = rng.below(3);
+            let mut rels = Vec::new();
+            for i in 0..3 {
+                if i == correct {
+                    rels.push(r);
+                } else {
+                    loop {
+                        let rr = rng.below(kg.n_relations);
+                        if rr != r && kg.lookup(e, rr) != Some(t) {
+                            rels.push(rr);
+                            break;
+                        }
+                    }
+                }
+            }
+            let mut p = vec![BOS, vocab.entity(e), QMARK, vocab.entity(t), SEP];
+            for (i, &rr) in rels.iter().enumerate() {
+                p.push(CHOICE[i]);
+                p.push(vocab.relation(rr));
+            }
+            Sample::close(p, vec![CHOICE[correct]])
+        }
+        HellaSwag => {
+            // chain continuation: e -r1-> m; which entity does m -r2-> ?
+            let (e, r1, m, r2, t) = kg.sample_2hop(rng);
+            let correct = rng.below(4);
+            let mut p = vec![
+                BOS,
+                vocab.entity(e),
+                vocab.relation(r1),
+                vocab.entity(m),
+                vocab.relation(r2),
+                SEP,
+            ];
+            for (i, &label) in CHOICE[..4].iter().enumerate() {
+                p.push(label);
+                let shown = if i == correct { t } else { kg.distractor(rng, t) };
+                p.push(vocab.entity(shown));
+            }
+            Sample::close(p, vec![CHOICE[correct]])
+        }
+        Winogrande => {
+            // which of e1, e2 satisfies r -> t? answer is the entity itself
+            let (e1, r, t) = kg.sample_fact(rng);
+            let e2 = loop {
+                let cand = rng.below(kg.n_entities);
+                if cand != e1 && kg.lookup(cand, r) != Some(t) {
+                    break cand;
+                }
+            };
+            let first = rng.chance(0.5);
+            let (sa, sb) = if first { (e1, e2) } else { (e2, e1) };
+            let p = vec![
+                BOS,
+                vocab.entity(sa),
+                COMMA,
+                vocab.entity(sb),
+                COLON,
+                vocab.relation(r),
+                vocab.entity(t),
+                QMARK,
+            ];
+            Sample::close(p, vec![vocab.entity(e1)])
+        }
+        ArcE | Obqa => {
+            // 1-hop 4-choice; OBQA draws from the rare tier
+            let (e, r, t) = if family == Obqa {
+                kg.sample_fact_tier(rng, false)
+            } else {
+                kg.sample_fact(rng)
+            };
+            let correct = rng.below(4);
+            let mut p = vec![BOS, QMARK, vocab.entity(e), vocab.relation(r), SEP];
+            for (i, &label) in CHOICE[..4].iter().enumerate() {
+                p.push(label);
+                let shown = if i == correct { t } else { kg.distractor(rng, t) };
+                p.push(vocab.entity(shown));
+            }
+            Sample::close(p, vec![CHOICE[correct]])
+        }
+        ArcC => {
+            // 2-hop 4-choice (hard)
+            let (e, r1, _m, r2, t) = kg.sample_2hop(rng);
+            let correct = rng.below(4);
+            let mut p = vec![
+                BOS,
+                QMARK,
+                vocab.entity(e),
+                vocab.relation(r1),
+                vocab.relation(r2),
+                SEP,
+            ];
+            for (i, &label) in CHOICE[..4].iter().enumerate() {
+                p.push(label);
+                let shown = if i == correct { t } else { kg.distractor(rng, t) };
+                p.push(vocab.entity(shown));
+            }
+            Sample::close(p, vec![CHOICE[correct]])
+        }
+        // ---------- sequence classification (GLUE analogs) ----------
+        Sst2 => {
+            // "sentiment": majority of tokens from the positive half
+            let len = 7 + rng.below(4);
+            let n_pos = rng.below(len + 1);
+            let half = vocab.n_filler / 2;
+            let mut toks: Vec<i32> = (0..len)
+                .map(|i| {
+                    if i < n_pos {
+                        vocab.filler(rng.below(half))
+                    } else {
+                        vocab.filler(half + rng.below(vocab.n_filler - half))
+                    }
+                })
+                .collect();
+            rng.shuffle(&mut toks);
+            let mut p = vec![BOS];
+            p.extend(&toks);
+            let positive = 2 * n_pos > len;
+            Sample::close(p, vec![if positive { YES } else { NO }])
+        }
+        Mnli => {
+            // entail = hypothesis ⊆ premise; contradict = disjoint; else neutral
+            let plen = 6 + rng.below(3);
+            let prem: Vec<i32> = (0..plen).map(|_| vocab.filler(rng.below(60))).collect();
+            let hlen = 3;
+            let mode = rng.below(3);
+            let hyp: Vec<i32> = match mode {
+                0 => (0..hlen).map(|_| prem[rng.below(plen)]).collect(),
+                1 => (0..hlen)
+                    .map(|_| loop {
+                        let t = vocab.filler(rng.below(60));
+                        if !prem.contains(&t) {
+                            break t;
+                        }
+                    })
+                    .collect(),
+                _ => vec![
+                    prem[rng.below(plen)],
+                    loop {
+                        let t = vocab.filler(rng.below(60));
+                        if !prem.contains(&t) {
+                            break t;
+                        }
+                    },
+                    prem[rng.below(plen)],
+                ],
+            };
+            let mut p = vec![BOS];
+            p.extend(&prem);
+            p.push(SEP);
+            p.extend(&hyp);
+            let label = match mode {
+                0 => YES,
+                1 => NO,
+                _ => MAYBE,
+            };
+            Sample::close(p, vec![label])
+        }
+        Mrpc | Qqp => {
+            // paraphrase = same multiset; negative differs in 1 (MRPC) or
+            // is a near-miss with 1 swap + 1 replace (QQP, harder)
+            let len = 6 + rng.below(3);
+            let a: Vec<i32> = (0..len).map(|_| vocab.filler(rng.below(80))).collect();
+            let mut b = a.clone();
+            rng.shuffle(&mut b);
+            let same = rng.chance(0.5);
+            if !same {
+                let idx = rng.below(len);
+                b[idx] = loop {
+                    let t = vocab.filler(rng.below(80));
+                    if !a.contains(&t) {
+                        break t;
+                    }
+                };
+                if family == TaskFamily::Qqp {
+                    b.swap(0, len - 1);
+                }
+            }
+            let mut p = vec![BOS];
+            p.extend(&a);
+            p.push(SEP);
+            p.extend(&b);
+            Sample::close(p, vec![if same { YES } else { NO }])
+        }
+        Cola => {
+            // "grammatical" = strictly alternating low/high filler halves
+            let len = 8;
+            let half = vocab.n_filler / 2;
+            let good = rng.chance(0.5);
+            let mut toks = Vec::with_capacity(len);
+            for i in 0..len {
+                let lo = i % 2 == 0;
+                toks.push(if lo {
+                    vocab.filler(rng.below(half))
+                } else {
+                    vocab.filler(half + rng.below(vocab.n_filler - half))
+                });
+            }
+            if !good {
+                // violate alternation at a random position
+                let i = rng.below(len - 1);
+                toks[i + 1] = toks[i];
+            }
+            let mut p = vec![BOS];
+            p.extend(&toks);
+            Sample::close(p, vec![if good { YES } else { NO }])
+        }
+        Qnli => {
+            // does the query token occur in the passage?
+            let len = 8 + rng.below(4);
+            let pass: Vec<i32> = (0..len).map(|_| vocab.filler(rng.below(100))).collect();
+            let present = rng.chance(0.5);
+            let q = if present {
+                pass[rng.below(len)]
+            } else {
+                loop {
+                    let t = vocab.filler(rng.below(100));
+                    if !pass.contains(&t) {
+                        break t;
+                    }
+                }
+            };
+            let mut p = vec![BOS, q, SEP];
+            p.extend(&pass);
+            Sample::close(p, vec![if present { YES } else { NO }])
+        }
+        Rte => {
+            // entailment-as-subset over sets of 3
+            let a: Vec<i32> = (0..6).map(|_| vocab.filler(rng.below(60))).collect();
+            let entail = rng.chance(0.5);
+            let b: Vec<i32> = if entail {
+                (0..3).map(|_| a[rng.below(6)]).collect()
+            } else {
+                let mut b: Vec<i32> = (0..2).map(|_| a[rng.below(6)]).collect();
+                b.push(loop {
+                    let t = vocab.filler(rng.below(60));
+                    if !a.contains(&t) {
+                        break t;
+                    }
+                });
+                b
+            };
+            let mut p = vec![BOS];
+            p.extend(&a);
+            p.push(SEP);
+            p.extend(&b);
+            Sample::close(p, vec![if entail { YES } else { NO }])
+        }
+        Stsb => {
+            // similarity bucket = #shared tokens between two length-5 seqs
+            let a: Vec<i32> = (0..5).map(|_| vocab.filler(rng.below(50))).collect();
+            let shared = rng.below(6);
+            let mut b = Vec::with_capacity(5);
+            for item in a.iter().take(shared) {
+                b.push(*item);
+            }
+            while b.len() < 5 {
+                b.push(loop {
+                    let t = vocab.filler(rng.below(50));
+                    if !a.contains(&t) {
+                        break t;
+                    }
+                });
+            }
+            rng.shuffle(&mut b);
+            let mut p = vec![BOS];
+            p.extend(&a);
+            p.push(SEP);
+            p.extend(&b);
+            // exact bucket = |a ∩ b| (a has distinct-ish tokens; recount)
+            let k = a.iter().filter(|t| b.contains(t)).count().min(5) as u32;
+            Sample::close(p, vec![vocab.digit(k)])
+        }
+        // ---------- extras ----------
+        Gpqa => {
+            let (e, r1, _m1, r2, _m2, r3, t) = kg.sample_3hop(rng);
+            let correct = rng.below(4);
+            let mut p = vec![
+                BOS,
+                QMARK,
+                vocab.entity(e),
+                vocab.relation(r1),
+                vocab.relation(r2),
+                vocab.relation(r3),
+                SEP,
+            ];
+            for (i, &label) in CHOICE[..4].iter().enumerate() {
+                p.push(label);
+                let shown = if i == correct { t } else { kg.distractor(rng, t) };
+                p.push(vocab.entity(shown));
+            }
+            Sample::close(p, vec![CHOICE[correct]])
+        }
+        CodeGen => {
+            // "programs": opcode + 4 digits -> transformed 4 digits
+            let op = rng.below(3);
+            let digits: Vec<u32> = (0..4).map(|_| rng.below(10) as u32).collect();
+            let out: Vec<u32> = match op {
+                0 => digits.iter().rev().copied().collect(), // reverse
+                1 => {
+                    let mut s = digits.clone();
+                    s.sort_unstable();
+                    s
+                } // sort
+                _ => digits.iter().map(|d| (d + 1) % 10).collect(), // inc
+            };
+            let mut p = vec![BOS, vocab.filler(op)];
+            p.extend(digits.iter().map(|&d| vocab.digit(d)));
+            Sample::close(p, out.iter().map(|&d| vocab.digit(d)).collect())
+        }
+        StrategyQa => {
+            let (e, r1, _m, r2, t) = kg.sample_2hop(rng);
+            let truthy = rng.chance(0.5);
+            let shown = if truthy { t } else { kg.distractor(rng, t) };
+            let p = vec![
+                BOS,
+                QMARK,
+                vocab.entity(e),
+                vocab.relation(r1),
+                vocab.relation(r2),
+                vocab.entity(shown),
+            ];
+            Sample::close(p, vec![if truthy { YES } else { NO }])
+        }
+    }
+}
+
+/// Convert samples into training/eval batches, one sample per row; loss
+/// mask covers exactly the answer span (position i predicts token i+1).
+/// Returns (batch, rows-used) pairs.
+pub fn samples_to_batches(
+    samples: &[Sample],
+    batch: usize,
+    seq: usize,
+) -> Vec<(Batch, usize)> {
+    let mut out = Vec::new();
+    for chunk in samples.chunks(batch) {
+        let mut b = Batch::empty(batch, seq);
+        for (row, s) in chunk.iter().enumerate() {
+            write_row(&mut b, row, s, seq);
+        }
+        out.push((b, chunk.len()));
+    }
+    out
+}
+
+fn write_row(b: &mut Batch, row: usize, s: &Sample, seq: usize) {
+    let n = s.tokens.len().min(seq);
+    for i in 0..n {
+        b.tokens[row * seq + i] = s.tokens[i];
+    }
+    for i in 0..n.saturating_sub(1) {
+        b.targets[row * seq + i] = s.tokens[i + 1];
+    }
+    // mask positions predicting the answer span: i+1 in [start, start+len)
+    let lo = s.answer_start.saturating_sub(1);
+    let hi = (s.answer_start + s.answer_len - 1).min(seq - 1);
+    for i in lo..hi {
+        b.loss_mask[row * seq + i] = 1.0;
+    }
+}
+
+/// Training source: uniform mixture over families' train splits.
+/// Samples are *packed* back-to-back in each row (loss still masked to
+/// answer spans only) — with short samples this multiplies the learning
+/// signal per step ~4-6x over one-sample-per-row.
+pub struct TaskMixSource {
+    pub sets: Vec<TaskSet>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl BatchSource for TaskMixSource {
+    fn next_batch(&mut self, rng: &mut Rng) -> Batch {
+        let mut b = Batch::empty(self.batch, self.seq);
+        for row in 0..self.batch {
+            let mut pos = 0usize;
+            loop {
+                let set = &self.sets[rng.below(self.sets.len())];
+                let s = &set.train[rng.below(set.train.len())];
+                if pos + s.tokens.len() + 1 > self.seq {
+                    break;
+                }
+                write_sample_at(&mut b, row, pos, s, self.seq);
+                pos += s.tokens.len();
+            }
+            if pos == 0 {
+                // degenerate: sample longer than seq; truncate-write one
+                let set = &self.sets[rng.below(self.sets.len())];
+                let s = &set.train[rng.below(set.train.len())];
+                write_row(&mut b, row, s, self.seq);
+            }
+        }
+        b
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.batch, self.seq)
+    }
+}
+
+/// Write a sample at a row offset with packed next-token targets.
+fn write_sample_at(b: &mut Batch, row: usize, pos: usize, s: &Sample, seq: usize) {
+    let base = row * seq + pos;
+    let n = s.tokens.len();
+    debug_assert!(pos + n <= seq);
+    for i in 0..n {
+        b.tokens[base + i] = s.tokens[i];
+    }
+    for i in 0..n.saturating_sub(1) {
+        b.targets[base + i] = s.tokens[i + 1];
+    }
+    let lo = s.answer_start - 1;
+    let hi = s.answer_start + s.answer_len - 1;
+    for i in lo..hi.min(n - 1).max(lo) {
+        b.loss_mask[base + i] = 1.0;
+    }
+    // also learn to predict the answer's final position -> nothing beyond
+    let _ = hi;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> (Vocab, Kg) {
+        let v = Vocab::new(512);
+        let kg = Kg::new(7, v.n_entities, v.n_relations);
+        (v, kg)
+    }
+
+    const ALL: [TaskFamily; 26] = [
+        TaskFamily::MultiArith,
+        TaskFamily::GsmHard,
+        TaskFamily::AddSub,
+        TaskFamily::AQuA,
+        TaskFamily::SingleEq,
+        TaskFamily::Svamp,
+        TaskFamily::Mawps,
+        TaskFamily::BoolQ,
+        TaskFamily::Piqa,
+        TaskFamily::Siqa,
+        TaskFamily::HellaSwag,
+        TaskFamily::Winogrande,
+        TaskFamily::ArcE,
+        TaskFamily::ArcC,
+        TaskFamily::Obqa,
+        TaskFamily::Mnli,
+        TaskFamily::Sst2,
+        TaskFamily::Mrpc,
+        TaskFamily::Cola,
+        TaskFamily::Qnli,
+        TaskFamily::Qqp,
+        TaskFamily::Rte,
+        TaskFamily::Stsb,
+        TaskFamily::Gpqa,
+        TaskFamily::CodeGen,
+        TaskFamily::StrategyQa,
+    ];
+
+    #[test]
+    fn all_families_generate_valid_samples() {
+        let (v, kg) = env();
+        let mut rng = Rng::new(1);
+        for fam in ALL {
+            for _ in 0..50 {
+                let s = gen_sample(fam, &v, &kg, &mut rng);
+                assert_eq!(s.tokens[0], BOS, "{fam:?}");
+                assert!(s.answer_len >= 1, "{fam:?}");
+                assert_eq!(s.tokens[s.answer_start - 1], ANS, "{fam:?}");
+                assert!(
+                    s.answer_start + s.answer_len <= s.tokens.len(),
+                    "{fam:?}"
+                );
+                assert!(s.tokens.len() <= 60, "{fam:?} too long: {}", s.tokens.len());
+                for &t in &s.tokens {
+                    assert!((t as usize) < v.size, "{fam:?} token {t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_answers_are_correct() {
+        let (v, kg) = env();
+        let mut rng = Rng::new(2);
+        // decode digits back for MultiArith and verify the sum
+        for _ in 0..50 {
+            let s = gen_sample(TaskFamily::MultiArith, &v, &kg, &mut rng);
+            let nums = decode_numbers(&s.tokens[..s.answer_start - 1]);
+            assert_eq!(nums.len(), 3, "{:?}", s.tokens);
+            let ans = decode_numbers(s.answer());
+            assert_eq!(ans[0], nums.iter().sum::<i64>());
+        }
+    }
+
+    fn decode_numbers(toks: &[i32]) -> Vec<i64> {
+        let mut out = Vec::new();
+        let mut cur: Option<i64> = None;
+        let mut neg = false;
+        for &t in toks {
+            if t == MINUS {
+                neg = true;
+            } else if (DIGIT0..DIGIT0 + 10).contains(&t) {
+                cur = Some(cur.unwrap_or(0) * 10 + (t - DIGIT0) as i64);
+            } else {
+                if let Some(x) = cur.take() {
+                    out.push(if neg { -x } else { x });
+                }
+                neg = false;
+            }
+        }
+        if let Some(x) = cur {
+            out.push(if neg { -x } else { x });
+        }
+        out
+    }
+
+    #[test]
+    fn splits_are_disjoint_and_sized() {
+        let (v, kg) = env();
+        let ts = TaskSet::generate(TaskFamily::AddSub, &v, &kg, 300, 60, 42);
+        assert_eq!(ts.train.len(), 300);
+        assert_eq!(ts.test.len(), 60);
+        let train_prompts: HashSet<Vec<i32>> =
+            ts.train.iter().map(|s| s.prompt().to_vec()).collect();
+        for t in &ts.test {
+            assert!(!train_prompts.contains(t.prompt()), "split leak");
+        }
+    }
+
+    #[test]
+    fn batch_masks_cover_answer_span_only() {
+        let (v, kg) = env();
+        let mut rng = Rng::new(3);
+        let s = gen_sample(TaskFamily::BoolQ, &v, &kg, &mut rng);
+        let bs = samples_to_batches(&[s.clone()], 2, 32);
+        assert_eq!(bs.len(), 1);
+        let (b, used) = &bs[0];
+        assert_eq!(*used, 1);
+        let mask_count = b.loss_mask.iter().filter(|&&m| m == 1.0).count();
+        assert_eq!(mask_count, s.answer_len);
+        // the masked positions' targets are exactly the answer tokens
+        let got: Vec<i32> = (0..32)
+            .filter(|&i| b.loss_mask[i] == 1.0)
+            .map(|i| b.targets[i])
+            .collect();
+        assert_eq!(got, s.answer());
+        // row 1 untouched
+        assert!(b.loss_mask[32..].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn task_mix_source_shapes() {
+        let (v, kg) = env();
+        let sets = vec![
+            TaskSet::generate(TaskFamily::AddSub, &v, &kg, 50, 10, 1),
+            TaskSet::generate(TaskFamily::BoolQ, &v, &kg, 50, 10, 1),
+        ];
+        let mut src = TaskMixSource {
+            sets,
+            batch: 4,
+            seq: 64,
+        };
+        let mut rng = Rng::new(5);
+        let b = src.next_batch(&mut rng);
+        assert_eq!(b.tokens.len(), 4 * 64);
+        assert!(b.loss_mask.iter().any(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn larger_vocab_tasks_stay_in_range() {
+        let v = Vocab::new(4096);
+        let kg = Kg::new(11, v.n_entities, v.n_relations);
+        let mut rng = Rng::new(6);
+        for fam in ALL {
+            let s = gen_sample(fam, &v, &kg, &mut rng);
+            for &t in &s.tokens {
+                assert!((t as usize) < v.size);
+            }
+        }
+    }
+}

@@ -1,0 +1,154 @@
+//! Token-id layout, parameterized by vocabulary size.
+//!
+//! Fixed special/digit/operator prefix, then relations, entities, and a
+//! filler tail (template words for word-problem surfaces and the language
+//! mixture). Numbers are digit-tokenized (base 10, optional minus).
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const ANS: i32 = 4;
+pub const QMARK: i32 = 5;
+pub const YES: i32 = 6;
+pub const NO: i32 = 7;
+pub const MINUS: i32 = 8;
+/// Multiple-choice labels A..E.
+pub const CHOICE: [i32; 5] = [9, 10, 11, 12, 13];
+pub const VAR_X: i32 = 14;
+pub const MAYBE: i32 = 15;
+
+pub const DIGIT0: i32 = 16; // ..25
+pub const PLUS: i32 = 26;
+pub const SUB: i32 = 27;
+pub const MUL: i32 = 28;
+pub const DIV: i32 = 29;
+pub const EQ: i32 = 30;
+pub const LPAR: i32 = 31;
+pub const RPAR: i32 = 32;
+pub const COMMA: i32 = 33;
+pub const DOT: i32 = 34;
+pub const COLON: i32 = 35;
+
+pub const REL0: i32 = 36;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub size: usize,
+    pub n_relations: usize,
+    pub n_entities: usize,
+    pub n_filler: usize,
+    ent0: i32,
+    fill0: i32,
+}
+
+impl Vocab {
+    /// Carve the given vocab size. Needs >= 128 tokens.
+    pub fn new(size: usize) -> Vocab {
+        assert!(size >= 128, "vocab too small: {size}");
+        let n_relations = 24usize;
+        let remaining = size - REL0 as usize - n_relations;
+        // ~60% entities, rest filler
+        let n_entities = (remaining * 3 / 5).min(4096);
+        let n_filler = remaining - n_entities;
+        Vocab {
+            size,
+            n_relations,
+            n_entities,
+            n_filler,
+            ent0: REL0 + n_relations as i32,
+            fill0: REL0 + (n_relations + n_entities) as i32,
+        }
+    }
+
+    pub fn relation(&self, r: usize) -> i32 {
+        debug_assert!(r < self.n_relations);
+        REL0 + (r % self.n_relations) as i32
+    }
+
+    pub fn entity(&self, e: usize) -> i32 {
+        debug_assert!(e < self.n_entities);
+        self.ent0 + (e % self.n_entities) as i32
+    }
+
+    pub fn filler(&self, f: usize) -> i32 {
+        self.fill0 + (f % self.n_filler) as i32
+    }
+
+    pub fn is_entity(&self, tok: i32) -> bool {
+        tok >= self.ent0 && tok < self.fill0
+    }
+
+    pub fn entity_index(&self, tok: i32) -> Option<usize> {
+        if self.is_entity(tok) {
+            Some((tok - self.ent0) as usize)
+        } else {
+            None
+        }
+    }
+
+    pub fn digit(&self, d: u32) -> i32 {
+        debug_assert!(d < 10);
+        DIGIT0 + d as i32
+    }
+
+    /// Digit-tokenize an integer (optional minus, no leading zeros).
+    pub fn number(&self, x: i64) -> Vec<i32> {
+        let mut out = Vec::new();
+        if x < 0 {
+            out.push(MINUS);
+        }
+        let mut mag = x.unsigned_abs();
+        if mag == 0 {
+            return vec![self.digit(0)];
+        }
+        let mut digits = Vec::new();
+        while mag > 0 {
+            digits.push(self.digit((mag % 10) as u32));
+            mag /= 10;
+        }
+        digits.reverse();
+        out.extend(digits);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_is_disjoint() {
+        let v = Vocab::new(512);
+        assert_eq!(v.size, 512);
+        let r_last = v.relation(v.n_relations - 1);
+        let e_first = v.entity(0);
+        let e_last = v.entity(v.n_entities - 1);
+        let f_first = v.filler(0);
+        let f_last = v.filler(v.n_filler - 1);
+        assert!(r_last < e_first);
+        assert!(e_last < f_first);
+        assert!((f_last as usize) < v.size);
+        assert!(v.is_entity(e_first) && v.is_entity(e_last));
+        assert!(!v.is_entity(r_last) && !v.is_entity(f_first));
+    }
+
+    #[test]
+    fn number_tokenization() {
+        let v = Vocab::new(512);
+        assert_eq!(v.number(0), vec![DIGIT0]);
+        assert_eq!(v.number(7), vec![DIGIT0 + 7]);
+        assert_eq!(v.number(42), vec![DIGIT0 + 4, DIGIT0 + 2]);
+        assert_eq!(v.number(-305), vec![MINUS, DIGIT0 + 3, DIGIT0, DIGIT0 + 5]);
+    }
+
+    #[test]
+    fn scales_to_larger_vocabs() {
+        for size in [512usize, 1024, 4096, 16384] {
+            let v = Vocab::new(size);
+            assert!(v.n_entities >= 200);
+            assert!(v.n_filler >= 50);
+            assert!((v.filler(v.n_filler - 1) as usize) < size);
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Ablations: update interval (Fig. 7a), rank-reduction strategy (Fig. 7b),
+//! layer-type restriction (Fig. 11), LRA-rank heatmap (Fig. 16), mask
+//! overlap vs weight magnitude (Fig. 17).
+
+use anyhow::Result;
+
+use super::harness::*;
+use crate::data::tasks::ARITH;
+use crate::data::TaskFamily;
+use crate::lift::{self, LiftCfg, RankStrategy};
+use crate::methods::Scope;
+use crate::util::cli::Args;
+
+pub fn fig7a(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let preset = args.str("preset", "tiny");
+    let intervals: Vec<usize> = if env.fast {
+        vec![25, 100, 0]
+    } else {
+        vec![25, 50, 100, 200, 0] // 0 = never refresh
+    };
+    let mut csv = env.csv("fig7a", &["interval", "acc"])?;
+    println!("\n== Fig 7a: mask update interval (GSM8K-analog) ==");
+    println!("{:<10} {:>8}", "interval", "acc");
+    // Full FT baseline for the dashed line in the paper
+    let spec = RunSpec::new(&preset, &[TaskFamily::GsmHard], env.fast);
+    let base = run_ft(env, &spec, &MethodSpec::new("full", 32), false)?;
+    println!("{:<10} {:>8.2}", "full-ft", base.avg);
+    csv.row(&["full".into(), format!("{:.3}", base.avg)])?;
+    for &iv in &intervals {
+        let mut ms = MethodSpec::new("lift", 32);
+        ms.interval = iv;
+        let out = run_ft(env, &spec, &ms, false)?;
+        let name = if iv == 0 { "never".to_string() } else { iv.to_string() };
+        println!("{:<10} {:>8.2}", name, out.avg);
+        csv.row(&[name, format!("{:.3}", out.avg)])?;
+    }
+    println!("(expected: medium interval best; all above the baseline)");
+    Ok(())
+}
+
+pub fn fig7b(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let preset = args.str("preset", "tiny");
+    let strategies = [
+        ("largest", RankStrategy::Largest),
+        ("random", RankStrategy::Random),
+        ("smallest", RankStrategy::Smallest),
+        ("hybrid", RankStrategy::Hybrid),
+    ];
+    let mut csv = env.csv("fig7b", &["strategy", "avg"])?;
+    println!("\n== Fig 7b: rank-reduction strategies (7 arithmetic tasks) ==");
+    println!("{:<10} {:>8}", "strategy", "avg");
+    for (name, strat) in strategies {
+        let spec = RunSpec::new(&preset, &ARITH, env.fast);
+        let exec = env.exec(&preset)?;
+        let base = env.pretrained(&preset)?;
+        let corpus = env.world(&preset)?;
+        // run via a custom SparseFt with the given strategy
+        let mut sets = Vec::new();
+        for &f in &ARITH {
+            sets.push(crate::data::tasks::TaskSet::generate(
+                f,
+                &corpus.vocab,
+                &corpus.kg,
+                spec.n_train,
+                spec.n_test,
+                spec.seed,
+            ));
+        }
+        let mut src = crate::data::tasks::TaskMixSource {
+            sets: sets.clone(),
+            batch: exec.preset.batch,
+            seq: exec.preset.seq,
+        };
+        let mut params = base.clone();
+        let mut ctx = crate::train::pretrain::make_ctx(&env.rt, &exec, spec.seed);
+        let cfg_l = LiftCfg {
+            rank: 32,
+            strategy: strat,
+            ..Default::default()
+        };
+        let mut method = crate::methods::sparse_ft::SparseFt::new(
+            &format!("LIFT[{name}]"),
+            lift::Selector::Lift,
+            32,
+            cfg_l,
+            100,
+            Scope::default(),
+        );
+        let tcfg = crate::train::TrainCfg {
+            steps: spec.steps,
+            lr: default_lr("lift"),
+            warmup_frac: 0.03,
+            log_every: 0,
+            seed: spec.seed,
+        };
+        crate::train::train(&exec, &mut src, &mut method, &mut ctx, &mut params, &tcfg)?;
+        let mut accs = Vec::new();
+        for set in &sets {
+            accs.push(crate::train::eval::accuracy(&exec, &params, &set.test)?);
+        }
+        let avg = crate::util::stats::mean(&accs);
+        println!("{name:<10} {avg:>8.2}");
+        csv.row(&[name.to_string(), format!("{avg:.3}")])?;
+    }
+    println!("(expected: largest >> random/hybrid > smallest)");
+    Ok(())
+}
+
+pub fn fig11(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let preset = args.str("preset", "tiny");
+    let kinds = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
+    let mut csv = env.csv("fig11", &["kind", "avg"])?;
+    println!("\n== Fig 11: LIFT restricted to one layer type (arithmetic avg) ==");
+    println!("{:<8} {:>8}", "kind", "avg");
+    for kind in kinds {
+        let spec = RunSpec::new(&preset, &ARITH, env.fast);
+        let mut ms = MethodSpec::new("lift", 64);
+        ms.scope = Scope {
+            mlp_only: false,
+            kind: Some(kind.to_string()),
+        };
+        let out = run_ft(env, &spec, &ms, false)?;
+        println!("{kind:<8} {:>8.2}", out.avg);
+        csv.row(&[kind.to_string(), format!("{:.3}", out.avg)])?;
+    }
+    println!("(expected: value/up/down >> query/key)");
+    Ok(())
+}
+
+pub fn fig16(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let preset = args.str("preset", "tiny");
+    let ranks: Vec<usize> = if env.fast {
+        vec![8, 32]
+    } else {
+        vec![8, 16, 32, 64]
+    };
+    let mut csv = env.csv("fig16", &["lra_rank", "selected_rank", "avg"])?;
+    println!("\n== Fig 16: LRA rank x selected rank heatmap (arith avg) ==");
+    print!("{:<10}", "lra\\sel");
+    for r in &ranks {
+        print!("{r:>8}");
+    }
+    println!();
+    for &lra in &ranks {
+        print!("{lra:<10}");
+        for &sel in &ranks {
+            let spec = RunSpec::new(&preset, &ARITH, env.fast);
+            let mut ms = MethodSpec::new("lift", sel);
+            ms.lra_rank = lra;
+            let out = run_ft(env, &spec, &ms, false)?;
+            print!("{:>8.2}", out.avg);
+            csv.row(&[
+                lra.to_string(),
+                sel.to_string(),
+                format!("{:.3}", out.avg),
+            ])?;
+        }
+        println!();
+    }
+    println!("(expected: best cells near the diagonal lra ~ selected)");
+    Ok(())
+}
+
+pub fn fig17(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    // no training: masks on the pretrained model
+    let preset = args.str("preset", "tiny");
+    let base = env.pretrained(&preset)?;
+    let exec = env.exec(&preset)?;
+    let la = crate::runtime::Linalg::new(&env.rt.client);
+    let mut rng = crate::util::rng::Rng::new(3);
+    let lra_ranks = [8usize, 32, 128];
+    let kinds = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
+    let mut csv = env.csv("fig17", &["lra_rank", "kind", "overlap"])?;
+    println!("\n== Fig 17: overlap of LIFT vs weight-magnitude masks ==");
+    print!("{:<10}", "lra");
+    for k in kinds {
+        print!("{k:>9}");
+    }
+    println!();
+    for &lra in &lra_ranks {
+        print!("{lra:<10}");
+        for kind in kinds {
+            let idxs = crate::model::matrices_of_kind(&exec.preset, kind);
+            let mut overlaps = Vec::new();
+            for &pi in &idxs {
+                let w = &base[pi];
+                let (m, n) = w.dims2();
+                let k = lift::budget_for(m, n, 32);
+                let cfg = LiftCfg {
+                    rank: lra,
+                    ..Default::default()
+                };
+                let lift_idx = lift::principal_indices(&la, w, k, &cfg, &mut rng)?;
+                let wm_idx = lift::topk_indices(&w.data, k);
+                overlaps.push(lift::mask_overlap(&wm_idx, &lift_idx));
+            }
+            let v = crate::util::stats::mean(&overlaps);
+            print!("{v:>9.3}");
+            csv.row(&[lra.to_string(), kind.to_string(), format!("{v:.4}")])?;
+        }
+        println!();
+    }
+    println!("(expected: low overlap overall, rising with LRA rank)");
+    Ok(())
+}

@@ -1,0 +1,273 @@
+//! Shared experiment harness: pretrain-once, fine-tune-many machinery.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::data::tasks::{TaskMixSource, TaskSet};
+use crate::data::{CorpusGen, TaskFamily};
+use crate::lift::LiftCfg;
+use crate::methods::{make_method, Scope};
+use crate::runtime::model_exec::ModelExec;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::train::{eval, pretrain, train, TrainCfg, TrainLog};
+use crate::util::cli::Args;
+use crate::util::csv::CsvWriter;
+
+pub fn default_pretrain_steps(preset: &str) -> usize {
+    // sized so each preset sees enough tokens to memorize its KG tier
+    // (fact-recall >> chance); see EXPERIMENTS.md §Setup
+    match preset {
+        "tiny" => 1500,
+        "small" => 2500,
+        "base" => 1200,
+        _ => 300,
+    }
+}
+
+/// Per-method default learning rates (searched once; see EXPERIMENTS.md).
+pub fn default_lr(method: &str) -> f32 {
+    match method {
+        "full" => 3e-4,
+        "lora" | "dora" | "pissa" | "spectral" => 1e-3,
+        "s2ft" => 5e-4,
+        _ => 1e-3, // sparse family
+    }
+}
+
+/// Shared state across runs inside one experiment invocation.
+pub struct ExpEnv {
+    pub rt: Runtime,
+    pub fast: bool,
+    pub results_dir: PathBuf,
+    execs: BTreeMap<String, Rc<ModelExec>>,
+    pretrained: BTreeMap<String, Vec<Tensor>>,
+}
+
+impl ExpEnv {
+    pub fn new(args: &Args) -> Result<ExpEnv> {
+        Ok(ExpEnv {
+            rt: Runtime::from_default()?,
+            fast: args.bool("fast", false),
+            results_dir: PathBuf::from(args.str("results-dir", "results")),
+            execs: BTreeMap::new(),
+            pretrained: BTreeMap::new(),
+        })
+    }
+
+    pub fn exec(&mut self, preset: &str) -> Result<Rc<ModelExec>> {
+        if let Some(e) = self.execs.get(preset) {
+            return Ok(e.clone());
+        }
+        let e = Rc::new(ModelExec::load(&self.rt, preset)?);
+        self.execs.insert(preset.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Pretrained base parameters for a preset (cached in runs/ on disk
+    /// and in memory for this invocation).
+    pub fn pretrained(&mut self, preset: &str) -> Result<Vec<Tensor>> {
+        if let Some(p) = self.pretrained.get(preset) {
+            return Ok(p.clone());
+        }
+        let exec = self.exec(preset)?;
+        // --fast shrinks fine-tunes, not the base model: reuse the cached
+        // full pretrain if present, otherwise fall back to a short one
+        let full_steps = default_pretrain_steps(preset);
+        let full_path = pretrain::runs_dir().join(format!(
+            "{preset}_pretrain_s{full_steps}_seed1.ckpt"
+        ));
+        let steps = if self.fast && !full_path.exists() {
+            full_steps / 3
+        } else {
+            full_steps
+        };
+        let params = pretrain::ensure_pretrained(&self.rt, &exec, steps, 1)?;
+        self.pretrained.insert(preset.to_string(), params.clone());
+        Ok(params)
+    }
+
+    pub fn world(&mut self, preset: &str) -> Result<CorpusGen> {
+        Ok(pretrain::world(self.exec(preset)?.as_ref()))
+    }
+
+    pub fn csv(&self, name: &str, header: &[&str]) -> Result<CsvWriter> {
+        CsvWriter::create(&self.results_dir, name, header)
+    }
+}
+
+/// One fine-tuning configuration.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub preset: String,
+    pub families: Vec<TaskFamily>,
+    pub steps: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub seed: u64,
+}
+
+impl RunSpec {
+    pub fn new(preset: &str, families: &[TaskFamily], fast: bool) -> RunSpec {
+        RunSpec {
+            preset: preset.to_string(),
+            families: families.to_vec(),
+            steps: if fast { 100 } else { 400 },
+            n_train: if fast { 500 } else { 2000 },
+            n_test: if fast { 60 } else { 120 },
+            seed: 1,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct MethodSpec {
+    pub name: String,
+    pub rank: usize,
+    pub lra_rank: usize,
+    pub interval: usize,
+    pub lr: f32,
+    pub scope: Scope,
+}
+
+impl MethodSpec {
+    pub fn new(name: &str, rank: usize) -> MethodSpec {
+        MethodSpec {
+            name: name.to_string(),
+            rank,
+            lra_rank: rank,
+            interval: 100,
+            lr: default_lr(name),
+            scope: Scope::default(),
+        }
+    }
+}
+
+/// Outcome of one fine-tune + eval run.
+pub struct FtOutcome {
+    pub label: String,
+    /// accuracy per family, in `families` order
+    pub accs: Vec<f64>,
+    pub avg: f64,
+    pub log: TrainLog,
+    pub trainable: usize,
+    pub opt_bytes: usize,
+    /// (before, after) parameters when requested (analysis experiments)
+    pub params: Option<(Vec<Tensor>, Vec<Tensor>)>,
+}
+
+/// Fine-tune `method` from the preset's pretrained base on a mixture of
+/// `families`, then evaluate each family's test split.
+pub fn run_ft(
+    env: &mut ExpEnv,
+    spec: &RunSpec,
+    method_spec: &MethodSpec,
+    keep_params: bool,
+) -> Result<FtOutcome> {
+    let base = env.pretrained(&spec.preset)?;
+    let mut out = run_ft_from(env, spec, method_spec, base.clone())?;
+    if !keep_params {
+        out.params = None;
+    } else if let Some(p) = out.params.as_mut() {
+        p.0 = base;
+    }
+    Ok(out)
+}
+
+/// Like `run_ft` but starting from caller-supplied parameters (e.g. an
+/// instruction-capable intermediate checkpoint, Fig. 4). Always keeps
+/// (start, end) params in the outcome.
+pub fn run_ft_from(
+    env: &mut ExpEnv,
+    spec: &RunSpec,
+    method_spec: &MethodSpec,
+    base: Vec<Tensor>,
+) -> Result<FtOutcome> {
+    let exec = env.exec(&spec.preset)?;
+    let corpus = env.world(&spec.preset)?;
+    let sets: Vec<TaskSet> = spec
+        .families
+        .iter()
+        .map(|&f| {
+            TaskSet::generate(
+                f,
+                &corpus.vocab,
+                &corpus.kg,
+                spec.n_train,
+                spec.n_test,
+                spec.seed,
+            )
+        })
+        .collect();
+    let mut src = TaskMixSource {
+        sets: sets.clone(),
+        batch: exec.preset.batch,
+        seq: exec.preset.seq,
+    };
+    let mut params = base.clone();
+    let mut ctx = pretrain::make_ctx(&env.rt, &exec, spec.seed ^ 0xabcd);
+    let lift_cfg = LiftCfg {
+        rank: method_spec.lra_rank,
+        ..Default::default()
+    };
+    let mut method = make_method(
+        &method_spec.name,
+        method_spec.rank,
+        lift_cfg,
+        method_spec.interval,
+        method_spec.scope.clone(),
+    )?;
+    let cfg = TrainCfg {
+        steps: spec.steps,
+        lr: method_spec.lr,
+        warmup_frac: 0.03,
+        log_every: 0,
+        seed: spec.seed,
+    };
+    let log = train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg)?;
+    let mut accs = Vec::with_capacity(sets.len());
+    for set in &sets {
+        accs.push(eval::accuracy(&exec, &params, &set.test)?);
+    }
+    let avg = accs.iter().sum::<f64>() / accs.len().max(1) as f64;
+    log::info!(
+        "[{}] {} r={} avg={:.2} ({:.0}s)",
+        spec.preset,
+        method.name(),
+        method_spec.rank,
+        avg,
+        log.seconds
+    );
+    Ok(FtOutcome {
+        label: method.name(),
+        accs,
+        avg,
+        log,
+        trainable: method.trainable(),
+        opt_bytes: method.opt_bytes(),
+        params: Some((base, params)),
+    })
+}
+
+/// Evaluate a family suite on given params (e.g. source-domain retention).
+pub fn eval_suite(
+    env: &mut ExpEnv,
+    preset: &str,
+    families: &[TaskFamily],
+    params: &[Tensor],
+    n_test: usize,
+    seed: u64,
+) -> Result<Vec<f64>> {
+    let exec = env.exec(preset)?;
+    let corpus = env.world(preset)?;
+    families
+        .iter()
+        .map(|&f| {
+            let set = TaskSet::generate(f, &corpus.vocab, &corpus.kg, 1, n_test, seed);
+            eval::accuracy(&exec, params, &set.test)
+        })
+        .collect()
+}

@@ -1,0 +1,75 @@
+//! Fig. 6: fine-tuning memory breakdown on the real LLaMA-2-7B and
+//! LLaMA-3-8B architectures (analytic model, analysis/memory.rs), plus a
+//! measured cross-check of optimizer-state bytes from an actual run on
+//! the simulator preset.
+
+use anyhow::Result;
+
+use super::harness::*;
+use crate::analysis::memory::{self, LLAMA2_7B, LLAMA3_8B};
+use crate::data::tasks::ARITH;
+use crate::util::cli::Args;
+
+pub fn fig6(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let rank = args.usize("rank", 128);
+    let (batch, seq) = (8usize, 1024usize);
+    let mut csv = env.csv(
+        "fig6",
+        &["arch", "method", "weights_gb", "grads_gb", "optimizer_gb", "activations_gb", "total_gb"],
+    )?;
+    println!("\n== Fig 6: memory breakdown (batch {batch} x seq {seq}, rank {rank}) ==");
+    println!(
+        "{:<12} {:<10} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "arch", "method", "weights", "grads", "optim", "activ", "total"
+    );
+    for arch in [&LLAMA2_7B, &LLAMA3_8B] {
+        let rows = [
+            ("FullFT", memory::full_ft(arch, batch, seq)),
+            ("LoRA", memory::lora(arch, rank, batch, seq)),
+            ("LIFT", memory::lift(arch, rank, batch, seq, false)),
+            ("LIFT_MLP", memory::lift(arch, rank, batch, seq, true)),
+        ];
+        for (m, b) in rows {
+            println!(
+                "{:<12} {:<10} {:>8.1}G {:>8.1}G {:>8.1}G {:>8.1}G {:>8.1}G",
+                arch.name,
+                m,
+                b.weights_gb,
+                b.grads_gb,
+                b.optimizer_gb,
+                b.activations_gb,
+                b.total()
+            );
+            csv.row(&[
+                arch.name.into(),
+                m.into(),
+                format!("{:.2}", b.weights_gb),
+                format!("{:.2}", b.grads_gb),
+                format!("{:.2}", b.optimizer_gb),
+                format!("{:.2}", b.activations_gb),
+                format!("{:.2}", b.total()),
+            ])?;
+        }
+        let f = memory::full_ft(arch, batch, seq);
+        let l = memory::lift(arch, rank, batch, seq, false);
+        println!(
+            "  -> LIFT optimizer = {:.1}% of Full FT optimizer",
+            100.0 * l.optimizer_gb / f.optimizer_gb
+        );
+    }
+
+    // measured cross-check on the simulator preset (skipped with --fast)
+    if !env.fast {
+        println!("\nmeasured optimizer-state bytes on the `tiny` preset:");
+        for m in ["full", "lora", "lift", "lift_mlp"] {
+            let mut spec = RunSpec::new("tiny", &ARITH, true);
+            spec.steps = 5;
+            let out = run_ft(env, &spec, &MethodSpec::new(m, 32), false)?;
+            println!(
+                "  {:<16} trainable={:>9} opt_bytes={:>10}",
+                out.label, out.trainable, out.opt_bytes
+            );
+        }
+    }
+    Ok(())
+}

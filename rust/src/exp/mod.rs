@@ -1,0 +1,104 @@
+//! Experiment runners — one per paper table/figure (DESIGN.md §5 index).
+//!
+//! Every runner prints paper-shaped rows and writes `results/<id>.csv`.
+//! `--fast` shrinks steps/samples/seeds for smoke runs; full settings are
+//! what EXPERIMENTS.md records.
+
+pub mod ablations;
+pub mod figures;
+pub mod harness;
+pub mod memory_fig;
+pub mod perturb_fig;
+pub mod tables;
+pub mod toy;
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+
+pub use harness::{default_pretrain_steps, ExpEnv, MethodSpec, RunSpec};
+
+pub type Runner = fn(&mut harness::ExpEnv, &Args) -> Result<()>;
+
+/// (id, description) — the regeneration index for the paper's evaluation.
+pub const REGISTRY: &[(&str, &str)] = &[
+    ("table1", "commonsense reasoning, 8 tasks x methods (Tab. 1)"),
+    ("table2", "arithmetic reasoning, 7 tasks x methods (Tab. 2)"),
+    ("table3", "GLUE-analog NLU, 8 tasks x methods (Tab. 3)"),
+    ("table4", "GPQA-analog: LIFT vs Full FT, 2 presets (Tab. 4)"),
+    ("table8", "rank search, commonsense (Tab. 8)"),
+    ("table9", "rank search, arithmetic (Tab. 9)"),
+    ("table10", "rank search, NLU (Tab. 10)"),
+    ("table11", "arithmetic on the small preset (Tab. 11)"),
+    ("table12", "code-gen analog: pass@1 / pass@10 (Tab. 12)"),
+    ("table13", "StrategyQA-analog (Tab. 13)"),
+    ("table14", "LIFT vs SpIEL vs Full FT on GSM8K-analog (Tab. 14)"),
+    ("table15", "LIFT vs SIFT vs Full FT on NLU (Tab. 15)"),
+    ("table16", "LIFT_MLP memory-saving variant (Tab. 16)"),
+    ("table17", "structured 4x4 LIFT vs baselines (Tab. 17)"),
+    ("fig2", "noise on selected params: ppl / recall / accuracy (Fig. 2)"),
+    ("fig3", "selection-metric shootout on GSM8K-analog (Fig. 3)"),
+    ("fig4", "learning vs forgetting: target + source domains (Fig. 4/10)"),
+    ("fig5", "weight-update magnitude distributions (Fig. 5)"),
+    ("fig6", "memory breakdown on real 7B/8B shapes (Fig. 6)"),
+    ("fig7a", "mask update-interval ablation (Fig. 7a)"),
+    ("fig7b", "rank-reduction strategy ablation (Fig. 7b)"),
+    ("fig8", "random-matrix spectral/frobenius deltas (Fig. 8)"),
+    ("fig9", "per-layer spectral-norm delta after noise (Fig. 9)"),
+    ("fig11", "single-layer-type fine-tuning (Fig. 11)"),
+    ("fig12", "eigenspace alignment per layer type (Fig. 12)"),
+    ("fig13", "rank of the update matrix per layer type (Fig. 13)"),
+    ("fig14", "two-layer toy regression study (Fig. 14, §G.5)"),
+    ("fig15", "training-loss curves of all methods (Fig. 15)"),
+    ("fig16", "LRA-rank x selected-rank heatmap (Fig. 16)"),
+    ("fig17", "LIFT vs weight-magnitude mask overlap (Fig. 17)"),
+];
+
+pub fn run(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .unwrap_or_else(|| args.str("id", ""));
+    anyhow::ensure!(
+        REGISTRY.iter().any(|(r, _)| *r == id),
+        "unknown experiment '{id}' — see `lift list-exp`"
+    );
+    let mut env = harness::ExpEnv::new(args)?;
+    let t0 = std::time::Instant::now();
+    let result = match id.as_str() {
+        "table1" => tables::table1(&mut env, args),
+        "table2" => tables::table2(&mut env, args),
+        "table3" => tables::table3(&mut env, args),
+        "table4" => tables::table4(&mut env, args),
+        "table8" => tables::rank_search(&mut env, args, "table8"),
+        "table9" => tables::rank_search(&mut env, args, "table9"),
+        "table10" => tables::rank_search(&mut env, args, "table10"),
+        "table11" => tables::table11(&mut env, args),
+        "table12" => tables::table12(&mut env, args),
+        "table13" => tables::table13(&mut env, args),
+        "table14" => tables::table14(&mut env, args),
+        "table15" => tables::table15(&mut env, args),
+        "table16" => tables::table16(&mut env, args),
+        "table17" => tables::table17(&mut env, args),
+        "fig2" => perturb_fig::fig2(&mut env, args),
+        "fig3" => figures::fig3(&mut env, args),
+        "fig4" => figures::fig4(&mut env, args),
+        "fig5" => figures::fig5(&mut env, args),
+        "fig6" => memory_fig::fig6(&mut env, args),
+        "fig7a" => ablations::fig7a(&mut env, args),
+        "fig7b" => ablations::fig7b(&mut env, args),
+        "fig8" => perturb_fig::fig8(&mut env, args),
+        "fig9" => perturb_fig::fig9(&mut env, args),
+        "fig11" => ablations::fig11(&mut env, args),
+        "fig12" => figures::fig12_13(&mut env, args, true),
+        "fig13" => figures::fig12_13(&mut env, args, false),
+        "fig14" => toy::fig14(&mut env, args),
+        "fig15" => figures::fig15(&mut env, args),
+        "fig16" => ablations::fig16(&mut env, args),
+        "fig17" => ablations::fig17(&mut env, args),
+        _ => unreachable!(),
+    };
+    log::info!("exp {id} finished in {:.1}s", t0.elapsed().as_secs_f64());
+    result
+}

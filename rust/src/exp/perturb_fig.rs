@@ -1,0 +1,210 @@
+//! Perturbation experiments: Fig. 2 (what breaks when principal weights
+//! are noised), Fig. 8 (random-matrix norms), Fig. 9 (per-layer spectral
+//! deltas on the pretrained model).
+
+use anyhow::Result;
+
+use super::harness::*;
+use crate::analysis::perturb;
+use crate::data::tasks::ARITH;
+use crate::lift::{LiftCfg, Selector};
+use crate::train::eval;
+use crate::util::cli::Args;
+use crate::util::stats;
+
+const SELECTORS: [(&str, Selector); 3] = [
+    ("lift", Selector::Lift),
+    ("weight_mag", Selector::WeightMag),
+    ("random", Selector::Random),
+];
+
+pub fn fig2(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let preset = args.str("preset", "tiny");
+    let scale = args.f32("scale", 0.02);
+    let fracs: Vec<f64> = if env.fast {
+        vec![0.01, 0.05]
+    } else {
+        vec![0.002, 0.01, 0.05, 0.1]
+    };
+    let exec = env.exec(&preset)?;
+    let base = env.pretrained(&preset)?;
+    let corpus = env.world(&preset)?;
+    let la = crate::runtime::Linalg::new(&env.rt.client);
+    let total: usize = crate::model::trainable_matrices(&exec.preset, false)
+        .iter()
+        .map(|&i| base[i].len())
+        .sum();
+
+    // (c) needs a fine-tuned model: Full FT on arithmetic once
+    let spec = RunSpec::new(&preset, &ARITH, env.fast);
+    let ft = run_ft(env, &spec, &MethodSpec::new("full", 32), true)?;
+    let (_, ft_params) = ft.params.as_ref().unwrap();
+    let arith_sets: Vec<_> = ARITH
+        .iter()
+        .map(|&f| {
+            crate::data::tasks::TaskSet::generate(
+                f,
+                &corpus.vocab,
+                &corpus.kg,
+                1,
+                if env.fast { 30 } else { 60 },
+                1,
+            )
+        })
+        .collect();
+
+    let mut csv = env.csv(
+        "fig2",
+        &["selector", "frac", "ppl", "fact_recall", "arith_acc"],
+    )?;
+    println!("\n== Fig 2: noise on selected parameters (scale {scale}) ==");
+    println!(
+        "{:<12} {:>8} {:>10} {:>12} {:>10}",
+        "selector", "frac", "ppl", "P(answer)", "arith-acc"
+    );
+    // unperturbed reference row
+    let ppl0 = eval::perplexity(&exec, &base, &corpus, 4, 99)?;
+    let rec0 = eval::fact_recall(&env.rt, &exec, &base, &corpus, 40, 7)?;
+    let acc0: f64 = {
+        let mut a = Vec::new();
+        for s in &arith_sets {
+            a.push(eval::accuracy(&exec, ft_params, &s.test)?);
+        }
+        stats::mean(&a)
+    };
+    println!(
+        "{:<12} {:>8} {:>10.3} {:>12.4} {:>10.2}",
+        "none", "0", ppl0, rec0, acc0
+    );
+    csv.row(&[
+        "none".into(),
+        "0".into(),
+        format!("{ppl0:.4}"),
+        format!("{rec0:.5}"),
+        format!("{acc0:.2}"),
+    ])?;
+
+    for (name, sel) in SELECTORS {
+        for &frac in &fracs {
+            let n = (total as f64 * frac) as usize;
+            let cfg = LiftCfg {
+                rank: 32,
+                ..Default::default()
+            };
+            let mut rng = crate::util::rng::Rng::new(7);
+            let noisy = perturb::perturb(
+                &la, &exec.preset, &base, sel, &cfg, n, scale, &mut rng,
+            )?;
+            let ppl = eval::perplexity(&exec, &noisy, &corpus, 4, 99)?;
+            let rec = eval::fact_recall(&env.rt, &exec, &noisy, &corpus, 40, 7)?;
+            // (c): perturb the fine-tuned model with the same selector
+            let mut rng2 = crate::util::rng::Rng::new(7);
+            let noisy_ft = perturb::perturb(
+                &la, &exec.preset, ft_params, sel, &cfg, n, scale, &mut rng2,
+            )?;
+            let mut accs = Vec::new();
+            for s in &arith_sets {
+                accs.push(eval::accuracy(&exec, &noisy_ft, &s.test)?);
+            }
+            let acc = stats::mean(&accs);
+            println!(
+                "{name:<12} {frac:>8.3} {ppl:>10.3} {rec:>12.4} {acc:>10.2}"
+            );
+            csv.row(&[
+                name.into(),
+                format!("{frac}"),
+                format!("{ppl:.4}"),
+                format!("{rec:.5}"),
+                format!("{acc:.2}"),
+            ])?;
+        }
+    }
+    println!("(expected: LIFT rows degrade far more than weight-mag/random)");
+    Ok(())
+}
+
+pub fn fig8(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let dims: Vec<usize> = if env.fast {
+        vec![64, 128]
+    } else {
+        vec![64, 128, 256, 512]
+    };
+    let scale = args.f32("scale", 0.1);
+    let la = crate::runtime::Linalg::new(&env.rt.client);
+    let mut rng = crate::util::rng::Rng::new(5);
+    let mut csv = env.csv("fig8", &["selector", "dim", "spectral_delta", "frob_delta"])?;
+    println!("\n== Fig 8: random-matrix norm deltas after selective noise ==");
+    println!(
+        "{:<12} {:>6} {:>16} {:>12}",
+        "selector", "dim", "spectral-delta", "frob-delta"
+    );
+    for (name, sel) in SELECTORS {
+        for &d in &dims {
+            let cfg = LiftCfg {
+                rank: 8,
+                ..Default::default()
+            };
+            let mut sd = 0.0;
+            let mut fd = 0.0;
+            let reps = 3;
+            for _ in 0..reps {
+                let (s, f) =
+                    perturb::random_matrix_norms(&la, d, sel, &cfg, 0.05, scale, &mut rng)?;
+                sd += s / reps as f64;
+                fd += f / reps as f64;
+            }
+            println!("{name:<12} {d:>6} {sd:>16.4} {fd:>12.4}");
+            csv.row(&[
+                name.into(),
+                d.to_string(),
+                format!("{sd:.5}"),
+                format!("{fd:.5}"),
+            ])?;
+        }
+    }
+    println!("(expected: frobenius ~equal across selectors; spectral grows only for LIFT)");
+    Ok(())
+}
+
+pub fn fig9(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let preset = args.str("preset", "tiny");
+    let scale = args.f32("scale", 0.1);
+    let exec = env.exec(&preset)?;
+    let base = env.pretrained(&preset)?;
+    let la = crate::runtime::Linalg::new(&env.rt.client);
+    let total: usize = crate::model::trainable_matrices(&exec.preset, false)
+        .iter()
+        .map(|&i| base[i].len())
+        .sum();
+    let n = total / 20; // 5% of parameters
+    let mut csv = env.csv("fig9", &["selector", "layer", "spectral_delta"])?;
+    println!("\n== Fig 9: per-layer spectral-norm delta on the pretrained model ==");
+    println!("{:<12} {:>16} {:>16}", "selector", "mean-delta", "max-delta");
+    for (name, sel) in SELECTORS {
+        let cfg = LiftCfg {
+            rank: 32,
+            ..Default::default()
+        };
+        let mut rng = crate::util::rng::Rng::new(11);
+        let noisy = perturb::perturb(&la, &exec.preset, &base, sel, &cfg, n, scale, &mut rng)?;
+        let deltas = perturb::norm_deltas(&exec.preset, &base, &noisy, &mut rng);
+        let ds: Vec<f64> = deltas
+            .iter()
+            .map(|d| (d.spectral_after - d.spectral_before) as f64)
+            .collect();
+        for d in &deltas {
+            csv.row(&[
+                name.into(),
+                d.name.clone(),
+                format!("{:.5}", d.spectral_after - d.spectral_before),
+            ])?;
+        }
+        println!(
+            "{name:<12} {:>16.4} {:>16.4}",
+            stats::mean(&ds),
+            ds.iter().cloned().fold(f64::MIN, f64::max)
+        );
+    }
+    println!("(expected: LIFT >> weight-mag ~ random)");
+    Ok(())
+}

@@ -1,0 +1,318 @@
+//! Table runners (Tables 1-4 and 8-17).
+
+use anyhow::Result;
+
+use super::harness::*;
+use crate::data::tasks::{ARITH, COMMONSENSE, NLU};
+use crate::data::TaskFamily;
+use crate::train::eval;
+use crate::util::cli::Args;
+
+fn print_header(title: &str, families: &[TaskFamily]) {
+    println!("\n== {title} ==");
+    print!("{:<8} {:<18}", "preset", "method");
+    for f in families {
+        print!("{:>10}", f.name());
+    }
+    println!("{:>10}", "Avg.");
+}
+
+fn print_row(preset: &str, out: &FtOutcome) {
+    print!("{:<8} {:<18}", preset, out.label);
+    for a in &out.accs {
+        print!("{a:>10.2}");
+    }
+    println!("{:>10.2}", out.avg);
+}
+
+/// Generic "methods x families" table on one or more presets.
+fn shootout(
+    env: &mut ExpEnv,
+    args: &Args,
+    id: &str,
+    title: &str,
+    presets: &[&str],
+    methods: &[&str],
+    families: &[TaskFamily],
+    rank: usize,
+) -> Result<()> {
+    let seeds = args.usize("seeds", 1);
+    let mut csv = env.csv(
+        id,
+        &["preset", "method", "rank", "seed", "task", "acc"],
+    )?;
+    print_header(title, families);
+    for preset in presets {
+        for m in methods {
+            let mut sum = vec![0.0f64; families.len()];
+            let mut label = String::new();
+            let mut avg_over_seeds = 0.0;
+            for seed in 0..seeds {
+                let mut spec = RunSpec::new(preset, families, env.fast);
+                spec.seed = 1 + seed as u64;
+                let ms = MethodSpec::new(m, rank);
+                let out = run_ft(env, &spec, &ms, false)?;
+                for (i, a) in out.accs.iter().enumerate() {
+                    sum[i] += a;
+                    csv.row(&[
+                        preset.to_string(),
+                        out.label.clone(),
+                        rank.to_string(),
+                        spec.seed.to_string(),
+                        families[i].name().to_string(),
+                        format!("{a:.3}"),
+                    ])?;
+                }
+                label = out.label;
+                avg_over_seeds += out.avg;
+            }
+            let accs: Vec<f64> = sum.iter().map(|s| s / seeds as f64).collect();
+            let out = FtOutcome {
+                label,
+                avg: avg_over_seeds / seeds as f64,
+                accs,
+                log: Default::default(),
+                trainable: 0,
+                opt_bytes: 0,
+                params: None,
+            };
+            print_row(preset, &out);
+        }
+    }
+    println!("(csv: {})", csv.path().display());
+    Ok(())
+}
+
+pub fn table1(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let presets: Vec<String> = args.list("presets", "tiny,small");
+    let p: Vec<&str> = presets.iter().map(|s| s.as_str()).collect();
+    shootout(
+        env,
+        args,
+        "table1",
+        "Table 1: commonsense reasoning (Commonsense-170K analog)",
+        &p,
+        &["full", "lora", "dora", "pissa", "s2ft", "lift"],
+        &COMMONSENSE,
+        args.usize("rank", 32),
+    )
+}
+
+pub fn table2(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let presets: Vec<String> = args.list("presets", "tiny,small");
+    let p: Vec<&str> = presets.iter().map(|s| s.as_str()).collect();
+    shootout(
+        env,
+        args,
+        "table2",
+        "Table 2: arithmetic reasoning (MATH-10K analog)",
+        &p,
+        &["full", "lora", "dora", "pissa", "s2ft", "lift"],
+        &ARITH,
+        args.usize("rank", 32),
+    )
+}
+
+pub fn table3(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    shootout(
+        env,
+        args,
+        "table3",
+        "Table 3: NLU (GLUE analog; mixture fine-tune, see DESIGN.md)",
+        &[&args.str("preset", "tiny")],
+        &["full", "lora", "dora", "spectral", "pissa", "lift"],
+        &NLU,
+        args.usize("rank", 32),
+    )
+}
+
+pub fn table4(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    // s1K-style: tiny SFT set, hardest family
+    let presets: Vec<String> = args.list("presets", "tiny,small");
+    let mut csv = env.csv("table4", &["preset", "method", "acc"])?;
+    println!("\n== Table 4: GPQA-analog (s1K-style SFT) ==");
+    println!("{:<8} {:<10} {:>8}", "preset", "method", "acc");
+    for preset in &presets {
+        for m in ["full", "lift"] {
+            let mut spec = RunSpec::new(preset, &[TaskFamily::Gpqa], env.fast);
+            spec.n_train = if env.fast { 300 } else { 1000 }; // "s1K"
+            let out = run_ft(env, &spec, &MethodSpec::new(m, 32), false)?;
+            println!("{:<8} {:<10} {:>8.2}", preset, out.label, out.avg);
+            csv.row(&[preset.clone(), out.label, format!("{:.3}", out.avg)])?;
+        }
+    }
+    Ok(())
+}
+
+/// Tables 8/9/10: best-of-rank search per method.
+pub fn rank_search(env: &mut ExpEnv, args: &Args, id: &str) -> Result<()> {
+    let (title, families, methods): (&str, &[TaskFamily], Vec<&str>) = match id {
+        "table8" => (
+            "Table 8: rank search, commonsense",
+            &COMMONSENSE,
+            vec!["full", "lora", "s2ft", "lift"],
+        ),
+        "table9" => (
+            "Table 9: rank search, arithmetic",
+            &ARITH,
+            vec!["full", "s2ft", "pissa", "dora", "lora", "lift"],
+        ),
+        _ => (
+            "Table 10: rank search, NLU",
+            &NLU,
+            vec!["full", "lora", "dora", "pissa", "spectral", "lift"],
+        ),
+    };
+    let preset = args.str("preset", "tiny");
+    let ranks: Vec<usize> = if env.fast {
+        vec![16, 64]
+    } else {
+        vec![8, 16, 32, 64, 128]
+    };
+    let mut csv = env.csv(id, &["method", "rank", "avg"])?;
+    println!("\n== {title} (preset {preset}) ==");
+    print!("{:<18}", "method");
+    for r in &ranks {
+        print!("{r:>9}");
+    }
+    println!("{:>9}", "best");
+    for m in methods {
+        let mut row = Vec::new();
+        for &r in &ranks {
+            // full FT ignores rank: run once
+            if m == "full" && !row.is_empty() {
+                let prev: f64 = row[0];
+                row.push(prev);
+                continue;
+            }
+            let spec = RunSpec::new(&preset, families, env.fast);
+            let out = run_ft(env, &spec, &MethodSpec::new(m, r), false)?;
+            csv.row(&[m.to_string(), r.to_string(), format!("{:.3}", out.avg)])?;
+            row.push(out.avg);
+        }
+        print!("{m:<18}");
+        for v in &row {
+            print!("{v:>9.2}");
+        }
+        println!("{:>9.2}", row.iter().cloned().fold(f64::MIN, f64::max));
+    }
+    Ok(())
+}
+
+pub fn table11(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    shootout(
+        env,
+        args,
+        "table11",
+        "Table 11: arithmetic on the extra preset (LLaMA-7B analog)",
+        &[&args.str("preset", "small")],
+        &["full", "s2ft", "pissa", "lora", "dora", "lift"],
+        &ARITH,
+        args.usize("rank", 32),
+    )
+}
+
+pub fn table12(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    // instruct-tune on the code-gen analog, report pass@1/pass@10
+    let preset = args.str("preset", "tiny");
+    let mut csv = env.csv("table12", &["method", "pass1", "pass10"])?;
+    println!("\n== Table 12: code generation (Humaneval analog) ==");
+    println!("{:<12} {:>8} {:>8}", "method", "pass@1", "pass@10");
+    let corpus = env.world(&preset)?;
+    let set = crate::data::tasks::TaskSet::generate(
+        TaskFamily::CodeGen,
+        &corpus.vocab,
+        &corpus.kg,
+        if env.fast { 300 } else { 1000 },
+        60,
+        1,
+    );
+    let max_eval = if env.fast { 20 } else { 50 };
+    for m in ["lift", "full", "sift", "lora", "dora"] {
+        let spec = RunSpec::new(&preset, &[TaskFamily::CodeGen], env.fast);
+        let out = run_ft(env, &spec, &MethodSpec::new(m, 32), true)?;
+        let (_, params) = out.params.as_ref().unwrap();
+        let exec = env.exec(&preset)?;
+        let p1 = eval::pass_at_k(&env.rt, &exec, params, &set.test, 1, 0.7, 1, max_eval)?;
+        let p10 = eval::pass_at_k(&env.rt, &exec, params, &set.test, 10, 0.7, 1, max_eval)?;
+        println!("{:<12} {p1:>8.2} {p10:>8.2}", out.label);
+        csv.row(&[out.label, format!("{p1:.2}"), format!("{p10:.2}")])?;
+    }
+    Ok(())
+}
+
+pub fn table13(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let presets: Vec<String> = args.list("presets", "tiny,small");
+    let mut csv = env.csv("table13", &["preset", "method", "acc"])?;
+    println!("\n== Table 13: StrategyQA analog ==");
+    println!("{:<8} {:<12} {:>8}", "preset", "method", "acc");
+    for preset in &presets {
+        for m in ["lift", "full", "lora", "dora", "pissa"] {
+            let spec = RunSpec::new(preset, &[TaskFamily::StrategyQa], env.fast);
+            let out = run_ft(env, &spec, &MethodSpec::new(m, 32), false)?;
+            println!("{:<8} {:<12} {:>8.2}", preset, out.label, out.avg);
+            csv.row(&[preset.clone(), out.label, format!("{:.3}", out.avg)])?;
+        }
+    }
+    Ok(())
+}
+
+pub fn table14(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let presets: Vec<String> = args.list("presets", "tiny,small");
+    let mut csv = env.csv("table14", &["preset", "method", "acc"])?;
+    println!("\n== Table 14: LIFT vs SpIEL vs Full FT (GSM8K analog) ==");
+    println!("{:<8} {:<12} {:>8}", "preset", "method", "acc");
+    for preset in &presets {
+        for m in ["lift", "spiel", "full"] {
+            let spec = RunSpec::new(preset, &[TaskFamily::GsmHard], env.fast);
+            let out = run_ft(env, &spec, &MethodSpec::new(m, 32), false)?;
+            println!("{:<8} {:<12} {:>8.2}", preset, out.label, out.avg);
+            csv.row(&[preset.clone(), out.label, format!("{:.3}", out.avg)])?;
+        }
+    }
+    Ok(())
+}
+
+pub fn table15(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    shootout(
+        env,
+        args,
+        "table15",
+        "Table 15: LIFT vs SIFT vs Full FT (GLUE analog, 5% budget)",
+        &[&args.str("preset", "tiny")],
+        &["full", "sift", "lift"],
+        &NLU,
+        args.usize("rank", 32),
+    )
+}
+
+pub fn table16(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let mut csv = env.csv("table16", &["method", "avg", "opt_bytes"])?;
+    println!("\n== Table 16: LIFT_MLP (MLP-only fine-tuning) ==");
+    print_header("arithmetic suite", &ARITH);
+    let preset = args.str("preset", "tiny");
+    for m in ["lift", "lift_mlp", "full", "lora"] {
+        let spec = RunSpec::new(&preset, &ARITH, env.fast);
+        let out = run_ft(env, &spec, &MethodSpec::new(m, 32), false)?;
+        print_row(&preset, &out);
+        csv.row(&[
+            out.label.clone(),
+            format!("{:.3}", out.avg),
+            out.opt_bytes.to_string(),
+        ])?;
+    }
+    Ok(())
+}
+
+pub fn table17(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    shootout(
+        env,
+        args,
+        "table17",
+        "Table 17: structured 4x4 LIFT vs selection baselines",
+        &[&args.str("preset", "tiny")],
+        &["lift_structured", "lift", "full", "weight_mag", "grad_mag"],
+        &ARITH,
+        args.usize("rank", 32),
+    )
+}

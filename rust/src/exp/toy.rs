@@ -1,0 +1,215 @@
+//! Fig. 14 (§G.5): two-layer toy regression — a self-contained replica of
+//! the paper's toy study, with manual backprop through f(X) = relu(XW) a.
+//! Pretrain on one rule, fine-tune 100 samples of another, and compare
+//! Full FT vs sparse fine-tuning (LIFT / weight-mag / grad-mag masks).
+
+use anyhow::Result;
+
+use super::harness::ExpEnv;
+use crate::lift::{self, LiftCfg, Selector};
+use crate::optim::{AdamCfg, DenseAdam, SparseAdam};
+use crate::runtime::Linalg;
+use crate::tensor::Tensor;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+const D: usize = 512;
+const H: usize = 128;
+
+fn labels_pretrain(x: &Tensor) -> Vec<f32> {
+    let (n, d) = x.dims2();
+    (0..n)
+        .map(|i| {
+            let row = &x.data[i * d..(i + 1) * d];
+            let s1: f32 = row[..32].iter().sum();
+            let s2: f32 = row[32..64].iter().map(|v| v.sin()).sum();
+            s1 + 0.1 * s2
+        })
+        .collect()
+}
+
+fn labels_finetune(x: &Tensor) -> Vec<f32> {
+    let (n, d) = x.dims2();
+    (0..n)
+        .map(|i| {
+            let row = &x.data[i * d..(i + 1) * d];
+            0.2 * row[64] * row[65] * row[66] + 0.1 * (row[67] * row[68]).sin()
+        })
+        .collect()
+}
+
+struct Toy {
+    w: Tensor, // (D, H)
+    a: Vec<f32>,
+}
+
+impl Toy {
+    fn forward(&self, la: &Linalg, x: &Tensor) -> Result<(Tensor, Vec<f32>)> {
+        let mut h = la.matmul(x, &self.w)?; // (n, H)
+        for v in h.data.iter_mut() {
+            *v = v.max(0.0);
+        }
+        let (n, hh) = h.dims2();
+        let preds = (0..n)
+            .map(|i| {
+                h.data[i * hh..(i + 1) * hh]
+                    .iter()
+                    .zip(&self.a)
+                    .map(|(x, a)| x * a)
+                    .sum()
+            })
+            .collect();
+        Ok((h, preds))
+    }
+
+    /// MSE loss + grads (dW, da).
+    fn backward(
+        &self,
+        la: &Linalg,
+        x: &Tensor,
+        y: &[f32],
+    ) -> Result<(f32, Tensor, Vec<f32>)> {
+        let (h, preds) = self.forward(la, x)?;
+        let (n, hh) = h.dims2();
+        let resid: Vec<f32> = preds
+            .iter()
+            .zip(y)
+            .map(|(p, t)| 2.0 * (p - t) / n as f32)
+            .collect();
+        let loss = preds
+            .iter()
+            .zip(y)
+            .map(|(p, t)| (p - t) * (p - t))
+            .sum::<f32>()
+            / n as f32;
+        // da = H^T r
+        let mut da = vec![0.0f32; hh];
+        for i in 0..n {
+            for j in 0..hh {
+                da[j] += h.data[i * hh + j] * resid[i];
+            }
+        }
+        // dH = r a^T masked by relu'; dW = X^T dH
+        let mut dh = Tensor::zeros(&[n, hh]);
+        for i in 0..n {
+            for j in 0..hh {
+                if h.data[i * hh + j] > 0.0 {
+                    dh.data[i * hh + j] = resid[i] * self.a[j];
+                }
+            }
+        }
+        let dw = la.matmul_tn(x, &dh)?; // (D, H)
+        Ok((loss, dw, da))
+    }
+}
+
+pub fn fig14(env: &mut ExpEnv, args: &Args) -> Result<()> {
+    let la = Linalg::new(&env.rt.client);
+    let mut rng = Rng::new(args.u64("seed", 1));
+    let n_pre = if env.fast { 2000 } else { 5000 };
+    let pre_steps = if env.fast { 150 } else { 400 };
+    let ft_steps = if env.fast { 150 } else { 400 };
+
+    // pretrain
+    let x_pre = Tensor::randn(&[n_pre, D], 1.0, &mut rng);
+    let y_pre = labels_pretrain(&x_pre);
+    let mut net = Toy {
+        w: Tensor::randn(&[D, H], (1.0 / D as f32).sqrt(), &mut rng),
+        a: rng.normal_vec(H, (1.0 / H as f32).sqrt()),
+    };
+    let mut opt_w = DenseAdam::new(D * H, AdamCfg::default());
+    let mut opt_a = DenseAdam::new(H, AdamCfg::default());
+    for step in 0..pre_steps {
+        let (loss, dw, da) = net.backward(&la, &x_pre, &y_pre)?;
+        opt_w.step(&mut net.w.data, &dw.data, 3e-3);
+        opt_a.step(&mut net.a, &da, 3e-3);
+        if step % 100 == 0 {
+            log::info!("toy pretrain step {step} loss {loss:.4}");
+        }
+    }
+
+    // fine-tune datasets
+    let x_ft = Tensor::randn(&[100, D], 1.0, &mut rng);
+    let y_ft = labels_finetune(&x_ft);
+    let x_val = Tensor::randn(&[500, D], 1.0, &mut rng);
+    let y_val = labels_finetune(&x_val);
+
+    let mut csv = env.csv(
+        "fig14",
+        &["method", "step", "train_loss", "val_loss", "grad_norm", "spectral_norm"],
+    )?;
+    println!("\n== Fig 14: toy two-layer regression ==");
+    println!(
+        "{:<12} {:>12} {:>12} {:>12} {:>12}",
+        "method", "train-loss", "val-loss", "grad-norm", "spec-norm"
+    );
+    let k = (D * H) / 20; // 5% of W
+    for method in ["full", "lift", "weight_mag", "grad_mag"] {
+        let mut n2 = Toy {
+            w: net.w.clone(),
+            a: net.a.clone(),
+        };
+        let mut opt_a = DenseAdam::new(H, AdamCfg::default());
+        // mask selection on the pretrained W
+        let (_, dw0, _) = n2.backward(&la, &x_ft, &y_ft)?;
+        let cfg = LiftCfg {
+            rank: 8,
+            ..Default::default()
+        };
+        let sel = match method {
+            "lift" => Some(Selector::Lift),
+            "weight_mag" => Some(Selector::WeightMag),
+            "grad_mag" => Some(Selector::GradMag),
+            _ => None,
+        };
+        let mut opt: Box<dyn FnMut(&mut Toy, &Tensor, f32)> = match sel {
+            None => {
+                let mut o = DenseAdam::new(D * H, AdamCfg::default());
+                Box::new(move |t: &mut Toy, dw: &Tensor, lr: f32| {
+                    o.step(&mut t.w.data, &dw.data, lr)
+                })
+            }
+            Some(s) => {
+                let idx =
+                    lift::select_indices(s, &la, &n2.w, Some(&dw0), None, k, &cfg, &mut rng)?;
+                let mut o = SparseAdam::new(idx, AdamCfg::default());
+                Box::new(move |t: &mut Toy, dw: &Tensor, lr: f32| {
+                    o.step(&mut t.w.data, &dw.data, lr)
+                })
+            }
+        };
+        let (mut fin_tr, mut fin_val, mut fin_g, mut fin_s) = (0.0, 0.0, 0.0, 0.0);
+        for step in 0..ft_steps {
+            let (loss, dw, da) = n2.backward(&la, &x_ft, &y_ft)?;
+            opt(&mut n2, &dw, 1e-3);
+            opt_a.step(&mut n2.a, &da, 1e-3);
+            if step % 20 == 0 || step == ft_steps - 1 {
+                let (_, vp) = n2.forward(&la, &x_val)?;
+                let vloss = vp
+                    .iter()
+                    .zip(&y_val)
+                    .map(|(p, t)| (p - t) * (p - t))
+                    .sum::<f32>()
+                    / y_val.len() as f32;
+                let gnorm = stats::l2_norm(&dw.data);
+                let snorm = n2.w.spectral_norm(30, &mut rng);
+                csv.row(&[
+                    method.into(),
+                    step.to_string(),
+                    format!("{loss:.5}"),
+                    format!("{vloss:.5}"),
+                    format!("{gnorm:.5}"),
+                    format!("{snorm:.5}"),
+                ])?;
+                (fin_tr, fin_val, fin_g, fin_s) =
+                    (loss, vloss, gnorm as f32, snorm);
+            }
+        }
+        println!(
+            "{method:<12} {fin_tr:>12.4} {fin_val:>12.4} {fin_g:>12.4} {fin_s:>12.4}"
+        );
+    }
+    println!("(expected: sparse < full on val loss; LIFT best among sparse)");
+    Ok(())
+}

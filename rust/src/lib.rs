@@ -1,0 +1,14 @@
+//! LIFT: Low-rank Informed Sparse Fine-Tuning — full-system reproduction.
+#![allow(clippy::needless_range_loop)]
+
+pub mod analysis;
+pub mod data;
+pub mod exp;
+pub mod lift;
+pub mod model;
+pub mod methods;
+pub mod optim;
+pub mod train;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

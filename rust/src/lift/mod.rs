@@ -1,0 +1,391 @@
+//! The LIFT mask engine: principal-weight selection (the paper's §3.2).
+//!
+//! Pipeline per weight matrix W:
+//!   1. rank-r approximation W' (randomized subspace iteration through XLA
+//!      on the fast path; exact host Jacobi SVD for ablations/oracles),
+//!   2. exact top-k on |W'| (quickselect threshold), giving flat indices,
+//!   3. optional 4x4-block structuring (Table 17).
+//!
+//! Every alternative selection criterion the paper compares against
+//! (weight magnitude, gradient magnitude, movement score, random) lives
+//! here too, behind the same `Selector` interface, so Fig. 2/3 and the
+//! ablations are one code path.
+
+use anyhow::Result;
+
+use crate::runtime::Linalg;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::stats::topk_abs_threshold;
+
+/// Which singular components the rank reduction keeps (Fig. 7b ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RankStrategy {
+    Largest,
+    Smallest,
+    Random,
+    Hybrid,
+}
+
+/// Parameter-selection criteria compared in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Selector {
+    /// LIFT: top-|.| of the rank-r approximation.
+    Lift,
+    /// top-|W| on the raw weights
+    WeightMag,
+    /// top-|g| on the current gradient
+    GradMag,
+    /// movement score S = -sum w*g accumulated over steps
+    Movement,
+    /// uniform random
+    Random,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LiftCfg {
+    /// LRA rank r of the approximation (paper's "LRA rank").
+    pub rank: usize,
+    /// power iterations for the randomized path
+    pub power_iters: usize,
+    /// oversampling columns
+    pub oversample: usize,
+    pub strategy: RankStrategy,
+    /// use exact host SVD instead of randomized (ablations/oracle)
+    pub exact: bool,
+    /// structured selection in bxb blocks (Table 17: b = 4)
+    pub block: usize,
+}
+
+impl Default for LiftCfg {
+    fn default() -> Self {
+        LiftCfg {
+            rank: 32,
+            power_iters: 2,
+            oversample: 8,
+            strategy: RankStrategy::Largest,
+            exact: false,
+            block: 1,
+        }
+    }
+}
+
+/// Trainable-parameter budget for one (m, n) matrix at LoRA-rank
+/// equivalence: k = r (m + n), capped at half the matrix (small presets).
+pub fn budget_for(m: usize, n: usize, rank_equiv: usize) -> usize {
+    (rank_equiv * (m + n)).min(m * n / 2).max(1)
+}
+
+/// Exact top-k flat indices of |values| (ties trimmed deterministically).
+pub fn topk_indices(values: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(values.len());
+    if k == 0 {
+        return vec![];
+    }
+    let thr = topk_abs_threshold(values, k);
+    let mut idx: Vec<u32> = (0..values.len() as u32)
+        .filter(|&i| values[i as usize].abs() >= thr)
+        .collect();
+    if idx.len() > k {
+        // trim ties at the threshold, keeping the largest magnitudes
+        idx.sort_by(|&a, &b| {
+            values[b as usize]
+                .abs()
+                .partial_cmp(&values[a as usize].abs())
+                .unwrap()
+        });
+        idx.truncate(k);
+        idx.sort_unstable();
+    }
+    idx
+}
+
+/// The rank-r approximation W' per the configured strategy.
+pub fn rank_reduce(
+    la: &Linalg,
+    w: &Tensor,
+    cfg: &LiftCfg,
+    rng: &mut Rng,
+) -> Result<Tensor> {
+    let (m, n) = w.dims2();
+    let minmn = m.min(n);
+    let rank = cfg.rank.min(minmn);
+    if cfg.exact || cfg.strategy != RankStrategy::Largest {
+        // ablation strategies need the full spectrum -> exact host SVD
+        let (u, s, vt) = crate::util::eigh::svd(&w.data, m, n);
+        let comps: Vec<usize> = match cfg.strategy {
+            RankStrategy::Largest => (0..rank).collect(),
+            RankStrategy::Smallest => (minmn - rank..minmn).collect(),
+            RankStrategy::Random => rng.sample_indices(minmn, rank),
+            RankStrategy::Hybrid => {
+                let half = rank / 2;
+                let mut c: Vec<usize> = (0..half).collect();
+                c.extend(minmn - (rank - half)..minmn);
+                c
+            }
+        };
+        let mut out = vec![0.0f32; m * n];
+        for &c in &comps {
+            for i in 0..m {
+                let uis = u[i * minmn + c] * s[c];
+                if uis == 0.0 {
+                    continue;
+                }
+                let row = &vt[c * n..(c + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += uis * row[j];
+                }
+            }
+        }
+        Ok(Tensor::from_vec(&[m, n], out))
+    } else {
+        la.lowrank_approx(w, rank, cfg.power_iters, cfg.oversample, rng)
+    }
+}
+
+/// LIFT principal-weight indices: rank-reduce, then top-k magnitude.
+pub fn principal_indices(
+    la: &Linalg,
+    w: &Tensor,
+    k: usize,
+    cfg: &LiftCfg,
+    rng: &mut Rng,
+) -> Result<Vec<u32>> {
+    let wr = rank_reduce(la, w, cfg, rng)?;
+    if cfg.block > 1 {
+        Ok(block_topk(&wr, k, cfg.block))
+    } else {
+        Ok(topk_indices(&wr.data, k))
+    }
+}
+
+/// Generic selection across all criteria (Fig. 2 / Fig. 3 comparisons).
+/// `grad` is needed for GradMag, `score` for Movement.
+pub fn select_indices(
+    sel: Selector,
+    la: &Linalg,
+    w: &Tensor,
+    grad: Option<&Tensor>,
+    score: Option<&[f32]>,
+    k: usize,
+    cfg: &LiftCfg,
+    rng: &mut Rng,
+) -> Result<Vec<u32>> {
+    match sel {
+        Selector::Lift => principal_indices(la, w, k, cfg, rng),
+        Selector::WeightMag => Ok(if cfg.block > 1 {
+            block_topk(w, k, cfg.block)
+        } else {
+            topk_indices(&w.data, k)
+        }),
+        Selector::GradMag => {
+            let g = grad.ok_or_else(|| anyhow::anyhow!("GradMag needs a gradient"))?;
+            Ok(if cfg.block > 1 {
+                block_topk(g, k, cfg.block)
+            } else {
+                topk_indices(&g.data, k)
+            })
+        }
+        Selector::Movement => {
+            let s = score.ok_or_else(|| anyhow::anyhow!("Movement needs scores"))?;
+            Ok(topk_indices(s, k))
+        }
+        Selector::Random => {
+            let mut idx: Vec<u32> = rng
+                .sample_indices(w.len(), k.min(w.len()))
+                .into_iter()
+                .map(|i| i as u32)
+                .collect();
+            idx.sort_unstable();
+            Ok(idx)
+        }
+    }
+}
+
+/// Structured top-k: score bxb blocks by sum |.|, take whole blocks until
+/// the budget is filled (Table 17, LIFT_Structured).
+pub fn block_topk(w: &Tensor, k: usize, b: usize) -> Vec<u32> {
+    let (m, n) = w.dims2();
+    let gm = m.div_ceil(b);
+    let gn = n.div_ceil(b);
+    let mut scores = vec![0.0f32; gm * gn];
+    for i in 0..m {
+        for j in 0..n {
+            scores[(i / b) * gn + (j / b)] += w.data[i * n + j].abs();
+        }
+    }
+    let n_blocks = k.div_ceil(b * b).min(gm * gn);
+    let blocks = topk_indices(&scores, n_blocks);
+    let mut idx = Vec::with_capacity(n_blocks * b * b);
+    for &bi in &blocks {
+        let (gi, gj) = ((bi as usize) / gn, (bi as usize) % gn);
+        for i in gi * b..((gi + 1) * b).min(m) {
+            for j in gj * b..((gj + 1) * b).min(n) {
+                idx.push((i * n + j) as u32);
+            }
+        }
+    }
+    idx.sort_unstable();
+    idx.truncate(k);
+    idx
+}
+
+/// Overlap |a ∩ b| / |b| between two index sets (Fig. 17).
+pub fn mask_overlap(a: &[u32], b: &[u32]) -> f64 {
+    if b.is_empty() {
+        return 0.0;
+    }
+    let set: std::collections::HashSet<u32> = a.iter().copied().collect();
+    b.iter().filter(|i| set.contains(i)).count() as f64 / b.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linalg() -> Linalg {
+        Linalg::new(&xla::PjRtClient::cpu().unwrap())
+    }
+
+    #[test]
+    fn budget_caps() {
+        assert_eq!(budget_for(128, 128, 16), 16 * 256);
+        // capped at half the matrix
+        assert_eq!(budget_for(16, 16, 128), 128);
+        assert!(budget_for(1, 1, 1) >= 1);
+    }
+
+    #[test]
+    fn topk_exact_count_with_ties() {
+        let vals = vec![1.0f32, -1.0, 1.0, 0.5, 2.0, -2.0];
+        let idx = topk_indices(&vals, 3);
+        assert_eq!(idx.len(), 3);
+        // the two 2.0-magnitude entries must be in
+        assert!(idx.contains(&4) && idx.contains(&5));
+    }
+
+    #[test]
+    fn principal_indices_match_exact_oracle() {
+        let la = linalg();
+        let mut rng = Rng::new(11);
+        // matrix with a strong low-rank component
+        let (m, n, r) = (64, 48, 4);
+        let u = Tensor::randn(&[m, r], 1.0, &mut rng);
+        let v = Tensor::randn(&[r, n], 1.0, &mut rng);
+        let mut w = u.matmul(&v);
+        w.add_scaled(&Tensor::randn(&[m, n], 1.0, &mut rng), 0.05);
+        let k = 300;
+        let cfg = LiftCfg {
+            rank: r,
+            ..Default::default()
+        };
+        let fast = principal_indices(&la, &w, k, &cfg, &mut rng).unwrap();
+        let exact_cfg = LiftCfg {
+            exact: true,
+            ..cfg
+        };
+        let exact = principal_indices(&la, &w, k, &exact_cfg, &mut rng).unwrap();
+        let ov = mask_overlap(&fast, &exact);
+        assert!(ov > 0.9, "randomized vs exact overlap {ov}");
+    }
+
+    #[test]
+    fn lift_mask_differs_from_weight_magnitude() {
+        // the paper's core observation: principal weights != largest weights
+        let la = linalg();
+        let mut rng = Rng::new(13);
+        let (m, n) = (64, 64);
+        let mut w = Tensor::randn(&[m, n], 1.0, &mut rng);
+        // spike a few individual entries (largest |W| but not low-rank)
+        for _ in 0..50 {
+            let i = rng.below(m * n);
+            w.data[i] = 8.0;
+        }
+        let k = 200;
+        let cfg = LiftCfg {
+            rank: 4,
+            ..Default::default()
+        };
+        let lift = principal_indices(&la, &w, k, &cfg, &mut rng).unwrap();
+        let wm = topk_indices(&w.data, k);
+        let ov = mask_overlap(&wm, &lift);
+        assert!(ov < 0.9, "LIFT should not equal weight-mag (overlap {ov})");
+    }
+
+    #[test]
+    fn strategies_differ() {
+        let la = linalg();
+        let mut rng = Rng::new(17);
+        let w = Tensor::randn(&[32, 24], 1.0, &mut rng);
+        let k = 100;
+        let mut mk = |strategy| {
+            let cfg = LiftCfg {
+                rank: 6,
+                strategy,
+                exact: true,
+                ..Default::default()
+            };
+            principal_indices(&la, &w, k, &cfg, &mut rng).unwrap()
+        };
+        let largest = mk(RankStrategy::Largest);
+        let smallest = mk(RankStrategy::Smallest);
+        assert!(mask_overlap(&largest, &smallest) < 0.8);
+    }
+
+    #[test]
+    fn block_structured_selection() {
+        let mut rng = Rng::new(19);
+        let w = Tensor::randn(&[16, 16], 1.0, &mut rng);
+        let idx = block_topk(&w, 64, 4);
+        assert_eq!(idx.len(), 64);
+        // indices come in full 4x4 blocks: every index's block must have
+        // all 16 members present
+        let set: std::collections::HashSet<u32> = idx.iter().copied().collect();
+        for &i in &idx {
+            let (r, c) = ((i / 16) as usize, (i % 16) as usize);
+            let (br, bc) = (r / 4 * 4, c / 4 * 4);
+            for dr in 0..4 {
+                for dc in 0..4 {
+                    let j = ((br + dr) * 16 + bc + dc) as u32;
+                    assert!(set.contains(&j), "block of {i} missing {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn selectors_respect_budget() {
+        let la = linalg();
+        let mut rng = Rng::new(23);
+        let w = Tensor::randn(&[20, 30], 1.0, &mut rng);
+        let g = Tensor::randn(&[20, 30], 1.0, &mut rng);
+        let score: Vec<f32> = (0..600).map(|i| i as f32).collect();
+        let cfg = LiftCfg::default();
+        for sel in [
+            Selector::Lift,
+            Selector::WeightMag,
+            Selector::GradMag,
+            Selector::Movement,
+            Selector::Random,
+        ] {
+            let idx =
+                select_indices(sel, &la, &w, Some(&g), Some(&score), 64, &cfg, &mut rng).unwrap();
+            assert_eq!(idx.len(), 64, "{sel:?}");
+            assert!(idx.windows(2).all(|w| w[0] < w[1]), "{sel:?} sorted+unique");
+        }
+        // movement picks the top-scoring tail
+        let idx = select_indices(
+            Selector::Movement,
+            &la,
+            &w,
+            None,
+            Some(&score),
+            4,
+            &cfg,
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(idx, vec![596, 597, 598, 599]);
+    }
+}

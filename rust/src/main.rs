@@ -1,0 +1,178 @@
+//! `lift` — CLI launcher for the LIFT reproduction.
+//!
+//! Subcommands:
+//!   pretrain  --preset <p> [--steps N] [--seed S]
+//!   train     --preset <p> --method <m> [--rank R] [--suite arith|commonsense|nlu]
+//!             [--steps N] [--lr F] [--interval N] [--seed S]
+//!   eval      --preset <p> [--suite ...]   (pretrained model, no fine-tune)
+//!   exp       <id> [--fast] [--seeds N]    (regenerate a paper table/figure)
+//!   list-exp                                (show available experiment ids)
+//!   inspect                                 (manifest summary)
+
+use anyhow::Result;
+use lift::data::tasks::{TaskMixSource, TaskSet, ARITH, COMMONSENSE, NLU};
+use lift::exp;
+use lift::lift::LiftCfg;
+use lift::methods::{make_method, Scope};
+use lift::runtime::{model_exec::ModelExec, Runtime};
+use lift::train::{eval, pretrain, train, TrainCfg};
+use lift::util::cli::Args;
+
+fn main() -> Result<()> {
+    lift::util::logging::init();
+    let args = Args::from_env();
+    match args.cmd.as_str() {
+        "pretrain" => cmd_pretrain(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "exp" => exp::run(&args),
+        "list-exp" => {
+            for (id, desc) in exp::REGISTRY {
+                println!("{id:<14} {desc}");
+            }
+            Ok(())
+        }
+        "inspect" => cmd_inspect(&args),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' (try `lift help`)"),
+    }
+}
+
+const HELP: &str = "\
+lift — Low-rank Informed Sparse Fine-Tuning (ICML 2025) reproduction
+
+USAGE:
+  lift pretrain --preset tiny [--steps 1500] [--seed 1]
+  lift train --preset tiny --method lift --rank 32 --suite arith [--steps 300]
+  lift eval --preset tiny --suite arith
+  lift exp table2 [--fast]        regenerate a paper table/figure
+  lift list-exp                   list experiment ids
+  lift inspect                    manifest summary
+
+Methods: full lift lift_mlp lift_structured lora dora pissa spectral s2ft
+         sift spiel weight_mag grad_mag movement random
+";
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let preset = args.str("preset", "tiny");
+    let rt = Runtime::from_default()?;
+    let exec = ModelExec::load(&rt, &preset)?;
+    let steps = args.usize("steps", lift::exp::default_pretrain_steps(&preset));
+    let seed = args.u64("seed", 1);
+    args.finish()?;
+    let params = pretrain::ensure_pretrained(&rt, &exec, steps, seed)?;
+    let corpus = pretrain::world(&exec);
+    let ppl = eval::perplexity(&exec, &params, &corpus, 8, 99)?;
+    let recall = eval::fact_recall(&rt, &exec, &params, &corpus, 50, 7)?;
+    println!("preset={preset} steps={steps} heldout_ppl={ppl:.3} fact_recall={recall:.3}");
+    Ok(())
+}
+
+fn suite_families(suite: &str) -> Vec<lift::data::TaskFamily> {
+    match suite {
+        "arith" => ARITH.to_vec(),
+        "commonsense" => COMMONSENSE.to_vec(),
+        "nlu" => NLU.to_vec(),
+        "gpqa" => vec![lift::data::TaskFamily::Gpqa],
+        other => panic!("unknown suite '{other}'"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let preset = args.str("preset", "tiny");
+    let method_name = args.str("method", "lift");
+    let rank = args.usize("rank", 32);
+    let suite = args.str("suite", "arith");
+    let rt = Runtime::from_default()?;
+    let exec = ModelExec::load(&rt, &preset)?;
+    let steps = args.usize("steps", 300);
+    let lr = args.f32("lr", 1e-3);
+    let interval = args.usize("interval", 100);
+    let seed = args.u64("seed", 1);
+    let pt_steps = args.usize("pretrain-steps", lift::exp::default_pretrain_steps(&preset));
+    let n_train = args.usize("train-samples", 1000);
+    let n_test = args.usize("test-samples", 100);
+    args.finish()?;
+
+    let mut params = pretrain::ensure_pretrained(&rt, &exec, pt_steps, 1)?;
+    let corpus = pretrain::world(&exec);
+    let fams = suite_families(&suite);
+    let sets: Vec<TaskSet> = fams
+        .iter()
+        .map(|&f| TaskSet::generate(f, &corpus.vocab, &corpus.kg, n_train, n_test, seed))
+        .collect();
+    let mut src = TaskMixSource {
+        sets: sets.clone(),
+        batch: exec.preset.batch,
+        seq: exec.preset.seq,
+    };
+    let mut ctx = pretrain::make_ctx(&rt, &exec, seed);
+    let lift_cfg = LiftCfg {
+        rank: args.usize("lra-rank", rank),
+        ..Default::default()
+    };
+    let mut method = make_method(&method_name, rank, lift_cfg, interval, Scope::default())?;
+    let cfg = TrainCfg {
+        steps,
+        lr,
+        warmup_frac: 0.03,
+        log_every: 50,
+        seed,
+    };
+    let log = train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg)?;
+    println!(
+        "method={} trainable={} opt_bytes={} final_loss={:.4} ({:.1}s)",
+        method.name(),
+        method.trainable(),
+        method.opt_bytes(),
+        log.tail_loss(20),
+        log.seconds
+    );
+    for set in &sets {
+        let acc = eval::accuracy(&exec, &params, &set.test)?;
+        println!("  {:<12} {acc:.2}", set.family.name());
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let preset = args.str("preset", "tiny");
+    let suite = args.str("suite", "arith");
+    let rt = Runtime::from_default()?;
+    let exec = ModelExec::load(&rt, &preset)?;
+    let pt_steps = args.usize("pretrain-steps", lift::exp::default_pretrain_steps(&preset));
+    let n_test = args.usize("test-samples", 100);
+    args.finish()?;
+    let params = pretrain::ensure_pretrained(&rt, &exec, pt_steps, 1)?;
+    let corpus = pretrain::world(&exec);
+    for &f in &suite_families(&suite) {
+        let set = TaskSet::generate(f, &corpus.vocab, &corpus.kg, 1, n_test, 1);
+        let acc = eval::accuracy(&exec, &params, &set.test)?;
+        println!("{:<12} {acc:.2}", set.family.name());
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let rt = Runtime::from_default()?;
+    args.finish()?;
+    println!("artifacts: {:?}", Runtime::default_dir());
+    for (name, p) in &rt.manifest.presets {
+        println!(
+            "preset {name:<6} d={} L={} ffn={} vocab={} seq={} batch={} params={:.2}M execs={:?}",
+            p.d,
+            p.layers,
+            p.ffn,
+            p.vocab,
+            p.seq,
+            p.batch,
+            p.n_params() as f64 / 1e6,
+            p.executables.keys().collect::<Vec<_>>()
+        );
+    }
+    println!("kernels: {}", rt.manifest.kernels.len());
+    Ok(())
+}

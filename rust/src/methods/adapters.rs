@@ -1,0 +1,361 @@
+//! Adapter-reparameterized baselines: LoRA, PiSSA, DoRA, Spectral.
+//!
+//! All of them train a small reparameterization of each weight matrix and
+//! receive *exact* gradients by chain rule from the full gradient G that
+//! the train-step executable already computes:
+//!
+//!   LoRA / PiSSA    W_eff = W0 + s·A B        dA = s·G Bᵀ, dB = s·Aᵀ G
+//!   DoRA            W_eff_j = m_j·V_j/|V_j|,  V = W0 + A B (per column j)
+//!   Spectral        W_eff = W_res + U diag(σ) Vᵀ  (top-r singular triplet)
+//!
+//! After each optimizer step the effective weight is recomputed and written
+//! back into `params`, so the L2 executable always sees W_eff.
+
+use anyhow::Result;
+
+use super::{Ctx, Method, Scope};
+use crate::optim::DenseAdam;
+use crate::runtime::Linalg;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdapterKind {
+    LoRa,
+    PiSsa,
+    DoRa,
+}
+
+struct LoraState {
+    pi: usize,
+    w0: Tensor,     // frozen base (PiSSA: residual)
+    a: Tensor,      // (m, r)
+    b: Tensor,      // (r, n)
+    mag: Vec<f32>,  // DoRA column magnitudes (n)
+    opt_a: DenseAdam,
+    opt_b: DenseAdam,
+    opt_m: Option<DenseAdam>,
+}
+
+pub struct LoRa {
+    rank: usize,
+    scope: Scope,
+    kind: AdapterKind,
+    scale: f32,
+    states: Vec<LoraState>,
+}
+
+impl LoRa {
+    pub fn new(rank: usize, scope: Scope, kind: AdapterKind) -> LoRa {
+        LoRa {
+            rank,
+            scope,
+            kind,
+            scale: if kind == AdapterKind::LoRa { 2.0 } else { 1.0 },
+            states: Vec::new(),
+        }
+    }
+
+    fn effective(&self, la: &Linalg, st: &LoraState) -> Result<Tensor> {
+        let mut v = la.matmul(&st.a, &st.b)?;
+        v.scale(self.scale);
+        v.add_scaled(&st.w0, 1.0);
+        if self.kind == AdapterKind::DoRa {
+            let (m, n) = v.dims2();
+            // column-normalize, then apply magnitudes
+            for j in 0..n {
+                let mut norm = 0.0f64;
+                for i in 0..m {
+                    let x = v.data[i * n + j] as f64;
+                    norm += x * x;
+                }
+                let norm = norm.sqrt().max(1e-8) as f32;
+                let s = st.mag[j] / norm;
+                for i in 0..m {
+                    v.data[i * n + j] *= s;
+                }
+            }
+        }
+        Ok(v)
+    }
+}
+
+impl Method for LoRa {
+    fn name(&self) -> String {
+        match self.kind {
+            AdapterKind::LoRa => format!("LoRA(r={})", self.rank),
+            AdapterKind::PiSsa => format!("PiSSA(r={})", self.rank),
+            AdapterKind::DoRa => format!("DoRA(r={})", self.rank),
+        }
+    }
+
+    fn init(&mut self, ctx: &mut Ctx, params: &[Tensor]) -> Result<()> {
+        let matrices = self.scope.matrices(&ctx.preset);
+        anyhow::ensure!(!matrices.is_empty(), "no matrices in scope");
+        for &pi in &matrices {
+            let w = &params[pi];
+            let (m, n) = w.dims2();
+            let r = self.rank.min(m).min(n);
+            let (w0, a, b) = if self.kind == AdapterKind::PiSsa {
+                // principal singular triplet init; the residual is frozen
+                let (q, bb) = ctx.la.svd_lowrank(w, r + 8, 2, &mut ctx.rng)?;
+                let (a, b) = crate::runtime::linalg::truncate_factors(&q, &bb, r);
+                let ab = ctx.la.matmul(&a, &b)?;
+                let mut w0 = w.clone();
+                w0.add_scaled(&ab, -1.0);
+                (w0, a, b)
+            } else {
+                let a = Tensor::randn(&[m, r], 1.0 / (r as f32).sqrt(), &mut ctx.rng);
+                let b = Tensor::zeros(&[r, n]);
+                (w.clone(), a, b)
+            };
+            let mag = if self.kind == AdapterKind::DoRa {
+                // init magnitudes to the base column norms
+                (0..n)
+                    .map(|j| {
+                        (0..m)
+                            .map(|i| (w.data[i * n + j] as f64).powi(2))
+                            .sum::<f64>()
+                            .sqrt() as f32
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
+            self.states.push(LoraState {
+                pi,
+                opt_a: DenseAdam::new(a.len(), ctx.adam),
+                opt_b: DenseAdam::new(b.len(), ctx.adam),
+                opt_m: if mag.is_empty() {
+                    None
+                } else {
+                    Some(DenseAdam::new(mag.len(), ctx.adam))
+                },
+                w0,
+                a,
+                b,
+                mag,
+            });
+        }
+        Ok(())
+    }
+
+    fn step(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        _step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        let la = ctx.la.clone();
+        let scale = self.scale;
+        let kind = self.kind;
+        for st in self.states.iter_mut() {
+            let g = &grads[st.pi];
+            let (m, n) = g.dims2();
+            // dL/dV: for plain LoRA/PiSSA this is just G (V = W_eff);
+            // DoRA projects G through the normalize-and-scale (per column)
+            let dv = if kind == AdapterKind::DoRa {
+                let mut v = la.matmul(&st.a, &st.b)?;
+                v.scale(scale);
+                v.add_scaled(&st.w0, 1.0);
+                let mut dv = Tensor::zeros(&[m, n]);
+                let mut dmag = vec![0.0f32; n];
+                for j in 0..n {
+                    let mut norm = 0.0f64;
+                    let mut gdotu = 0.0f64;
+                    for i in 0..m {
+                        norm += (v.data[i * n + j] as f64).powi(2);
+                    }
+                    let norm = norm.sqrt().max(1e-8);
+                    for i in 0..m {
+                        gdotu += g.data[i * n + j] as f64 * v.data[i * n + j] as f64 / norm;
+                    }
+                    dmag[j] = gdotu as f32;
+                    let c = st.mag[j] as f64 / norm;
+                    for i in 0..m {
+                        let u = v.data[i * n + j] as f64 / norm;
+                        dv.data[i * n + j] =
+                            (c * (g.data[i * n + j] as f64 - gdotu * u)) as f32;
+                    }
+                }
+                if let Some(opt_m) = st.opt_m.as_mut() {
+                    opt_m.step(&mut st.mag, &dmag, lr);
+                }
+                dv
+            } else {
+                g.clone()
+            };
+            // chain rule through ΔW = s·A B
+            let mut da = la.matmul_nt(&dv, &st.b)?; // (m, r) = dV Bᵀ
+            let mut db = la.matmul_tn(&st.a, &dv)?; // (r, n) = Aᵀ dV
+            da.scale(scale);
+            db.scale(scale);
+            st.opt_a.step(&mut st.a.data, &da.data, lr);
+            st.opt_b.step(&mut st.b.data, &db.data, lr);
+        }
+        // write back effective weights
+        for st in &self.states {
+            params[st.pi] = self.effective(&la, st)?;
+        }
+        Ok(())
+    }
+
+    fn trainable(&self) -> usize {
+        self.states
+            .iter()
+            .map(|st| st.a.len() + st.b.len() + st.mag.len())
+            .sum()
+    }
+
+    fn opt_bytes(&self) -> usize {
+        self.trainable() * 8
+    }
+}
+
+/// Spectral adapter: fine-tune the top-r singular triplet (U, σ, V).
+pub struct Spectral {
+    rank: usize,
+    scope: Scope,
+    states: Vec<SpectralState>,
+}
+
+struct SpectralState {
+    pi: usize,
+    w_res: Tensor,
+    u: Tensor,      // (m, r)
+    v: Tensor,      // (n, r)
+    s: Vec<f32>,    // (r)
+    opt_u: DenseAdam,
+    opt_v: DenseAdam,
+    opt_s: DenseAdam,
+}
+
+impl Spectral {
+    pub fn new(rank: usize, scope: Scope) -> Spectral {
+        Spectral {
+            rank,
+            scope,
+            states: Vec::new(),
+        }
+    }
+
+    fn effective(&self, la: &Linalg, st: &SpectralState) -> Result<Tensor> {
+        let (m, r) = st.u.dims2();
+        let mut us = st.u.clone();
+        for i in 0..m {
+            for c in 0..r {
+                us.data[i * r + c] *= st.s[c];
+            }
+        }
+        let mut w = la.matmul_nt(&us, &st.v)?; // U diag(s) Vᵀ
+        w.add_scaled(&st.w_res, 1.0);
+        Ok(w)
+    }
+}
+
+impl Method for Spectral {
+    fn name(&self) -> String {
+        format!("Spectral(r={})", self.rank)
+    }
+
+    fn init(&mut self, ctx: &mut Ctx, params: &[Tensor]) -> Result<()> {
+        for &pi in &self.scope.matrices(&ctx.preset) {
+            let w = &params[pi];
+            let (m, n) = w.dims2();
+            let r = self.rank.min(m).min(n);
+            let (q, bb) = ctx.la.svd_lowrank(w, r + 8, 2, &mut ctx.rng)?;
+            let (u, b) = crate::runtime::linalg::truncate_factors(&q, &bb, r);
+            // split b (r, n) into s * vᵀ with unit rows
+            let mut s = vec![0.0f32; r];
+            let mut v = Tensor::zeros(&[n, r]);
+            for c in 0..r {
+                let row = &b.data[c * n..(c + 1) * n];
+                let norm = crate::util::stats::l2_norm(row).max(1e-8) as f32;
+                s[c] = norm;
+                for j in 0..n {
+                    v.data[j * r + c] = row[j] / norm;
+                }
+            }
+            let ab = self_effective(&ctx.la, &u, &v, &s)?;
+            let mut w_res = w.clone();
+            w_res.add_scaled(&ab, -1.0);
+            self.states.push(SpectralState {
+                pi,
+                opt_u: DenseAdam::new(u.len(), ctx.adam),
+                opt_v: DenseAdam::new(v.len(), ctx.adam),
+                opt_s: DenseAdam::new(s.len(), ctx.adam),
+                w_res,
+                u,
+                v,
+                s,
+            });
+        }
+        Ok(())
+    }
+
+    fn step(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        _step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        let la = ctx.la.clone();
+        for st in self.states.iter_mut() {
+            let g = &grads[st.pi];
+            let (_, r) = st.u.dims2();
+            // dU = G V diag(s); dV = Gᵀ U diag(s); dσ_c = u_cᵀ G v_c
+            let gv = la.matmul(g, &st.v)?; // (m, r)
+            let gtu = la.matmul_tn(g, &st.u)?; // (n, r)
+            let mut du = gv.clone();
+            let mut dv = gtu.clone();
+            let (m, _) = du.dims2();
+            let (n, _) = dv.dims2();
+            let mut ds = vec![0.0f32; r];
+            for c in 0..r {
+                let mut acc = 0.0f64;
+                for i in 0..m {
+                    acc += st.u.data[i * r + c] as f64 * gv.data[i * r + c] as f64;
+                }
+                ds[c] = acc as f32;
+                for i in 0..m {
+                    du.data[i * r + c] *= st.s[c];
+                }
+                for j in 0..n {
+                    dv.data[j * r + c] *= st.s[c];
+                }
+            }
+            st.opt_u.step(&mut st.u.data, &du.data, lr);
+            st.opt_v.step(&mut st.v.data, &dv.data, lr);
+            st.opt_s.step(&mut st.s, &ds, lr);
+        }
+        for st in &self.states {
+            params[st.pi] = self.effective(&la, st)?;
+        }
+        Ok(())
+    }
+
+    fn trainable(&self) -> usize {
+        self.states
+            .iter()
+            .map(|st| st.u.len() + st.v.len() + st.s.len())
+            .sum()
+    }
+
+    fn opt_bytes(&self) -> usize {
+        self.trainable() * 8
+    }
+}
+
+fn self_effective(la: &Linalg, u: &Tensor, v: &Tensor, s: &[f32]) -> Result<Tensor> {
+    let (m, r) = u.dims2();
+    let mut us = u.clone();
+    for i in 0..m {
+        for c in 0..r {
+            us.data[i * r + c] *= s[c];
+        }
+    }
+    la.matmul_nt(&us, v)
+}

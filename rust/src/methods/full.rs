@@ -1,0 +1,62 @@
+//! Full fine-tuning: dense AdamW over every parameter.
+
+use anyhow::Result;
+
+use super::{Ctx, Method};
+use crate::optim::DenseAdamSet;
+use crate::tensor::Tensor;
+
+pub struct FullFt {
+    opt: Option<DenseAdamSet>,
+    n_params: usize,
+}
+
+impl FullFt {
+    pub fn new() -> FullFt {
+        FullFt {
+            opt: None,
+            n_params: 0,
+        }
+    }
+}
+
+impl Default for FullFt {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Method for FullFt {
+    fn name(&self) -> String {
+        "FullFT".into()
+    }
+
+    fn init(&mut self, ctx: &mut Ctx, params: &[Tensor]) -> Result<()> {
+        self.n_params = params.iter().map(|p| p.len()).sum();
+        self.opt = Some(DenseAdamSet::new(params, ctx.adam));
+        Ok(())
+    }
+
+    fn step(
+        &mut self,
+        _ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        _step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        self.opt
+            .as_mut()
+            .expect("init not called")
+            .step(params, grads, lr);
+        Ok(())
+    }
+
+    fn trainable(&self) -> usize {
+        self.n_params
+    }
+
+    fn opt_bytes(&self) -> usize {
+        self.opt.as_ref().map(|o| o.state_bytes()).unwrap_or(0)
+    }
+}

@@ -1,0 +1,162 @@
+//! Fine-tuning method zoo: LIFT + every baseline the paper compares.
+//!
+//! A `Method` consumes full gradients from the train-step executable and
+//! owns how parameters move: dense AdamW (Full FT), masked sparse AdamW
+//! (LIFT and the sparse baselines), or adapter reparameterizations whose
+//! gradients are exact projections of the full gradient (LoRA / PiSSA /
+//! DoRA / Spectral — chain rule through W_eff; see adapters.rs).
+
+pub mod adapters;
+pub mod full;
+pub mod s2ft;
+pub mod sparse_ft;
+pub mod spiel;
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::lift::{LiftCfg, Selector};
+use crate::optim::AdamCfg;
+use crate::runtime::manifest::PresetInfo;
+use crate::runtime::Linalg;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Shared context handed to every method call.
+pub struct Ctx {
+    pub la: Rc<Linalg>,
+    pub preset: PresetInfo,
+    pub rng: Rng,
+    pub adam: AdamCfg,
+}
+
+pub trait Method {
+    fn name(&self) -> String;
+    /// Called once before training with the initial parameters.
+    fn init(&mut self, ctx: &mut Ctx, params: &[Tensor]) -> Result<()>;
+    /// One optimizer step given full grads (param order = manifest).
+    fn step(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        step: usize,
+        lr: f32,
+    ) -> Result<()>;
+    /// Number of trainable parameters (the rank-budget accounting).
+    fn trainable(&self) -> usize;
+    /// Optimizer-state bytes (Fig. 6 metric).
+    fn opt_bytes(&self) -> usize;
+}
+
+/// Which matrices a method may touch.
+#[derive(Clone, Debug, Default)]
+pub struct Scope {
+    pub mlp_only: bool,
+    /// restrict to one layer-type kind, e.g. "wq" (Fig. 11)
+    pub kind: Option<String>,
+}
+
+impl Scope {
+    pub fn matrices(&self, preset: &PresetInfo) -> Vec<usize> {
+        match &self.kind {
+            Some(k) => crate::model::matrices_of_kind(preset, k),
+            None => crate::model::trainable_matrices(preset, self.mlp_only),
+        }
+    }
+}
+
+/// Build a method by name with a LoRA-rank-equivalent budget.
+/// Names: full, lift, lift_mlp, lift_structured, weight_mag, grad_mag,
+/// movement, random, sift, spiel, lora, pissa, dora, spectral, s2ft.
+pub fn make_method(
+    name: &str,
+    rank: usize,
+    lift_cfg: LiftCfg,
+    refresh_interval: usize,
+    scope: Scope,
+) -> Result<Box<dyn Method>> {
+    use sparse_ft::SparseFt;
+    let m: Box<dyn Method> = match name {
+        "full" => Box::new(full::FullFt::new()),
+        "lift" => Box::new(SparseFt::new(
+            "LIFT",
+            Selector::Lift,
+            rank,
+            lift_cfg,
+            refresh_interval,
+            scope,
+        )),
+        "lift_mlp" => Box::new(SparseFt::new(
+            "LIFT_MLP",
+            Selector::Lift,
+            rank,
+            lift_cfg,
+            refresh_interval,
+            Scope {
+                mlp_only: true,
+                kind: None,
+            },
+        )),
+        "lift_structured" => Box::new(SparseFt::new(
+            "LIFT_Structured",
+            Selector::Lift,
+            rank,
+            LiftCfg {
+                block: 4,
+                ..lift_cfg
+            },
+            refresh_interval,
+            scope,
+        )),
+        "weight_mag" => Box::new(SparseFt::new(
+            "WeightMag",
+            Selector::WeightMag,
+            rank,
+            lift_cfg,
+            refresh_interval,
+            scope,
+        )),
+        "grad_mag" => Box::new(SparseFt::new(
+            "GradMag",
+            Selector::GradMag,
+            rank,
+            lift_cfg,
+            refresh_interval,
+            scope,
+        )),
+        "movement" => Box::new(SparseFt::new(
+            "Movement",
+            Selector::Movement,
+            rank,
+            lift_cfg,
+            refresh_interval,
+            scope,
+        )),
+        "random" => Box::new(SparseFt::new(
+            "Random",
+            Selector::Random,
+            rank,
+            lift_cfg,
+            refresh_interval,
+            scope,
+        )),
+        // SIFT: gradient-selected mask, fixed for the whole run
+        "sift" => Box::new(SparseFt::new(
+            "SIFT", Selector::GradMag, rank, lift_cfg, 0, scope,
+        )),
+        "spiel" => Box::new(spiel::Spiel::new(rank, refresh_interval.max(1), scope)),
+        "lora" => Box::new(adapters::LoRa::new(rank, scope, adapters::AdapterKind::LoRa)),
+        "pissa" => Box::new(adapters::LoRa::new(rank, scope, adapters::AdapterKind::PiSsa)),
+        "dora" => Box::new(adapters::LoRa::new(rank, scope, adapters::AdapterKind::DoRa)),
+        "spectral" => Box::new(adapters::Spectral::new(rank, scope)),
+        "s2ft" => Box::new(s2ft::S2Ft::new(rank, scope)),
+        other => anyhow::bail!("unknown method '{other}'"),
+    };
+    Ok(m)
+}
+
+/// All method names used across the paper's tables.
+pub const PEFT_BASELINES: [&str; 5] = ["full", "lora", "dora", "pissa", "s2ft"];
+pub const SPARSE_BASELINES: [&str; 5] = ["weight_mag", "grad_mag", "movement", "random", "sift"];

@@ -1,0 +1,108 @@
+//! S2FT-style structured sparse fine-tuning: whole output *columns* of
+//! each projection matrix are trainable (budget-matched to LoRA rank),
+//! selected by column gradient energy on the first step.
+
+use anyhow::Result;
+
+use super::{Ctx, Method, Scope};
+use crate::optim::DenseAdam;
+use crate::tensor::Tensor;
+
+pub struct S2Ft {
+    rank: usize,
+    scope: Scope,
+    /// (param index, selected columns, optimizer over the packed columns)
+    states: Vec<(usize, Vec<usize>, DenseAdam)>,
+    matrices: Vec<usize>,
+    initialized: bool,
+}
+
+impl S2Ft {
+    pub fn new(rank: usize, scope: Scope) -> S2Ft {
+        S2Ft {
+            rank,
+            scope,
+            states: Vec::new(),
+            matrices: Vec::new(),
+            initialized: false,
+        }
+    }
+}
+
+impl Method for S2Ft {
+    fn name(&self) -> String {
+        format!("S2FT(r={})", self.rank)
+    }
+
+    fn init(&mut self, ctx: &mut Ctx, _params: &[Tensor]) -> Result<()> {
+        self.matrices = self.scope.matrices(&ctx.preset);
+        anyhow::ensure!(!self.matrices.is_empty(), "no matrices in scope");
+        Ok(())
+    }
+
+    fn step(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        _step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        if !self.initialized {
+            // pick columns by gradient energy; budget = r(m+n) params
+            for &pi in &self.matrices {
+                let g = &grads[pi];
+                let (m, n) = g.dims2();
+                let budget = crate::lift::budget_for(m, n, self.rank);
+                let n_cols = (budget / m).clamp(1, n);
+                let mut energy = vec![0.0f32; n];
+                for i in 0..m {
+                    for j in 0..n {
+                        energy[j] += g.data[i * n + j] * g.data[i * n + j];
+                    }
+                }
+                let cols: Vec<usize> = crate::lift::topk_indices(&energy, n_cols)
+                    .into_iter()
+                    .map(|c| c as usize)
+                    .collect();
+                let opt = DenseAdam::new(cols.len() * m, ctx.adam);
+                self.states.push((pi, cols, opt));
+            }
+            self.initialized = true;
+        }
+        for (pi, cols, opt) in self.states.iter_mut() {
+            let (m, n) = params[*pi].dims2();
+            // pack selected columns
+            let mut wpack = Vec::with_capacity(cols.len() * m);
+            let mut gpack = Vec::with_capacity(cols.len() * m);
+            for &j in cols.iter() {
+                for i in 0..m {
+                    wpack.push(params[*pi].data[i * n + j]);
+                    gpack.push(grads[*pi].data[i * n + j]);
+                }
+            }
+            opt.step(&mut wpack, &gpack, lr);
+            for (cidx, &j) in cols.iter().enumerate() {
+                for i in 0..m {
+                    params[*pi].data[i * n + j] = wpack[cidx * m + i];
+                }
+            }
+        }
+        let _ = ctx;
+        Ok(())
+    }
+
+    fn trainable(&self) -> usize {
+        self.states
+            .iter()
+            .map(|(_, cols, opt)| {
+                debug_assert_eq!(opt.m.len() % cols.len().max(1), 0);
+                opt.m.len()
+            })
+            .sum()
+    }
+
+    fn opt_bytes(&self) -> usize {
+        self.states.iter().map(|(_, _, o)| o.state_bytes()).sum()
+    }
+}

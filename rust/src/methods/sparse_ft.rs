@@ -1,0 +1,184 @@
+//! Sparse fine-tuning over a selected index set — LIFT and the sparse
+//! baselines share this engine; only the `Selector` differs.
+//!
+//! Mask lifecycle (paper §3.2 + Algorithm 1):
+//!   * masks are computed lazily on the first step (GradMag/Movement need
+//!     a gradient) and refreshed every `refresh_interval` steps
+//!     (`0` = fixed mask for the whole run, as in SIFT);
+//!   * on refresh the packed Adam moments migrate through
+//!     `SparseAdam::refresh` — surviving entries keep state.
+
+use anyhow::Result;
+
+use super::{Ctx, Method, Scope};
+use crate::lift::{budget_for, select_indices, LiftCfg, Selector};
+use crate::optim::SparseAdam;
+use crate::tensor::Tensor;
+
+pub struct SparseFt {
+    label: String,
+    selector: Selector,
+    rank: usize,
+    cfg: LiftCfg,
+    /// steps between mask refreshes; 0 = never refresh
+    refresh_interval: usize,
+    scope: Scope,
+    /// (param index, optimizer state) per trainable matrix
+    states: Vec<(usize, SparseAdam)>,
+    /// movement scores per trainable matrix (Selector::Movement)
+    scores: Vec<Vec<f32>>,
+    matrices: Vec<usize>,
+    initialized: bool,
+    /// mask-overlap across refreshes, for diagnostics (mean over matrices)
+    pub last_refresh_overlap: f64,
+}
+
+impl SparseFt {
+    pub fn new(
+        label: &str,
+        selector: Selector,
+        rank: usize,
+        cfg: LiftCfg,
+        refresh_interval: usize,
+        scope: Scope,
+    ) -> SparseFt {
+        SparseFt {
+            label: label.to_string(),
+            selector,
+            rank,
+            cfg,
+            refresh_interval,
+            scope,
+            states: Vec::new(),
+            scores: Vec::new(),
+            matrices: Vec::new(),
+            initialized: false,
+            last_refresh_overlap: 1.0,
+        }
+    }
+
+    /// Current mask (flat indices) for a given param index, if trainable.
+    pub fn mask_for(&self, param_idx: usize) -> Option<&[u32]> {
+        self.states
+            .iter()
+            .find(|(i, _)| *i == param_idx)
+            .map(|(_, st)| st.idx.as_slice())
+    }
+
+    fn budget(&self, shape: &[usize]) -> usize {
+        budget_for(shape[0], shape[1], self.rank)
+    }
+
+    fn compute_masks(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &[Tensor],
+        grads: Option<&[Tensor]>,
+    ) -> Result<Vec<Vec<u32>>> {
+        let mut masks = Vec::with_capacity(self.matrices.len());
+        for (mi, &pi) in self.matrices.clone().iter().enumerate() {
+            let w = &params[pi];
+            let k = self.budget(&w.shape);
+            let g = grads.map(|gs| &gs[pi]);
+            let score = self.scores.get(mi).map(|s| s.as_slice()).filter(|s| !s.is_empty());
+            let idx = select_indices(
+                self.selector,
+                &ctx.la,
+                w,
+                g,
+                score,
+                k,
+                &self.cfg,
+                &mut ctx.rng,
+            )?;
+            masks.push(idx);
+        }
+        Ok(masks)
+    }
+}
+
+impl Method for SparseFt {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn init(&mut self, ctx: &mut Ctx, params: &[Tensor]) -> Result<()> {
+        self.matrices = self.scope.matrices(&ctx.preset);
+        anyhow::ensure!(!self.matrices.is_empty(), "no trainable matrices in scope");
+        if self.selector == Selector::Movement {
+            self.scores = self
+                .matrices
+                .iter()
+                .map(|&pi| vec![0.0f32; params[pi].len()])
+                .collect();
+        }
+        // selectors that don't need gradients can build masks now;
+        // GradMag/Movement wait for the first step
+        if !matches!(self.selector, Selector::GradMag | Selector::Movement) {
+            let masks = self.compute_masks(ctx, params, None)?;
+            self.states = self
+                .matrices
+                .iter()
+                .zip(masks)
+                .map(|(&pi, idx)| (pi, SparseAdam::new(idx, ctx.adam)))
+                .collect();
+            self.initialized = true;
+        }
+        Ok(())
+    }
+
+    fn step(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        // movement scores accumulate every step: S += -w * g
+        if self.selector == Selector::Movement {
+            for (mi, &pi) in self.matrices.iter().enumerate() {
+                let (w, g) = (&params[pi], &grads[pi]);
+                let s = &mut self.scores[mi];
+                for i in 0..s.len() {
+                    s[i] -= w.data[i] * g.data[i];
+                }
+            }
+        }
+        if !self.initialized {
+            let masks = self.compute_masks(ctx, params, Some(grads))?;
+            self.states = self
+                .matrices
+                .iter()
+                .zip(masks)
+                .map(|(&pi, idx)| (pi, SparseAdam::new(idx, ctx.adam)))
+                .collect();
+            self.initialized = true;
+        } else if self.refresh_interval > 0 && step > 0 && step % self.refresh_interval == 0 {
+            let masks = self.compute_masks(ctx, params, Some(grads))?;
+            let mut overlap = 0.0;
+            for ((_, st), idx) in self.states.iter_mut().zip(masks) {
+                overlap += st.overlap(&idx);
+                st.refresh(idx);
+            }
+            self.last_refresh_overlap = overlap / self.states.len().max(1) as f64;
+            log::debug!(
+                "{}: mask refresh at step {step}, overlap {:.3}",
+                self.label,
+                self.last_refresh_overlap
+            );
+        }
+        for (pi, st) in self.states.iter_mut() {
+            st.step(&mut params[*pi].data, &grads[*pi].data, lr);
+        }
+        Ok(())
+    }
+
+    fn trainable(&self) -> usize {
+        self.states.iter().map(|(_, st)| st.k()).sum()
+    }
+
+    fn opt_bytes(&self) -> usize {
+        self.states.iter().map(|(_, st)| st.state_bytes()).sum()
+    }
+}

@@ -1,0 +1,121 @@
+//! SpIEL-style sparse fine-tuning: an *evolving* index set that grows by
+//! gradient magnitude and prunes by smallest accumulated update
+//! (Ansell et al. 2024's grow/drop cycle, simplified to its core loop).
+
+use anyhow::Result;
+
+use super::{Ctx, Method, Scope};
+use crate::lift::{budget_for, topk_indices};
+use crate::optim::SparseAdam;
+use crate::tensor::Tensor;
+
+pub struct Spiel {
+    rank: usize,
+    interval: usize,
+    scope: Scope,
+    /// fraction of the active set replaced per grow/drop cycle
+    pub churn: f32,
+    /// per matrix: (param idx, opt state, weight value at selection time)
+    states: Vec<(usize, SparseAdam, Vec<f32>)>,
+    matrices: Vec<usize>,
+}
+
+impl Spiel {
+    pub fn new(rank: usize, interval: usize, scope: Scope) -> Spiel {
+        Spiel {
+            rank,
+            interval,
+            scope,
+            churn: 0.3,
+            states: Vec::new(),
+            matrices: Vec::new(),
+        }
+    }
+}
+
+impl Method for Spiel {
+    fn name(&self) -> String {
+        format!("SpIEL(r={})", self.rank)
+    }
+
+    fn init(&mut self, ctx: &mut Ctx, params: &[Tensor]) -> Result<()> {
+        self.matrices = self.scope.matrices(&ctx.preset);
+        for &pi in &self.matrices {
+            let w = &params[pi];
+            let (m, n) = w.dims2();
+            let k = budget_for(m, n, self.rank);
+            // random initial set (SpIEL starts uniform)
+            let mut idx: Vec<u32> = ctx
+                .rng
+                .sample_indices(w.len(), k)
+                .into_iter()
+                .map(|i| i as u32)
+                .collect();
+            idx.sort_unstable();
+            let snapshot = idx.iter().map(|&i| w.data[i as usize]).collect();
+            self.states
+                .push((pi, SparseAdam::new(idx, ctx.adam), snapshot));
+        }
+        Ok(())
+    }
+
+    fn step(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        if step > 0 && step % self.interval == 0 {
+            for (pi, st, snapshot) in self.states.iter_mut() {
+                let w = &params[*pi];
+                let g = &grads[*pi];
+                let k = st.k();
+                let n_churn = ((k as f32 * self.churn) as usize).max(1).min(k - 1);
+                // drop: smallest |w_now - w_at_selection| (least useful)
+                let mut order: Vec<usize> = (0..k).collect();
+                order.sort_by(|&a, &b| {
+                    let da = (w.data[st.idx[a] as usize] - snapshot[a]).abs();
+                    let db = (w.data[st.idx[b] as usize] - snapshot[b]).abs();
+                    da.partial_cmp(&db).unwrap()
+                });
+                let keep: std::collections::HashSet<u32> = order[n_churn..]
+                    .iter()
+                    .map(|&j| st.idx[j])
+                    .collect();
+                // grow: largest |g| outside the kept set
+                let mut new_idx: Vec<u32> = keep.iter().copied().collect();
+                for &cand in topk_indices(&g.data, k + n_churn).iter() {
+                    if new_idx.len() >= k {
+                        break;
+                    }
+                    if !keep.contains(&cand) {
+                        new_idx.push(cand);
+                    }
+                }
+                // pad from random if gradient top-k overlapped too much
+                while new_idx.len() < k {
+                    let cand = ctx.rng.below(w.len()) as u32;
+                    if !new_idx.contains(&cand) {
+                        new_idx.push(cand);
+                    }
+                }
+                st.refresh(new_idx);
+                *snapshot = st.idx.iter().map(|&i| w.data[i as usize]).collect();
+            }
+        }
+        for (pi, st, _) in self.states.iter_mut() {
+            st.step(&mut params[*pi].data, &grads[*pi].data, lr);
+        }
+        Ok(())
+    }
+
+    fn trainable(&self) -> usize {
+        self.states.iter().map(|(_, st, _)| st.k()).sum()
+    }
+
+    fn opt_bytes(&self) -> usize {
+        self.states.iter().map(|(_, st, _)| st.state_bytes()).sum()
+    }
+}

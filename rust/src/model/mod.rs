@@ -1,0 +1,205 @@
+//! Model parameter store: init, checkpoints, layer taxonomy helpers.
+//!
+//! The actual compute graphs live in AOT artifacts (L2); this module owns
+//! the host-side truth of the parameters between steps.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::PresetInfo;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Initialize parameters for a preset (LLaMA-style scaled init):
+/// matrices N(0, 0.02), residual-output projections (wo, wdown) scaled by
+/// 1/sqrt(2 * layers), norms = 1, embeddings N(0, 0.02).
+pub fn init_params(preset: &PresetInfo, rng: &mut Rng) -> Vec<Tensor> {
+    let resid_scale = 1.0 / ((2 * preset.layers) as f32).sqrt();
+    preset
+        .params
+        .iter()
+        .map(|p| {
+            let mut r = rng.split(fxhash(&p.name));
+            match p.kind() {
+                "attn_norm" | "mlp_norm" | "final_norm" => Tensor::full(&p.shape, 1.0),
+                "wo" | "wdown" => Tensor::randn(&p.shape, 0.02 * resid_scale, &mut r),
+                _ => Tensor::randn(&p.shape, 0.02, &mut r),
+            }
+        })
+        .collect()
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Indices of the PEFT-trainable matrices (wq..wdown), optionally filtered.
+pub fn trainable_matrices(preset: &PresetInfo, mlp_only: bool) -> Vec<usize> {
+    preset
+        .params
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.is_matrix() && (!mlp_only || p.is_mlp()))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Matrices restricted to one layer-type kind (Fig. 11 component study).
+pub fn matrices_of_kind(preset: &PresetInfo, kind: &str) -> Vec<usize> {
+    preset
+        .params
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.is_matrix() && p.kind() == kind)
+        .map(|(i, _)| i)
+        .collect()
+}
+
+const CKPT_MAGIC: &[u8; 8] = b"LIFTCKP1";
+
+/// Save parameters as a simple binary checkpoint:
+/// magic | n_tensors u32 | per tensor: ndim u32, dims u32..., f32 data (LE).
+pub fn save_checkpoint(path: &Path, params: &[Tensor]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(CKPT_MAGIC)?;
+    f.write_all(&(params.len() as u32).to_le_bytes())?;
+    for t in params {
+        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        // f32 slice -> bytes
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+        };
+        f.write_all(bytes)?;
+    }
+    Ok(())
+}
+
+pub fn load_checkpoint(path: &Path) -> Result<Vec<Tensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening checkpoint {path:?}"))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == CKPT_MAGIC, "bad checkpoint magic");
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let n = u32::from_le_bytes(u32buf) as usize;
+    anyhow::ensure!(n < 100_000, "implausible tensor count {n}");
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        f.read_exact(&mut u32buf)?;
+        let ndim = u32::from_le_bytes(u32buf) as usize;
+        anyhow::ensure!(ndim <= 4, "implausible ndim {ndim}");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            f.read_exact(&mut u32buf)?;
+            shape.push(u32::from_le_bytes(u32buf) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0.0f32; numel];
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, numel * 4)
+        };
+        f.read_exact(bytes)?;
+        out.push(Tensor::from_vec(&shape, data));
+    }
+    Ok(out)
+}
+
+/// Verify loaded params against a preset's manifest spec.
+pub fn check_params(preset: &PresetInfo, params: &[Tensor]) -> Result<()> {
+    anyhow::ensure!(
+        params.len() == preset.params.len(),
+        "checkpoint has {} tensors, preset {} expects {}",
+        params.len(),
+        preset.name,
+        preset.params.len()
+    );
+    for (t, info) in params.iter().zip(&preset.params) {
+        anyhow::ensure!(
+            t.shape == info.shape,
+            "tensor {}: shape {:?} != {:?}",
+            info.name,
+            t.shape,
+            info.shape
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn tiny_preset() -> PresetInfo {
+        let j = r#"{"presets": {"t": {"d": 8, "layers": 2, "ffn": 16, "vocab": 32,
+          "seq": 8, "batch": 2, "heads": 1, "params": [
+            {"name": "embed", "shape": [32, 8]},
+            {"name": "l0.attn_norm", "shape": [8]},
+            {"name": "l0.wq", "shape": [8, 8]},
+            {"name": "l0.wdown", "shape": [16, 8]},
+            {"name": "l1.wup", "shape": [8, 16]},
+            {"name": "final_norm", "shape": [8]}], "executables": {}}}}"#;
+        Manifest::parse(j).unwrap().preset("t").unwrap().clone()
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let p = tiny_preset();
+        let mut rng = Rng::new(1);
+        let params = init_params(&p, &mut rng);
+        assert_eq!(params.len(), 6);
+        // norms are ones
+        assert!(params[1].data.iter().all(|&x| x == 1.0));
+        assert!(params[5].data.iter().all(|&x| x == 1.0));
+        // wdown has smaller scale than wq
+        let std = |t: &Tensor| (t.data.iter().map(|x| x * x).sum::<f32>() / t.len() as f32).sqrt();
+        assert!(std(&params[3]) < std(&params[2]));
+        // deterministic given the same seed
+        let params2 = init_params(&p, &mut Rng::new(1));
+        assert_eq!(params[2], params2[2]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let p = tiny_preset();
+        let mut rng = Rng::new(2);
+        let params = init_params(&p, &mut rng);
+        let path = std::env::temp_dir().join("lift_ckpt_test.bin");
+        save_checkpoint(&path, &params).unwrap();
+        let loaded = load_checkpoint(&path).unwrap();
+        assert_eq!(params, loaded);
+        check_params(&p, &loaded).unwrap();
+    }
+
+    #[test]
+    fn trainable_sets() {
+        let p = tiny_preset();
+        let all = trainable_matrices(&p, false);
+        assert_eq!(all, vec![2, 3, 4]);
+        let mlp = trainable_matrices(&p, true);
+        assert_eq!(mlp, vec![3, 4]);
+        assert_eq!(matrices_of_kind(&p, "wq"), vec![2]);
+    }
+
+    #[test]
+    fn checkpoint_rejects_garbage() {
+        let path = std::env::temp_dir().join("lift_ckpt_garbage.bin");
+        std::fs::write(&path, b"NOTACKPTxxxxxxxx").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+    }
+}

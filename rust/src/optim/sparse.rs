@@ -1,0 +1,252 @@
+//! Sparse AdamW with packed moment vectors — Algorithm 1 of the paper.
+//!
+//! Moments are stored only for the masked ("principal") weights as dense
+//! vectors of length k; on mask refresh the state migrates: entries that
+//! survive in the new mask keep their moments, new entries start at zero
+//! (Algorithm 1 lines 5-12). This is the memory contribution: optimizer
+//! state is `2k` floats instead of `2mn` (Fig. 6).
+//!
+//! Two execution paths, numerically identical:
+//!   * host loops (default — k is small on this box), and
+//!   * the `sparse_adam_<bucket>` Pallas artifact via PJRT (`KernelAdam`),
+//!     used on the e2e path and cross-checked in tests.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::AdamCfg;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Packed sparse AdamW state for one weight matrix.
+#[derive(Clone, Debug)]
+pub struct SparseAdam {
+    pub cfg: AdamCfg,
+    /// flat indices of the masked entries, sorted ascending
+    pub idx: Vec<u32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: usize,
+}
+
+impl SparseAdam {
+    pub fn new(mut idx: Vec<u32>, cfg: AdamCfg) -> SparseAdam {
+        idx.sort_unstable();
+        idx.dedup();
+        let k = idx.len();
+        SparseAdam {
+            cfg,
+            idx,
+            m: vec![0.0; k],
+            v: vec![0.0; k],
+            t: 0,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Optimizer-state bytes (the Fig. 6 metric).
+    pub fn state_bytes(&self) -> usize {
+        self.idx.len() * 4 + (self.m.len() + self.v.len()) * 4
+    }
+
+    /// One masked AdamW step on the host path.
+    pub fn step(&mut self, w: &mut [f32], g_full: &[f32], lr: f32) {
+        self.t += 1;
+        let c = self.cfg;
+        let bc1 = 1.0 - c.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - c.beta2.powi(self.t as i32);
+        for (j, &flat) in self.idx.iter().enumerate() {
+            let i = flat as usize;
+            let gi = g_full[i];
+            self.m[j] = c.beta1 * self.m[j] + (1.0 - c.beta1) * gi;
+            self.v[j] = c.beta2 * self.v[j] + (1.0 - c.beta2) * gi * gi;
+            let mhat = self.m[j] / bc1;
+            let vhat = self.v[j] / bc2;
+            w[i] -= lr * (mhat / (vhat.sqrt() + c.eps) + c.weight_decay * w[i]);
+        }
+    }
+
+    /// Mask refresh (Algorithm 1 lines 5-12): moments for indices present
+    /// in both masks survive; fresh indices start cold.
+    pub fn refresh(&mut self, new_idx: Vec<u32>) {
+        let old: HashMap<u32, usize> = self
+            .idx
+            .iter()
+            .enumerate()
+            .map(|(j, &i)| (i, j))
+            .collect();
+        let mut new_idx = new_idx;
+        new_idx.sort_unstable();
+        new_idx.dedup();
+        let mut m = vec![0.0; new_idx.len()];
+        let mut v = vec![0.0; new_idx.len()];
+        for (j, &i) in new_idx.iter().enumerate() {
+            if let Some(&oj) = old.get(&i) {
+                m[j] = self.m[oj];
+                v[j] = self.v[oj];
+            }
+        }
+        self.idx = new_idx;
+        self.m = m;
+        self.v = v;
+    }
+
+    /// Fraction of the new mask that survived from the old one.
+    pub fn overlap(&self, new_idx: &[u32]) -> f64 {
+        if new_idx.is_empty() {
+            return 0.0;
+        }
+        let old: std::collections::HashSet<u32> = self.idx.iter().copied().collect();
+        new_idx.iter().filter(|i| old.contains(i)).count() as f64 / new_idx.len() as f64
+    }
+}
+
+/// PJRT-kernel-backed variant: drives the `sparse_adam_<k>` Pallas artifact.
+pub struct KernelAdam<'rt> {
+    rt: &'rt Runtime,
+    bucket: usize,
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+}
+
+impl<'rt> KernelAdam<'rt> {
+    /// Pick the smallest artifact bucket that fits k packed entries.
+    pub fn new(rt: &'rt Runtime, k: usize) -> Result<KernelAdam<'rt>> {
+        let bucket = *rt
+            .manifest
+            .adam_buckets
+            .iter()
+            .find(|&&b| b >= k)
+            .or_else(|| rt.manifest.adam_buckets.last())
+            .ok_or_else(|| anyhow::anyhow!("no adam buckets in manifest"))?;
+        let file = rt
+            .manifest
+            .kernels
+            .get(&format!("sparse_adam_{bucket}"))
+            .ok_or_else(|| anyhow::anyhow!("sparse_adam_{bucket} not in manifest"))?;
+        let exe = rt.load_artifact(file)?;
+        Ok(KernelAdam { rt, bucket, exe })
+    }
+
+    /// One step over packed vectors via the Pallas kernel. Vectors shorter
+    /// than the bucket are zero-padded (zero grad = no-op entries modulo
+    /// weight decay on zero params, also a no-op).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &self,
+        p: &mut Vec<f32>,
+        g: &[f32],
+        m: &mut Vec<f32>,
+        v: &mut Vec<f32>,
+        cfg: &AdamCfg,
+        t: usize,
+        lr: f32,
+    ) -> Result<()> {
+        let k = p.len();
+        anyhow::ensure!(k <= self.bucket, "k={k} exceeds bucket {}", self.bucket);
+        let pad = |x: &[f32]| {
+            let mut out = x.to_vec();
+            out.resize(self.bucket, 0.0);
+            Tensor::from_vec(&[self.bucket], out)
+        };
+        let scalars = Tensor::from_vec(
+            &[1, 8],
+            vec![
+                lr,
+                cfg.beta1,
+                cfg.beta2,
+                cfg.eps,
+                cfg.weight_decay,
+                1.0 - cfg.beta1.powi(t as i32),
+                1.0 - cfg.beta2.powi(t as i32),
+                0.0,
+            ],
+        );
+        let args = vec![
+            crate::runtime::literal::tensor_to_literal(&pad(p))?,
+            crate::runtime::literal::tensor_to_literal(&pad(g))?,
+            crate::runtime::literal::tensor_to_literal(&pad(m))?,
+            crate::runtime::literal::tensor_to_literal(&pad(v))?,
+            crate::runtime::literal::tensor_to_literal(&scalars)?,
+        ];
+        let parts = self.rt.run_tuple(&self.exe, &args)?;
+        anyhow::ensure!(parts.len() == 3, "sparse_adam kernel returned {}", parts.len());
+        let pn = crate::runtime::literal::literal_to_vec_f32(&parts[0])?;
+        let mn = crate::runtime::literal::literal_to_vec_f32(&parts[1])?;
+        let vn = crate::runtime::literal::literal_to_vec_f32(&parts[2])?;
+        p.copy_from_slice(&pn[..k]);
+        m.copy_from_slice(&mn[..k]);
+        v.copy_from_slice(&vn[..k]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn only_masked_entries_move() {
+        let mut w = vec![1.0f32; 10];
+        let g = vec![0.5f32; 10];
+        let mut opt = SparseAdam::new(vec![2, 5, 7], AdamCfg::default());
+        opt.step(&mut w, &g, 0.1);
+        for (i, &wi) in w.iter().enumerate() {
+            if [2, 5, 7].contains(&(i as u32)) {
+                assert!((wi - 0.9).abs() < 1e-5, "masked {i} should step");
+            } else {
+                assert_eq!(wi, 1.0, "unmasked {i} must not move");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dense_adam_on_mask() {
+        // sparse Adam over the full index set == dense Adam
+        let n = 16;
+        let mut w1 = vec![0.3f32; n];
+        let mut w2 = w1.clone();
+        let mut sp = SparseAdam::new((0..n as u32).collect(), AdamCfg::default());
+        let mut dn = super::super::DenseAdam::new(n, AdamCfg::default());
+        let mut rng = crate::util::rng::Rng::new(4);
+        for _ in 0..20 {
+            let g = rng.normal_vec(n, 1.0);
+            sp.step(&mut w1, &g, 0.01);
+            dn.step(&mut w2, &g, 0.01);
+        }
+        for (a, b) in w1.iter().zip(&w2) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn refresh_preserves_surviving_state() {
+        let mut opt = SparseAdam::new(vec![1, 2, 3], AdamCfg::default());
+        let mut w = vec![0.0f32; 8];
+        opt.step(&mut w, &[1.0; 8], 0.1);
+        let m_at_2 = opt.m[opt.idx.iter().position(|&i| i == 2).unwrap()];
+        assert!(m_at_2 != 0.0);
+        opt.refresh(vec![2, 6]);
+        assert_eq!(opt.idx, vec![2, 6]);
+        let j2 = opt.idx.iter().position(|&i| i == 2).unwrap();
+        let j6 = opt.idx.iter().position(|&i| i == 6).unwrap();
+        assert_eq!(opt.m[j2], m_at_2, "surviving entry keeps momentum");
+        assert_eq!(opt.m[j6], 0.0, "fresh entry starts cold");
+    }
+
+    #[test]
+    fn overlap_metric() {
+        let opt = SparseAdam::new(vec![1, 2, 3, 4], AdamCfg::default());
+        assert!((opt.overlap(&[3, 4, 5, 6]) - 0.5).abs() < 1e-12);
+        assert_eq!(opt.overlap(&[]), 0.0);
+    }
+
+    #[test]
+    fn state_bytes_scale_with_k() {
+        let opt = SparseAdam::new((0..100).collect(), AdamCfg::default());
+        assert_eq!(opt.state_bytes(), 100 * 12);
+    }
+}

@@ -1,0 +1,330 @@
+//! XlaBuilder-built linear-algebra toolkit (rust-side, python-free).
+//!
+//! The mask engine needs truncated SVDs and matmuls for *arbitrary* shapes
+//! and ranks (the paper sweeps LRA rank 8..256 — Fig. 16), which fixed AOT
+//! artifacts cannot cover. Graphs here are constructed in-process with
+//! `XlaBuilder`, compiled once per shape and cached; numerically they
+//! mirror `python/compile/kernels/subspace_iter.py` exactly (same
+//! Newton–Schulz orthonormalization, same power-iteration count), and
+//! rust/tests cross-check the two paths on the canonical artifact shapes.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::literal::{literal_to_tensor, tensor_to_literal};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+const NEWTON_ITERS: usize = 24;
+// trace-relative ridge: keeps Newton-Schulz inside its convergence domain
+// even when Y is rank-deficient (true rank < rank + oversample).
+const EPS_REL: f32 = 1e-6;
+
+pub struct Linalg {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Linalg {
+    pub fn new(client: &xla::PjRtClient) -> Linalg {
+        Linalg {
+            client: client.clone(),
+            cache: RefCell::new(HashMap::new()),
+        }
+    }
+
+    fn cached(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<xla::XlaComputation>,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(key) {
+            return Ok(e.clone());
+        }
+        let comp = build()?;
+        let exe = Rc::new(self.client.compile(&comp).with_context(|| format!("compiling {key}"))?);
+        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// a (m,k) @ b (k,n), f32, via XLA (Eigen-backed on CPU).
+    pub fn matmul(&self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        let (m, k) = a.dims2();
+        let (k2, n) = b.dims2();
+        anyhow::ensure!(k == k2, "matmul {:?} x {:?}", a.shape, b.shape);
+        let exe = self.cached(&format!("mm_{m}_{k}_{n}"), || {
+            let bld = xla::XlaBuilder::new("mm");
+            let x = bld.parameter(0, xla::ElementType::F32, &[m as i64, k as i64], "a")?;
+            let y = bld.parameter(1, xla::ElementType::F32, &[k as i64, n as i64], "b")?;
+            Ok(x.dot_general(&y, &[1], &[0], &[], &[])?.build()?)
+        })?;
+        let out = exe.execute::<xla::Literal>(&[tensor_to_literal(a)?, tensor_to_literal(b)?])?;
+        literal_to_tensor(&out[0][0].to_literal_sync()?)
+    }
+
+    /// a^T (k,m) @ b (k,n) without materializing the transpose.
+    pub fn matmul_tn(&self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        let (k, m) = a.dims2();
+        let (k2, n) = b.dims2();
+        anyhow::ensure!(k == k2, "matmul_tn {:?} x {:?}", a.shape, b.shape);
+        let exe = self.cached(&format!("mmtn_{k}_{m}_{n}"), || {
+            let bld = xla::XlaBuilder::new("mmtn");
+            let x = bld.parameter(0, xla::ElementType::F32, &[k as i64, m as i64], "a")?;
+            let y = bld.parameter(1, xla::ElementType::F32, &[k as i64, n as i64], "b")?;
+            Ok(x.dot_general(&y, &[0], &[0], &[], &[])?.build()?)
+        })?;
+        let out = exe.execute::<xla::Literal>(&[tensor_to_literal(a)?, tensor_to_literal(b)?])?;
+        literal_to_tensor(&out[0][0].to_literal_sync()?)
+    }
+
+    /// a (m,k) @ b^T (n,k) without materializing the transpose.
+    pub fn matmul_nt(&self, a: &Tensor, b: &Tensor) -> Result<Tensor> {
+        let (m, k) = a.dims2();
+        let (n, k2) = b.dims2();
+        anyhow::ensure!(k == k2, "matmul_nt {:?} x {:?}", a.shape, b.shape);
+        let exe = self.cached(&format!("mmnt_{m}_{k}_{n}"), || {
+            let bld = xla::XlaBuilder::new("mmnt");
+            let x = bld.parameter(0, xla::ElementType::F32, &[m as i64, k as i64], "a")?;
+            let y = bld.parameter(1, xla::ElementType::F32, &[n as i64, k as i64], "b")?;
+            Ok(x.dot_general(&y, &[1], &[1], &[], &[])?.build()?)
+        })?;
+        let out = exe.execute::<xla::Literal>(&[tensor_to_literal(a)?, tensor_to_literal(b)?])?;
+        literal_to_tensor(&out[0][0].to_literal_sync()?)
+    }
+
+    /// Truncated SVD factors by subspace iteration: w ~= q @ b with
+    /// q (m, rp) orthonormal, b (rp, n). `rp` = rank + oversample.
+    /// One fused XLA graph per (m, n, rp, power_iters), cached.
+    pub fn svd_lowrank(
+        &self,
+        w: &Tensor,
+        rp: usize,
+        power_iters: usize,
+        rng: &mut Rng,
+    ) -> Result<(Tensor, Tensor)> {
+        let (m, n) = w.dims2();
+        let rp = rp.min(m).min(n);
+        let g0 = Tensor::randn(&[n, rp], 1.0, rng);
+        self.svd_lowrank_with(w, &g0, power_iters)
+    }
+
+    /// Same as `svd_lowrank` but with a caller-supplied test matrix
+    /// (deterministic cross-checks against the AOT kernel artifacts).
+    pub fn svd_lowrank_with(
+        &self,
+        w: &Tensor,
+        g0: &Tensor,
+        power_iters: usize,
+    ) -> Result<(Tensor, Tensor)> {
+        let (m, n) = w.dims2();
+        let (_, rp) = g0.dims2();
+        let exe = self.cached(&format!("svd_{m}x{n}_r{rp}_q{power_iters}"), || {
+            build_svd_graph(m, n, rp, power_iters)
+        })?;
+        let out = exe.execute::<xla::Literal>(&[tensor_to_literal(w)?, tensor_to_literal(g0)?])?;
+        let mut lit = out[0][0].to_literal_sync()?;
+        let parts = lit.decompose_tuple()?;
+        anyhow::ensure!(parts.len() == 2, "svd graph returned {} outputs", parts.len());
+        Ok((literal_to_tensor(&parts[0])?, literal_to_tensor(&parts[1])?))
+    }
+
+    /// Rank-r approximation W' = Q B (materialized, for host top-k).
+    pub fn lowrank_approx(
+        &self,
+        w: &Tensor,
+        rank: usize,
+        power_iters: usize,
+        oversample: usize,
+        rng: &mut Rng,
+    ) -> Result<Tensor> {
+        let (m, n) = w.dims2();
+        let rp = (rank + oversample).min(m).min(n);
+        let (q, b) = self.svd_lowrank(w, rp, power_iters, rng)?;
+        if rp > rank {
+            // drop the oversampled tail: rotate so columns of Q align with
+            // singular directions, then truncate to `rank`.
+            let (qr, br) = truncate_factors(&q, &b, rank);
+            self.matmul(&qr, &br)
+        } else {
+            self.matmul(&q, &b)
+        }
+    }
+}
+
+/// Rotate (q, b) into singular order via exact SVD of the small factor b
+/// (rp x n, host Jacobi) and truncate to `rank` columns.
+pub fn truncate_factors(q: &Tensor, b: &Tensor, rank: usize) -> (Tensor, Tensor) {
+    let (m, rp) = q.dims2();
+    let (rp2, n) = b.dims2();
+    assert_eq!(rp, rp2);
+    let rank = rank.min(rp);
+    let (ub, sb, vtb) = crate::util::eigh::svd(&b.data, rp, n);
+    // q' = q @ ub[:, :rank] (m, rank); b' = diag(s) vtb [:rank] (rank, n)
+    let mut qr = vec![0.0f32; m * rank];
+    for i in 0..m {
+        for c in 0..rank {
+            let mut acc = 0.0f64;
+            for l in 0..rp {
+                acc += q.data[i * rp + l] as f64 * ub[l * rp + c] as f64;
+            }
+            qr[i * rank + c] = acc as f32;
+        }
+    }
+    let mut br = vec![0.0f32; rank * n];
+    for c in 0..rank {
+        for j in 0..n {
+            br[c * n + j] = sb[c] * vtb[c * n + j];
+        }
+    }
+    (
+        Tensor::from_vec(&[m, rank], qr),
+        Tensor::from_vec(&[rank, n], br),
+    )
+}
+
+/// Build the fused subspace-iteration graph (mirrors subspace_iter.py).
+fn build_svd_graph(m: usize, n: usize, rp: usize, power_iters: usize) -> Result<xla::XlaComputation> {
+    let bld = xla::XlaBuilder::new("svd_lowrank");
+    let w = bld.parameter(0, xla::ElementType::F32, &[m as i64, n as i64], "w")?;
+    let g0 = bld.parameter(1, xla::ElementType::F32, &[n as i64, rp as i64], "g0")?;
+
+    let orth1 = |y: &xla::XlaOp| -> Result<xla::XlaOp> {
+        // gram = y^T y (rp x rp)
+        let gram = y.dot_general(y, &[0], &[0], &[], &[])?;
+        let inv = invsqrt_psd(&bld, &gram, rp)?;
+        Ok(y.dot_general(&inv, &[1], &[0], &[], &[])?)
+    };
+    // two passes: the second repairs residual non-orthogonality left by the
+    // ridge when Y is rank-deficient (standard randomized-SVD trick).
+    let orth = |y: &xla::XlaOp| -> Result<xla::XlaOp> { orth1(&orth1(y)?) };
+
+    // range finder
+    let y = w.dot_general(&g0, &[1], &[0], &[], &[])?;
+    let mut q = orth(&y)?;
+    for _ in 0..power_iters {
+        let z = orth(&w.dot_general(&q, &[0], &[0], &[], &[])?)?; // (n, rp)
+        q = orth(&w.dot_general(&z, &[1], &[0], &[], &[])?)?; // (m, rp)
+    }
+    let b = q.dot_general(&w, &[0], &[0], &[], &[])?; // (rp, n)
+    Ok(bld.tuple(&[q, b])?.build()?)
+}
+
+/// (A + eps I)^{-1/2} for a small PSD matrix, coupled Newton–Schulz,
+/// unrolled (mirrors subspace_iter.invsqrt_psd).
+fn invsqrt_psd(bld: &xla::XlaBuilder, a: &xla::XlaOp, r: usize) -> Result<xla::XlaOp> {
+    let r64 = r as i64;
+    let rows = bld.iota(xla::ElementType::S32, &[r64, r64], 0)?;
+    let cols = bld.iota(xla::ElementType::S32, &[r64, r64], 1)?;
+    let eye = rows.eq(&cols)?.convert(xla::PrimitiveType::F32)?;
+    // trace-relative ridge (plus a floor for the all-zero corner case)
+    let tr = (a * &eye)?.reduce_sum(&[0, 1], false)?;
+    let eps = ((&tr * bld.c0(EPS_REL)?)? + bld.c0(1e-30f32)?)?;
+    let a = (a + (&eye * eps)?)?;
+    // c = trace(A)  (scalar); ||A||_2 <= tr(A) for PSD
+    let c = (&a * &eye)?.reduce_sum(&[0, 1], false)?;
+    let mut y = (&a / &c)?;
+    let mut z = eye.clone();
+    let three = bld.c0(3.0f32)?;
+    let half = bld.c0(0.5f32)?;
+    for _ in 0..NEWTON_ITERS {
+        // t = 0.5 * (3 I - z y)
+        let zy = z.dot_general(&y, &[1], &[0], &[], &[])?;
+        let t = (((&eye * &three)? - zy)? * &half)?;
+        y = y.dot_general(&t, &[1], &[0], &[], &[])?;
+        z = t.dot_general(&z, &[1], &[0], &[], &[])?;
+    }
+    Ok((z / c.sqrt()?)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn linalg() -> (Linalg, xla::PjRtClient) {
+        let client = xla::PjRtClient::cpu().unwrap();
+        (Linalg::new(&client), client)
+    }
+
+    #[test]
+    fn matmul_matches_host() {
+        let (la, _c) = linalg();
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[17, 23], 1.0, &mut rng);
+        let b = Tensor::randn(&[23, 9], 1.0, &mut rng);
+        let xla_c = la.matmul(&a, &b).unwrap();
+        let host_c = a.matmul(&b);
+        let diff = crate::util::stats::frobenius_diff(&xla_c.data, &host_c.data);
+        assert!(diff < 1e-3, "diff={diff}");
+        // transposed variants
+        let at = a.transpose();
+        let tn = la.matmul_tn(&at, &b).unwrap();
+        assert!(crate::util::stats::frobenius_diff(&tn.data, &host_c.data) < 1e-3);
+        let bt = b.transpose();
+        let nt = la.matmul_nt(&a, &bt).unwrap();
+        assert!(crate::util::stats::frobenius_diff(&nt.data, &host_c.data) < 1e-3);
+    }
+
+    #[test]
+    fn svd_recovers_lowrank_matrix() {
+        let (la, _c) = linalg();
+        let mut rng = Rng::new(2);
+        let (m, n, r) = (48, 36, 4);
+        let u = Tensor::randn(&[m, r], 1.0, &mut rng);
+        let v = Tensor::randn(&[r, n], 1.0, &mut rng);
+        let mut w = u.matmul(&v);
+        // small full-rank tail: exact rank deficiency would make rp
+        // orthonormal columns impossible (rank(Y) = 4 < rp)
+        w.add_scaled(&Tensor::randn(&[m, n], 1.0, &mut rng), 1e-3);
+        let (q, b) = la.svd_lowrank(&w, r + 4, 2, &mut rng).unwrap();
+        let rec = la.matmul(&q, &b).unwrap();
+        let rel = crate::util::stats::frobenius_diff(&rec.data, &w.data) / w.frobenius();
+        assert!(rel < 1e-2, "rel={rel}");
+        // q columns orthonormal
+        let qtq = la.matmul_tn(&q, &q).unwrap();
+        for i in 0..r + 4 {
+            for j in 0..r + 4 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (qtq.at2(i, j) - expect).abs() < 1e-2,
+                    "qtq[{i},{j}]={}",
+                    qtq.at2(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lowrank_approx_close_to_exact() {
+        let (la, _c) = linalg();
+        let mut rng = Rng::new(3);
+        let (m, n, rank) = (40, 32, 6);
+        let w = Tensor::randn(&[m, n], 1.0, &mut rng);
+        let approx = la.lowrank_approx(&w, rank, 3, 8, &mut rng).unwrap();
+        let exact = crate::util::eigh::lowrank_approx(&w.data, m, n, rank);
+        // randomized vs exact: compare approximation errors, not entries
+        let err_rand = crate::util::stats::frobenius_diff(&approx.data, &w.data);
+        let err_exact = crate::util::stats::frobenius_diff(&exact, &w.data);
+        assert!(
+            err_rand <= err_exact * 1.05 + 1e-4,
+            "rand {err_rand} vs exact {err_exact}"
+        );
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let (la, _c) = linalg();
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&[8, 8], 1.0, &mut rng);
+        let _ = la.matmul(&a, &a).unwrap();
+        let n1 = la.cache_len();
+        let _ = la.matmul(&a, &a).unwrap();
+        assert_eq!(la.cache_len(), n1);
+    }
+}

@@ -1,0 +1,50 @@
+//! Host tensor <-> xla::Literal conversions.
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// f32 tensor -> literal with the tensor's shape.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    if t.shape.len() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// i32 matrix (e.g. token ids) -> literal.
+pub fn i32_matrix_to_literal(rows: usize, cols: usize, data: &[i32]) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "i32 literal shape mismatch");
+    let lit = xla::Literal::vec1(data);
+    Ok(lit.reshape(&[rows as i64, cols as i64])?)
+}
+
+pub fn scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// literal (any rank, f32) -> host tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::from_vec(&dims, data))
+}
+
+pub fn literal_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+pub fn literal_to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

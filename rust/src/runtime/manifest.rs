@@ -1,0 +1,209 @@
+//! artifacts/manifest.json — the python<->rust interchange contract.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Layer-type tag ("embed", "attn_norm", "wq", ..., "final_norm").
+    pub fn kind(&self) -> &str {
+        match self.name.rsplit_once('.') {
+            Some((_, k)) => k,
+            None => &self.name,
+        }
+    }
+
+    /// Layer index, if per-layer ("l3.wq" -> 3).
+    pub fn layer(&self) -> Option<usize> {
+        let (pre, _) = self.name.split_once('.')?;
+        pre.strip_prefix('l')?.parse().ok()
+    }
+
+    /// 2-D projection matrices are the trainable set for PEFT methods.
+    pub fn is_matrix(&self) -> bool {
+        self.shape.len() == 2 && self.kind().starts_with('w')
+    }
+
+    /// True for MLP-module matrices (LIFT_MLP, Fig. 11 component study).
+    pub fn is_mlp(&self) -> bool {
+        matches!(self.kind(), "wgate" | "wup" | "wdown")
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PresetInfo {
+    pub name: String,
+    pub d: usize,
+    pub layers: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub heads: usize,
+    pub params: Vec<ParamInfo>,
+    pub executables: BTreeMap<String, String>,
+}
+
+impl PresetInfo {
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    pub fn param_index(&self, name: &str) -> Option<usize> {
+        self.params.iter().position(|p| p.name == name)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub presets: BTreeMap<String, PresetInfo>,
+    pub kernels: BTreeMap<String, String>,
+    pub adam_buckets: Vec<usize>,
+    pub oversample: usize,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut presets = BTreeMap::new();
+        for (name, pj) in j.get("presets").and_then(|p| p.as_obj()).context("presets")? {
+            let get = |k: &str| -> Result<usize> {
+                pj.get(k)
+                    .and_then(|x| x.as_usize())
+                    .with_context(|| format!("preset {name}: field {k}"))
+            };
+            let mut params = Vec::new();
+            for pe in pj.get("params").and_then(|x| x.as_arr()).context("params")? {
+                let pname = pe.get("name").and_then(|x| x.as_str()).context("param name")?;
+                let shape: Vec<usize> = pe
+                    .get("shape")
+                    .and_then(|x| x.as_arr())
+                    .context("param shape")?
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect();
+                params.push(ParamInfo {
+                    name: pname.to_string(),
+                    shape,
+                });
+            }
+            let mut executables = BTreeMap::new();
+            if let Some(ex) = pj.get("executables").and_then(|x| x.as_obj()) {
+                for (k, v) in ex {
+                    if let Some(s) = v.as_str() {
+                        executables.insert(k.clone(), s.to_string());
+                    }
+                }
+            }
+            presets.insert(
+                name.clone(),
+                PresetInfo {
+                    name: name.clone(),
+                    d: get("d")?,
+                    layers: get("layers")?,
+                    ffn: get("ffn")?,
+                    vocab: get("vocab")?,
+                    seq: get("seq")?,
+                    batch: get("batch")?,
+                    heads: get("heads")?,
+                    params,
+                    executables,
+                },
+            );
+        }
+        let mut kernels = BTreeMap::new();
+        if let Some(ks) = j.get("kernels").and_then(|x| x.as_obj()) {
+            for (k, v) in ks {
+                if let Some(s) = v.as_str() {
+                    kernels.insert(k.clone(), s.to_string());
+                }
+            }
+        }
+        let adam_buckets = j
+            .get("adam_buckets")
+            .and_then(|x| x.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default();
+        let oversample = j.get("oversample").and_then(|x| x.as_usize()).unwrap_or(8);
+        Ok(Manifest {
+            presets,
+            kernels,
+            adam_buckets,
+            oversample,
+        })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetInfo> {
+        self.presets
+            .get(name)
+            .with_context(|| format!("preset '{name}' not in manifest (have: {:?}) — for 'e2e' run `make artifacts-e2e`", self.presets.keys().collect::<Vec<_>>()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "adam_buckets": [4096],
+      "oversample": 8,
+      "kernels": {"svd_128x128_r40": "svd_128x128_r40.hlo.txt"},
+      "presets": {"tiny": {
+        "d": 128, "layers": 2, "ffn": 352, "vocab": 512, "seq": 64,
+        "batch": 16, "heads": 2,
+        "params": [
+          {"name": "embed", "shape": [512, 128]},
+          {"name": "l0.attn_norm", "shape": [128]},
+          {"name": "l0.wq", "shape": [128, 128]},
+          {"name": "l1.wdown", "shape": [352, 128]},
+          {"name": "final_norm", "shape": [128]}
+        ],
+        "executables": {"train_step": "tiny.train_step.hlo.txt"}
+      }}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let p = m.preset("tiny").unwrap();
+        assert_eq!(p.d, 128);
+        assert_eq!(p.params.len(), 5);
+        assert_eq!(p.params[0].numel(), 512 * 128);
+        assert_eq!(p.executables["train_step"], "tiny.train_step.hlo.txt");
+        assert!(m.preset("nope").is_err());
+    }
+
+    #[test]
+    fn param_kinds() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let p = m.preset("tiny").unwrap();
+        assert_eq!(p.params[0].kind(), "embed");
+        assert!(!p.params[0].is_matrix());
+        assert_eq!(p.params[2].kind(), "wq");
+        assert!(p.params[2].is_matrix());
+        assert!(!p.params[2].is_mlp());
+        assert_eq!(p.params[3].layer(), Some(1));
+        assert!(p.params[3].is_mlp());
+        assert_eq!(p.params[1].kind(), "attn_norm");
+        assert!(!p.params[1].is_matrix());
+    }
+}

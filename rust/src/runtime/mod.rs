@@ -1,0 +1,107 @@
+//! PJRT runtime: load AOT artifacts, compile rust-built graphs, execute.
+//!
+//! The pattern follows /opt/xla-example/load_hlo: HLO *text* in,
+//! `HloModuleProto::from_text_file` -> `XlaComputation` -> `client.compile`
+//! -> `execute`. Python is never on this path — artifacts were produced
+//! once by `make artifacts`; everything else (the linalg toolkit) is built
+//! in-process with `XlaBuilder`.
+
+pub mod linalg;
+pub mod literal;
+pub mod manifest;
+pub mod model_exec;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+pub use linalg::Linalg;
+pub use manifest::Manifest;
+
+/// Shared PJRT CPU client + executable caches.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    /// artifact-name -> compiled executable
+    artifact_cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        // silence the TfrtCpuClient banner unless TF logging is configured
+        if std::env::var("TF_CPP_MIN_LOG_LEVEL").is_err() {
+            std::env::set_var("TF_CPP_MIN_LOG_LEVEL", "1");
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json")).with_context(
+            || format!("loading manifest from {artifacts_dir:?} — run `make artifacts`"),
+        )?;
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            artifact_cache: RefCell::new(HashMap::new()),
+            manifest,
+        })
+    }
+
+    /// Locate the artifacts dir: $LIFT_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("LIFT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn from_default() -> Result<Runtime> {
+        Runtime::new(&Self::default_dir())
+    }
+
+    /// Load + compile an artifact HLO file (cached).
+    pub fn load_artifact(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.artifact_cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifacts_dir.join(file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {file}"))?,
+        );
+        log::debug!("compiled artifact {file} in {:.2}s", t0.elapsed().as_secs_f64());
+        self.artifact_cache
+            .borrow_mut()
+            .insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an executable whose root is a tuple; returns the flattened
+    /// tuple elements as host literals.
+    pub fn run_tuple(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let out = exe.execute::<xla::Literal>(args)?;
+        let mut lit = out[0][0].to_literal_sync()?;
+        Ok(lit.decompose_tuple()?)
+    }
+
+    /// Execute with a single (non-tuple) output.
+    pub fn run_one(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let out = exe.execute::<xla::Literal>(args)?;
+        Ok(out[0][0].to_literal_sync()?)
+    }
+}

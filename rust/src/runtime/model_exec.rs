@@ -1,0 +1,164 @@
+//! Preset-bound model executables: train_step / eval_step / logits_probe.
+//!
+//! Owns the compiled artifacts for one preset and the literal marshalling
+//! for each call. Parameter order is exactly `manifest.presets[p].params`.
+
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::literal::*;
+use super::manifest::PresetInfo;
+use super::Runtime;
+use crate::tensor::Tensor;
+
+/// One training/eval batch in host form.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,    // (B*S)
+    pub targets: Vec<i32>,   // (B*S) next-token ids
+    pub loss_mask: Vec<f32>, // (B*S) 1.0 where the loss counts
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    pub fn empty(batch: usize, seq: usize) -> Batch {
+        Batch {
+            tokens: vec![0; batch * seq],
+            targets: vec![0; batch * seq],
+            loss_mask: vec![0.0; batch * seq],
+            batch,
+            seq,
+        }
+    }
+}
+
+pub struct ModelExec {
+    pub preset: PresetInfo,
+    train: Rc<xla::PjRtLoadedExecutable>,
+    eval: Rc<xla::PjRtLoadedExecutable>,
+    probe: std::cell::RefCell<Option<Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ModelExec {
+    pub fn load(rt: &Runtime, preset_name: &str) -> Result<ModelExec> {
+        let preset = rt.manifest.preset(preset_name)?.clone();
+        let train = rt.load_artifact(
+            preset
+                .executables
+                .get("train_step")
+                .context("manifest missing train_step")?,
+        )?;
+        let eval = rt.load_artifact(
+            preset
+                .executables
+                .get("eval_step")
+                .context("manifest missing eval_step")?,
+        )?;
+        Ok(ModelExec {
+            preset,
+            train,
+            eval,
+            probe: std::cell::RefCell::new(None),
+        })
+    }
+
+    fn check_params(&self, params: &[Tensor]) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == self.preset.params.len(),
+            "param count {} != manifest {}",
+            params.len(),
+            self.preset.params.len()
+        );
+        for (t, info) in params.iter().zip(&self.preset.params) {
+            anyhow::ensure!(
+                t.shape == info.shape,
+                "param {} shape {:?} != manifest {:?}",
+                info.name,
+                t.shape,
+                info.shape
+            );
+        }
+        Ok(())
+    }
+
+    fn marshal(&self, params: &[Tensor], batch: &Batch) -> Result<Vec<xla::Literal>> {
+        self.check_params(params)?;
+        anyhow::ensure!(
+            batch.batch == self.preset.batch && batch.seq == self.preset.seq,
+            "batch shape ({}, {}) != preset ({}, {})",
+            batch.batch,
+            batch.seq,
+            self.preset.batch,
+            self.preset.seq
+        );
+        let mut args = Vec::with_capacity(params.len() + 3);
+        for t in params {
+            args.push(tensor_to_literal(t)?);
+        }
+        args.push(i32_matrix_to_literal(batch.batch, batch.seq, &batch.tokens)?);
+        args.push(i32_matrix_to_literal(batch.batch, batch.seq, &batch.targets)?);
+        let mask = Tensor::from_vec(&[batch.batch, batch.seq], batch.loss_mask.clone());
+        args.push(tensor_to_literal(&mask)?);
+        Ok(args)
+    }
+
+    /// Forward+backward: returns (loss, grads) with grads in param order.
+    pub fn train_step(&self, params: &[Tensor], batch: &Batch) -> Result<(f32, Vec<Tensor>)> {
+        let args = self.marshal(params, batch)?;
+        let rt_out = self.train.execute::<xla::Literal>(&args)?;
+        let mut lit = rt_out[0][0].to_literal_sync()?;
+        let parts = lit.decompose_tuple()?;
+        anyhow::ensure!(
+            parts.len() == 1 + params.len(),
+            "train_step returned {} outputs, expected {}",
+            parts.len(),
+            1 + params.len()
+        );
+        let loss = literal_scalar_f32(&parts[0])?;
+        let grads = parts[1..]
+            .iter()
+            .map(literal_to_tensor)
+            .collect::<Result<Vec<_>>>()?;
+        Ok((loss, grads))
+    }
+
+    /// Eval: returns (loss, greedy predictions (B*S)).
+    pub fn eval_step(&self, params: &[Tensor], batch: &Batch) -> Result<(f32, Vec<i32>)> {
+        let args = self.marshal(params, batch)?;
+        let rt_out = self.eval.execute::<xla::Literal>(&args)?;
+        let mut lit = rt_out[0][0].to_literal_sync()?;
+        let parts = lit.decompose_tuple()?;
+        anyhow::ensure!(parts.len() == 2, "eval_step returned {} outputs", parts.len());
+        let loss = literal_scalar_f32(&parts[0])?;
+        let preds = literal_to_vec_i32(&parts[1])?;
+        Ok((loss, preds))
+    }
+
+    /// Next-token distribution at `pos` for a single prompt row (Fig 2b).
+    pub fn probe(&self, rt: &Runtime, params: &[Tensor], tokens: &[i32], pos: usize) -> Result<Vec<f32>> {
+        if self.probe.borrow().is_none() {
+            let exe = rt.load_artifact(
+                self.preset
+                    .executables
+                    .get("logits_probe")
+                    .context("manifest missing logits_probe")?,
+            )?;
+            *self.probe.borrow_mut() = Some(exe);
+        }
+        self.check_params(params)?;
+        anyhow::ensure!(tokens.len() == self.preset.seq, "probe prompt must be seq-padded");
+        let mut args = Vec::with_capacity(params.len() + 2);
+        for t in params {
+            args.push(tensor_to_literal(t)?);
+        }
+        args.push(i32_matrix_to_literal(1, self.preset.seq, tokens)?);
+        args.push(scalar_i32(pos as i32));
+        let exe = self.probe.borrow().as_ref().unwrap().clone();
+        let rt_out = exe.execute::<xla::Literal>(&args)?;
+        let mut lit = rt_out[0][0].to_literal_sync()?;
+        let parts = lit.decompose_tuple()?;
+        literal_to_vec_f32(&parts[0])
+    }
+}

@@ -1,0 +1,226 @@
+//! Dense host tensor (f32, row-major) — the coordinator's working type.
+//!
+//! Heavy compute goes through XLA executables (runtime/); these host ops
+//! exist for glue, masking, optimizer state manipulation, analyses on
+//! small matrices, and as independent oracles in tests.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn randn(shape: &[usize], sigma: f32, rng: &mut Rng) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: rng.normal_vec(n, sigma),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// (rows, cols) of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.shape.len(), 2, "expected 2-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        let (_, n) = self.dims2();
+        self.data[i * n + j]
+    }
+
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        let (_, n) = self.dims2();
+        self.data[i * n + j] = v;
+    }
+
+    /// Host matmul (naive ikj) — for small matrices and test oracles only;
+    /// hot-path matmuls go through runtime::linalg.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        let (m, k) = self.dims2();
+        let (k2, n) = other.dims2();
+        assert_eq!(k, k2, "matmul {:?} x {:?}", self.shape, other.shape);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for l in 0..k {
+                let a = self.data[i * k + l];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[l * n..(l + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        let (m, n) = self.dims2();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// self += alpha * other
+    pub fn add_scaled(&mut self, other: &Tensor, alpha: f32) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        crate::util::stats::l2_norm(&self.data)
+    }
+
+    /// Largest singular value via power iteration on W^T W (host).
+    pub fn spectral_norm(&self, iters: usize, rng: &mut Rng) -> f32 {
+        let (m, n) = self.dims2();
+        let mut v = rng.normal_vec(n, 1.0);
+        let mut tmp = vec![0.0f32; m];
+        let mut sigma = 0.0f64;
+        for _ in 0..iters {
+            // tmp = W v
+            for i in 0..m {
+                let row = &self.data[i * n..(i + 1) * n];
+                tmp[i] = row.iter().zip(&v).map(|(a, b)| a * b).sum();
+            }
+            // v = W^T tmp
+            for x in v.iter_mut() {
+                *x = 0.0;
+            }
+            for i in 0..m {
+                let t = tmp[i];
+                if t == 0.0 {
+                    continue;
+                }
+                let row = &self.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    v[j] += row[j] * t;
+                }
+            }
+            let norm = crate::util::stats::l2_norm(&v);
+            sigma = norm.sqrt();
+            if norm > 0.0 {
+                let inv = (1.0 / norm) as f32;
+                for x in v.iter_mut() {
+                    *x *= inv;
+                }
+            }
+        }
+        sigma as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let eye = Tensor::from_vec(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(a.matmul(&eye), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(&[5, 7], 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn spectral_norm_of_diag() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::from_vec(&[3, 3], vec![5.0, 0., 0., 0., 2.0, 0., 0., 0., 1.0]);
+        let s = a.spectral_norm(50, &mut rng);
+        assert!((s - 5.0).abs() < 1e-3, "s={s}");
+    }
+
+    #[test]
+    fn add_scaled_and_sub() {
+        let mut a = Tensor::full(&[4], 1.0);
+        let b = Tensor::full(&[4], 2.0);
+        a.add_scaled(&b, 0.5);
+        assert_eq!(a.data, vec![2.0; 4]);
+        assert_eq!(a.sub(&b).data, vec![0.0; 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[2, 3]);
+        let _ = a.matmul(&b);
+    }
+}

@@ -1,0 +1,198 @@
+//! Evaluation harness: task accuracy (teacher-forced exact match),
+//! held-out perplexity, fact-recall probe, and an autoregressive sampler
+//! for pass@k (code-gen, Table 12).
+
+use anyhow::Result;
+
+use crate::data::tasks::{samples_to_batches, Sample};
+use crate::data::CorpusGen;
+use crate::runtime::model_exec::ModelExec;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Accuracy over samples: a sample counts iff every answer position is
+/// greedy-predicted correctly.
+pub fn accuracy(exec: &ModelExec, params: &[Tensor], samples: &[Sample]) -> Result<f64> {
+    if samples.is_empty() {
+        return Ok(0.0);
+    }
+    let (b, s) = (exec.preset.batch, exec.preset.seq);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (batch, used) in samples_to_batches(samples, b, s) {
+        let (_, preds) = exec.eval_step(params, &batch)?;
+        for row in 0..used {
+            let mut ok = true;
+            let mut any = false;
+            for i in 0..s {
+                if batch.loss_mask[row * s + i] == 1.0 {
+                    any = true;
+                    if preds[row * s + i] != batch.targets[row * s + i] {
+                        ok = false;
+                        break;
+                    }
+                }
+            }
+            if any {
+                total += 1;
+                if ok {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    Ok(100.0 * correct as f64 / total.max(1) as f64)
+}
+
+/// Held-out corpus perplexity (the Wikitext-ppl analog, Fig. 2a).
+pub fn perplexity(
+    exec: &ModelExec,
+    params: &[Tensor],
+    corpus: &CorpusGen,
+    n_batches: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    for batch in corpus.eval_batches(n_batches, seed) {
+        let (loss, _) = exec.eval_step(params, &batch)?;
+        total += loss as f64;
+        n += 1;
+    }
+    Ok((total / n.max(1) as f64).exp())
+}
+
+/// Fact-recall probe (Fig. 2b): P(correct target | "e r") for a set of
+/// frequent KG facts. Returns the mean probability of the ground truth.
+pub fn fact_recall(
+    rt: &Runtime,
+    exec: &ModelExec,
+    params: &[Tensor],
+    corpus: &CorpusGen,
+    n_facts: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut rng = Rng::new(seed ^ 0xfac7);
+    let mut total = 0.0f64;
+    let s = exec.preset.seq;
+    for _ in 0..n_facts {
+        let (e, r, t) = corpus.kg.sample_fact_tier(&mut rng, true);
+        let mut toks = vec![crate::data::vocab::PAD; s];
+        toks[0] = crate::data::vocab::BOS;
+        toks[1] = corpus.vocab.entity(e);
+        toks[2] = corpus.vocab.relation(r);
+        let probs = exec.probe(rt, params, &toks, 2)?;
+        total += probs[corpus.vocab.entity(t) as usize] as f64;
+    }
+    Ok(total / n_facts.max(1) as f64)
+}
+
+/// Autoregressive sampling of `len` answer tokens after a prompt, using
+/// the probe executable per position (temperature > 0 => stochastic).
+pub fn sample_answer(
+    rt: &Runtime,
+    exec: &ModelExec,
+    params: &[Tensor],
+    prompt: &[i32],
+    len: usize,
+    temperature: f32,
+    rng: &mut Rng,
+) -> Result<Vec<i32>> {
+    let s = exec.preset.seq;
+    anyhow::ensure!(prompt.len() + len <= s, "prompt too long for seq");
+    let mut toks = vec![crate::data::vocab::PAD; s];
+    toks[..prompt.len()].copy_from_slice(prompt);
+    let mut out = Vec::with_capacity(len);
+    for j in 0..len {
+        let pos = prompt.len() + j - 1;
+        let probs = exec.probe(rt, params, &toks, pos)?;
+        let tok = if temperature <= 0.0 {
+            probs
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i as i32)
+                .unwrap_or(0)
+        } else {
+            sample_from(&probs, temperature, rng)
+        };
+        toks[prompt.len() + j] = tok;
+        out.push(tok);
+    }
+    Ok(out)
+}
+
+fn sample_from(probs: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
+    // temperature re-softmax in log space
+    let logits: Vec<f64> = probs
+        .iter()
+        .map(|&p| (p.max(1e-30) as f64).ln() / temperature as f64)
+        .collect();
+    let maxl = logits.iter().cloned().fold(f64::MIN, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|&l| (l - maxl).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    let mut u = rng.next_f64() * z;
+    for (i, &e) in exps.iter().enumerate() {
+        u -= e;
+        if u <= 0.0 {
+            return i as i32;
+        }
+    }
+    (exps.len() - 1) as i32
+}
+
+/// pass@k for generation tasks: a sample passes if any of k temperature
+/// samples exactly matches the reference answer.
+#[allow(clippy::too_many_arguments)]
+pub fn pass_at_k(
+    rt: &Runtime,
+    exec: &ModelExec,
+    params: &[Tensor],
+    samples: &[Sample],
+    k: usize,
+    temperature: f32,
+    seed: u64,
+    max_samples: usize,
+) -> Result<f64> {
+    let mut rng = Rng::new(seed ^ 0x9a55);
+    let mut pass = 0usize;
+    let eval: Vec<&Sample> = samples.iter().take(max_samples).collect();
+    for s in &eval {
+        let mut ok = false;
+        for t in 0..k {
+            let temp = if t == 0 { 0.0 } else { temperature };
+            let got = sample_answer(rt, exec, params, s.prompt(), s.answer_len, temp, &mut rng)?;
+            if got == s.answer() {
+                ok = true;
+                break;
+            }
+        }
+        if ok {
+            pass += 1;
+        }
+    }
+    Ok(100.0 * pass as f64 / eval.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_distribution_sanity() {
+        let mut rng = Rng::new(1);
+        let probs = vec![0.05f32, 0.9, 0.05];
+        let mut counts = [0usize; 3];
+        for _ in 0..500 {
+            counts[sample_from(&probs, 1.0, &mut rng) as usize] += 1;
+        }
+        assert!(counts[1] > 350, "{counts:?}");
+        // low temperature sharpens toward argmax
+        let mut counts = [0usize; 3];
+        for _ in 0..200 {
+            counts[sample_from(&probs, 0.2, &mut rng) as usize] += 1;
+        }
+        assert!(counts[1] > 195, "{counts:?}");
+    }
+}

@@ -1,0 +1,101 @@
+//! Training loop: drives the train-step executable, hands gradients to the
+//! active `Method`, tracks the loss curve and periodic evals.
+
+pub mod eval;
+pub mod pretrain;
+
+use anyhow::Result;
+
+use crate::data::BatchSource;
+use crate::methods::{Ctx, Method};
+use crate::optim::LrSchedule;
+use crate::runtime::model_exec::ModelExec;
+use crate::tensor::Tensor;
+
+#[derive(Clone, Debug)]
+pub struct TrainCfg {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup_frac: f32,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainCfg {
+    fn default() -> Self {
+        TrainCfg {
+            steps: 300,
+            lr: 1e-3,
+            warmup_frac: 0.03,
+            log_every: 50,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub losses: Vec<f32>,
+    /// wall seconds of the whole run
+    pub seconds: f64,
+    /// (step, seconds) samples for step-latency accounting
+    pub step_times: Vec<f64>,
+}
+
+impl TrainLog {
+    /// Mean loss over the last `n` steps (convergence summary).
+    pub fn tail_loss(&self, n: usize) -> f32 {
+        let tail = &self.losses[self.losses.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().sum::<f32>() / tail.len() as f32
+    }
+}
+
+/// Run `cfg.steps` optimizer steps of `method` starting from `params`
+/// (mutated in place). Returns the loss curve.
+pub fn train(
+    exec: &ModelExec,
+    src: &mut dyn BatchSource,
+    method: &mut dyn Method,
+    ctx: &mut Ctx,
+    params: &mut [Tensor],
+    cfg: &TrainCfg,
+) -> Result<TrainLog> {
+    let (b, s) = src.shape();
+    anyhow::ensure!(
+        b == exec.preset.batch && s == exec.preset.seq,
+        "data source shape ({b},{s}) != preset ({}, {})",
+        exec.preset.batch,
+        exec.preset.seq
+    );
+    let sched = LrSchedule {
+        base: cfg.lr,
+        warmup: ((cfg.steps as f32) * cfg.warmup_frac) as usize,
+        total: cfg.steps,
+    };
+    let mut data_rng = crate::util::rng::Rng::new(cfg.seed ^ 0xda7a);
+    method.init(ctx, params)?;
+    let mut log = TrainLog::default();
+    let t0 = std::time::Instant::now();
+    for step in 0..cfg.steps {
+        let st = std::time::Instant::now();
+        let batch = src.next_batch(&mut data_rng);
+        let (loss, grads) = exec.train_step(params, &batch)?;
+        method.step(ctx, params, &grads, step, sched.at(step))?;
+        log.losses.push(loss);
+        log.step_times.push(st.elapsed().as_secs_f64());
+        if cfg.log_every > 0 && step % cfg.log_every == 0 {
+            log::info!(
+                "[{}] step {step}/{} loss {loss:.4} lr {:.2e}",
+                method.name(),
+                cfg.steps,
+                sched.at(step)
+            );
+        }
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
+    }
+    log.seconds = t0.elapsed().as_secs_f64();
+    Ok(log)
+}

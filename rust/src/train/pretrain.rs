@@ -1,0 +1,88 @@
+//! Pretraining orchestration + checkpoint cache.
+//!
+//! Every experiment fine-tunes from the *same* pretrained model per preset
+//! (the paper starts from public pretrained LLMs). Checkpoints live in
+//! runs/ keyed by (preset, steps, seed) so the expensive pretrain happens
+//! once per configuration.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use super::{train, TrainCfg};
+use crate::data::{CorpusGen, Kg, Vocab};
+use crate::methods::{full::FullFt, Ctx};
+use crate::model;
+use crate::optim::AdamCfg;
+use crate::runtime::model_exec::ModelExec;
+use crate::runtime::{Linalg, Runtime};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+pub const KG_SEED: u64 = 0x5eed_0001;
+
+/// The standard world (vocab + KG + corpus) for a preset.
+pub fn world(exec: &ModelExec) -> CorpusGen {
+    let vocab = Vocab::new(exec.preset.vocab);
+    let kg = Kg::new(KG_SEED, vocab.n_entities, vocab.n_relations);
+    CorpusGen::new(vocab, kg, exec.preset.batch, exec.preset.seq)
+}
+
+pub fn runs_dir() -> PathBuf {
+    std::env::var("LIFT_RUNS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("runs"))
+}
+
+pub fn make_ctx(rt: &Runtime, exec: &ModelExec, seed: u64) -> Ctx {
+    Ctx {
+        la: std::rc::Rc::new(Linalg::new(&rt.client)),
+        preset: exec.preset.clone(),
+        rng: Rng::new(seed),
+        adam: AdamCfg::default(),
+    }
+}
+
+/// Load the cached pretrained checkpoint, or pretrain + cache it.
+pub fn ensure_pretrained(
+    rt: &Runtime,
+    exec: &ModelExec,
+    steps: usize,
+    seed: u64,
+) -> Result<Vec<Tensor>> {
+    let path = runs_dir().join(format!(
+        "{}_pretrain_s{}_seed{}.ckpt",
+        exec.preset.name, steps, seed
+    ));
+    if path.exists() {
+        let params = model::load_checkpoint(&path)?;
+        model::check_params(&exec.preset, &params)?;
+        log::info!("loaded pretrained checkpoint {path:?}");
+        return Ok(params);
+    }
+    log::info!(
+        "pretraining {} for {steps} steps (cached at {path:?})",
+        exec.preset.name
+    );
+    let mut rng = Rng::new(seed);
+    let mut params = model::init_params(&exec.preset, &mut rng);
+    let mut corpus = world(exec);
+    let mut method = FullFt::new();
+    let mut ctx = make_ctx(rt, exec, seed);
+    let cfg = TrainCfg {
+        steps,
+        lr: 1e-3,
+        warmup_frac: 0.05,
+        log_every: 100,
+        seed,
+    };
+    let log = train(exec, &mut corpus, &mut method, &mut ctx, &mut params, &cfg)?;
+    log::info!(
+        "pretrain done: loss {:.3} -> {:.3} ({:.1}s)",
+        log.losses.first().copied().unwrap_or(f32::NAN),
+        log.tail_loss(20),
+        log.seconds
+    );
+    model::save_checkpoint(&path, &params)?;
+    Ok(params)
+}

@@ -1,0 +1,139 @@
+//! Micro-benchmark harness (`criterion` is unavailable offline).
+//!
+//! Warmup + timed iterations, reports mean / p50 / p95 / min, and writes a
+//! machine-readable line so `rust/benches/bench_main.rs` output can be
+//! diffed across the perf-pass iterations recorded in EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<5} mean={:>12} p50={:>12} p95={:>12} min={:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_secs: f64,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            min_iters: 5,
+            max_iters: 200,
+            target_secs: 2.0,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn fast() -> Self {
+        Bencher {
+            min_iters: 3,
+            max_iters: 20,
+            target_secs: 0.5,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` adaptively: warm up once, then iterate until target_secs
+    /// or max_iters.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        f(); // warmup (compile caches, allocators)
+        let mut samples = Vec::new();
+        let t_start = Instant::now();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters
+                && t_start.elapsed().as_secs_f64() < self.target_secs)
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+            p50_ns: samples[n / 2],
+            p95_ns: samples[(n as f64 * 0.95) as usize..][0],
+            min_ns: samples[0],
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+
+    /// Throughput variant: report items/sec alongside latency.
+    pub fn bench_throughput<F: FnMut()>(&mut self, name: &str, items: usize, f: F) {
+        let mean_ns = self.bench(name, f).mean_ns;
+        let per_sec = items as f64 / (mean_ns / 1e9);
+        println!("{:<44} {:.1} items/s", format!("{name} [throughput]"), per_sec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders() {
+        let mut b = Bencher {
+            min_iters: 3,
+            max_iters: 5,
+            target_secs: 0.01,
+            results: vec![],
+        };
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = acc.wrapping_add(1);
+            std::hint::black_box(acc);
+        });
+        let r = &b.results[0];
+        assert!(r.iters >= 3);
+        assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_ns(500.0), "500ns");
+        assert_eq!(fmt_ns(1500.0), "1.50µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50ms");
+        assert_eq!(fmt_ns(3.1e9), "3.100s");
+    }
+}

@@ -1,0 +1,161 @@
+//! Tiny argv parser (`clap` is unavailable offline).
+//!
+//! Grammar: `lift <subcommand> [positional...] [--key value | --flag]...`.
+//! Typed getters with defaults; unknown-flag detection via `finish()`.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub cmd: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    used: std::cell::RefCell<BTreeSet<String>>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut it = argv.into_iter().peekable();
+        let mut a = Args::default();
+        let mut seen_cmd = false;
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let (k, v) = match name.split_once('=') {
+                    Some((k, v)) => (k.to_string(), v.to_string()),
+                    None => {
+                        // value is the next token unless it looks like a flag
+                        let takes_val =
+                            matches!(it.peek(), Some(n) if !n.starts_with("--"));
+                        let v = if takes_val { it.next().unwrap() } else { "true".into() };
+                        (name.to_string(), v)
+                    }
+                };
+                a.flags.insert(k, v);
+            } else if !seen_cmd {
+                a.cmd = tok;
+                seen_cmd = true;
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.used.borrow_mut().insert(key.to_string());
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> f32 {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a float, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.mark(key);
+        self.flags
+            .get(key)
+            .map(|v| matches!(v.as_str(), "true" | "1" | "yes"))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list flag.
+    pub fn list(&self, key: &str, default: &str) -> Vec<String> {
+        self.str(key, default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.to_string())
+            .collect()
+    }
+
+    /// Error on any flag that no getter consumed (typo guard).
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let used = self.used.borrow();
+        let unknown: Vec<_> = self.flags.keys().filter(|k| !used.contains(*k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown flags: {unknown:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --preset tiny --steps 500 --fast --lr 1e-4");
+        assert_eq!(a.cmd, "train");
+        assert_eq!(a.str("preset", "x"), "tiny");
+        assert_eq!(a.usize("steps", 0), 500);
+        assert!(a.bool("fast", false));
+        assert!((a.f32("lr", 0.0) - 1e-4).abs() < 1e-10);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn eq_form_and_positional() {
+        let a = parse("exp table2 --seeds=4");
+        assert_eq!(a.cmd, "exp");
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.usize("seeds", 1), 4);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("train");
+        assert_eq!(a.str("preset", "tiny"), "tiny");
+        assert!(!a.bool("fast", false));
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse("train --bogus 3");
+        let _ = a.str("preset", "tiny");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = parse("exp --methods full,lift,lora");
+        assert_eq!(a.list("methods", ""), vec!["full", "lift", "lora"]);
+    }
+}

@@ -1,0 +1,72 @@
+//! CSV writer for experiment results (`results/*.csv`).
+//!
+//! Every exp runner appends rows through this so the paper tables can be
+//! regenerated/diffed; quoting is applied only when needed.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub struct CsvWriter {
+    path: PathBuf,
+    file: fs::File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncate) `results/<name>.csv` with a header row.
+    pub fn create(dir: &Path, name: &str, header: &[&str]) -> anyhow::Result<CsvWriter> {
+        fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        let mut file = fs::File::create(&path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter {
+            path,
+            file,
+            cols: header.len(),
+        })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            fields.len() == self.cols,
+            "csv row width {} != header {}",
+            fields.len(),
+            self.cols
+        );
+        let line: Vec<String> = fields.iter().map(|f| quote(f)).collect();
+        writeln!(self.file, "{}", line.join(","))?;
+        Ok(())
+    }
+
+    pub fn rowf(&mut self, fields: &[&dyn std::fmt::Display]) -> anyhow::Result<()> {
+        self.row(&fields.iter().map(|f| f.to_string()).collect::<Vec<_>>())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+fn quote(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_quotes() {
+        let dir = std::env::temp_dir().join("lift_csv_test");
+        let mut w = CsvWriter::create(&dir, "t", &["a", "b"]).unwrap();
+        w.row(&["1".into(), "he,llo \"x\"".into()]).unwrap();
+        assert!(w.row(&["only-one".into()]).is_err());
+        let body = std::fs::read_to_string(w.path()).unwrap();
+        assert_eq!(body, "a,b\n1,\"he,llo \"\"x\"\"\"\n");
+    }
+}

@@ -1,0 +1,295 @@
+//! Dense symmetric eigensolver (cyclic Jacobi) + exact small-matrix SVD.
+//!
+//! The HLO interchange cannot carry LAPACK custom-calls, and the runtime
+//! path uses randomized subspace iteration (runtime/linalg.rs). This module
+//! is the *exact* host-side oracle used for (a) cross-checking the
+//! randomized factors in tests, (b) Fig. 13-style rank counting of update
+//! matrices, and (c) the small-side rotation of subspace factors. O(n^3)
+//! per sweep — fine for the n <= ~2k matrices it sees.
+
+/// Jacobi eigendecomposition of a symmetric matrix (row-major, n x n).
+/// Returns (eigenvalues desc, eigenvectors as columns, row-major n x n).
+pub fn eigh(a: &[f32], n: usize) -> (Vec<f32>, Vec<f32>) {
+    let a64: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+    let (w, v) = eigh64(&a64, n);
+    (
+        w.iter().map(|&x| x as f32).collect(),
+        v.iter().map(|&x| x as f32).collect(),
+    )
+}
+
+/// f64 Jacobi core — the Gram matrix must stay in f64 end-to-end or the
+/// sqrt amplifies rounding into a ~1e-4-relative singular-value noise
+/// floor (breaks Fig. 13 rank counting).
+pub fn eigh64(a: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), n * n);
+    let mut a: Vec<f64> = a.to_vec();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 30;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += a[p * n + q] * a[p * n + q];
+            }
+        }
+        if off.sqrt() < 1e-11 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // A <- J^T A J on rows/cols p, q
+                for k in 0..n {
+                    let akp = a[k * n + p];
+                    let akq = a[k * n + q];
+                    a[k * n + p] = c * akp - s * akq;
+                    a[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p * n + k];
+                    let aqk = a[q * n + k];
+                    a[p * n + k] = c * apk - s * aqk;
+                    a[q * n + k] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // sort by eigenvalue descending
+    let mut order: Vec<usize> = (0..n).collect();
+    let evals: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    order.sort_by(|&i, &j| evals[j].partial_cmp(&evals[i]).unwrap());
+    let mut w = Vec::with_capacity(n);
+    let mut vecs = vec![0.0f64; n * n];
+    for (new, &old) in order.iter().enumerate() {
+        w.push(evals[old]);
+        for k in 0..n {
+            vecs[k * n + new] = v[k * n + old];
+        }
+    }
+    (w, vecs)
+}
+
+/// Exact thin SVD of an m x n matrix (row-major) via eigh of the Gram
+/// matrix on the smaller side. Returns (u m x r, s r, vt r x n), r = min(m, n).
+pub fn svd(a: &[f32], m: usize, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(a.len(), m * n);
+    let r = m.min(n);
+    if n <= m {
+        // G = A^T A (n x n); A = U S V^T, G = V S^2 V^T
+        let mut g = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let mut acc = 0.0f64;
+                for k in 0..m {
+                    acc += a[k * n + i] as f64 * a[k * n + j] as f64;
+                }
+                g[i * n + j] = acc;
+                g[j * n + i] = acc;
+            }
+        }
+        let (w, vfull) = eigh64(&g, n);
+        let mut s = vec![0.0f32; r];
+        let mut u = vec![0.0f32; m * r];
+        let mut vt = vec![0.0f32; r * n];
+        for c in 0..r {
+            let sc = w[c].max(0.0).sqrt();
+            s[c] = sc as f32;
+            for k in 0..n {
+                vt[c * n + k] = vfull[k * n + c] as f32;
+            }
+            // u_c = A v_c / s_c
+            if sc > 1e-12 {
+                for row in 0..m {
+                    let mut acc = 0.0f64;
+                    for k in 0..n {
+                        acc += a[row * n + k] as f64 * vfull[k * n + c];
+                    }
+                    u[row * r + c] = (acc / sc) as f32;
+                }
+            }
+        }
+        (u, s, vt)
+    } else {
+        // transpose route: svd(A^T) then swap
+        let mut at = vec![0.0f32; n * m];
+        for i in 0..m {
+            for j in 0..n {
+                at[j * m + i] = a[i * n + j];
+            }
+        }
+        let (ut, s, vtt) = svd(&at, n, m);
+        // A = (V_t)^T S U_t^T  =>  U = vtt^T (m x r), V^T = ut^T (r x n)
+        let mut u = vec![0.0f32; m * r];
+        let mut vt = vec![0.0f32; r * n];
+        for i in 0..m {
+            for c in 0..r {
+                u[i * r + c] = vtt[c * m + i];
+            }
+        }
+        for c in 0..r {
+            for j in 0..n {
+                vt[c * n + j] = ut[j * r + c];
+            }
+        }
+        (u, s, vt)
+    }
+}
+
+/// Rank-r reconstruction from exact SVD (the paper's Eq. 1 oracle).
+pub fn lowrank_approx(a: &[f32], m: usize, n: usize, rank: usize) -> Vec<f32> {
+    let (u, s, vt) = svd(a, m, n);
+    let r = m.min(n);
+    let rank = rank.min(r);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for c in 0..rank {
+            let uis = u[i * r + c] * s[c];
+            if uis == 0.0 {
+                continue;
+            }
+            let row = &vt[c * n..(c + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += uis * row[j];
+            }
+        }
+    }
+    out
+}
+
+/// Count of singular values above `tau` (Fig. 13 rank metric).
+pub fn rank_above(a: &[f32], m: usize, n: usize, tau_mult: f32) -> usize {
+    let (_, s, _) = svd(a, m, n);
+    let smax = s.first().copied().unwrap_or(0.0);
+    // paper: tau = 10 x default = 10 * max(m,n) * smax * eps_f32
+    let tau = tau_mult * m.max(n) as f32 * smax * f32::EPSILON;
+    s.iter().filter(|&&x| x > tau).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for l in 0..k {
+                let ail = a[i * k + l];
+                for j in 0..n {
+                    c[i * n + j] += ail * b[l * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn eigh_diagonal() {
+        let a = vec![3.0, 0.0, 0.0, 1.0];
+        let (w, v) = eigh(&a, 2);
+        assert!((w[0] - 3.0).abs() < 1e-5 && (w[1] - 1.0).abs() < 1e-5);
+        // columns orthonormal
+        let dot = v[0] * v[1] + v[2] * v[3];
+        assert!(dot.abs() < 1e-5);
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        let mut rng = Rng::new(42);
+        let n = 16;
+        let b = rng.normal_vec(n * n, 1.0);
+        // symmetrize
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = 0.5 * (b[i * n + j] + b[j * n + i]);
+            }
+        }
+        let (w, v) = eigh(&a, n);
+        // A v_c = w_c v_c
+        for c in 0..n {
+            for i in 0..n {
+                let mut av = 0.0;
+                for k in 0..n {
+                    av += a[i * n + k] * v[k * n + c];
+                }
+                assert!(
+                    (av - w[c] * v[i * n + c]).abs() < 1e-3,
+                    "c={c} i={i}: {av} vs {}",
+                    w[c] * v[i * n + c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn svd_reconstructs_tall_and_wide() {
+        let mut rng = Rng::new(7);
+        for (m, n) in [(20usize, 8usize), (8, 20), (12, 12)] {
+            let a = rng.normal_vec(m * n, 1.0);
+            let (u, s, vt) = svd(&a, m, n);
+            let r = m.min(n);
+            let mut us = vec![0.0f32; m * r];
+            for i in 0..m {
+                for c in 0..r {
+                    us[i * r + c] = u[i * r + c] * s[c];
+                }
+            }
+            let rec = matmul(&us, &vt, m, r, n);
+            for i in 0..m * n {
+                assert!((rec[i] - a[i]).abs() < 1e-3, "({m},{n}) idx {i}");
+            }
+            // singular values sorted desc, nonnegative
+            for c in 1..r {
+                assert!(s[c - 1] >= s[c] - 1e-5);
+                assert!(s[c] >= -1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn lowrank_is_best_approx() {
+        // rank-2 matrix + noise: rank-2 approx error must be ~ noise level
+        let mut rng = Rng::new(3);
+        let (m, n, r) = (24, 16, 2);
+        let u = rng.normal_vec(m * r, 1.0);
+        let v = rng.normal_vec(r * n, 1.0);
+        let mut a = matmul(&u, &v, m, r, n);
+        for x in a.iter_mut() {
+            *x += rng.normal() * 1e-3;
+        }
+        let ar = lowrank_approx(&a, m, n, 2);
+        let err: f32 = a.iter().zip(&ar).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!(err.sqrt() < 0.1, "err={}", err.sqrt());
+    }
+
+    #[test]
+    fn rank_counting() {
+        let mut rng = Rng::new(5);
+        let (m, n, r) = (30usize, 30usize, 5usize);
+        let u = rng.normal_vec(m * r, 1.0);
+        let v = rng.normal_vec(r * n, 1.0);
+        let a = matmul(&u, &v, m, r, n);
+        assert_eq!(rank_above(&a, m, n, 10.0), r);
+    }
+}

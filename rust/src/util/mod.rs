@@ -1,0 +1,17 @@
+//! Offline-environment substrates.
+//!
+//! This box has no crates.io access beyond the vendored set (see
+//! `.cargo/config.toml`), so the usual suspects — `serde_json`, `clap`,
+//! `rand`, `criterion`, `proptest` — are hand-rolled here with exactly the
+//! surface the rest of the system needs. Each submodule carries its own
+//! unit tests.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod eigh;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,101 @@
+//! Property-testing mini-framework (`proptest` is unavailable offline).
+//!
+//! A property is a closure over a seeded `Rng`; the runner executes it for
+//! `cases` independent seeds and reports the first failing seed so a
+//! failure reproduces with `check_seeded(name, BAD_SEED, prop)`. No
+//! shrinking — generators are kept small-biased instead (sizes drawn
+//! log-uniformly), which in practice keeps counterexamples readable.
+
+use crate::util::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 32;
+
+/// Run `prop` for `cases` derived seeds; panic with the failing seed.
+pub fn check_cases<F: FnMut(&mut Rng) -> Result<(), String>>(
+    name: &str,
+    cases: usize,
+    base_seed: u64,
+    mut prop: F,
+) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n\
+                 reproduce with check_seeded(\"{name}\", {seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+pub fn check<F: FnMut(&mut Rng) -> Result<(), String>>(name: &str, prop: F) {
+    check_cases(name, DEFAULT_CASES, 0xC0FFEE, prop);
+}
+
+pub fn check_seeded<F: FnMut(&mut Rng) -> Result<(), String>>(
+    name: &str,
+    seed: u64,
+    mut prop: F,
+) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed on seed {seed:#x}: {msg}");
+    }
+}
+
+/// Log-uniform size in [lo, hi] — biases toward small counterexamples.
+pub fn gen_size(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    assert!(lo >= 1 && hi >= lo);
+    let llo = (lo as f64).ln();
+    let lhi = (hi as f64).ln();
+    let x = llo + rng.next_f64() * (lhi - llo);
+    (x.exp().round() as usize).clamp(lo, hi)
+}
+
+/// Assertion helpers returning Result for use inside properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("abs is nonneg", |rng| {
+            let x = rng.normal();
+            ensure(x.abs() >= 0.0, format!("abs({x}) < 0 ?!"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_size_bounds() {
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let s = gen_size(&mut rng, 2, 64);
+            assert!((2..=64).contains(&s));
+        }
+    }
+}

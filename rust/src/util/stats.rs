@@ -1,0 +1,113 @@
+//! Small statistics helpers shared by eval, analysis and the bench harness.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile (nearest-rank on a sorted copy), p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+    s[idx.min(s.len() - 1)]
+}
+
+/// Exact k-th largest magnitude threshold: |x| >= t holds for >= k entries.
+/// O(n) average (quickselect via select_nth_unstable).
+pub fn topk_abs_threshold(xs: &[f32], k: usize) -> f32 {
+    assert!(k > 0 && k <= xs.len(), "k={} n={}", k, xs.len());
+    let mut mags: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
+    let idx = xs.len() - k;
+    let (_, kth, _) = mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    *kth
+}
+
+/// Histogram with fixed bin count over [lo, hi]; out-of-range clamps.
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    for &x in xs {
+        let b = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        h[b] += 1;
+    }
+    h
+}
+
+/// Dot product (f64 accumulate).
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| *x as f64 * *y as f64).sum()
+}
+
+pub fn l2_norm(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+pub fn frobenius_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+    }
+
+    #[test]
+    fn topk_threshold_exact() {
+        let xs = [0.1f32, -5.0, 2.0, -0.3, 4.0, 1.0];
+        let t = topk_abs_threshold(&xs, 2);
+        assert_eq!(t, 4.0);
+        let kept = xs.iter().filter(|x| x.abs() >= t).count();
+        assert_eq!(kept, 2);
+        // k = n keeps everything
+        assert!(topk_abs_threshold(&xs, 6) <= 0.1);
+    }
+
+    #[test]
+    fn histogram_clamps() {
+        let h = histogram(&[-10.0, 0.0, 0.5, 10.0], -1.0, 1.0, 4);
+        assert_eq!(h.iter().sum::<usize>(), 4);
+        assert_eq!(h[0], 1); // -10 clamped into first bin
+        assert_eq!(h[3], 2); // 0.5 and 10 in the last bin
+    }
+}

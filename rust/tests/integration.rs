@@ -1,0 +1,390 @@
+//! Cross-layer integration tests. These require `make artifacts` to have
+//! run (they load the compiled HLO artifacts) and exercise the exact code
+//! paths the coordinator uses in production.
+
+use lift::data::tasks::{TaskMixSource, TaskSet, TaskFamily};
+use lift::methods::{make_method, Method, Scope};
+use lift::model;
+use lift::optim::{AdamCfg, KernelAdam, SparseAdam};
+use lift::runtime::model_exec::{Batch, ModelExec};
+use lift::runtime::{Linalg, Runtime};
+use lift::tensor::Tensor;
+use lift::train::{pretrain, train, TrainCfg};
+use lift::util::json::Json;
+use lift::util::rng::Rng;
+
+fn runtime() -> Runtime {
+    // tests run from the package root
+    Runtime::from_default().expect("run `make artifacts` first")
+}
+
+/// Mirror of python/compile/fixtures.py deterministic_params.
+fn fixture_params(exec: &ModelExec) -> Vec<Tensor> {
+    exec.preset
+        .params
+        .iter()
+        .enumerate()
+        .map(|(t, info)| {
+            let n = info.numel();
+            let data: Vec<f32> = (0..n)
+                .map(|k| (0.02 * (0.37 * k as f64 + t as f64).sin()) as f32)
+                .collect();
+            Tensor::from_vec(&info.shape, data)
+        })
+        .collect()
+}
+
+fn fixture_batch(exec: &ModelExec) -> Batch {
+    let (b, s) = (exec.preset.batch, exec.preset.seq);
+    let v = exec.preset.vocab as i64;
+    let n = b * s;
+    Batch {
+        tokens: (0..n).map(|i| ((7 * i as i64 + 3) % v) as i32).collect(),
+        targets: (0..n).map(|i| ((7 * (i as i64 + 1) + 3) % v) as i32).collect(),
+        loss_mask: vec![1.0; n],
+        batch: b,
+        seq: s,
+    }
+}
+
+#[test]
+fn fixture_numerics_match_python() {
+    // THE cross-language contract: same inputs through the compiled
+    // artifact must reproduce jax's numbers from fixtures.json.
+    let rt = runtime();
+    let exec = ModelExec::load(&rt, "tiny").unwrap();
+    let fix_text =
+        std::fs::read_to_string(Runtime::default_dir().join("fixtures.json")).unwrap();
+    let fix = Json::parse(&fix_text).unwrap();
+    let tiny = fix.get("tiny").expect("tiny fixture");
+    let want_loss = tiny.get("loss").and_then(|x| x.as_f64()).unwrap();
+    let want_head: Vec<i32> = tiny
+        .get("preds_head")
+        .and_then(|x| x.as_arr())
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as i32)
+        .collect();
+    let want_sum = tiny.get("preds_sum").and_then(|x| x.as_f64()).unwrap() as i64;
+
+    let params = fixture_params(&exec);
+    let batch = fixture_batch(&exec);
+    let (loss, preds) = exec.eval_step(&params, &batch).unwrap();
+    assert!(
+        ((loss as f64) - want_loss).abs() < 1e-4 * want_loss.abs().max(1.0),
+        "loss {loss} vs python {want_loss}"
+    );
+    assert_eq!(&preds[..32], &want_head[..], "first 32 predictions");
+    let sum: i64 = preds.iter().map(|&p| p as i64).sum();
+    assert_eq!(sum, want_sum, "prediction checksum");
+}
+
+#[test]
+fn train_step_grads_are_consistent_with_loss() {
+    // finite-difference check through the AOT train_step on one weight
+    let rt = runtime();
+    let exec = ModelExec::load(&rt, "tiny").unwrap();
+    let mut params = fixture_params(&exec);
+    let batch = fixture_batch(&exec);
+    let (_, grads) = exec.train_step(&params, &batch).unwrap();
+    // pick the steepest entry of one matrix for a robust fd check
+    let pi = 2; // l0.wq
+    let (gi, gmax) = grads[pi]
+        .data
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+        .map(|(i, &g)| (i, g))
+        .unwrap();
+    let eps = 2e-2f32;
+    params[pi].data[gi] += eps;
+    let (lp, _) = exec.eval_step(&params, &batch).unwrap();
+    params[pi].data[gi] -= 2.0 * eps;
+    let (lm, _) = exec.eval_step(&params, &batch).unwrap();
+    let fd = (lp - lm) / (2.0 * eps);
+    assert!(
+        (fd - gmax).abs() < 0.15 * gmax.abs().max(1e-3),
+        "fd {fd} vs grad {gmax}"
+    );
+}
+
+#[test]
+fn svd_artifact_matches_rust_built_graph() {
+    // the Pallas subspace-iteration artifact and the XlaBuilder graph are
+    // the same algorithm; same inputs must give (near-)identical factors
+    let rt = runtime();
+    let la = Linalg::new(&rt.client);
+    let mut rng = Rng::new(3);
+    let (m, n, rp) = (128usize, 128usize, 40usize);
+    let w = Tensor::randn(&[m, n], 0.05, &mut rng);
+    let g0 = Tensor::randn(&[n, rp], 1.0, &mut rng);
+
+    let file = rt.manifest.kernels.get("svd_128x128_r40").unwrap();
+    let exe = rt.load_artifact(file).unwrap();
+    let parts = rt
+        .run_tuple(
+            &exe,
+            &[
+                lift::runtime::literal::tensor_to_literal(&w).unwrap(),
+                lift::runtime::literal::tensor_to_literal(&g0).unwrap(),
+            ],
+        )
+        .unwrap();
+    let q_k = lift::runtime::literal::literal_to_tensor(&parts[0]).unwrap();
+    let b_k = lift::runtime::literal::literal_to_tensor(&parts[1]).unwrap();
+
+    let (q_r, b_r) = la.svd_lowrank_with(&w, &g0, 2).unwrap();
+    let dq = lift::util::stats::frobenius_diff(&q_k.data, &q_r.data);
+    let db = lift::util::stats::frobenius_diff(&b_k.data, &b_r.data);
+    assert!(dq < 1e-2, "Q mismatch {dq}");
+    assert!(db < 1e-2 * b_r.frobenius().max(1.0), "B mismatch {db}");
+    // and the reconstructions agree tightly
+    let rec_k = la.matmul(&q_k, &b_k).unwrap();
+    let rec_r = la.matmul(&q_r, &b_r).unwrap();
+    let dr = lift::util::stats::frobenius_diff(&rec_k.data, &rec_r.data);
+    assert!(dr < 1e-3 * rec_r.frobenius().max(1.0), "reconstruction {dr}");
+}
+
+#[test]
+fn mask_artifact_matches_host_mask() {
+    let rt = runtime();
+    let mut rng = Rng::new(4);
+    let (m, n, rp) = (128usize, 128usize, 40usize);
+    let u = Tensor::randn(&[m, rp], 1.0, &mut rng);
+    let v = Tensor::randn(&[n, rp], 1.0, &mut rng);
+    let thr = 6.0f32;
+    let file = rt.manifest.kernels.get("mask_128x128_r40").unwrap();
+    let exe = rt.load_artifact(file).unwrap();
+    let parts = rt
+        .run_tuple(
+            &exe,
+            &[
+                lift::runtime::literal::tensor_to_literal(&u).unwrap(),
+                lift::runtime::literal::tensor_to_literal(&v).unwrap(),
+                lift::runtime::literal::tensor_to_literal(&Tensor::from_vec(
+                    &[1, 1],
+                    vec![thr],
+                ))
+                .unwrap(),
+            ],
+        )
+        .unwrap();
+    let mask = lift::runtime::literal::literal_to_tensor(&parts[0]).unwrap();
+    let counts = lift::runtime::literal::literal_to_vec_i32(&parts[1]).unwrap();
+    // host oracle
+    let vt = v.transpose();
+    let wr = u.matmul(&vt);
+    let mut host_count = 0;
+    for i in 0..m * n {
+        let want = if wr.data[i].abs() >= thr { 1.0 } else { 0.0 };
+        assert_eq!(mask.data[i], want, "mask[{i}]");
+        host_count += want as i32;
+    }
+    assert_eq!(counts.iter().sum::<i32>(), host_count);
+}
+
+#[test]
+fn sparse_adam_kernel_matches_host_optimizer() {
+    let rt = runtime();
+    let mut rng = Rng::new(5);
+    let k = 1000usize;
+    let cfg = AdamCfg::default();
+    let kern = KernelAdam::new(&rt, k).unwrap();
+    let mut p1 = rng.normal_vec(k, 1.0);
+    let g = rng.normal_vec(k, 1.0);
+    let mut m1 = vec![0.0f32; k];
+    let mut v1 = vec![0.0f32; k];
+    // host reference over the same packed vectors
+    let mut host = SparseAdam::new((0..k as u32).collect(), cfg);
+    let mut p2 = p1.clone();
+    for t in 1..=3 {
+        kern.step(&mut p1, &g, &mut m1, &mut v1, &cfg, t, 1e-3).unwrap();
+        host.step(&mut p2, &g, 1e-3);
+        for i in 0..k {
+            assert!(
+                (p1[i] - p2[i]).abs() < 1e-5,
+                "step {t} idx {i}: {} vs {}",
+                p1[i],
+                p2[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn lift_training_reduces_loss_and_respects_mask() {
+    let rt = runtime();
+    let exec = ModelExec::load(&rt, "tiny").unwrap();
+    let mut rng = Rng::new(11);
+    let mut params = model::init_params(&exec.preset, &mut rng);
+    let before = params.clone();
+    let corpus = pretrain::world(&exec);
+    let sets = vec![TaskSet::generate(
+        TaskFamily::AddSub,
+        &corpus.vocab,
+        &corpus.kg,
+        200,
+        40,
+        1,
+    )];
+    let mut src = TaskMixSource {
+        sets,
+        batch: exec.preset.batch,
+        seq: exec.preset.seq,
+    };
+    let mut ctx = pretrain::make_ctx(&rt, &exec, 1);
+    let mut method = make_method(
+        "lift",
+        16,
+        lift::lift::LiftCfg {
+            rank: 16,
+            ..Default::default()
+        },
+        0, // fixed mask: makes the invariant below exact
+        Scope::default(),
+    )
+    .unwrap();
+    let cfg = TrainCfg {
+        steps: 20,
+        lr: 1e-3,
+        warmup_frac: 0.1,
+        log_every: 0,
+        seed: 1,
+    };
+    let log = train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg).unwrap();
+    assert!(
+        log.tail_loss(5) < log.losses[0],
+        "loss should drop: {} -> {}",
+        log.losses[0],
+        log.tail_loss(5)
+    );
+    // sparsity invariant: non-matrix params untouched; per-matrix change
+    // count <= its budget
+    for (pi, info) in exec.preset.params.iter().enumerate() {
+        let changed = params[pi]
+            .data
+            .iter()
+            .zip(&before[pi].data)
+            .filter(|(a, b)| a != b)
+            .count();
+        if info.is_matrix() {
+            let budget =
+                lift::lift::budget_for(info.shape[0], info.shape[1], 16);
+            assert!(changed <= budget, "{}: {changed} > {budget}", info.name);
+            assert!(changed > 0, "{}: mask never trained", info.name);
+        } else {
+            assert_eq!(changed, 0, "{} must stay frozen", info.name);
+        }
+    }
+}
+
+#[test]
+fn every_method_trains_without_error() {
+    let rt = runtime();
+    let exec = ModelExec::load(&rt, "tiny").unwrap();
+    let corpus = pretrain::world(&exec);
+    let sets = vec![TaskSet::generate(
+        TaskFamily::BoolQ,
+        &corpus.vocab,
+        &corpus.kg,
+        100,
+        20,
+        1,
+    )];
+    for name in [
+        "full", "lift", "lift_mlp", "lift_structured", "weight_mag", "grad_mag",
+        "movement", "random", "sift", "spiel", "lora", "pissa", "dora",
+        "spectral", "s2ft",
+    ] {
+        let mut rng = Rng::new(7);
+        let mut params = model::init_params(&exec.preset, &mut rng);
+        let mut src = TaskMixSource {
+            sets: sets.clone(),
+            batch: exec.preset.batch,
+            seq: exec.preset.seq,
+        };
+        let mut ctx = pretrain::make_ctx(&rt, &exec, 7);
+        let mut method = make_method(
+            name,
+            8,
+            lift::lift::LiftCfg {
+                rank: 8,
+                ..Default::default()
+            },
+            5,
+            Scope::default(),
+        )
+        .unwrap();
+        let cfg = TrainCfg {
+            steps: 8,
+            lr: 5e-4,
+            warmup_frac: 0.1,
+            log_every: 0,
+            seed: 7,
+        };
+        let log =
+            train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg).unwrap();
+        assert!(log.losses.iter().all(|l| l.is_finite()), "{name} diverged");
+        assert!(method.trainable() > 0, "{name} trains nothing");
+        if name != "full" {
+            // budget sanity: all PEFT/sparse methods train << all params
+            assert!(
+                method.trainable() < exec.preset.n_params() / 2,
+                "{name} trains too much"
+            );
+        }
+    }
+}
+
+#[test]
+fn mask_refresh_migrates_state_during_training() {
+    // run LIFT with a short refresh interval; training must stay finite
+    // and the method must keep exactly the budgeted number of indices
+    let rt = runtime();
+    let exec = ModelExec::load(&rt, "tiny").unwrap();
+    let corpus = pretrain::world(&exec);
+    let sets = vec![TaskSet::generate(
+        TaskFamily::Mawps,
+        &corpus.vocab,
+        &corpus.kg,
+        100,
+        20,
+        1,
+    )];
+    let mut rng = Rng::new(9);
+    let mut params = model::init_params(&exec.preset, &mut rng);
+    let mut src = TaskMixSource {
+        sets,
+        batch: exec.preset.batch,
+        seq: exec.preset.seq,
+    };
+    let mut ctx = pretrain::make_ctx(&rt, &exec, 9);
+    let mut method = lift::methods::sparse_ft::SparseFt::new(
+        "LIFT",
+        lift::lift::Selector::Lift,
+        8,
+        lift::lift::LiftCfg {
+            rank: 8,
+            ..Default::default()
+        },
+        4, // refresh every 4 steps
+        Scope::default(),
+    );
+    let cfg = TrainCfg {
+        steps: 12,
+        lr: 1e-3,
+        warmup_frac: 0.0,
+        log_every: 0,
+        seed: 9,
+    };
+    train(&exec, &mut src, &mut method, &mut ctx, &mut params, &cfg).unwrap();
+    assert!(method.last_refresh_overlap > 0.0 && method.last_refresh_overlap <= 1.0);
+    let budget_total: usize = exec
+        .preset
+        .params
+        .iter()
+        .filter(|p| p.is_matrix())
+        .map(|p| lift::lift::budget_for(p.shape[0], p.shape[1], 8))
+        .sum();
+    assert_eq!(method.trainable(), budget_total);
+}

@@ -1,0 +1,263 @@
+//! Property-based tests over coordinator invariants (util::prop is the
+//! offline stand-in for proptest; failing seeds are printed for replay).
+
+use lift::data::tasks::{gen_sample, samples_to_batches, TaskFamily};
+use lift::data::{Kg, Vocab};
+use lift::lift::{budget_for, mask_overlap, topk_indices};
+use lift::model;
+use lift::optim::{AdamCfg, DenseAdam, SparseAdam};
+use lift::tensor::Tensor;
+use lift::util::eigh;
+use lift::util::json::Json;
+use lift::util::prop::{check, ensure, ensure_close, gen_size};
+use lift::util::rng::Rng;
+use lift::util::stats;
+
+#[test]
+fn prop_topk_selects_exactly_k_largest() {
+    check("topk exact-k and dominance", |rng| {
+        let n = gen_size(rng, 2, 400);
+        let k = 1 + rng.below(n);
+        let vals = rng.normal_vec(n, 1.0);
+        let idx = topk_indices(&vals, k);
+        ensure(idx.len() == k, format!("got {} wanted {k}", idx.len()))?;
+        // dominance: min |selected| >= max |unselected|
+        let sel: std::collections::HashSet<u32> = idx.iter().copied().collect();
+        let min_in = idx
+            .iter()
+            .map(|&i| vals[i as usize].abs())
+            .fold(f32::MAX, f32::min);
+        let max_out = (0..n as u32)
+            .filter(|i| !sel.contains(i))
+            .map(|i| vals[i as usize].abs())
+            .fold(0.0f32, f32::max);
+        ensure(
+            min_in >= max_out,
+            format!("dominance violated: {min_in} < {max_out}"),
+        )
+    });
+}
+
+#[test]
+fn prop_budget_is_monotone_and_capped() {
+    check("budget monotone/capped", |rng| {
+        let m = gen_size(rng, 2, 512);
+        let n = gen_size(rng, 2, 512);
+        let r1 = gen_size(rng, 1, 128);
+        let r2 = r1 + gen_size(rng, 1, 64);
+        let b1 = budget_for(m, n, r1);
+        let b2 = budget_for(m, n, r2);
+        ensure(b1 <= b2, "monotonicity")?;
+        ensure(b2 <= (m * n / 2).max(1), "cap")?;
+        ensure(b1 >= 1, "positive")
+    });
+}
+
+#[test]
+fn prop_sparse_adam_touches_only_mask() {
+    check("sparse adam mask confinement", |rng| {
+        let n = gen_size(rng, 4, 300);
+        let k = 1 + rng.below(n / 2 + 1);
+        let idx: Vec<u32> = rng.sample_indices(n, k).into_iter().map(|i| i as u32).collect();
+        let mut w = rng.normal_vec(n, 1.0);
+        let w0 = w.clone();
+        let g = rng.normal_vec(n, 1.0);
+        let mut opt = SparseAdam::new(idx.clone(), AdamCfg::default());
+        for _ in 0..3 {
+            opt.step(&mut w, &g, 1e-2);
+        }
+        let sel: std::collections::HashSet<u32> = idx.iter().copied().collect();
+        for i in 0..n {
+            let moved = w[i] != w0[i];
+            if sel.contains(&(i as u32)) {
+                // gradient nonzero a.s. -> must move
+                ensure(moved, format!("masked {i} frozen"))?;
+            } else {
+                ensure(!moved, format!("unmasked {i} moved"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_adam_refresh_preserves_intersection() {
+    check("refresh state migration", |rng| {
+        let n = 200;
+        let k = 20 + rng.below(30);
+        let idx: Vec<u32> = rng.sample_indices(n, k).into_iter().map(|i| i as u32).collect();
+        let mut opt = SparseAdam::new(idx.clone(), AdamCfg::default());
+        let mut w = rng.normal_vec(n, 1.0);
+        let g = rng.normal_vec(n, 1.0);
+        opt.step(&mut w, &g, 1e-2);
+        let before: std::collections::HashMap<u32, (f32, f32)> = opt
+            .idx
+            .iter()
+            .enumerate()
+            .map(|(j, &i)| (i, (opt.m[j], opt.v[j])))
+            .collect();
+        let new_idx: Vec<u32> = rng.sample_indices(n, k).into_iter().map(|i| i as u32).collect();
+        opt.refresh(new_idx.clone());
+        for (j, &i) in opt.idx.iter().enumerate() {
+            match before.get(&i) {
+                Some(&(m, v)) => {
+                    ensure(opt.m[j] == m && opt.v[j] == v, "survivor state changed")?
+                }
+                None => ensure(
+                    opt.m[j] == 0.0 && opt.v[j] == 0.0,
+                    "newcomer state not cold",
+                )?,
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dense_equals_sparse_on_full_mask() {
+    check("dense == sparse(full mask)", |rng| {
+        let n = gen_size(rng, 2, 120);
+        let mut w1 = rng.normal_vec(n, 1.0);
+        let mut w2 = w1.clone();
+        let mut d = DenseAdam::new(n, AdamCfg::default());
+        let mut s = SparseAdam::new((0..n as u32).collect(), AdamCfg::default());
+        for _ in 0..4 {
+            let g = rng.normal_vec(n, 1.0);
+            d.step(&mut w1, &g, 3e-3);
+            s.step(&mut w2, &g, 3e-3);
+        }
+        for i in 0..n {
+            ensure_close(w1[i] as f64, w2[i] as f64, 1e-6, "weight")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal() * 100.0).round() as f64),
+            3 => Json::Str(format!("s{}-\"q\"\n", rng.below(1000))),
+            4 => Json::arr((0..rng.below(4)).map(|_| gen_json(rng, depth - 1))),
+            _ => Json::obj(
+                (0..rng.below(4))
+                    .map(|i| (["a", "b", "c", "d"][i % 4], gen_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json print->parse identity", |rng| {
+        let j = gen_json(rng, 3);
+        let j2 = Json::parse(&j.to_string()).map_err(|e| e.to_string())?;
+        ensure(j == j2, format!("{j} != {j2}"))
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_shapes() {
+    check("checkpoint roundtrip", |rng| {
+        let n_tensors = 1 + rng.below(6);
+        let params: Vec<Tensor> = (0..n_tensors)
+            .map(|_| {
+                let ndim = 1 + rng.below(2);
+                let shape: Vec<usize> = (0..ndim).map(|_| gen_size(rng, 1, 40)).collect();
+                Tensor::randn(&shape, 1.0, rng)
+            })
+            .collect();
+        let path = std::env::temp_dir().join(format!("lift_prop_{}.ckpt", rng.next_u64()));
+        model::save_checkpoint(&path, &params).map_err(|e| e.to_string())?;
+        let loaded = model::load_checkpoint(&path).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&path);
+        ensure(params == loaded, "roundtrip mismatch")
+    });
+}
+
+#[test]
+fn prop_task_batches_targets_are_shifted_answers() {
+    let vocab = Vocab::new(512);
+    let kg = Kg::new(7, vocab.n_entities, vocab.n_relations);
+    let families = [
+        TaskFamily::MultiArith,
+        TaskFamily::AddSub,
+        TaskFamily::BoolQ,
+        TaskFamily::ArcC,
+        TaskFamily::Qnli,
+        TaskFamily::CodeGen,
+    ];
+    check("task batch mask/target consistency", |rng| {
+        let fam = families[rng.below(families.len())];
+        let s = gen_sample(fam, &vocab, &kg, rng);
+        let seq = 64;
+        let batches = samples_to_batches(std::slice::from_ref(&s), 4, seq);
+        let (b, used) = &batches[0];
+        ensure(*used == 1, "rows used")?;
+        let masked: Vec<i32> = (0..seq)
+            .filter(|&i| b.loss_mask[i] == 1.0)
+            .map(|i| b.targets[i])
+            .collect();
+        ensure(
+            masked == s.answer(),
+            format!("{fam:?}: masked targets != answer"),
+        )?;
+        // every masked position's *input* context is strictly the prompt
+        // prefix: position i uses tokens [0..=i], all before answer end
+        for i in 0..seq {
+            if b.loss_mask[i] == 1.0 {
+                ensure(
+                    i + 1 >= s.answer_start && i < s.answer_start + s.answer_len,
+                    "mask outside answer window",
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_svd_reconstruction_error_bounded() {
+    check("jacobi svd reconstructs", |rng| {
+        let m = gen_size(rng, 2, 28);
+        let n = gen_size(rng, 2, 28);
+        let a = rng.normal_vec(m * n, 1.0);
+        let (u, s, vt) = eigh::svd(&a, m, n);
+        let r = m.min(n);
+        let mut rec = vec![0.0f32; m * n];
+        for i in 0..m {
+            for c in 0..r {
+                let x = u[i * r + c] * s[c];
+                for j in 0..n {
+                    rec[i * n + j] += x * vt[c * n + j];
+                }
+            }
+        }
+        let err = stats::frobenius_diff(&rec, &a);
+        let norm = stats::l2_norm(&a).max(1e-6);
+        ensure(err / norm < 1e-3, format!("rel err {}", err / norm))
+    });
+}
+
+#[test]
+fn prop_mask_overlap_bounds_and_identity() {
+    check("overlap in [0,1], self=1", |rng| {
+        let n = gen_size(rng, 4, 200);
+        let k = 1 + rng.below(n / 2 + 1);
+        let a: Vec<u32> = rng.sample_indices(n, k).into_iter().map(|i| i as u32).collect();
+        let b: Vec<u32> = rng.sample_indices(n, k).into_iter().map(|i| i as u32).collect();
+        let o = mask_overlap(&a, &b);
+        ensure((0.0..=1.0).contains(&o), "bounds")?;
+        ensure_close(mask_overlap(&a, &a), 1.0, 1e-12, "self overlap")
+    });
+}
+
+#[test]
+fn prop_histogram_conserves_mass() {
+    check("histogram mass", |rng| {
+        let n = gen_size(rng, 1, 500);
+        let xs = rng.normal_vec(n, 2.0);
+        let h = stats::histogram(&xs, -1.0, 1.0, 1 + rng.below(30));
+        ensure(h.iter().sum::<usize>() == n, "mass lost")
+    });
+}
