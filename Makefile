@@ -1,0 +1,24 @@
+# LIFT reproduction — common entry points.
+#
+# `artifacts` needs a python with jax installed; it lowers every L1/L2
+# graph to HLO text under artifacts/ (see python/compile/aot.py). The
+# rust side runs without artifacts for everything that goes through the
+# XlaBuilder toolkit (mask engine, property tests, quickstart selftest);
+# artifact-dependent integration tests skip themselves when absent.
+
+.PHONY: artifacts artifacts-e2e test bench clippy
+
+artifacts:
+	cd python && python -m compile.aot --outdir ../artifacts
+
+artifacts-e2e:
+	cd python && python -m compile.aot --outdir ../artifacts --presets e2e
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench
+
+clippy:
+	cargo clippy --all-targets

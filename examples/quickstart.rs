@@ -6,16 +6,44 @@
 //! 4. evaluate, and show the memory ledger.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
+//!
+//! Without artifacts (no jax available, or the host-interpreter xla
+//! stub), it degrades to an artifact-free selftest of the layer-parallel
+//! mask engine: a determinism check plus the measured sequential-vs-
+//! parallel refresh row. CI uses that as the smoke invocation.
+
+use std::sync::Arc;
 
 use lift::data::tasks::{TaskFamily, TaskMixSource, TaskSet};
-use lift::lift::LiftCfg;
+use lift::exp::harness::{mask_requests, measure_mask_refresh, tiny_layer_shapes};
+use lift::lift::engine::{default_workers, MaskEngine};
+use lift::lift::{LiftCfg, Selector};
 use lift::methods::{make_method, Method, Scope};
-use lift::runtime::{model_exec::ModelExec, Runtime};
+use lift::runtime::{model_exec::ModelExec, ArtifactStatus, Linalg, Runtime};
+use lift::tensor::Tensor;
 use lift::train::{eval, pretrain, train, TrainCfg};
+use lift::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     lift::util::logging::init();
-    let rt = Runtime::from_default()?;
+    // `?` on a present-but-broken artifacts dir fails loudly rather than
+    // masking itself as the selftest passing; the skip policy lives in
+    // Runtime::artifact_status
+    let rt = match Runtime::artifact_status()? {
+        ArtifactStatus::Ready(rt) => rt,
+        ArtifactStatus::StubOnly => {
+            println!("AOT artifacts present, but this build links the xla stub.");
+            println!("Running the artifact-free mask-engine selftest instead.");
+            println!("(link the native xla crate for the full workflow)\n");
+            return selftest();
+        }
+        ArtifactStatus::Missing(e) => {
+            println!("AOT artifacts not generated: {e}");
+            println!("Running the artifact-free mask-engine selftest instead.");
+            println!("For the full workflow: `make artifacts` (needs python + jax).\n");
+            return selftest();
+        }
+    };
     let exec = ModelExec::load(&rt, "tiny")?;
     println!(
         "model: {} ({:.2}M params, d={}, {} layers)",
@@ -77,5 +105,39 @@ fn main() -> anyhow::Result<()> {
         100.0 * method.trainable() as f64 / exec.preset.n_params() as f64,
         method.opt_bytes() / 1024
     );
+    Ok(())
+}
+
+/// Artifact-free smoke path: principal-weight selection for a
+/// tiny-preset-shaped model through the layer-parallel `MaskEngine`,
+/// checking the determinism contract and printing the measured speedup.
+fn selftest() -> anyhow::Result<()> {
+    let la = Arc::new(Linalg::new(&xla::PjRtClient::cpu()?));
+    let shapes = tiny_layer_shapes();
+    let mut rng = Rng::new(1);
+    let ws: Vec<Tensor> = shapes
+        .iter()
+        .map(|&(m, n)| Tensor::randn(&[m, n], 0.05, &mut rng))
+        .collect();
+    let reqs = mask_requests(&ws, 32);
+    let cfg = LiftCfg {
+        rank: 32,
+        ..Default::default()
+    };
+    let workers = default_workers();
+    let seq = MaskEngine::with_workers(la.clone(), 1).select_all(Selector::Lift, &cfg, &reqs, 7)?;
+    let par = MaskEngine::with_workers(la.clone(), workers)
+        .select_all(Selector::Lift, &cfg, &reqs, 7)?;
+    anyhow::ensure!(seq == par, "selftest: parallel masks diverged from sequential");
+    let selected: usize = seq.iter().map(|m| m.len()).sum();
+    let total: usize = shapes.iter().map(|&(m, n)| m * n).sum();
+    println!(
+        "mask selftest OK: {} matrices, {selected}/{total} weights selected \
+         ({:.1}%), parallel == sequential with {workers} workers",
+        shapes.len(),
+        100.0 * selected as f64 / total as f64
+    );
+    let row = measure_mask_refresh(&la, &shapes, 32, 32, workers, 3)?;
+    println!("{}", row.row());
     Ok(())
 }

@@ -2,21 +2,31 @@
 //! offline; util::bench provides the harness). Run with `cargo bench`.
 //!
 //! Sections map to the §Perf plan in DESIGN.md / EXPERIMENTS.md:
-//!   [step]    L2+L3 train/eval step latency per preset
-//!   [mask]    LIFT mask construction: artifact kernel vs rust-built graph
-//!             vs exact host SVD, per shape and rank
-//!   [adam]    sparse Adam: host loop vs Pallas kernel via PJRT
-//!   [marshal] literal marshalling overhead (params -> device)
-//!   [linalg]  matmul throughput through the XlaBuilder toolkit
-//!   [data]    batch generation throughput
-//!   [e2e]     full optimizer step for lift / full / lora
+//!   [step]         L2+L3 train/eval step latency per preset
+//!   [mask]         LIFT mask construction: artifact kernel vs rust-built
+//!                  graph vs exact host SVD, per shape and rank
+//!   [mask-refresh] full-model batched refresh: sequential vs
+//!                  layer-parallel MaskEngine (ISSUE-1 acceptance row)
+//!   [adam]         sparse Adam: host loop vs Pallas kernel via PJRT
+//!   [marshal]      literal marshalling overhead (params -> device)
+//!   [linalg]       matmul throughput through the XlaBuilder toolkit
+//!   [data]         batch generation throughput
+//!   [e2e]          full optimizer step for lift / full / lora
+//!
+//! Sections that need AOT artifacts ([step], [data], [e2e], the kernel
+//! halves of [mask]/[adam]) skip themselves when `make artifacts` has
+//! not run; everything routed through the XlaBuilder toolkit still runs.
+
+use std::sync::Arc;
 
 use lift::data::tasks::{TaskFamily, TaskMixSource, TaskSet};
 use lift::data::BatchSource;
+use lift::exp::harness::measure_mask_refresh;
+use lift::lift::engine::default_workers;
 use lift::lift::{budget_for, principal_indices, LiftCfg};
 use lift::methods::{make_method, Scope};
 use lift::optim::{AdamCfg, KernelAdam, SparseAdam};
-use lift::runtime::{model_exec::ModelExec, Linalg, Runtime};
+use lift::runtime::{model_exec::ModelExec, ArtifactStatus, Linalg, Runtime};
 use lift::tensor::Tensor;
 use lift::train::pretrain;
 use lift::util::bench::Bencher;
@@ -26,32 +36,55 @@ fn main() -> anyhow::Result<()> {
     lift::util::logging::init();
     let fast = std::env::args().any(|a| a == "--fast");
     let mut b = if fast { Bencher::fast() } else { Bencher::default() };
-    let rt = Runtime::from_default()?;
-    let la = Linalg::new(&rt.client);
+    // `?` on a broken artifacts dir aborts the bench loudly; the skip
+    // policy itself lives in Runtime::artifact_status
+    let rt = match Runtime::artifact_status()? {
+        ArtifactStatus::Ready(rt) => Some(rt),
+        ArtifactStatus::StubOnly => {
+            println!(
+                "(artifacts present but this build links the host-interpreter xla \
+                 stub — artifact-backed sections skipped; link the native xla crate)"
+            );
+            None
+        }
+        ArtifactStatus::Missing(e) => {
+            println!("(artifacts not generated — artifact-backed sections skipped: {e})");
+            None
+        }
+    };
+    let client = match &rt {
+        Some(rt) => rt.client.clone(),
+        None => xla::PjRtClient::cpu()?,
+    };
+    // one shared toolkit: the [mask] benches warm the same compile cache
+    // the [mask-refresh] engine measurement then reuses
+    let la = Arc::new(Linalg::new(&client));
     let mut rng = Rng::new(1);
 
-    println!("\n-- [step] model step latency --");
-    for preset in ["tiny", "small", "base"] {
-        if !rt.manifest.presets.contains_key(preset) {
-            continue;
+    if let Some(rt) = &rt {
+        println!("\n-- [step] model step latency --");
+        for preset in ["tiny", "small", "base"] {
+            if !rt.manifest.presets.contains_key(preset) {
+                continue;
+            }
+            let exec = ModelExec::load(rt, preset)?;
+            let params = lift::model::init_params(&exec.preset, &mut rng);
+            let mut corpus = pretrain::world(&exec);
+            let batch = corpus.next_batch(&mut rng);
+            let toks = exec.preset.batch * exec.preset.seq;
+            b.bench(&format!("train_step/{preset}"), || {
+                let _ = exec.train_step(&params, &batch).unwrap();
+            });
+            let mean = b.results.last().unwrap().mean_ns;
+            println!(
+                "{:<44} {:.0} tokens/s",
+                format!("train_step/{preset} [throughput]"),
+                toks as f64 / (mean / 1e9)
+            );
+            b.bench(&format!("eval_step/{preset}"), || {
+                let _ = exec.eval_step(&params, &batch).unwrap();
+            });
         }
-        let exec = ModelExec::load(&rt, preset)?;
-        let params = lift::model::init_params(&exec.preset, &mut rng);
-        let mut corpus = pretrain::world(&exec);
-        let batch = corpus.next_batch(&mut rng);
-        let toks = exec.preset.batch * exec.preset.seq;
-        b.bench(&format!("train_step/{preset}"), || {
-            let _ = exec.train_step(&params, &batch).unwrap();
-        });
-        let mean = b.results.last().unwrap().mean_ns;
-        println!(
-            "{:<44} {:.0} tokens/s",
-            format!("train_step/{preset} [throughput]"),
-            toks as f64 / (mean / 1e9)
-        );
-        b.bench(&format!("eval_step/{preset}"), || {
-            let _ = exec.eval_step(&params, &batch).unwrap();
-        });
     }
 
     println!("\n-- [mask] LIFT mask construction (128x352, rank-32 budget) --");
@@ -68,14 +101,30 @@ fn main() -> anyhow::Result<()> {
         });
     }
     // artifact kernel path (Pallas subspace-iteration lowering)
-    if let Some(file) = rt.manifest.kernels.get("svd_128x352_r40") {
-        let exe = rt.load_artifact(file)?;
-        let g0 = Tensor::randn(&[352, 40], 1.0, &mut rng);
-        let wl = lift::runtime::literal::tensor_to_literal(&w)?;
-        let gl = lift::runtime::literal::tensor_to_literal(&g0)?;
-        b.bench("mask/artifact_svd_r32", || {
-            let _ = exe.execute(&[&wl, &gl]).unwrap();
-        });
+    if let Some(rt) = &rt {
+        if let Some(file) = rt.manifest.kernels.get("svd_128x352_r40") {
+            let exe = rt.load_artifact(file)?;
+            let g0 = Tensor::randn(&[352, 40], 1.0, &mut rng);
+            let wl = lift::runtime::literal::tensor_to_literal(&w)?;
+            let gl = lift::runtime::literal::tensor_to_literal(&g0)?;
+            b.bench("mask/artifact_svd_r32", || {
+                let _ = exe.execute(&[&wl, &gl]).unwrap();
+            });
+        }
+    }
+
+    println!("\n-- [mask-refresh] batched refresh: sequential vs layer-parallel --");
+    {
+        // a tiny-preset-shaped model, several layers' worth of matrices
+        let layers = if fast { 2 } else { 4 };
+        let mut shapes = Vec::new();
+        for _ in 0..layers {
+            shapes.extend(lift::exp::harness::tiny_layer_shapes());
+        }
+        let workers = default_workers();
+        let reps = if fast { 2 } else { 5 };
+        let row = measure_mask_refresh(&la, &shapes, 32, 32, workers, reps)?;
+        println!("{}", row.row());
     }
 
     println!("\n-- [adam] sparse AdamW step (k = 65536) --");
@@ -86,14 +135,16 @@ fn main() -> anyhow::Result<()> {
     b.bench("adam/host_packed", || {
         host.step(&mut p, &g, 1e-4);
     });
-    let kern = KernelAdam::new(&rt, kk)?;
-    let (mut m, mut v) = (vec![0.0f32; kk], vec![0.0f32; kk]);
-    let mut t = 0usize;
-    b.bench("adam/pallas_kernel", || {
-        t += 1;
-        kern.step(&mut p, &g, &mut m, &mut v, &AdamCfg::default(), t, 1e-4)
-            .unwrap();
-    });
+    if let Some(rt) = &rt {
+        let kern = KernelAdam::new(rt, kk)?;
+        let (mut m, mut v) = (vec![0.0f32; kk], vec![0.0f32; kk]);
+        let mut t = 0usize;
+        b.bench("adam/pallas_kernel", || {
+            t += 1;
+            kern.step(&mut p, &g, &mut m, &mut v, &AdamCfg::default(), t, 1e-4)
+                .unwrap();
+        });
+    }
 
     println!("\n-- [marshal] literal marshalling --");
     let big = Tensor::randn(&[1024, 1024], 1.0, &mut rng);
@@ -113,44 +164,46 @@ fn main() -> anyhow::Result<()> {
         println!("{:<44} {gflops:.2} GFLOP/s", format!("linalg/matmul_{n} [rate]"));
     }
 
-    println!("\n-- [data] batch generation --");
-    let exec = ModelExec::load(&rt, "tiny")?;
-    let corpus = pretrain::world(&exec);
-    let set = TaskSet::generate(TaskFamily::GsmHard, &corpus.vocab, &corpus.kg, 500, 50, 1);
-    let mut mix = TaskMixSource {
-        sets: vec![set],
-        batch: exec.preset.batch,
-        seq: exec.preset.seq,
-    };
-    let mut corpus2 = pretrain::world(&exec);
-    b.bench("data/corpus_batch", || {
-        let _ = corpus2.next_batch(&mut rng);
-    });
-    b.bench("data/task_batch", || {
-        let _ = mix.next_batch(&mut rng);
-    });
-
-    println!("\n-- [e2e] one full fine-tune step (tiny, incl. grads) --");
-    for mname in ["lift", "full", "lora"] {
-        let exec = ModelExec::load(&rt, "tiny")?;
-        let mut params = lift::model::init_params(&exec.preset, &mut rng);
-        let mut ctx = pretrain::make_ctx(&rt, &exec, 1);
-        let mut method = make_method(
-            mname,
-            32,
-            LiftCfg { rank: 32, ..Default::default() },
-            1_000_000, // no refresh inside the bench
-            Scope::default(),
-        )?;
-        use lift::methods::Method;
-        method.init(&mut ctx, &params)?;
-        let batch = corpus.eval_batches(1, 5).remove(0);
-        let mut step = 0usize;
-        b.bench(&format!("e2e/step_{mname}"), || {
-            let (_, grads) = exec.train_step(&params, &batch).unwrap();
-            method.step(&mut ctx, &mut params, &grads, step, 1e-4).unwrap();
-            step += 1;
+    if let Some(rt) = &rt {
+        println!("\n-- [data] batch generation --");
+        let exec = ModelExec::load(rt, "tiny")?;
+        let corpus = pretrain::world(&exec);
+        let set = TaskSet::generate(TaskFamily::GsmHard, &corpus.vocab, &corpus.kg, 500, 50, 1);
+        let mut mix = TaskMixSource {
+            sets: vec![set],
+            batch: exec.preset.batch,
+            seq: exec.preset.seq,
+        };
+        let mut corpus2 = pretrain::world(&exec);
+        b.bench("data/corpus_batch", || {
+            let _ = corpus2.next_batch(&mut rng);
         });
+        b.bench("data/task_batch", || {
+            let _ = mix.next_batch(&mut rng);
+        });
+
+        println!("\n-- [e2e] one full fine-tune step (tiny, incl. grads) --");
+        for mname in ["lift", "full", "lora"] {
+            let exec = ModelExec::load(rt, "tiny")?;
+            let mut params = lift::model::init_params(&exec.preset, &mut rng);
+            let mut ctx = pretrain::make_ctx(rt, &exec, 1);
+            let mut method = make_method(
+                mname,
+                32,
+                LiftCfg { rank: 32, ..Default::default() },
+                1_000_000, // no refresh inside the bench
+                Scope::default(),
+            )?;
+            use lift::methods::Method;
+            method.init(&mut ctx, &params)?;
+            let batch = corpus.eval_batches(1, 5).remove(0);
+            let mut step = 0usize;
+            b.bench(&format!("e2e/step_{mname}"), || {
+                let (_, grads) = exec.train_step(&params, &batch).unwrap();
+                method.step(&mut ctx, &mut params, &grads, step, 1e-4).unwrap();
+                step += 1;
+            });
+        }
     }
 
     println!("\n{} benches done.", b.results.len());

@@ -1,21 +1,25 @@
-//! Shared experiment harness: pretrain-once, fine-tune-many machinery.
+//! Shared experiment harness: pretrain-once, fine-tune-many machinery,
+//! plus the mask-refresh speedup measurement (the ISSUE-1 acceptance row).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::data::tasks::{TaskMixSource, TaskSet};
 use crate::data::{CorpusGen, TaskFamily};
-use crate::lift::LiftCfg;
+use crate::lift::engine::MaskEngine;
+use crate::lift::{budget_for, LiftCfg, MaskRequest, Selector};
 use crate::methods::{make_method, Scope};
 use crate::runtime::model_exec::ModelExec;
-use crate::runtime::Runtime;
+use crate::runtime::{Linalg, Runtime};
 use crate::tensor::Tensor;
 use crate::train::{eval, pretrain, train, TrainCfg, TrainLog};
 use crate::util::cli::Args;
 use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
 
 pub fn default_pretrain_steps(preset: &str) -> usize {
     // sized so each preset sees enough tokens to memorize its KG tier
@@ -249,6 +253,100 @@ pub fn run_ft_from(
         trainable: method.trainable(),
         opt_bytes: method.opt_bytes(),
         params: Some((base, params)),
+    })
+}
+
+/// One tiny-preset layer's trainable-matrix shapes (wq/wk/wv/wo `d x d`,
+/// wup `d x ffn`, wdown `ffn x d`). Shared by the bench, the quickstart
+/// selftest, and the speedup measurement so a preset change is edited in
+/// one place.
+pub fn tiny_layer_shapes() -> [(usize, usize); 6] {
+    let (d, ffn) = (128, 352);
+    [(d, d), (d, d), (d, d), (d, d), (d, ffn), (ffn, d)]
+}
+
+/// Weight-only mask requests over caller-owned tensors: `tag` = index,
+/// `k` = the LoRA-rank-equivalent budget.
+pub fn mask_requests(ws: &[Tensor], rank_equiv: usize) -> Vec<MaskRequest<'_>> {
+    ws.iter()
+        .enumerate()
+        .map(|(i, w)| {
+            let (m, n) = w.dims2();
+            MaskRequest {
+                tag: i as u64,
+                w,
+                grad: None,
+                score: None,
+                k: budget_for(m, n, rank_equiv),
+            }
+        })
+        .collect()
+}
+
+/// Measured sequential-vs-parallel wall clock of one full mask refresh.
+#[derive(Clone, Debug)]
+pub struct MaskSpeedup {
+    pub workers: usize,
+    pub matrices: usize,
+    pub seq_s: f64,
+    pub par_s: f64,
+    pub speedup: f64,
+}
+
+impl MaskSpeedup {
+    /// One printable results row (the "measured, not asserted" line).
+    pub fn row(&self) -> String {
+        format!(
+            "mask_refresh {:>2} matrices | seq {:>8.3}s | {}w {:>8.3}s | speedup {:.2}x",
+            self.matrices, self.seq_s, self.workers, self.par_s, self.speedup
+        )
+    }
+}
+
+/// Time a full LIFT mask refresh over synthetic preset-shaped matrices,
+/// sequential (1 worker) vs layer-parallel (`workers`). Best-of-`reps`
+/// per side to damp scheduler noise; both sides produce bit-identical
+/// masks (the determinism tests assert this; here it is debug-checked).
+pub fn measure_mask_refresh(
+    la: &Arc<Linalg>,
+    shapes: &[(usize, usize)],
+    lra_rank: usize,
+    rank_equiv: usize,
+    workers: usize,
+    reps: usize,
+) -> Result<MaskSpeedup> {
+    let mut rng = Rng::new(0x5eed_11f7);
+    let ws: Vec<Tensor> = shapes
+        .iter()
+        .map(|&(m, n)| Tensor::randn(&[m, n], 0.05, &mut rng))
+        .collect();
+    let reqs = mask_requests(&ws, rank_equiv);
+    let cfg = LiftCfg {
+        rank: lra_rank,
+        ..Default::default()
+    };
+    let seed = 0xa5ce_17u64;
+    let time_side = |n_workers: usize| -> Result<(f64, Vec<Vec<u32>>)> {
+        let engine = MaskEngine::with_workers(la.clone(), n_workers);
+        // warm the compile caches so both sides time execution, not builds
+        let mut masks = engine.select_all(Selector::Lift, &cfg, &reqs, seed)?;
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = std::time::Instant::now();
+            masks = engine.select_all(Selector::Lift, &cfg, &reqs, seed)?;
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        Ok((best, masks))
+    };
+    let (seq_s, seq_masks) = time_side(1)?;
+    let (par_s, par_masks) = time_side(workers.max(1))?;
+    debug_assert_eq!(seq_masks, par_masks, "parallel masks diverged");
+    Ok(MaskSpeedup {
+        workers: workers.max(1),
+        matrices: shapes.len(),
+        seq_s,
+        par_s,
+        speedup: seq_s / par_s.max(1e-12),
     })
 }
 

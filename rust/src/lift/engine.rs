@@ -1,0 +1,241 @@
+//! Layer-parallel mask engine: one batched, multi-threaded pass that
+//! selects principal weights for every matrix of the model.
+//!
+//! # Threading model
+//!
+//! `select_all` fans the per-matrix pipeline (rank reduction → top-k →
+//! optional block structuring; see `lift::select_indices`) across a pool
+//! of `std::thread::scope` workers. Work is distributed by an atomic
+//! cursor over the request list, so threads steal the next matrix as
+//! they finish — no static partitioning, no idle tail when matrix sizes
+//! are skewed. All workers share one [`Linalg`]: its compile cache is
+//! sharded-locked and executables are immutable `Arc`s, so concurrent
+//! rank reductions only contend for the few microseconds of a cache
+//! probe. Worker count comes from `LIFT_MASK_WORKERS`, else
+//! `available_parallelism`, and can be pinned per engine with
+//! [`MaskEngine::with_workers`].
+//!
+//! # Determinism contract
+//!
+//! Masks are a pure function of `(seed, request.tag, request inputs,
+//! selector, cfg)` — never of the worker count, the scheduling order, or
+//! which thread ran the request. Selection with 1 worker and with N
+//! workers is **bit-identical** (asserted by `rust/tests/engine.rs` for
+//! every `Selector` × `RankStrategy`). Two ingredients make this hold:
+//!
+//! * **RNG-stream derivation**: each request gets its own generator,
+//!   `stream_rng(seed, tag)` = `Rng::new(seed).split(tag)`, a pure
+//!   function of the refresh seed and the request's stable tag (callers
+//!   use the parameter index).
+//!   No RNG state is shared across requests, so execution order cannot
+//!   leak into the sampled values. The caller draws `seed` from its own
+//!   RNG once per refresh, keeping successive refreshes decorrelated.
+//! * **Deterministic kernels**: rank reduction runs through compiled
+//!   executables whose results depend only on their inputs, and the
+//!   host-side top-k resolves ties by index order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::{select_indices, LiftCfg, Selector};
+use crate::runtime::Linalg;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// One matrix's selection job.
+pub struct MaskRequest<'a> {
+    /// Stable stream tag (callers use the parameter index). The mask for
+    /// a request depends on its tag, never on its position in the batch.
+    pub tag: u64,
+    pub w: &'a Tensor,
+    /// Needed by `Selector::GradMag` (and ignored otherwise).
+    pub grad: Option<&'a Tensor>,
+    /// Needed by `Selector::Movement` (and ignored otherwise).
+    pub score: Option<&'a [f32]>,
+    /// Trainable-parameter budget (top-k size).
+    pub k: usize,
+}
+
+/// Thread-pool scheduler for batched principal-weight selection.
+pub struct MaskEngine {
+    la: Arc<Linalg>,
+    workers: usize,
+}
+
+/// Worker count: `LIFT_MASK_WORKERS` if set, else the machine's available
+/// parallelism, else 1.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("LIFT_MASK_WORKERS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Derive the independent RNG stream for `(seed, tag)`. Pure function
+/// of its inputs; delegates to [`Rng::split`] so the codebase has one
+/// canonical stream-derivation scheme.
+pub fn stream_rng(seed: u64, tag: u64) -> Rng {
+    Rng::new(seed).split(tag)
+}
+
+impl MaskEngine {
+    pub fn new(la: Arc<Linalg>) -> MaskEngine {
+        Self::with_workers(la, default_workers())
+    }
+
+    pub fn with_workers(la: Arc<Linalg>, workers: usize) -> MaskEngine {
+        MaskEngine {
+            la,
+            workers: workers.max(1),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn select_one(
+        &self,
+        sel: Selector,
+        cfg: &LiftCfg,
+        req: &MaskRequest,
+        seed: u64,
+    ) -> Result<Vec<u32>> {
+        let mut rng = stream_rng(seed, req.tag);
+        select_indices(sel, &self.la, req.w, req.grad, req.score, req.k, cfg, &mut rng)
+    }
+
+    /// Compute the mask for every request. Identical output for any
+    /// worker count (see the determinism contract above); errors are
+    /// reported for the lowest-index failing request.
+    pub fn select_all(
+        &self,
+        sel: Selector,
+        cfg: &LiftCfg,
+        reqs: &[MaskRequest],
+        seed: u64,
+    ) -> Result<Vec<Vec<u32>>> {
+        let n_workers = self.workers.min(reqs.len()).max(1);
+        if n_workers == 1 {
+            return reqs
+                .iter()
+                .map(|r| self.select_one(sel, cfg, r, seed))
+                .collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<Vec<u32>>>>> =
+            reqs.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|s| {
+            for _ in 0..n_workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= reqs.len() {
+                        break;
+                    }
+                    let res = self.select_one(sel, cfg, &reqs[i], seed);
+                    *slots[i].lock().expect("mask slot poisoned") = Some(res);
+                });
+            }
+        });
+        let mut out = Vec::with_capacity(reqs.len());
+        for slot in slots {
+            let res = slot
+                .into_inner()
+                .expect("mask slot poisoned")
+                .expect("worker left a slot unfilled");
+            out.push(res?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(workers: usize) -> MaskEngine {
+        let la = Arc::new(Linalg::new(&xla::PjRtClient::cpu().unwrap()));
+        MaskEngine::with_workers(la, workers)
+    }
+
+    fn requests(ws: &[Tensor], k: usize) -> Vec<MaskRequest<'_>> {
+        ws.iter()
+            .enumerate()
+            .map(|(i, w)| MaskRequest {
+                tag: i as u64,
+                w,
+                grad: None,
+                score: None,
+                k,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn stream_rng_is_tag_keyed() {
+        let a: Vec<u64> = (0..4).map(|_| stream_rng(7, 1).next_u64()).collect();
+        assert!(a.windows(2).all(|w| w[0] == w[1]), "same (seed, tag) repeats");
+        assert_ne!(stream_rng(7, 1).next_u64(), stream_rng(7, 2).next_u64());
+        assert_ne!(stream_rng(7, 1).next_u64(), stream_rng(8, 1).next_u64());
+    }
+
+    #[test]
+    fn parallel_equals_sequential_smoke() {
+        let mut rng = Rng::new(3);
+        let ws: Vec<Tensor> = (0..6)
+            .map(|_| Tensor::randn(&[24, 18], 1.0, &mut rng))
+            .collect();
+        let cfg = LiftCfg {
+            rank: 4,
+            ..Default::default()
+        };
+        let seq = engine(1)
+            .select_all(Selector::Lift, &cfg, &requests(&ws, 60), 99)
+            .unwrap();
+        let par = engine(4)
+            .select_all(Selector::Lift, &cfg, &requests(&ws, 60), 99)
+            .unwrap();
+        assert_eq!(seq, par);
+        assert!(seq.iter().all(|m| m.len() == 60));
+    }
+
+    #[test]
+    fn masks_do_not_depend_on_batch_order() {
+        let mut rng = Rng::new(5);
+        let ws: Vec<Tensor> = (0..4)
+            .map(|_| Tensor::randn(&[16, 12], 1.0, &mut rng))
+            .collect();
+        let cfg = LiftCfg {
+            rank: 3,
+            ..Default::default()
+        };
+        let eng = engine(2);
+        let fwd = eng
+            .select_all(Selector::Lift, &cfg, &requests(&ws, 30), 1)
+            .unwrap();
+        // same requests, reversed batch order, same tags
+        let mut rev_reqs = requests(&ws, 30);
+        rev_reqs.reverse();
+        let mut rev = eng.select_all(Selector::Lift, &cfg, &rev_reqs, 1).unwrap();
+        rev.reverse();
+        assert_eq!(fwd, rev);
+    }
+
+    #[test]
+    fn errors_surface_from_parallel_path() {
+        let mut rng = Rng::new(7);
+        let ws: Vec<Tensor> = (0..3)
+            .map(|_| Tensor::randn(&[8, 8], 1.0, &mut rng))
+            .collect();
+        // GradMag without gradients must error, not hang or panic
+        let cfg = LiftCfg::default();
+        let err = engine(4).select_all(Selector::GradMag, &cfg, &requests(&ws, 10), 1);
+        assert!(err.is_err());
+    }
+}

@@ -9,7 +9,13 @@
 //! Every alternative selection criterion the paper compares against
 //! (weight magnitude, gradient magnitude, movement score, random) lives
 //! here too, behind the same `Selector` interface, so Fig. 2/3 and the
-//! ablations are one code path.
+//! ablations are one code path — including the layer-parallel batched
+//! path in [`engine`], which fans selection across worker threads with a
+//! bit-identical-to-sequential determinism contract.
+
+pub mod engine;
+
+pub use engine::{MaskEngine, MaskRequest};
 
 use anyhow::Result;
 

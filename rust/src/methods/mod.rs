@@ -12,7 +12,7 @@ pub mod s2ft;
 pub mod sparse_ft;
 pub mod spiel;
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -23,18 +23,37 @@ use crate::runtime::Linalg;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
-/// Shared context handed to every method call.
+/// Shared context handed to every method call. `la` is an `Arc` so the
+/// layer-parallel mask engine can share the linalg toolkit (and its
+/// compile caches) across its worker threads.
 pub struct Ctx {
-    pub la: Rc<Linalg>,
+    pub la: Arc<Linalg>,
     pub preset: PresetInfo,
     pub rng: Rng,
     pub adam: AdamCfg,
+    /// Worker threads for batched mask selection (`lift::engine`);
+    /// 1 forces the sequential path. Masks are bit-identical either way.
+    pub mask_workers: usize,
 }
 
 pub trait Method {
     fn name(&self) -> String;
     /// Called once before training with the initial parameters.
     fn init(&mut self, ctx: &mut Ctx, params: &[Tensor]) -> Result<()>;
+    /// Batched mask maintenance, issued by the trainer once per step
+    /// *before* `step` (so selectors that need gradients see this step's
+    /// grads). Sparse methods recompute/migrate every matrix's mask in
+    /// one layer-parallel engine call; dense/adapter methods keep the
+    /// default no-op.
+    fn refresh_all(
+        &mut self,
+        _ctx: &mut Ctx,
+        _params: &[Tensor],
+        _grads: &[Tensor],
+        _step: usize,
+    ) -> Result<()> {
+        Ok(())
+    }
     /// One optimizer step given full grads (param order = manifest).
     fn step(
         &mut self,

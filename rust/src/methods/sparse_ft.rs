@@ -5,14 +5,21 @@
 //!   * masks are computed lazily on the first step (GradMag/Movement need
 //!     a gradient) and refreshed every `refresh_interval` steps
 //!     (`0` = fixed mask for the whole run, as in SIFT);
+//!   * every (re)selection is ONE batched `MaskEngine::select_all` call
+//!     that fans all matrices across worker threads — the trainer drives
+//!     it through `Method::refresh_all`. Masks are a pure function of
+//!     the run's RNG draw and each matrix's parameter index (see the
+//!     engine's determinism contract), so worker count never changes
+//!     which weights train;
 //!   * on refresh the packed Adam moments migrate through
-//!     `SparseAdam::refresh` — surviving entries keep state.
+//!     `optim::sparse::refresh_all` — surviving entries keep state.
 
 use anyhow::Result;
 
 use super::{Ctx, Method, Scope};
-use crate::lift::{budget_for, select_indices, LiftCfg, Selector};
-use crate::optim::SparseAdam;
+use crate::lift::engine::MaskEngine;
+use crate::lift::{budget_for, LiftCfg, MaskRequest, Selector};
+use crate::optim::{self, SparseAdam};
 use crate::tensor::Tensor;
 
 pub struct SparseFt {
@@ -29,6 +36,11 @@ pub struct SparseFt {
     scores: Vec<Vec<f32>>,
     matrices: Vec<usize>,
     initialized: bool,
+    /// last step that ran mask maintenance (score accumulation, init,
+    /// interval refresh), so drivers that call `step` directly (without
+    /// the trainer's `refresh_all`) still get periodic refreshes, and
+    /// trainer-driven runs don't maintain twice per step
+    last_maintained_step: Option<usize>,
     /// mask-overlap across refreshes, for diagnostics (mean over matrices)
     pub last_refresh_overlap: f64,
 }
@@ -53,6 +65,7 @@ impl SparseFt {
             scores: Vec::new(),
             matrices: Vec::new(),
             initialized: false,
+            last_maintained_step: None,
             last_refresh_overlap: 1.0,
         }
     }
@@ -69,31 +82,95 @@ impl SparseFt {
         budget_for(shape[0], shape[1], self.rank)
     }
 
+    /// Movement scores accumulate once per trainer step: S += -w * g
+    /// (the caller, `maintain`, guarantees once-per-step).
+    fn accumulate_scores(&mut self, params: &[Tensor], grads: &[Tensor]) {
+        if self.selector != Selector::Movement {
+            return;
+        }
+        for (mi, &pi) in self.matrices.iter().enumerate() {
+            let (w, g) = (&params[pi], &grads[pi]);
+            let s = &mut self.scores[mi];
+            for i in 0..s.len() {
+                s[i] -= w.data[i] * g.data[i];
+            }
+        }
+    }
+
+    /// One batched, layer-parallel selection over every matrix in scope.
     fn compute_masks(
-        &mut self,
+        &self,
         ctx: &mut Ctx,
         params: &[Tensor],
         grads: Option<&[Tensor]>,
     ) -> Result<Vec<Vec<u32>>> {
-        let mut masks = Vec::with_capacity(self.matrices.len());
-        for (mi, &pi) in self.matrices.clone().iter().enumerate() {
-            let w = &params[pi];
-            let k = self.budget(&w.shape);
-            let g = grads.map(|gs| &gs[pi]);
-            let score = self.scores.get(mi).map(|s| s.as_slice()).filter(|s| !s.is_empty());
-            let idx = select_indices(
-                self.selector,
-                &ctx.la,
-                w,
-                g,
-                score,
-                k,
-                &self.cfg,
-                &mut ctx.rng,
-            )?;
-            masks.push(idx);
+        // one sequential draw per refresh keys every per-matrix stream;
+        // the masks depend on this seed and the param index only, never
+        // on worker count or scheduling order
+        let seed = ctx.rng.next_u64();
+        let engine = MaskEngine::with_workers(ctx.la.clone(), ctx.mask_workers);
+        let reqs: Vec<MaskRequest> = self
+            .matrices
+            .iter()
+            .enumerate()
+            .map(|(mi, &pi)| MaskRequest {
+                tag: pi as u64,
+                w: &params[pi],
+                grad: grads.map(|gs| &gs[pi]),
+                score: self
+                    .scores
+                    .get(mi)
+                    .map(|s| s.as_slice())
+                    .filter(|s| !s.is_empty()),
+                k: self.budget(&params[pi].shape),
+            })
+            .collect();
+        engine.select_all(self.selector, &self.cfg, &reqs, seed)
+    }
+
+    fn init_states(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &[Tensor],
+        grads: Option<&[Tensor]>,
+    ) -> Result<()> {
+        let masks = self.compute_masks(ctx, params, grads)?;
+        self.states = self
+            .matrices
+            .iter()
+            .zip(masks)
+            .map(|(&pi, idx)| (pi, SparseAdam::new(idx, ctx.adam)))
+            .collect();
+        self.initialized = true;
+        Ok(())
+    }
+
+    /// Per-step mask maintenance (score accumulation, lazy init, interval
+    /// refresh) — idempotent per trainer step.
+    fn maintain(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &[Tensor],
+        grads: &[Tensor],
+        step: usize,
+    ) -> Result<()> {
+        if self.last_maintained_step == Some(step) {
+            return Ok(());
         }
-        Ok(masks)
+        self.last_maintained_step = Some(step);
+        self.accumulate_scores(params, grads);
+        if !self.initialized {
+            self.init_states(ctx, params, Some(grads))?;
+        } else if self.refresh_interval > 0 && step > 0 && step % self.refresh_interval == 0 {
+            let masks = self.compute_masks(ctx, params, Some(grads))?;
+            self.last_refresh_overlap = optim::refresh_all(&mut self.states, masks);
+            log::debug!(
+                "{}: mask refresh at step {step}, overlap {:.3}",
+                self.label,
+                self.last_refresh_overlap
+            );
+        }
+        Ok(())
     }
 }
 
@@ -115,16 +192,25 @@ impl Method for SparseFt {
         // selectors that don't need gradients can build masks now;
         // GradMag/Movement wait for the first step
         if !matches!(self.selector, Selector::GradMag | Selector::Movement) {
-            let masks = self.compute_masks(ctx, params, None)?;
-            self.states = self
-                .matrices
-                .iter()
-                .zip(masks)
-                .map(|(&pi, idx)| (pi, SparseAdam::new(idx, ctx.adam)))
-                .collect();
-            self.initialized = true;
+            self.init_states(ctx, params, None)?;
         }
         Ok(())
+    }
+
+    /// The trainer-issued batched refresh: lazy first-step selection for
+    /// gradient-needing selectors, then periodic re-selection + moment
+    /// migration every `refresh_interval` steps. `step` runs the same
+    /// maintenance when the trainer didn't, so direct-`step` drivers keep
+    /// the seed's refresh behavior; `last_maintained_step` makes the two
+    /// entry points idempotent per trainer step.
+    fn refresh_all(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &[Tensor],
+        grads: &[Tensor],
+        step: usize,
+    ) -> Result<()> {
+        self.maintain(ctx, params, grads, step)
     }
 
     fn step(
@@ -135,39 +221,15 @@ impl Method for SparseFt {
         step: usize,
         lr: f32,
     ) -> Result<()> {
-        // movement scores accumulate every step: S += -w * g
-        if self.selector == Selector::Movement {
-            for (mi, &pi) in self.matrices.iter().enumerate() {
-                let (w, g) = (&params[pi], &grads[pi]);
-                let s = &mut self.scores[mi];
-                for i in 0..s.len() {
-                    s[i] -= w.data[i] * g.data[i];
-                }
-            }
-        }
-        if !self.initialized {
-            let masks = self.compute_masks(ctx, params, Some(grads))?;
-            self.states = self
-                .matrices
-                .iter()
-                .zip(masks)
-                .map(|(&pi, idx)| (pi, SparseAdam::new(idx, ctx.adam)))
-                .collect();
-            self.initialized = true;
-        } else if self.refresh_interval > 0 && step > 0 && step % self.refresh_interval == 0 {
-            let masks = self.compute_masks(ctx, params, Some(grads))?;
-            let mut overlap = 0.0;
-            for ((_, st), idx) in self.states.iter_mut().zip(masks) {
-                overlap += st.overlap(&idx);
-                st.refresh(idx);
-            }
-            self.last_refresh_overlap = overlap / self.states.len().max(1) as f64;
-            log::debug!(
-                "{}: mask refresh at step {step}, overlap {:.3}",
-                self.label,
-                self.last_refresh_overlap
-            );
-        }
+        self.maintain(ctx, params, grads, step)?;
+        // a driver that swallowed an earlier maintenance error must not
+        // silently train nothing (maintain dedupes per step, so a failed
+        // init is not retried here)
+        anyhow::ensure!(
+            self.initialized,
+            "{}: mask selection never succeeded — no trainable indices",
+            self.label
+        );
         for (pi, st) in self.states.iter_mut() {
             st.step(&mut params[*pi].data, &grads[*pi].data, lr);
         }

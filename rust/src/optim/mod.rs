@@ -3,7 +3,7 @@
 
 pub mod sparse;
 
-pub use sparse::{KernelAdam, SparseAdam};
+pub use sparse::{refresh_all, KernelAdam, SparseAdam};
 
 use crate::tensor::Tensor;
 

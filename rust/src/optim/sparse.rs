@@ -105,11 +105,34 @@ impl SparseAdam {
     }
 }
 
+/// Batched mask refresh across many matrices — the trainer-facing form of
+/// Algorithm 1 lines 5-12. `masks[i]` is the new index set for
+/// `states[i]`; each `SparseAdam` migrates (survivors keep moments, fresh
+/// entries start cold). Returns the mean survivor overlap for
+/// diagnostics. Masks typically come from one layer-parallel
+/// `lift::engine::MaskEngine::select_all` call.
+pub fn refresh_all(states: &mut [(usize, SparseAdam)], masks: Vec<Vec<u32>>) -> f64 {
+    assert_eq!(
+        states.len(),
+        masks.len(),
+        "refresh_all: {} states vs {} masks",
+        states.len(),
+        masks.len()
+    );
+    let n = states.len().max(1);
+    let mut overlap = 0.0;
+    for ((_, st), idx) in states.iter_mut().zip(masks) {
+        overlap += st.overlap(&idx);
+        st.refresh(idx);
+    }
+    overlap / n as f64
+}
+
 /// PJRT-kernel-backed variant: drives the `sparse_adam_<k>` Pallas artifact.
 pub struct KernelAdam<'rt> {
     rt: &'rt Runtime,
     bucket: usize,
-    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
 }
 
 impl<'rt> KernelAdam<'rt> {
@@ -235,6 +258,24 @@ mod tests {
         let j6 = opt.idx.iter().position(|&i| i == 6).unwrap();
         assert_eq!(opt.m[j2], m_at_2, "surviving entry keeps momentum");
         assert_eq!(opt.m[j6], 0.0, "fresh entry starts cold");
+    }
+
+    #[test]
+    fn refresh_all_migrates_every_state() {
+        let mut states = vec![
+            (0usize, SparseAdam::new(vec![1, 2, 3], AdamCfg::default())),
+            (4usize, SparseAdam::new(vec![0, 5], AdamCfg::default())),
+        ];
+        let mut w = vec![0.0f32; 8];
+        for (_, st) in states.iter_mut() {
+            st.step(&mut w, &[1.0; 8], 0.1);
+        }
+        let mean = refresh_all(&mut states, vec![vec![2, 6], vec![0, 5]]);
+        // matrix 0 keeps 1/2 of its mask, matrix 1 keeps 2/2
+        assert!((mean - 0.75).abs() < 1e-12, "mean overlap {mean}");
+        assert_eq!(states[0].1.idx, vec![2, 6]);
+        assert_eq!(states[1].1.idx, vec![0, 5]);
+        assert!(states[1].1.m.iter().all(|&m| m != 0.0), "survivors keep state");
     }
 
     #[test]

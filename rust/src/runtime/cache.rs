@@ -1,0 +1,165 @@
+//! Sharded, thread-safe executable cache.
+//!
+//! The mask engine fans selection across worker threads that all hit the
+//! compile caches; the old `Rc<RefCell<HashMap>>` caches were
+//! single-threaded by construction. `ShardedCache` replaces them with
+//! two levels: mutex-guarded shards that only protect the key → cell
+//! map (held for microseconds), and a per-key cell that serializes the
+//! build. A compile-on-miss therefore blocks *only* other requests for
+//! the same key — never a different key that happens to share the shard
+//! — while still guaranteeing each key is built exactly once.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+const N_SHARDS: usize = 8;
+
+type Cell<V> = Arc<Mutex<Option<Arc<V>>>>;
+
+pub struct ShardedCache<V> {
+    shards: [Mutex<HashMap<String, Cell<V>>>; N_SHARDS],
+}
+
+impl<V> Default for ShardedCache<V> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<V> ShardedCache<V> {
+    pub fn new() -> ShardedCache<V> {
+        ShardedCache {
+            shards: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+        }
+    }
+
+    fn shard(&self, key: &str) -> &Mutex<HashMap<String, Cell<V>>> {
+        &self.shards[fxhash(key) as usize % N_SHARDS]
+    }
+
+    /// Fetch `key`, building and inserting it on a miss. The shard lock
+    /// covers only the map probe; the build itself runs under the key's
+    /// own cell lock, so concurrent misses on *different* keys compile
+    /// in parallel while a given key is still compiled exactly once.
+    /// A failed build leaves the cell empty, so the next caller retries.
+    pub fn get_or_try_insert(
+        &self,
+        key: &str,
+        build: impl FnOnce() -> Result<V>,
+    ) -> Result<Arc<V>> {
+        let cell = {
+            let mut shard = self.shard(key).lock().expect("cache shard poisoned");
+            shard
+                .entry(key.to_string())
+                .or_insert_with(|| Arc::new(Mutex::new(None)))
+                .clone()
+        };
+        let mut slot = cell.lock().expect("cache cell poisoned");
+        if let Some(v) = slot.as_ref() {
+            return Ok(v.clone());
+        }
+        let v = Arc::new(build()?);
+        *slot = Some(v.clone());
+        Ok(v)
+    }
+
+    /// Number of *built* entries (cells whose build has succeeded).
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .flat_map(|s| {
+                s.lock()
+                    .expect("cache shard poisoned")
+                    .values()
+                    .map(|c| c.lock().expect("cache cell poisoned").is_some() as usize)
+                    .collect::<Vec<_>>()
+            })
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_once_per_key() {
+        let cache: ShardedCache<usize> = ShardedCache::new();
+        let a = cache.get_or_try_insert("k", || Ok(1)).unwrap();
+        let b = cache
+            .get_or_try_insert("k", || panic!("must not rebuild"))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn build_errors_do_not_poison() {
+        let cache: ShardedCache<usize> = ShardedCache::new();
+        assert!(cache.get_or_try_insert("k", || anyhow::bail!("nope")).is_err());
+        assert_eq!(cache.len(), 0, "failed build leaves no entry");
+        assert_eq!(*cache.get_or_try_insert("k", || Ok(2)).unwrap(), 2);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let cache: Arc<ShardedCache<String>> = Arc::new(ShardedCache::new());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let cache = cache.clone();
+                s.spawn(move || {
+                    for i in 0..50 {
+                        let key = format!("k{}", i % 10);
+                        let v = cache
+                            .get_or_try_insert(&key, || Ok(key.clone()))
+                            .unwrap();
+                        assert_eq!(*v, key, "thread {t}");
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.len(), 10);
+    }
+
+    #[test]
+    fn slow_build_does_not_block_other_keys() {
+        // a build in progress on one key must not prevent a lookup that
+        // lands in the same shard from completing
+        let cache: Arc<ShardedCache<usize>> = Arc::new(ShardedCache::new());
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        std::thread::scope(|s| {
+            let c1 = cache.clone();
+            s.spawn(move || {
+                let _ = c1.get_or_try_insert("slow", || {
+                    // hold the "slow" cell until the other thread finishes
+                    rx.recv().ok();
+                    Ok(1)
+                });
+            });
+            // probe every other key; one of them shares "slow"'s shard.
+            // if builds held the shard lock this would deadlock with the
+            // sender below never being reached
+            for i in 0..32 {
+                let _ = cache.get_or_try_insert(&format!("fast{i}"), || Ok(i)).unwrap();
+            }
+            tx.send(()).unwrap();
+        });
+        assert_eq!(cache.len(), 33);
+    }
+}

@@ -7,13 +7,19 @@
 //! mirror `python/compile/kernels/subspace_iter.py` exactly (same
 //! Newton–Schulz orthonormalization, same power-iteration count), and
 //! rust/tests cross-check the two paths on the canonical artifact shapes.
+//!
+//! `Linalg` is `Send + Sync`: the compile cache is sharded-locked
+//! (`runtime::cache`) and executables are shared as `Arc`, so the
+//! layer-parallel mask engine (`lift::engine`) can drive one `Linalg`
+//! from all of its worker threads. Graph *construction* still happens on
+//! whichever thread misses the cache; the built executable is immutable
+//! afterwards.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use super::cache::ShardedCache;
 use super::literal::{literal_to_tensor, tensor_to_literal};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
@@ -25,14 +31,14 @@ const EPS_REL: f32 = 1e-6;
 
 pub struct Linalg {
     client: xla::PjRtClient,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    cache: ShardedCache<xla::PjRtLoadedExecutable>,
 }
 
 impl Linalg {
     pub fn new(client: &xla::PjRtClient) -> Linalg {
         Linalg {
             client: client.clone(),
-            cache: RefCell::new(HashMap::new()),
+            cache: ShardedCache::new(),
         }
     }
 
@@ -40,18 +46,17 @@ impl Linalg {
         &self,
         key: &str,
         build: impl FnOnce() -> Result<xla::XlaComputation>,
-    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(key) {
-            return Ok(e.clone());
-        }
-        let comp = build()?;
-        let exe = Rc::new(self.client.compile(&comp).with_context(|| format!("compiling {key}"))?);
-        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
-        Ok(exe)
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.cache.get_or_try_insert(key, || {
+            let comp = build()?;
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {key}"))
+        })
     }
 
     pub fn cache_len(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.len()
     }
 
     /// a (m,k) @ b (k,n), f32, via XLA (Eigen-backed on CPU).
@@ -315,6 +320,26 @@ mod tests {
             err_rand <= err_exact * 1.05 + 1e-4,
             "rand {err_rand} vs exact {err_exact}"
         );
+    }
+
+    #[test]
+    fn linalg_is_shareable_across_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Linalg>();
+        // same Linalg driven from several threads, same numeric results
+        let (la, _c) = linalg();
+        let mut rng = Rng::new(9);
+        let a = Tensor::randn(&[12, 10], 1.0, &mut rng);
+        let b = Tensor::randn(&[10, 7], 1.0, &mut rng);
+        let want = la.matmul(&a, &b).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let got = la.matmul(&a, &b).unwrap();
+                    assert_eq!(got.data, want.data);
+                });
+            }
+        });
     }
 
     #[test]

@@ -6,27 +6,45 @@
 //! once by `make artifacts`; everything else (the linalg toolkit) is built
 //! in-process with `XlaBuilder`.
 
+pub mod cache;
 pub mod linalg;
 pub mod literal;
 pub mod manifest;
 pub mod model_exec;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+pub use cache::ShardedCache;
 pub use linalg::Linalg;
 pub use manifest::Manifest;
 
-/// Shared PJRT CPU client + executable caches.
+/// Artifact availability for surface-level callers (integration tests,
+/// bench, quickstart). Produced by [`Runtime::artifact_status`], which
+/// owns the skip-vs-fail policy so every caller classifies identically:
+/// broken artifacts are a loud `Err`, never a skip.
+pub enum ArtifactStatus {
+    /// Runtime constructed and artifacts execute on this build.
+    Ready(Runtime),
+    /// Artifacts exist but this build links the host-interpreter `xla`
+    /// stub, which cannot execute AOT HLO — skip artifact-backed work
+    /// with an explanation.
+    StubOnly,
+    /// Artifacts were never generated (no manifest) — skip and point at
+    /// `make artifacts`. Carries the original lookup error.
+    Missing(anyhow::Error),
+}
+
+/// Shared PJRT CPU client + executable caches. Thread-safe: artifacts are
+/// cached behind sharded locks and handed out as `Arc`, so engine worker
+/// threads can share one `Runtime`.
 pub struct Runtime {
     pub client: xla::PjRtClient,
     artifacts_dir: PathBuf,
     /// artifact-name -> compiled executable
-    artifact_cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    artifact_cache: ShardedCache<xla::PjRtLoadedExecutable>,
     pub manifest: Manifest,
 }
 
@@ -43,7 +61,7 @@ impl Runtime {
         Ok(Runtime {
             client,
             artifacts_dir: artifacts_dir.to_path_buf(),
-            artifact_cache: RefCell::new(HashMap::new()),
+            artifact_cache: ShardedCache::new(),
             manifest,
         })
     }
@@ -59,28 +77,81 @@ impl Runtime {
         Runtime::new(&Self::default_dir())
     }
 
-    /// Load + compile an artifact HLO file (cached).
-    pub fn load_artifact(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.artifact_cache.borrow().get(file) {
-            return Ok(exe.clone());
-        }
-        let path = self.artifacts_dir.join(file);
-        let t0 = std::time::Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
+    /// Load + compile an artifact HLO file (cached, thread-safe).
+    pub fn load_artifact(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        self.artifact_cache.get_or_try_insert(file, || {
+            let path = self.artifacts_dir.join(file);
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
                 .compile(&comp)
-                .with_context(|| format!("compiling {file}"))?,
-        );
-        log::debug!("compiled artifact {file} in {:.2}s", t0.elapsed().as_secs_f64());
-        self.artifact_cache
-            .borrow_mut()
-            .insert(file.to_string(), exe.clone());
-        Ok(exe)
+                .with_context(|| format!("compiling {file}"))?;
+            log::debug!("compiled artifact {file} in {:.2}s", t0.elapsed().as_secs_f64());
+            Ok(exe)
+        })
+    }
+
+    /// Probe whether this build can actually execute the manifest's AOT
+    /// artifacts: one executable goes through the full parse-and-compile
+    /// path (cached on success). Errors either because the vendored
+    /// host-interpreter `xla` stub is linked — a build-capability gap,
+    /// classified by [`is_stub_refusal`] so callers can skip with an
+    /// explanation — or because the artifacts themselves are broken,
+    /// which callers must surface loudly, not mask as a skip.
+    pub fn probe_artifacts(&self) -> Result<()> {
+        let probe = self
+            .manifest
+            .kernels
+            .values()
+            .next()
+            .cloned()
+            .or_else(|| {
+                self.manifest
+                    .presets
+                    .values()
+                    .next()
+                    .and_then(|p| p.executables.values().next().cloned())
+            });
+        match probe {
+            Some(file) => self.load_artifact(&file).map(|_| ()),
+            None => anyhow::bail!("manifest lists no artifacts"),
+        }
+    }
+
+    /// True when `err` (from [`Runtime::probe_artifacts`] or
+    /// `load_artifact`) is the vendored host-interpreter `xla` stub
+    /// refusing AOT HLO — i.e. the build lacks the native runtime, the
+    /// artifacts themselves are fine. Matches on the `{:#}` rendering,
+    /// which includes the full cause chain under both the vendored
+    /// anyhow stand-in and the crates.io anyhow (whose plain `Display`
+    /// shows only the outermost context).
+    pub fn is_stub_refusal(err: &anyhow::Error) -> bool {
+        format!("{err:#}").contains("host-interpreter stub cannot execute")
+    }
+
+    /// Classify artifact availability with one shared policy (see
+    /// [`ArtifactStatus`]): `Ready` / `StubOnly` / `Missing` are the
+    /// expected states; a present-but-broken artifacts dir is an `Err`
+    /// that callers must surface, never convert into a skip.
+    pub fn artifact_status() -> Result<ArtifactStatus> {
+        let broken =
+            |e: anyhow::Error| e.context("artifacts present but broken — regenerate with `make artifacts`");
+        match Runtime::from_default() {
+            Ok(rt) => match rt.probe_artifacts() {
+                Ok(()) => Ok(ArtifactStatus::Ready(rt)),
+                Err(e) if Self::is_stub_refusal(&e) => Ok(ArtifactStatus::StubOnly),
+                Err(e) => Err(broken(e)),
+            },
+            Err(e) if !Self::default_dir().join("manifest.json").exists() => {
+                Ok(ArtifactStatus::Missing(e))
+            }
+            Err(e) => Err(broken(e)),
+        }
     }
 
     /// Execute an executable whose root is a tuple; returns the flattened

@@ -3,7 +3,7 @@
 //! Owns the compiled artifacts for one preset and the literal marshalling
 //! for each call. Parameter order is exactly `manifest.presets[p].params`.
 
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -36,9 +36,9 @@ impl Batch {
 
 pub struct ModelExec {
     pub preset: PresetInfo,
-    train: Rc<xla::PjRtLoadedExecutable>,
-    eval: Rc<xla::PjRtLoadedExecutable>,
-    probe: std::cell::RefCell<Option<Rc<xla::PjRtLoadedExecutable>>>,
+    train: Arc<xla::PjRtLoadedExecutable>,
+    eval: Arc<xla::PjRtLoadedExecutable>,
+    probe: Mutex<Option<Arc<xla::PjRtLoadedExecutable>>>,
 }
 
 impl ModelExec {
@@ -60,7 +60,7 @@ impl ModelExec {
             preset,
             train,
             eval,
-            probe: std::cell::RefCell::new(None),
+            probe: Mutex::new(None),
         })
     }
 
@@ -138,15 +138,18 @@ impl ModelExec {
 
     /// Next-token distribution at `pos` for a single prompt row (Fig 2b).
     pub fn probe(&self, rt: &Runtime, params: &[Tensor], tokens: &[i32], pos: usize) -> Result<Vec<f32>> {
-        if self.probe.borrow().is_none() {
-            let exe = rt.load_artifact(
-                self.preset
-                    .executables
-                    .get("logits_probe")
-                    .context("manifest missing logits_probe")?,
-            )?;
-            *self.probe.borrow_mut() = Some(exe);
-        }
+        let exe = {
+            let mut probe = self.probe.lock().expect("probe lock poisoned");
+            if probe.is_none() {
+                *probe = Some(rt.load_artifact(
+                    self.preset
+                        .executables
+                        .get("logits_probe")
+                        .context("manifest missing logits_probe")?,
+                )?);
+            }
+            probe.as_ref().unwrap().clone()
+        };
         self.check_params(params)?;
         anyhow::ensure!(tokens.len() == self.preset.seq, "probe prompt must be seq-padded");
         let mut args = Vec::with_capacity(params.len() + 2);
@@ -155,7 +158,6 @@ impl ModelExec {
         }
         args.push(i32_matrix_to_literal(1, self.preset.seq, tokens)?);
         args.push(scalar_i32(pos as i32));
-        let exe = self.probe.borrow().as_ref().unwrap().clone();
         let rt_out = exe.execute::<xla::Literal>(&args)?;
         let mut lit = rt_out[0][0].to_literal_sync()?;
         let parts = lit.decompose_tuple()?;

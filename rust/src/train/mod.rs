@@ -83,6 +83,9 @@ pub fn train(
         let st = std::time::Instant::now();
         let batch = src.next_batch(&mut data_rng);
         let (loss, grads) = exec.train_step(params, &batch)?;
+        // one batched mask-maintenance call (layer-parallel for sparse
+        // methods; no-op for dense/adapter methods), then the update
+        method.refresh_all(ctx, params, &grads, step)?;
         method.step(ctx, params, &grads, step, sched.at(step))?;
         log.losses.push(loss);
         log.step_times.push(st.elapsed().as_secs_f64());

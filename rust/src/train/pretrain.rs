@@ -36,10 +36,11 @@ pub fn runs_dir() -> PathBuf {
 
 pub fn make_ctx(rt: &Runtime, exec: &ModelExec, seed: u64) -> Ctx {
     Ctx {
-        la: std::rc::Rc::new(Linalg::new(&rt.client)),
+        la: std::sync::Arc::new(Linalg::new(&rt.client)),
         preset: exec.preset.clone(),
         rng: Rng::new(seed),
         adam: AdamCfg::default(),
+        mask_workers: crate::lift::engine::default_workers(),
     }
 }
 

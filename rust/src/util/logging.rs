@@ -1,9 +1,14 @@
 //! Leveled stderr logger wired to the `log` facade crate.
 
 use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-static START: once_cell::sync::Lazy<Instant> = once_cell::sync::Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn start() -> Instant {
+    *START.get_or_init(Instant::now)
+}
 
 struct StderrLogger;
 
@@ -16,7 +21,7 @@ impl log::Log for StderrLogger {
         if !self.enabled(record.metadata()) {
             return;
         }
-        let t = START.elapsed().as_secs_f64();
+        let t = start().elapsed().as_secs_f64();
         let lvl = match record.level() {
             Level::Error => "E",
             Level::Warn => "W",
@@ -34,6 +39,7 @@ static LOGGER: StderrLogger = StderrLogger;
 
 /// Install the logger once; level from `LIFT_LOG` (error..trace), default info.
 pub fn init() {
+    let _ = start(); // pin the log epoch to process start
     let level = match std::env::var("LIFT_LOG").as_deref() {
         Ok("error") => LevelFilter::Error,
         Ok("warn") => LevelFilter::Warn,

@@ -1,0 +1,222 @@
+//! Mask-engine contract tests (ISSUE 1):
+//!
+//! * parallel-vs-sequential determinism — for every `Selector` and every
+//!   `RankStrategy`, masks from the layer-parallel engine with 1 worker
+//!   and with N workers are bit-identical under a fixed seed;
+//! * randomized-vs-exact parity — the mask built from `svd_lowrank`
+//!   (randomized subspace iteration) overlaps the exact Jacobi-SVD
+//!   oracle's mask by at least [`PARITY_MIN_OVERLAP`] on synthetic
+//!   low-rank-plus-noise matrices.
+//!
+//! These run without AOT artifacts: the whole pipeline goes through the
+//! XlaBuilder toolkit.
+
+use std::sync::Arc;
+
+use lift::lift::engine::MaskEngine;
+use lift::lift::{
+    budget_for, mask_overlap, principal_indices, LiftCfg, MaskRequest, RankStrategy, Selector,
+};
+use lift::runtime::Linalg;
+use lift::tensor::Tensor;
+use lift::util::rng::Rng;
+
+/// Documented parity threshold: on rank-4 matrices with 5% additive
+/// noise, the randomized rank reduction (2 power iterations, 8
+/// oversampling columns — the `LiftCfg` defaults) recovers the principal
+/// subspace almost exactly, so the two masks agree on well over 85% of
+/// entries; the bound leaves slack for tie-breaks near the top-k
+/// threshold. Tightening the noise raises the overlap toward 1.0.
+const PARITY_MIN_OVERLAP: f64 = 0.85;
+
+fn linalg() -> Arc<Linalg> {
+    Arc::new(Linalg::new(&xla::PjRtClient::cpu().unwrap()))
+}
+
+struct Fixture {
+    ws: Vec<Tensor>,
+    gs: Vec<Tensor>,
+    scores: Vec<Vec<f32>>,
+    ks: Vec<usize>,
+}
+
+impl Fixture {
+    fn new(seed: u64, rank_equiv: usize) -> Fixture {
+        let mut rng = Rng::new(seed);
+        let shapes = [(24usize, 16usize), (16, 32), (20, 20), (12, 40), (28, 12)];
+        let ws: Vec<Tensor> = shapes
+            .iter()
+            .map(|&(m, n)| Tensor::randn(&[m, n], 1.0, &mut rng))
+            .collect();
+        let gs: Vec<Tensor> = shapes
+            .iter()
+            .map(|&(m, n)| Tensor::randn(&[m, n], 1.0, &mut rng))
+            .collect();
+        let scores: Vec<Vec<f32>> = shapes
+            .iter()
+            .map(|&(m, n)| rng.normal_vec(m * n, 1.0))
+            .collect();
+        let ks = shapes
+            .iter()
+            .map(|&(m, n)| budget_for(m, n, rank_equiv))
+            .collect();
+        Fixture { ws, gs, scores, ks }
+    }
+
+    fn requests(&self) -> Vec<MaskRequest<'_>> {
+        self.ws
+            .iter()
+            .enumerate()
+            .map(|(i, w)| MaskRequest {
+                tag: i as u64,
+                w,
+                grad: Some(&self.gs[i]),
+                score: Some(&self.scores[i]),
+                k: self.ks[i],
+            })
+            .collect()
+    }
+}
+
+fn assert_seq_eq_par(sel: Selector, cfg: &LiftCfg, fix: &Fixture, seed: u64, label: &str) {
+    let la = linalg();
+    let seq = MaskEngine::with_workers(la.clone(), 1)
+        .select_all(sel, cfg, &fix.requests(), seed)
+        .unwrap();
+    let par = MaskEngine::with_workers(la, 4)
+        .select_all(sel, cfg, &fix.requests(), seed)
+        .unwrap();
+    assert_eq!(seq, par, "{label}: parallel masks != sequential masks");
+    for (mi, mask) in seq.iter().enumerate() {
+        assert_eq!(mask.len(), fix.ks[mi], "{label}: matrix {mi} budget");
+        assert!(
+            mask.windows(2).all(|w| w[0] < w[1]),
+            "{label}: matrix {mi} not sorted/unique"
+        );
+    }
+}
+
+#[test]
+fn every_selector_is_worker_count_invariant() {
+    let fix = Fixture::new(41, 4);
+    let cfg = LiftCfg {
+        rank: 4,
+        ..Default::default()
+    };
+    for sel in [
+        Selector::Lift,
+        Selector::WeightMag,
+        Selector::GradMag,
+        Selector::Movement,
+        Selector::Random,
+    ] {
+        assert_seq_eq_par(sel, &cfg, &fix, 0xD5, &format!("{sel:?}"));
+    }
+}
+
+#[test]
+fn every_rank_strategy_is_worker_count_invariant() {
+    let fix = Fixture::new(43, 4);
+    for strategy in [
+        RankStrategy::Largest,
+        RankStrategy::Smallest,
+        RankStrategy::Random,
+        RankStrategy::Hybrid,
+    ] {
+        // ablation strategies route through the exact host SVD
+        let cfg = LiftCfg {
+            rank: 4,
+            exact: true,
+            strategy,
+            ..Default::default()
+        };
+        assert_seq_eq_par(Selector::Lift, &cfg, &fix, 0xA7, &format!("{strategy:?}"));
+    }
+    // and the randomized Largest path (the production default)
+    let cfg = LiftCfg {
+        rank: 4,
+        ..Default::default()
+    };
+    assert_seq_eq_par(Selector::Lift, &cfg, &fix, 0xA7, "randomized Largest");
+}
+
+#[test]
+fn same_seed_same_masks_different_seed_different_masks() {
+    let fix = Fixture::new(47, 4);
+    let cfg = LiftCfg {
+        rank: 4,
+        ..Default::default()
+    };
+    let la = linalg();
+    let eng = MaskEngine::with_workers(la, 3);
+    let a = eng.select_all(Selector::Lift, &cfg, &fix.requests(), 7).unwrap();
+    let b = eng.select_all(Selector::Lift, &cfg, &fix.requests(), 7).unwrap();
+    assert_eq!(a, b, "same seed must reproduce masks exactly");
+    // a different refresh seed redraws the subspace-iteration test
+    // matrices; for Random selection it redraws everything
+    let c = eng
+        .select_all(Selector::Random, &cfg, &fix.requests(), 7)
+        .unwrap();
+    let d = eng
+        .select_all(Selector::Random, &cfg, &fix.requests(), 8)
+        .unwrap();
+    assert_ne!(c, d, "different seeds should differ for Random selection");
+}
+
+#[test]
+fn empty_and_oversubscribed_batches() {
+    let la = linalg();
+    let cfg = LiftCfg::default();
+    let eng = MaskEngine::with_workers(la, 16);
+    let empty: Vec<MaskRequest> = Vec::new();
+    assert!(eng
+        .select_all(Selector::WeightMag, &cfg, &empty, 1)
+        .unwrap()
+        .is_empty());
+    // more workers than requests
+    let fix = Fixture::new(53, 2);
+    let masks = eng
+        .select_all(Selector::WeightMag, &cfg, &fix.requests()[..2], 1)
+        .unwrap();
+    assert_eq!(masks.len(), 2);
+}
+
+#[test]
+fn randomized_matches_exact_oracle_above_threshold() {
+    let la = linalg();
+    for seed in 1u64..=5 {
+        let mut rng = Rng::new(seed);
+        let (m, n, r) = (48usize, 40usize, 4usize);
+        let u = Tensor::randn(&[m, r], 1.0, &mut rng);
+        let v = Tensor::randn(&[r, n], 1.0, &mut rng);
+        let mut w = u.matmul(&v);
+        w.add_scaled(&Tensor::randn(&[m, n], 1.0, &mut rng), 0.05);
+        let k = budget_for(m, n, 8);
+        let fast_cfg = LiftCfg {
+            rank: r,
+            ..Default::default()
+        };
+        let exact_cfg = LiftCfg {
+            rank: r,
+            exact: true,
+            ..Default::default()
+        };
+        let fast = principal_indices(&la, &w, k, &fast_cfg, &mut rng).unwrap();
+        let exact = principal_indices(&la, &w, k, &exact_cfg, &mut rng).unwrap();
+        let ov = mask_overlap(&fast, &exact);
+        assert!(
+            ov >= PARITY_MIN_OVERLAP,
+            "seed {seed}: randomized-vs-exact overlap {ov:.3} < {PARITY_MIN_OVERLAP}"
+        );
+    }
+}
+
+#[test]
+fn speedup_measurement_reports_a_row() {
+    let la = linalg();
+    let shapes = [(16usize, 12usize), (12, 16), (16, 16), (20, 12)];
+    let row = lift::exp::harness::measure_mask_refresh(&la, &shapes, 4, 4, 2, 1).unwrap();
+    assert!(row.seq_s > 0.0 && row.par_s > 0.0);
+    assert_eq!(row.matrices, shapes.len());
+    assert!(row.row().contains("mask_refresh"), "row: {}", row.row());
+}

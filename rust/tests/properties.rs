@@ -39,6 +39,79 @@ fn prop_topk_selects_exactly_k_largest() {
 }
 
 #[test]
+fn prop_topk_threshold_matches_sort_oracle() {
+    // quickselect (select_nth_unstable) against a full-sort oracle, over
+    // random sizes, heavy ties (quantized values), and k in {1, .., n}
+    check("quickselect == sort oracle", |rng| {
+        let n = gen_size(rng, 1, 500);
+        let quantize = rng.chance(0.5);
+        let vals: Vec<f32> = (0..n)
+            .map(|_| {
+                let x = rng.normal();
+                if quantize {
+                    (x * 2.0).round() / 2.0 // many exact ties incl. 0.0
+                } else {
+                    x
+                }
+            })
+            .collect();
+        for k in [1, 1 + rng.below(n), n] {
+            let thr = stats::topk_abs_threshold(&vals, k);
+            let mut mags: Vec<f32> = vals.iter().map(|x| x.abs()).collect();
+            mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            let oracle = mags[k - 1];
+            ensure(
+                thr == oracle,
+                format!("n={n} k={k}: quickselect {thr} != sorted {oracle}"),
+            )?;
+            // contract: at least k entries clear the threshold
+            let at_or_above = vals.iter().filter(|x| x.abs() >= thr).count();
+            ensure(
+                at_or_above >= k,
+                format!("n={n} k={k}: only {at_or_above} entries >= {thr}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_indices_edge_ks_and_ties() {
+    // topk_indices must return exactly k sorted unique indices for
+    // k in {0, 1, n} and under ties, and selection must dominate:
+    // min |selected| >= max |unselected|
+    check("topk indices edges + ties", |rng| {
+        let n = gen_size(rng, 1, 300);
+        // quantized values force tie-trimming at the threshold
+        let vals: Vec<f32> = (0..n).map(|_| (rng.normal() * 2.0).round()).collect();
+        for k in [0, 1, 1 + rng.below(n), n] {
+            let idx = topk_indices(&vals, k);
+            ensure(idx.len() == k, format!("k={k}: got {}", idx.len()))?;
+            ensure(
+                idx.windows(2).all(|w| w[0] < w[1]),
+                format!("k={k}: indices not sorted/unique"),
+            )?;
+            let sel: std::collections::HashSet<u32> = idx.iter().copied().collect();
+            let min_in = idx
+                .iter()
+                .map(|&i| vals[i as usize].abs())
+                .fold(f32::MAX, f32::min);
+            let max_out = (0..n as u32)
+                .filter(|i| !sel.contains(i))
+                .map(|i| vals[i as usize].abs())
+                .fold(0.0f32, f32::max);
+            if k > 0 && k < n {
+                ensure(
+                    min_in >= max_out,
+                    format!("k={k}: dominance violated ({min_in} < {max_out})"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_budget_is_monotone_and_capped() {
     check("budget monotone/capped", |rng| {
         let m = gen_size(rng, 2, 512);

@@ -1,0 +1,362 @@
+//! Graph construction: `XlaBuilder` / `XlaOp` / `XlaComputation`.
+//!
+//! Shape and type checking happens at construction time (mirroring the
+//! real builder's behavior of failing on the op, not at execute). The
+//! built `XlaComputation` owns a plain node list and is `Send + Sync`.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::{ElementType, Error, HloModuleProto, PrimitiveType, Result};
+
+#[derive(Clone, Debug)]
+pub(crate) enum Op {
+    Parameter(usize),
+    ConstF32(f32),
+    Iota { dim: usize },
+    /// 2-D dot with one contracting dim per side and no batch dims — the
+    /// only form the linalg toolkit emits.
+    Dot { lhs_c: usize, rhs_c: usize },
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Eq,
+    Convert,
+    ReduceSum { dims: Vec<usize>, keep: bool },
+    Sqrt,
+    Tuple,
+}
+
+#[derive(Clone, Debug)]
+pub(crate) struct Node {
+    pub op: Op,
+    pub inputs: Vec<usize>,
+    pub ty: ElementType,
+    pub dims: Vec<i64>,
+}
+
+struct Inner {
+    #[allow(dead_code)]
+    name: String,
+    nodes: Vec<Node>,
+}
+
+/// Single-threaded graph builder (mirrors upstream usage).
+#[derive(Clone)]
+pub struct XlaBuilder {
+    inner: Rc<RefCell<Inner>>,
+}
+
+/// Handle to a node in a builder's graph.
+#[derive(Clone)]
+pub struct XlaOp {
+    id: usize,
+    builder: XlaBuilder,
+}
+
+/// A finished graph (or a reference to an external AOT HLO artifact).
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    pub(crate) kind: CompKind,
+}
+
+#[derive(Clone, Debug)]
+pub(crate) enum CompKind {
+    Graph { nodes: Vec<Node>, root: usize },
+    External { path: String },
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            kind: CompKind::External {
+                path: proto.path.clone(),
+            },
+        }
+    }
+}
+
+fn numel(dims: &[i64]) -> usize {
+    dims.iter().product::<i64>() as usize
+}
+
+/// Elementwise result dims: equal shapes, or broadcast a one-element
+/// operand against the other.
+fn broadcast_dims(a: &[i64], b: &[i64]) -> Result<Vec<i64>> {
+    if a == b {
+        return Ok(a.to_vec());
+    }
+    if numel(a) == 1 {
+        return Ok(b.to_vec());
+    }
+    if numel(b) == 1 {
+        return Ok(a.to_vec());
+    }
+    Err(Error::new(format!(
+        "incompatible elementwise shapes {a:?} vs {b:?}"
+    )))
+}
+
+impl XlaBuilder {
+    pub fn new(name: &str) -> XlaBuilder {
+        XlaBuilder {
+            inner: Rc::new(RefCell::new(Inner {
+                name: name.to_string(),
+                nodes: Vec::new(),
+            })),
+        }
+    }
+
+    fn push(&self, node: Node) -> XlaOp {
+        let mut inner = self.inner.borrow_mut();
+        inner.nodes.push(node);
+        XlaOp {
+            id: inner.nodes.len() - 1,
+            builder: self.clone(),
+        }
+    }
+
+    fn node_info(&self, id: usize) -> (ElementType, Vec<i64>) {
+        let inner = self.inner.borrow();
+        (inner.nodes[id].ty, inner.nodes[id].dims.clone())
+    }
+
+    pub fn parameter(
+        &self,
+        number: i64,
+        ty: ElementType,
+        dims: &[i64],
+        _name: &str,
+    ) -> Result<XlaOp> {
+        if number < 0 {
+            return Err(Error::new("negative parameter number"));
+        }
+        Ok(self.push(Node {
+            op: Op::Parameter(number as usize),
+            inputs: vec![],
+            ty,
+            dims: dims.to_vec(),
+        }))
+    }
+
+    /// Rank-0 f32 constant.
+    pub fn c0(&self, v: f32) -> Result<XlaOp> {
+        Ok(self.push(Node {
+            op: Op::ConstF32(v),
+            inputs: vec![],
+            ty: ElementType::F32,
+            dims: vec![],
+        }))
+    }
+
+    pub fn iota(&self, ty: ElementType, dims: &[i64], iota_dimension: i64) -> Result<XlaOp> {
+        let d = iota_dimension as usize;
+        if d >= dims.len() {
+            return Err(Error::new(format!(
+                "iota dimension {d} out of range for {dims:?}"
+            )));
+        }
+        Ok(self.push(Node {
+            op: Op::Iota { dim: d },
+            inputs: vec![],
+            ty,
+            dims: dims.to_vec(),
+        }))
+    }
+
+    pub fn tuple(&self, elems: &[XlaOp]) -> Result<XlaOp> {
+        let ids: Vec<usize> = elems.iter().map(|e| e.id).collect();
+        let n = ids.len() as i64;
+        Ok(self.push(Node {
+            op: Op::Tuple,
+            inputs: ids,
+            ty: ElementType::F32,
+            dims: vec![n],
+        }))
+    }
+}
+
+impl XlaOp {
+    fn info(&self) -> (ElementType, Vec<i64>) {
+        self.builder.node_info(self.id)
+    }
+
+    fn binary(&self, op: Op, rhs: &XlaOp) -> Result<XlaOp> {
+        let (lt, ld) = self.info();
+        let (rt, rd) = rhs.info();
+        if lt != ElementType::F32 || rt != ElementType::F32 {
+            return Err(Error::new("arithmetic ops are f32-only in the stub"));
+        }
+        let dims = broadcast_dims(&ld, &rd)?;
+        Ok(self.builder.push(Node {
+            op,
+            inputs: vec![self.id, rhs.id],
+            ty: ElementType::F32,
+            dims,
+        }))
+    }
+
+    /// 2-D dot_general with single contracting dims and no batch dims.
+    pub fn dot_general(
+        &self,
+        rhs: &XlaOp,
+        lhs_contracting: &[i64],
+        rhs_contracting: &[i64],
+        lhs_batch: &[i64],
+        rhs_batch: &[i64],
+    ) -> Result<XlaOp> {
+        if !lhs_batch.is_empty() || !rhs_batch.is_empty() {
+            return Err(Error::new("batched dot_general is not supported"));
+        }
+        if lhs_contracting.len() != 1 || rhs_contracting.len() != 1 {
+            return Err(Error::new("dot_general needs exactly one contracting dim per side"));
+        }
+        let (lt, ld) = self.info();
+        let (rt, rd) = rhs.info();
+        if lt != ElementType::F32 || rt != ElementType::F32 {
+            return Err(Error::new("dot_general is f32-only"));
+        }
+        if ld.len() != 2 || rd.len() != 2 {
+            return Err(Error::new(format!(
+                "dot_general supports 2-D operands, got {ld:?} x {rd:?}"
+            )));
+        }
+        let (lc, rc) = (lhs_contracting[0] as usize, rhs_contracting[0] as usize);
+        if lc > 1 || rc > 1 {
+            return Err(Error::new("contracting dim out of range"));
+        }
+        if ld[lc] != rd[rc] {
+            return Err(Error::new(format!(
+                "dot_general contraction mismatch: {ld:?}[{lc}] vs {rd:?}[{rc}]"
+            )));
+        }
+        let dims = vec![ld[1 - lc], rd[1 - rc]];
+        Ok(self.builder.push(Node {
+            op: Op::Dot { lhs_c: lc, rhs_c: rc },
+            inputs: vec![self.id, rhs.id],
+            ty: ElementType::F32,
+            dims,
+        }))
+    }
+
+    pub fn eq(&self, rhs: &XlaOp) -> Result<XlaOp> {
+        let (lt, ld) = self.info();
+        let (rt, rd) = rhs.info();
+        if lt != rt {
+            return Err(Error::new("eq operand types differ"));
+        }
+        let dims = broadcast_dims(&ld, &rd)?;
+        Ok(self.builder.push(Node {
+            op: Op::Eq,
+            inputs: vec![self.id, rhs.id],
+            ty: ElementType::Pred,
+            dims,
+        }))
+    }
+
+    pub fn convert(&self, ty: PrimitiveType) -> Result<XlaOp> {
+        let (_, dims) = self.info();
+        Ok(self.builder.push(Node {
+            op: Op::Convert,
+            inputs: vec![self.id],
+            ty: ty.element_type(),
+            dims,
+        }))
+    }
+
+    pub fn reduce_sum(&self, dims: &[i64], keep_dims: bool) -> Result<XlaOp> {
+        let (ty, in_dims) = self.info();
+        if ty != ElementType::F32 {
+            return Err(Error::new("reduce_sum is f32-only"));
+        }
+        let mut reduce: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        reduce.sort_unstable();
+        reduce.dedup();
+        if reduce.iter().any(|&d| d >= in_dims.len()) {
+            return Err(Error::new(format!(
+                "reduce_sum dims {reduce:?} out of range for {in_dims:?}"
+            )));
+        }
+        let mut out_dims = Vec::new();
+        for (i, &d) in in_dims.iter().enumerate() {
+            if reduce.contains(&i) {
+                if keep_dims {
+                    out_dims.push(1);
+                }
+            } else {
+                out_dims.push(d);
+            }
+        }
+        Ok(self.builder.push(Node {
+            op: Op::ReduceSum {
+                dims: reduce,
+                keep: keep_dims,
+            },
+            inputs: vec![self.id],
+            ty: ElementType::F32,
+            dims: out_dims,
+        }))
+    }
+
+    pub fn sqrt(&self) -> Result<XlaOp> {
+        let (ty, dims) = self.info();
+        if ty != ElementType::F32 {
+            return Err(Error::new("sqrt is f32-only"));
+        }
+        Ok(self.builder.push(Node {
+            op: Op::Sqrt,
+            inputs: vec![self.id],
+            ty: ElementType::F32,
+            dims,
+        }))
+    }
+
+    /// Snapshot the graph with this op as root.
+    pub fn build(&self) -> Result<XlaComputation> {
+        let inner = self.builder.inner.borrow();
+        Ok(XlaComputation {
+            kind: CompKind::Graph {
+                nodes: inner.nodes.clone(),
+                root: self.id,
+            },
+        })
+    }
+}
+
+macro_rules! impl_bin_op {
+    ($trait:ident, $method:ident, $op:expr) => {
+        impl std::ops::$trait<&XlaOp> for &XlaOp {
+            type Output = Result<XlaOp>;
+            fn $method(self, rhs: &XlaOp) -> Result<XlaOp> {
+                self.binary($op, rhs)
+            }
+        }
+
+        impl std::ops::$trait<XlaOp> for &XlaOp {
+            type Output = Result<XlaOp>;
+            fn $method(self, rhs: XlaOp) -> Result<XlaOp> {
+                self.binary($op, &rhs)
+            }
+        }
+
+        impl std::ops::$trait<&XlaOp> for XlaOp {
+            type Output = Result<XlaOp>;
+            fn $method(self, rhs: &XlaOp) -> Result<XlaOp> {
+                self.binary($op, rhs)
+            }
+        }
+
+        impl std::ops::$trait<XlaOp> for XlaOp {
+            type Output = Result<XlaOp>;
+            fn $method(self, rhs: XlaOp) -> Result<XlaOp> {
+                self.binary($op, &rhs)
+            }
+        }
+    };
+}
+
+impl_bin_op!(Add, add, Op::Add);
+impl_bin_op!(Sub, sub, Op::Sub);
+impl_bin_op!(Mul, mul, Op::Mul);
+impl_bin_op!(Div, div, Op::Div);

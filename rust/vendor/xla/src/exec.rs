@@ -1,0 +1,437 @@
+//! Graph execution: `PjRtClient::compile` + the host interpreter behind
+//! `PjRtLoadedExecutable::execute`.
+
+use std::borrow::Borrow;
+
+use crate::builder::{CompKind, Node, Op, XlaComputation};
+use crate::literal::Data;
+use crate::{ElementType, Error, Literal, Result};
+
+/// Handle to the (host) execution backend.
+#[derive(Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match &comp.kind {
+            CompKind::Graph { nodes, root } => Ok(PjRtLoadedExecutable {
+                nodes: nodes.clone(),
+                root: *root,
+            }),
+            CompKind::External { path } => Err(Error::new(format!(
+                "the host-interpreter stub cannot execute AOT HLO artifacts ({path}); \
+                 link the native xla crate for artifact execution"
+            ))),
+        }
+    }
+}
+
+/// A compiled (snapshot) graph. Owns plain data: `Send + Sync`, safe to
+/// share across mask-engine worker threads behind `Arc`.
+pub struct PjRtLoadedExecutable {
+    nodes: Vec<Node>,
+    root: usize,
+}
+
+/// Device buffer stand-in; already host-resident here.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+impl PjRtLoadedExecutable {
+    /// Interpret the graph over the argument literals. Deterministic: the
+    /// same executable on the same inputs always produces identical bits.
+    pub fn execute<L: Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let live = self.reachable();
+        let mut values: Vec<Option<Literal>> = vec![None; self.nodes.len()];
+        for id in 0..self.nodes.len() {
+            if !live[id] {
+                continue;
+            }
+            let lit = self.eval_node(id, &values, args)?;
+            values[id] = Some(lit);
+        }
+        let root = values[self.root]
+            .take()
+            .ok_or_else(|| Error::new("root was not evaluated"))?;
+        Ok(vec![vec![PjRtBuffer { lit: root }]])
+    }
+
+    fn reachable(&self) -> Vec<bool> {
+        let mut live = vec![false; self.nodes.len()];
+        let mut stack = vec![self.root];
+        while let Some(id) = stack.pop() {
+            if live[id] {
+                continue;
+            }
+            live[id] = true;
+            stack.extend(self.nodes[id].inputs.iter().copied());
+        }
+        live
+    }
+
+    fn input<'a>(
+        &self,
+        values: &'a [Option<Literal>],
+        node: &Node,
+        which: usize,
+    ) -> Result<&'a Literal> {
+        values[node.inputs[which]]
+            .as_ref()
+            .ok_or_else(|| Error::new("input evaluated out of order"))
+    }
+
+    fn eval_node<L: Borrow<Literal>>(
+        &self,
+        id: usize,
+        values: &[Option<Literal>],
+        args: &[L],
+    ) -> Result<Literal> {
+        let node = &self.nodes[id];
+        match &node.op {
+            Op::Parameter(i) => {
+                let arg: &Literal = args
+                    .get(*i)
+                    .map(|l| l.borrow())
+                    .ok_or_else(|| {
+                        Error::new(format!("missing argument {i} (got {})", args.len()))
+                    })?;
+                if arg.dims != node.dims {
+                    return Err(Error::new(format!(
+                        "argument {i} has dims {:?}, graph expects {:?}",
+                        arg.dims, node.dims
+                    )));
+                }
+                if arg.element_type() != Some(node.ty) {
+                    return Err(Error::new(format!(
+                        "argument {i} has type {:?}, graph expects {:?}",
+                        arg.element_type(),
+                        node.ty
+                    )));
+                }
+                Ok(arg.clone())
+            }
+            Op::ConstF32(v) => Ok(Literal::scalar(*v)),
+            Op::Iota { dim } => Ok(iota(node, *dim)),
+            Op::Dot { lhs_c, rhs_c } => {
+                let a = self.input(values, node, 0)?;
+                let b = self.input(values, node, 1)?;
+                dot(a, b, *lhs_c, *rhs_c, &node.dims)
+            }
+            Op::Add => self.arith(values, node, |x, y| x + y),
+            Op::Sub => self.arith(values, node, |x, y| x - y),
+            Op::Mul => self.arith(values, node, |x, y| x * y),
+            Op::Div => self.arith(values, node, |x, y| x / y),
+            Op::Eq => {
+                let a = self.input(values, node, 0)?;
+                let b = self.input(values, node, 1)?;
+                eq(a, b, &node.dims)
+            }
+            Op::Convert => {
+                let a = self.input(values, node, 0)?;
+                convert(a, node.ty)
+            }
+            Op::ReduceSum { dims, keep } => {
+                let a = self.input(values, node, 0)?;
+                reduce_sum(a, dims, *keep)
+            }
+            Op::Sqrt => {
+                let a = self.input(values, node, 0)?;
+                let data: Vec<f32> = a.f32s()?.iter().map(|x| x.sqrt()).collect();
+                Ok(Literal {
+                    dims: a.dims.clone(),
+                    data: Data::F32(data),
+                })
+            }
+            Op::Tuple => {
+                let elems: Result<Vec<Literal>> = (0..node.inputs.len())
+                    .map(|j| self.input(values, node, j).cloned())
+                    .collect();
+                Ok(Literal::tuple(elems?))
+            }
+        }
+    }
+
+    fn arith(
+        &self,
+        values: &[Option<Literal>],
+        node: &Node,
+        f: impl Fn(f32, f32) -> f32,
+    ) -> Result<Literal> {
+        let a = self.input(values, node, 0)?.f32s()?;
+        let b = self.input(values, node, 1)?.f32s()?;
+        let data = if a.len() == b.len() {
+            a.iter().zip(b).map(|(&x, &y)| f(x, y)).collect()
+        } else if a.len() == 1 {
+            b.iter().map(|&y| f(a[0], y)).collect()
+        } else if b.len() == 1 {
+            a.iter().map(|&x| f(x, b[0])).collect()
+        } else {
+            return Err(Error::new("elementwise length mismatch at execute time"));
+        };
+        Ok(Literal {
+            dims: node.dims.clone(),
+            data: Data::F32(data),
+        })
+    }
+}
+
+fn iota(node: &Node, dim: usize) -> Literal {
+    let dims_us: Vec<usize> = node.dims.iter().map(|&d| d as usize).collect();
+    let n: usize = dims_us.iter().product();
+    // row-major stride of the iota dimension
+    let stride: usize = dims_us[dim + 1..].iter().product();
+    let extent = dims_us[dim];
+    let data = match node.ty {
+        ElementType::S32 => {
+            Data::S32((0..n).map(|i| ((i / stride) % extent) as i32).collect())
+        }
+        ElementType::F32 => {
+            Data::F32((0..n).map(|i| ((i / stride) % extent) as f32).collect())
+        }
+        ElementType::Pred => Data::Pred(vec![false; n]),
+    };
+    Literal {
+        dims: node.dims.clone(),
+        data,
+    }
+}
+
+/// 2-D dot: normalize both operands to standard (m,k) x (k,n) layout,
+/// then a cache-friendly ikj kernel.
+fn dot(a: &Literal, b: &Literal, lhs_c: usize, rhs_c: usize, out_dims: &[i64]) -> Result<Literal> {
+    let (m, n) = (out_dims[0] as usize, out_dims[1] as usize);
+    let k = a.dims[lhs_c] as usize;
+    let a_std = to_standard(a.f32s()?, a.dims[0] as usize, a.dims[1] as usize, lhs_c == 0);
+    let b_std = to_standard(b.f32s()?, b.dims[0] as usize, b.dims[1] as usize, rhs_c == 1);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            let av = a_std[i * k + l];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b_std[l * n..(l + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Ok(Literal {
+        dims: out_dims.to_vec(),
+        data: Data::F32(out),
+    })
+}
+
+/// Copy a (r, c) row-major matrix, transposing when `transpose` is set.
+fn to_standard(data: &[f32], r: usize, c: usize, transpose: bool) -> Vec<f32> {
+    if !transpose {
+        return data.to_vec();
+    }
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            out[j * r + i] = data[i * c + j];
+        }
+    }
+    out
+}
+
+fn eq(a: &Literal, b: &Literal, out_dims: &[i64]) -> Result<Literal> {
+    fn cmp<T: PartialEq + Copy>(a: &[T], b: &[T]) -> Result<Vec<bool>> {
+        if a.len() == b.len() {
+            Ok(a.iter().zip(b).map(|(x, y)| x == y).collect())
+        } else if a.len() == 1 {
+            Ok(b.iter().map(|y| *y == a[0]).collect())
+        } else if b.len() == 1 {
+            Ok(a.iter().map(|x| *x == b[0]).collect())
+        } else {
+            Err(Error::new("eq length mismatch at execute time"))
+        }
+    }
+    let data = match (&a.data, &b.data) {
+        (Data::F32(x), Data::F32(y)) => cmp(x, y)?,
+        (Data::S32(x), Data::S32(y)) => cmp(x, y)?,
+        (Data::Pred(x), Data::Pred(y)) => cmp(x, y)?,
+        _ => return Err(Error::new("eq operand types differ at execute time")),
+    };
+    Ok(Literal {
+        dims: out_dims.to_vec(),
+        data: Data::Pred(data),
+    })
+}
+
+fn convert(a: &Literal, ty: ElementType) -> Result<Literal> {
+    let data = match (&a.data, ty) {
+        (Data::F32(v), ElementType::F32) => Data::F32(v.clone()),
+        (Data::S32(v), ElementType::F32) => Data::F32(v.iter().map(|&x| x as f32).collect()),
+        (Data::Pred(v), ElementType::F32) => {
+            Data::F32(v.iter().map(|&x| if x { 1.0 } else { 0.0 }).collect())
+        }
+        (Data::F32(v), ElementType::S32) => Data::S32(v.iter().map(|&x| x as i32).collect()),
+        (Data::S32(v), ElementType::S32) => Data::S32(v.clone()),
+        (Data::Pred(v), ElementType::S32) => {
+            Data::S32(v.iter().map(|&x| i32::from(x)).collect())
+        }
+        _ => return Err(Error::new(format!("unsupported convert to {ty:?}"))),
+    };
+    Ok(Literal {
+        dims: a.dims.clone(),
+        data,
+    })
+}
+
+fn reduce_sum(a: &Literal, reduce: &[usize], keep: bool) -> Result<Literal> {
+    let vals = a.f32s()?;
+    let in_dims: Vec<usize> = a.dims.iter().map(|&d| d as usize).collect();
+    let mut out_dims_us = Vec::new();
+    for (i, &d) in in_dims.iter().enumerate() {
+        if reduce.contains(&i) {
+            if keep {
+                out_dims_us.push(1);
+            }
+        } else {
+            out_dims_us.push(d);
+        }
+    }
+    let out_n: usize = out_dims_us.iter().product::<usize>().max(1);
+    let mut acc = vec![0.0f64; out_n];
+    // row-major strides of the input
+    let mut strides = vec![1usize; in_dims.len()];
+    for i in (0..in_dims.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * in_dims[i + 1];
+    }
+    for (flat, &v) in vals.iter().enumerate() {
+        // output flat index: row-major over the kept dims
+        let mut out_flat = 0usize;
+        for (i, (&d, &s)) in in_dims.iter().zip(&strides).enumerate() {
+            let idx = (flat / s) % d;
+            // reduced dims contribute extent 1 (kept) or nothing (dropped)
+            if !reduce.contains(&i) {
+                out_flat = out_flat * d + idx;
+            }
+        }
+        acc[out_flat] += v as f64;
+    }
+    Ok(Literal {
+        dims: out_dims_us.iter().map(|&d| d as i64).collect(),
+        data: Data::F32(acc.into_iter().map(|x| x as f32).collect()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{ElementType, PrimitiveType, XlaBuilder};
+
+    fn lit2(r: usize, c: usize, v: &[f32]) -> Literal {
+        Literal::vec1(v).reshape(&[r as i64, c as i64]).unwrap()
+    }
+
+    #[test]
+    fn dot_matches_hand_result() {
+        let bld = XlaBuilder::new("t");
+        let a = bld.parameter(0, ElementType::F32, &[2, 3], "a").unwrap();
+        let b = bld.parameter(1, ElementType::F32, &[3, 2], "b").unwrap();
+        let c = a.dot_general(&b, &[1], &[0], &[], &[]).unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&c.build().unwrap()).unwrap();
+        let la = lit2(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let lb = lit2(3, 2, &[7., 8., 9., 10., 11., 12.]);
+        let out = exe.execute(&[&la, &lb]).unwrap();
+        let lit = out[0][0].to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![58., 64., 139., 154.]);
+        assert_eq!(lit.array_shape().unwrap().dims(), &[2, 2]);
+    }
+
+    #[test]
+    fn transposed_dots_agree() {
+        // a^T b and a b^T variants against the standard layout
+        let bld = XlaBuilder::new("t");
+        let at = bld.parameter(0, ElementType::F32, &[3, 2], "at").unwrap();
+        let b = bld.parameter(1, ElementType::F32, &[3, 2], "b").unwrap();
+        let c = at.dot_general(&b, &[0], &[0], &[], &[]).unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&c.build().unwrap()).unwrap();
+        // at = a^T where a = [[1,2,3],[4,5,6]]
+        let lat = lit2(3, 2, &[1., 4., 2., 5., 3., 6.]);
+        let lb = lit2(3, 2, &[7., 8., 9., 10., 11., 12.]);
+        let out = exe.execute(&[&lat, &lb]).unwrap();
+        let lit = out[0][0].to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn iota_eq_convert_builds_identity() {
+        let bld = XlaBuilder::new("t");
+        let rows = bld.iota(ElementType::S32, &[3, 3], 0).unwrap();
+        let cols = bld.iota(ElementType::S32, &[3, 3], 1).unwrap();
+        let eye = rows.eq(&cols).unwrap().convert(PrimitiveType::F32).unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&eye.build().unwrap()).unwrap();
+        let out = exe.execute::<Literal>(&[]).unwrap();
+        let lit = out[0][0].to_literal_sync().unwrap();
+        assert_eq!(
+            lit.to_vec::<f32>().unwrap(),
+            vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]
+        );
+    }
+
+    #[test]
+    fn scalar_broadcast_and_reduce() {
+        let bld = XlaBuilder::new("t");
+        let a = bld.parameter(0, ElementType::F32, &[2, 2], "a").unwrap();
+        let total = a.reduce_sum(&[0, 1], false).unwrap();
+        let scaled = (&a / &total).unwrap();
+        let root = bld.tuple(&[total, scaled]).unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&root.build().unwrap()).unwrap();
+        let la = lit2(2, 2, &[1., 2., 3., 4.]);
+        let out = exe.execute(&[&la]).unwrap();
+        let mut lit = out[0][0].to_literal_sync().unwrap();
+        let parts = lit.decompose_tuple().unwrap();
+        assert_eq!(parts[0].get_first_element::<f32>().unwrap(), 10.0);
+        assert_eq!(parts[0].array_shape().unwrap().dims(), &[] as &[i64]);
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![0.1, 0.2, 0.3, 0.4]);
+    }
+
+    #[test]
+    fn sqrt_and_sub_chain() {
+        let bld = XlaBuilder::new("t");
+        let a = bld.parameter(0, ElementType::F32, &[3], "a").unwrap();
+        let shifted = (&a - bld.c0(1.0).unwrap()).unwrap();
+        let root = shifted.sqrt().unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&root.build().unwrap()).unwrap();
+        let la = Literal::vec1(&[1.0f32, 5.0, 10.0]);
+        let out = exe.execute(&[&la]).unwrap();
+        let got = out[0][0].to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(got, vec![0.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn bad_args_are_rejected() {
+        let bld = XlaBuilder::new("t");
+        let a = bld.parameter(0, ElementType::F32, &[2, 2], "a").unwrap();
+        let exe = PjRtClient::cpu()
+            .unwrap()
+            .compile(&a.sqrt().unwrap().build().unwrap())
+            .unwrap();
+        let wrong = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(exe.execute(&[&wrong]).is_err());
+        assert!(exe.execute::<Literal>(&[]).is_err());
+    }
+
+    #[test]
+    fn executables_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<PjRtLoadedExecutable>();
+        assert_send_sync::<Literal>();
+    }
+}

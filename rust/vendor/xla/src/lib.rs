@@ -1,0 +1,97 @@
+//! Host-interpreter stand-in for the `xla` PJRT bindings.
+//!
+//! The build environment has no native XLA runtime, so this crate
+//! re-implements the API surface the workspace uses — `XlaBuilder` graph
+//! construction, `PjRtClient::compile`, `PjRtLoadedExecutable::execute`,
+//! and `Literal` marshalling — as a small deterministic interpreter that
+//! evaluates the built graph on the host. Graphs constructed through
+//! `XlaBuilder` (the `runtime::linalg` toolkit: matmuls, subspace
+//! iteration, Newton–Schulz) run bit-for-bit reproducibly; repeated
+//! execution of the same compiled graph on the same inputs always yields
+//! identical results, which the mask-engine determinism tests rely on.
+//!
+//! AOT HLO *artifacts* (text files produced by `python/compile/aot.py`)
+//! are out of scope: `HloModuleProto::from_text_file` loads the text, but
+//! compiling an external computation returns an error. Callers gate on
+//! artifact availability (see `rust/tests/integration.rs`).
+//!
+//! Thread-safety contract: `XlaComputation`, `PjRtLoadedExecutable`, and
+//! `Literal` own plain data and are `Send + Sync`, so compiled
+//! executables can be shared across the mask-engine worker threads behind
+//! `Arc`. Only `XlaBuilder`/`XlaOp` (graph construction) are
+//! single-threaded, matching how `runtime::linalg` uses them.
+
+mod builder;
+mod exec;
+mod literal;
+
+use std::fmt;
+
+pub use builder::{XlaBuilder, XlaComputation, XlaOp};
+pub use exec::{PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+pub use literal::{ArrayShape, Literal, NativeType};
+
+/// Element type of a literal or graph node (the subset this repo uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+    Pred,
+}
+
+/// Alias kept distinct to mirror the upstream API (`convert` takes a
+/// `PrimitiveType`, `parameter`/`iota` take an `ElementType`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+    Pred,
+}
+
+impl PrimitiveType {
+    pub(crate) fn element_type(self) -> ElementType {
+        match self {
+            PrimitiveType::F32 => ElementType::F32,
+            PrimitiveType::S32 => ElementType::S32,
+            PrimitiveType::Pred => ElementType::Pred,
+        }
+    }
+}
+
+/// Error type for every fallible operation in the stub.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl Error {
+    pub(crate) fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Parsed-but-not-interpreted AOT HLO artifact (text form).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub(crate) path: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from disk. The file must exist and be readable; the
+    /// content is not interpreted (see module docs).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::metadata(path)
+            .map_err(|e| Error::new(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto {
+            path: path.to_string(),
+        })
+    }
+}

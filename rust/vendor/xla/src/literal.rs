@@ -1,0 +1,212 @@
+//! Host literals: shaped, typed host buffers (plus tuples of them).
+
+use crate::{ElementType, Error, Result};
+
+/// Typed storage behind a literal.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum Data {
+    F32(Vec<f32>),
+    S32(Vec<i32>),
+    Pred(Vec<bool>),
+    Tuple(Vec<Literal>),
+}
+
+impl Data {
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::S32(v) => v.len(),
+            Data::Pred(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    pub(crate) fn element_type(&self) -> Option<ElementType> {
+        match self {
+            Data::F32(_) => Some(ElementType::F32),
+            Data::S32(_) => Some(ElementType::S32),
+            Data::Pred(_) => Some(ElementType::Pred),
+            Data::Tuple(_) => None,
+        }
+    }
+}
+
+/// Shaped host value; the interchange type between the coordinator and
+/// compiled executables.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    pub(crate) dims: Vec<i64>,
+    pub(crate) data: Data,
+}
+
+/// Array shape (dims + implicit element type) of a non-tuple literal.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Rust scalar types that map onto literal element types.
+pub trait NativeType: Copy + 'static {
+    const TY: ElementType;
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+
+    fn unwrap(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::S32(v)
+    }
+
+    fn unwrap(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::S32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// 1-D literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            data: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal {
+            dims: vec![],
+            data: T::wrap(vec![v]),
+        }
+    }
+
+    /// Same data, new dims (element counts must agree).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error::new("reshape on a tuple literal"));
+        }
+        if n as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape {:?} -> {:?}: element count mismatch",
+                self.dims, dims
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            data: self.data.clone(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error::new("array_shape on a tuple literal"));
+        }
+        Ok(ArrayShape {
+            dims: self.dims.clone(),
+        })
+    }
+
+    /// Flat host copy of the elements (row-major).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| {
+            Error::new(format!(
+                "to_vec: literal holds {:?}, requested {:?}",
+                self.data.element_type(),
+                T::TY
+            ))
+        })
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        let v = self.to_vec::<T>()?;
+        v.first()
+            .copied()
+            .ok_or_else(|| Error::new("get_first_element on an empty literal"))
+    }
+
+    /// Split a tuple literal into its elements (consumes the contents).
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        match std::mem::replace(&mut self.data, Data::Tuple(Vec::new())) {
+            Data::Tuple(elems) => Ok(elems),
+            other => {
+                self.data = other;
+                Err(Error::new("decompose_tuple on a non-tuple literal"))
+            }
+        }
+    }
+
+    pub(crate) fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal {
+            dims: vec![elems.len() as i64],
+            data: Data::Tuple(elems),
+        }
+    }
+
+    pub(crate) fn element_type(&self) -> Option<ElementType> {
+        self.data.element_type()
+    }
+
+    pub(crate) fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => Err(Error::new("expected an f32 literal")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn scalars_and_type_mismatch() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+        assert!(s.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes_once() {
+        let mut t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2i32)]);
+        let parts = t.decompose_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        let mut plain = Literal::scalar(0.0f32);
+        assert!(plain.decompose_tuple().is_err());
+        assert_eq!(plain.get_first_element::<f32>().unwrap(), 0.0);
+    }
+}
