@@ -15,7 +15,7 @@
 use std::sync::Arc;
 
 use lift::data::tasks::{TaskFamily, TaskMixSource, TaskSet};
-use lift::exp::harness::{mask_requests, measure_mask_refresh, tiny_layer_shapes};
+use lift::exp::harness::{mask_requests, measure_mask_refresh, measure_step_all, tiny_layer_shapes};
 use lift::lift::engine::{default_workers, MaskEngine};
 use lift::lift::{LiftCfg, Selector};
 use lift::methods::{make_method, Method, Scope};
@@ -138,6 +138,13 @@ fn selftest() -> anyhow::Result<()> {
         100.0 * selected as f64 / total as f64
     );
     let row = measure_mask_refresh(&la, &shapes, 32, 32, workers, 3)?;
+    println!("{}", row.row());
+    // and the batched optimizer step (several layers' worth of matrices)
+    let mut step_shapes = Vec::new();
+    for _ in 0..4 {
+        step_shapes.extend(tiny_layer_shapes());
+    }
+    let row = measure_step_all(&step_shapes, 32, workers, 3, 10)?;
     println!("{}", row.row());
     Ok(())
 }

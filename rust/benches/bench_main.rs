@@ -7,6 +7,11 @@
 //!                  graph vs exact host SVD, per shape and rank
 //!   [mask-refresh] full-model batched refresh: sequential vs
 //!                  layer-parallel MaskEngine (ISSUE-1 acceptance row)
+//!   [exact-svd]    exact oracle: top-r subspace path vs full-spectrum
+//!                  Jacobi, plus the layer-parallel exact-refresh
+//!                  speedup row (ISSUE-2 acceptance)
+//!   [step-all]     batched optimizer step: sequential vs layer-parallel
+//!                  (ISSUE-2 acceptance row)
 //!   [adam]         sparse Adam: host loop vs Pallas kernel via PJRT
 //!   [marshal]      literal marshalling overhead (params -> device)
 //!   [linalg]       matmul throughput through the XlaBuilder toolkit
@@ -21,7 +26,7 @@ use std::sync::Arc;
 
 use lift::data::tasks::{TaskFamily, TaskMixSource, TaskSet};
 use lift::data::BatchSource;
-use lift::exp::harness::measure_mask_refresh;
+use lift::exp::harness::{measure_exact_refresh, measure_mask_refresh, measure_step_all};
 use lift::lift::engine::default_workers;
 use lift::lift::{budget_for, principal_indices, LiftCfg};
 use lift::methods::{make_method, Scope};
@@ -124,6 +129,40 @@ fn main() -> anyhow::Result<()> {
         let workers = default_workers();
         let reps = if fast { 2 } else { 5 };
         let row = measure_mask_refresh(&la, &shapes, 32, 32, workers, reps)?;
+        println!("{}", row.row());
+    }
+
+    println!("\n-- [exact-svd] exact oracle: top-r subspace vs full Jacobi --");
+    {
+        let (m, n, r) = (96usize, 288usize, 16usize);
+        let we = Tensor::randn(&[m, n], 0.05, &mut rng);
+        b.bench(&format!("exact_svd/full_jacobi_{m}x{n}"), || {
+            let _ = lift::util::eigh::svd(&we.data, m, n);
+        });
+        b.bench(&format!("exact_svd/topr_r{r}_{m}x{n}"), || {
+            let _ = lift::util::eigh::svd_topr(&we.data, m, n, r);
+        });
+        // layer-parallel exact refresh: per-matrix top-r decompositions
+        // fanned across the worker pool (the ISSUE-2 acceptance row)
+        let layers = if fast { 1 } else { 2 };
+        let mut shapes = Vec::new();
+        for _ in 0..layers {
+            shapes.extend(lift::exp::harness::tiny_layer_shapes());
+        }
+        let reps = if fast { 2 } else { 3 };
+        let row = measure_exact_refresh(&la, &shapes, 8, 32, default_workers(), reps)?;
+        println!("{}", row.row());
+    }
+
+    println!("\n-- [step-all] batched sparse-Adam step: sequential vs layer-parallel --");
+    {
+        let layers = if fast { 4 } else { 8 };
+        let mut shapes = Vec::new();
+        for _ in 0..layers {
+            shapes.extend(lift::exp::harness::tiny_layer_shapes());
+        }
+        let reps = if fast { 3 } else { 5 };
+        let row = measure_step_all(&shapes, 64, default_workers(), reps, 10)?;
         println!("{}", row.row());
     }
 

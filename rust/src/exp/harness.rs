@@ -1,5 +1,6 @@
 //! Shared experiment harness: pretrain-once, fine-tune-many machinery,
-//! plus the mask-refresh speedup measurement (the ISSUE-1 acceptance row).
+//! plus the sequential-vs-parallel speedup measurements (the ISSUE-1
+//! mask-refresh row and the ISSUE-2 exact-refresh / step-all rows).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -283,9 +284,11 @@ pub fn mask_requests(ws: &[Tensor], rank_equiv: usize) -> Vec<MaskRequest<'_>> {
         .collect()
 }
 
-/// Measured sequential-vs-parallel wall clock of one full mask refresh.
+/// Measured sequential-vs-parallel wall clock of one batched stage
+/// (mask refresh, exact refresh, or the batched optimizer step).
 #[derive(Clone, Debug)]
-pub struct MaskSpeedup {
+pub struct Speedup {
+    pub label: &'static str,
     pub workers: usize,
     pub matrices: usize,
     pub seq_s: f64,
@@ -293,20 +296,18 @@ pub struct MaskSpeedup {
     pub speedup: f64,
 }
 
-impl MaskSpeedup {
+impl Speedup {
     /// One printable results row (the "measured, not asserted" line).
     pub fn row(&self) -> String {
         format!(
-            "mask_refresh {:>2} matrices | seq {:>8.3}s | {}w {:>8.3}s | speedup {:.2}x",
-            self.matrices, self.seq_s, self.workers, self.par_s, self.speedup
+            "{} {:>2} matrices | seq {:>8.3}s | {}w {:>8.3}s | speedup {:.2}x",
+            self.label, self.matrices, self.seq_s, self.workers, self.par_s, self.speedup
         )
     }
 }
 
-/// Time a full LIFT mask refresh over synthetic preset-shaped matrices,
-/// sequential (1 worker) vs layer-parallel (`workers`). Best-of-`reps`
-/// per side to damp scheduler noise; both sides produce bit-identical
-/// masks (the determinism tests assert this; here it is debug-checked).
+/// Time a full LIFT mask refresh (randomized rank reduction) — the
+/// ISSUE-1 acceptance row.
 pub fn measure_mask_refresh(
     la: &Arc<Linalg>,
     shapes: &[(usize, usize)],
@@ -314,26 +315,60 @@ pub fn measure_mask_refresh(
     rank_equiv: usize,
     workers: usize,
     reps: usize,
-) -> Result<MaskSpeedup> {
+) -> Result<Speedup> {
+    let cfg = LiftCfg {
+        rank: lra_rank,
+        ..Default::default()
+    };
+    measure_refresh("mask_refresh", la, shapes, &cfg, rank_equiv, workers, reps)
+}
+
+/// Time a full *exact-path* refresh (host top-r subspace decompositions
+/// fanned across the pool) — the ISSUE-2 `[exact-svd]` acceptance row.
+pub fn measure_exact_refresh(
+    la: &Arc<Linalg>,
+    shapes: &[(usize, usize)],
+    lra_rank: usize,
+    rank_equiv: usize,
+    workers: usize,
+    reps: usize,
+) -> Result<Speedup> {
+    let cfg = LiftCfg {
+        rank: lra_rank,
+        exact: true,
+        ..Default::default()
+    };
+    measure_refresh("exact_refresh", la, shapes, &cfg, rank_equiv, workers, reps)
+}
+
+/// Shared refresh timing over synthetic preset-shaped matrices,
+/// sequential (1 worker) vs layer-parallel (`workers`). Best-of-`reps`
+/// per side to damp scheduler noise; both sides produce bit-identical
+/// masks (the determinism tests assert this; here it is debug-checked).
+fn measure_refresh(
+    label: &'static str,
+    la: &Arc<Linalg>,
+    shapes: &[(usize, usize)],
+    cfg: &LiftCfg,
+    rank_equiv: usize,
+    workers: usize,
+    reps: usize,
+) -> Result<Speedup> {
     let mut rng = Rng::new(0x5eed_11f7);
     let ws: Vec<Tensor> = shapes
         .iter()
         .map(|&(m, n)| Tensor::randn(&[m, n], 0.05, &mut rng))
         .collect();
     let reqs = mask_requests(&ws, rank_equiv);
-    let cfg = LiftCfg {
-        rank: lra_rank,
-        ..Default::default()
-    };
     let seed = 0xa5ce_17u64;
     let time_side = |n_workers: usize| -> Result<(f64, Vec<Vec<u32>>)> {
         let engine = MaskEngine::with_workers(la.clone(), n_workers);
         // warm the compile caches so both sides time execution, not builds
-        let mut masks = engine.select_all(Selector::Lift, &cfg, &reqs, seed)?;
+        let mut masks = engine.select_all(Selector::Lift, cfg, &reqs, seed)?;
         let mut best = f64::INFINITY;
         for _ in 0..reps.max(1) {
             let t0 = std::time::Instant::now();
-            masks = engine.select_all(Selector::Lift, &cfg, &reqs, seed)?;
+            masks = engine.select_all(Selector::Lift, cfg, &reqs, seed)?;
             best = best.min(t0.elapsed().as_secs_f64());
         }
         Ok((best, masks))
@@ -341,7 +376,77 @@ pub fn measure_mask_refresh(
     let (seq_s, seq_masks) = time_side(1)?;
     let (par_s, par_masks) = time_side(workers.max(1))?;
     debug_assert_eq!(seq_masks, par_masks, "parallel masks diverged");
-    Ok(MaskSpeedup {
+    Ok(Speedup {
+        label,
+        workers: workers.max(1),
+        matrices: shapes.len(),
+        seq_s,
+        par_s,
+        speedup: seq_s / par_s.max(1e-12),
+    })
+}
+
+/// Time the batched sparse-Adam step (`optim::sparse::step_all`) over
+/// synthetic preset-shaped matrices, sequential (1 worker) vs
+/// layer-parallel — the ISSUE-2 `[step-all]` acceptance row. Each timed
+/// rep runs `inner_steps` consecutive batched steps (each spawns its own
+/// scoped pool, as the trainer does); best-of-`reps` per side. Both
+/// sides must produce bit-identical weights (debug-checked here,
+/// asserted by the determinism suite).
+pub fn measure_step_all(
+    shapes: &[(usize, usize)],
+    rank_equiv: usize,
+    workers: usize,
+    reps: usize,
+    inner_steps: usize,
+) -> Result<Speedup> {
+    use crate::optim::{sparse, AdamCfg, SparseAdam};
+    let mut rng = Rng::new(0x57e9_0a11);
+    let params: Vec<Tensor> = shapes
+        .iter()
+        .map(|&(m, n)| Tensor::randn(&[m, n], 0.05, &mut rng))
+        .collect();
+    let grads: Vec<Tensor> = shapes
+        .iter()
+        .map(|&(m, n)| Tensor::randn(&[m, n], 0.02, &mut rng))
+        .collect();
+    let states: Vec<(usize, SparseAdam)> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(m, n))| {
+            let k = budget_for(m, n, rank_equiv);
+            let mut idx: Vec<u32> = rng
+                .sample_indices(m * n, k)
+                .into_iter()
+                .map(|x| x as u32)
+                .collect();
+            idx.sort_unstable();
+            (i, SparseAdam::new(idx, AdamCfg::default()))
+        })
+        .collect();
+    let time_side = |n_workers: usize| -> (f64, Vec<Tensor>) {
+        let mut best = f64::INFINITY;
+        let mut out = params.clone();
+        for _ in 0..reps.max(1) {
+            let mut st = states.clone();
+            let mut ps = params.clone();
+            let t0 = std::time::Instant::now();
+            for _ in 0..inner_steps.max(1) {
+                sparse::step_all(&mut st, &mut ps, &grads, 1e-3, n_workers);
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            if dt < best {
+                best = dt;
+                out = ps;
+            }
+        }
+        (best, out)
+    };
+    let (seq_s, seq_params) = time_side(1);
+    let (par_s, par_params) = time_side(workers.max(1));
+    debug_assert_eq!(seq_params, par_params, "parallel step diverged");
+    Ok(Speedup {
+        label: "step_all",
         workers: workers.max(1),
         matrices: shapes.len(),
         seq_s,

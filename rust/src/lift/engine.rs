@@ -1,38 +1,51 @@
-//! Layer-parallel mask engine: one batched, multi-threaded pass that
-//! selects principal weights for every matrix of the model.
+//! Layer-parallel engine: the worker pool behind every batched
+//! per-matrix stage — mask selection (`select_all`), the exact top-r
+//! decompositions of a refresh, and the batched optimizer step
+//! (`optim::sparse::step_all` / `DenseAdamSet::step_all`), all of which
+//! fan out through [`par_map`].
 //!
 //! # Threading model
 //!
-//! `select_all` fans the per-matrix pipeline (rank reduction → top-k →
-//! optional block structuring; see `lift::select_indices`) across a pool
-//! of `std::thread::scope` workers. Work is distributed by an atomic
-//! cursor over the request list, so threads steal the next matrix as
+//! [`par_map`] runs one job per matrix across a pool of
+//! `std::thread::scope` workers. Work is distributed by an atomic
+//! cursor over the job list, so threads steal the next matrix as
 //! they finish — no static partitioning, no idle tail when matrix sizes
-//! are skewed. All workers share one [`Linalg`]: its compile cache is
-//! sharded-locked and executables are immutable `Arc`s, so concurrent
-//! rank reductions only contend for the few microseconds of a cache
-//! probe. Worker count comes from `LIFT_MASK_WORKERS`, else
-//! `available_parallelism`, and can be pinned per engine with
-//! [`MaskEngine::with_workers`].
+//! are skewed. Jobs are consumed by value, which lets callers hand each
+//! worker exclusive `&mut` access to disjoint state (the batched
+//! optimizer step moves `&mut` parameter slices in; selection moves
+//! shared references). `select_all`'s workers share one [`Linalg`]: its
+//! compile cache is sharded-locked and executables are immutable `Arc`s,
+//! so concurrent rank reductions only contend for the few microseconds
+//! of a cache probe. Worker count comes from `LIFT_WORKERS` (or the
+//! older `LIFT_MASK_WORKERS` alias), else `available_parallelism`, and
+//! can be pinned per engine with [`MaskEngine::with_workers`].
 //!
 //! # Determinism contract
 //!
-//! Masks are a pure function of `(seed, request.tag, request inputs,
-//! selector, cfg)` — never of the worker count, the scheduling order, or
-//! which thread ran the request. Selection with 1 worker and with N
-//! workers is **bit-identical** (asserted by `rust/tests/engine.rs` for
-//! every `Selector` × `RankStrategy`). Two ingredients make this hold:
+//! Every batched stage is a pure function of its per-job inputs — never
+//! of the worker count, the scheduling order, or which thread ran the
+//! job. Running with 1 worker and with N workers is **bit-identical**
+//! (asserted by `rust/tests/engine.rs`: masks for every `Selector` ×
+//! `RankStrategy` including the exact top-r path, and weights + Adam
+//! moments after multi-step `refresh_all`/`step_all` runs for every
+//! `Method`). The ingredients:
 //!
-//! * **RNG-stream derivation**: each request gets its own generator,
-//!   `stream_rng(seed, tag)` = `Rng::new(seed).split(tag)`, a pure
-//!   function of the refresh seed and the request's stable tag (callers
-//!   use the parameter index).
+//! * **RNG-stream derivation**: each selection request gets its own
+//!   generator, `stream_rng(seed, tag)` = `Rng::new(seed).split(tag)`, a
+//!   pure function of the refresh seed and the request's stable tag
+//!   (callers use the parameter index).
 //!   No RNG state is shared across requests, so execution order cannot
 //!   leak into the sampled values. The caller draws `seed` from its own
 //!   RNG once per refresh, keeping successive refreshes decorrelated.
 //! * **Deterministic kernels**: rank reduction runs through compiled
-//!   executables whose results depend only on their inputs, and the
-//!   host-side top-k resolves ties by index order.
+//!   executables whose results depend only on their inputs; the exact
+//!   path's host `eigh::svd_topr` seeds its iteration block from a fixed
+//!   constant (accuracy vs the full-spectrum oracle is bounded by
+//!   `eigh::TOPR_SV_TOL` / `eigh::TOPR_RECON_SLACK`); and the host-side
+//!   top-k resolves ties by index order.
+//! * **Independent updates**: `step_all` jobs touch disjoint
+//!   `(state, param, grad)` triples, so the fan-out is the sequential
+//!   loop reordered — bit-identical for any worker count.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -64,17 +77,107 @@ pub struct MaskEngine {
     workers: usize,
 }
 
-/// Worker count: `LIFT_MASK_WORKERS` if set, else the machine's available
-/// parallelism, else 1.
+/// Worker count: `LIFT_WORKERS` if set (`LIFT_MASK_WORKERS` is honored
+/// as a back-compat alias), else the machine's available parallelism,
+/// else 1. CI runs the test suite under both `LIFT_WORKERS=1` and the
+/// default to catch any violation of the determinism contract.
 pub fn default_workers() -> usize {
-    if let Ok(v) = std::env::var("LIFT_MASK_WORKERS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    for key in ["LIFT_WORKERS", "LIFT_MASK_WORKERS"] {
+        if let Ok(v) = std::env::var(key) {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
         }
     }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// Deterministic parallel map: apply `f` to every job and return the
+/// results in job order. `f(i, job)` must be a pure function of its
+/// arguments; the atomic-cursor work stealing then guarantees the output
+/// is bit-identical for any worker count. Jobs are consumed by value so
+/// callers can move exclusive `&mut` borrows of disjoint state into the
+/// pool (see `optim::sparse::step_all`).
+pub fn par_map<T, R, F>(workers: usize, jobs: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n_workers = workers.min(jobs.len()).max(1);
+    if n_workers == 1 {
+        return jobs.into_iter().enumerate().map(|(i, j)| f(i, j)).collect();
+    }
+    // slot i holds the pending job, then its result; the cursor hands
+    // each index to exactly one worker
+    let slots: Vec<Mutex<(Option<T>, Option<R>)>> = jobs
+        .into_iter()
+        .map(|j| Mutex::new((Some(j), None)))
+        .collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..n_workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                let job = slots[i]
+                    .lock()
+                    .expect("par_map slot poisoned")
+                    .0
+                    .take()
+                    .expect("par_map job taken twice");
+                let res = f(i, job);
+                slots[i].lock().expect("par_map slot poisoned").1 = Some(res);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("par_map slot poisoned")
+                .1
+                .expect("worker left a slot unfilled")
+        })
+        .collect()
+}
+
+/// Fan a per-matrix update over the pool: each state (keyed by its
+/// parameter index) gets exclusive `&mut` access to its tensor and a
+/// shared view of its gradient. The single walk over `params` carves
+/// disjoint mutable borrows, so the jobs can run on any worker without
+/// aliasing; panics on duplicate or out-of-range parameter indices —
+/// either would mean two jobs racing on one tensor (or a silently
+/// dropped state). Backs `optim::sparse::step_all` and the S2FT
+/// column-pack step.
+pub fn par_over_params<S: Send>(
+    states: Vec<(usize, S)>,
+    params: &mut [crate::tensor::Tensor],
+    grads: &[crate::tensor::Tensor],
+    workers: usize,
+    f: impl Fn(S, &mut crate::tensor::Tensor, &crate::tensor::Tensor) + Sync,
+) {
+    let n_states = states.len();
+    let mut by_param: std::collections::HashMap<usize, S> = states.into_iter().collect();
+    assert_eq!(
+        by_param.len(),
+        n_states,
+        "par_over_params: duplicate parameter index"
+    );
+    let jobs: Vec<(S, &mut Tensor, &Tensor)> = params
+        .iter_mut()
+        .enumerate()
+        .filter_map(|(pi, p)| by_param.remove(&pi).map(|st| (st, p, &grads[pi])))
+        .collect();
+    assert!(
+        by_param.is_empty(),
+        "par_over_params: state references a parameter index out of range"
+    );
+    par_map(workers, jobs, |_, (st, p, g)| f(st, p, g));
 }
 
 /// Derive the independent RNG stream for `(seed, tag)`. Pure function
@@ -121,37 +224,12 @@ impl MaskEngine {
         reqs: &[MaskRequest],
         seed: u64,
     ) -> Result<Vec<Vec<u32>>> {
-        let n_workers = self.workers.min(reqs.len()).max(1);
-        if n_workers == 1 {
-            return reqs
-                .iter()
-                .map(|r| self.select_one(sel, cfg, r, seed))
-                .collect();
-        }
-        let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<Result<Vec<u32>>>>> =
-            reqs.iter().map(|_| Mutex::new(None)).collect();
-        std::thread::scope(|s| {
-            for _ in 0..n_workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= reqs.len() {
-                        break;
-                    }
-                    let res = self.select_one(sel, cfg, &reqs[i], seed);
-                    *slots[i].lock().expect("mask slot poisoned") = Some(res);
-                });
-            }
-        });
-        let mut out = Vec::with_capacity(reqs.len());
-        for slot in slots {
-            let res = slot
-                .into_inner()
-                .expect("mask slot poisoned")
-                .expect("worker left a slot unfilled");
-            out.push(res?);
-        }
-        Ok(out)
+        let jobs: Vec<&MaskRequest> = reqs.iter().collect();
+        par_map(self.workers, jobs, |_, req| {
+            self.select_one(sel, cfg, req, seed)
+        })
+        .into_iter()
+        .collect()
     }
 }
 
@@ -175,6 +253,30 @@ mod tests {
                 k,
             })
             .collect()
+    }
+
+    #[test]
+    fn par_map_preserves_order_and_moves_mut_jobs() {
+        let mut data: Vec<Vec<u64>> = (0..16u64).map(|i| vec![i]).collect();
+        let jobs: Vec<&mut Vec<u64>> = data.iter_mut().collect();
+        let out = par_map(4, jobs, |i, v| {
+            v.push(i as u64 * 10);
+            v[0] * 100 + i as u64
+        });
+        let want: Vec<u64> = (0..16).map(|i| i * 100 + i).collect();
+        assert_eq!(out, want, "results must be in job order");
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(v, &vec![i as u64, i as u64 * 10], "job {i} mutated once");
+        }
+        // single worker takes the sequential path, same results
+        let mut data2: Vec<Vec<u64>> = (0..16u64).map(|i| vec![i]).collect();
+        let jobs2: Vec<&mut Vec<u64>> = data2.iter_mut().collect();
+        let out2 = par_map(1, jobs2, |i, v| {
+            v.push(i as u64 * 10);
+            v[0] * 100 + i as u64
+        });
+        assert_eq!(out2, want);
+        assert_eq!(data2, data);
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! Pipeline per weight matrix W:
 //!   1. rank-r approximation W' (randomized subspace iteration through XLA
-//!      on the fast path; exact host Jacobi SVD for ablations/oracles),
+//!      on the fast path; exact host top-r subspace iteration for the
+//!      oracle, full Jacobi SVD only for the tail-component ablations),
 //!   2. exact top-k on |W'| (quickselect threshold), giving flat indices,
 //!   3. optional 4x4-block structuring (Table 17).
 //!
@@ -117,10 +118,16 @@ pub fn rank_reduce(
     let minmn = m.min(n);
     let rank = cfg.rank.min(minmn);
     if cfg.exact || cfg.strategy != RankStrategy::Largest {
-        // ablation strategies need the full spectrum -> exact host SVD
+        if cfg.strategy == RankStrategy::Largest {
+            // the exact oracle only needs the leading subspace — top-r
+            // subspace iteration instead of the full-spectrum Jacobi
+            let out = crate::util::eigh::lowrank_approx(&w.data, m, n, rank);
+            return Ok(Tensor::from_vec(&[m, n], out));
+        }
+        // tail/random ablation strategies need the full spectrum
         let (u, s, vt) = crate::util::eigh::svd(&w.data, m, n);
         let comps: Vec<usize> = match cfg.strategy {
-            RankStrategy::Largest => (0..rank).collect(),
+            RankStrategy::Largest => unreachable!("exact Largest returns via svd_topr above"),
             RankStrategy::Smallest => (minmn - rank..minmn).collect(),
             RankStrategy::Random => rng.sample_indices(minmn, rank),
             RankStrategy::Hybrid => {

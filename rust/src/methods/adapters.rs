@@ -54,29 +54,117 @@ impl LoRa {
             states: Vec::new(),
         }
     }
+}
 
-    fn effective(&self, la: &Linalg, st: &LoraState) -> Result<Tensor> {
-        let mut v = la.matmul(&st.a, &st.b)?;
-        v.scale(self.scale);
-        v.add_scaled(&st.w0, 1.0);
-        if self.kind == AdapterKind::DoRa {
-            let (m, n) = v.dims2();
-            // column-normalize, then apply magnitudes
-            for j in 0..n {
-                let mut norm = 0.0f64;
-                for i in 0..m {
-                    let x = v.data[i * n + j] as f64;
-                    norm += x * x;
-                }
-                let norm = norm.sqrt().max(1e-8) as f32;
-                let s = st.mag[j] / norm;
-                for i in 0..m {
-                    v.data[i * n + j] *= s;
-                }
+/// Fan independent per-state adapter steps across the pool: each worker
+/// runs `step_one` on one state and returns the recomputed effective
+/// weight, which the caller writes back in parameter order. Shared by
+/// the LoRA family and Spectral, whose `step_all`s differ only in state
+/// type and per-state math.
+fn par_adapter_steps<S: Send>(
+    workers: usize,
+    states: &mut [S],
+    params: &mut [Tensor],
+    grads: &[Tensor],
+    pi_of: impl Fn(&S) -> usize + Sync,
+    step_one: impl Fn(&mut S, &Tensor) -> Result<Tensor> + Sync,
+) -> Result<()> {
+    let jobs: Vec<(&mut S, &Tensor)> = states
+        .iter_mut()
+        .map(|st| {
+            let g = &grads[pi_of(st)];
+            (st, g)
+        })
+        .collect();
+    let effs = crate::lift::engine::par_map(workers, jobs, |_, (st, g)| {
+        let pi = pi_of(st);
+        step_one(st, g).map(|w| (pi, w))
+    });
+    for res in effs {
+        let (pi, w) = res?;
+        params[pi] = w;
+    }
+    Ok(())
+}
+
+/// Effective weight of one adapter state (free function so the pooled
+/// `step_all` workers can call it without borrowing the whole method).
+fn lora_effective(kind: AdapterKind, scale: f32, la: &Linalg, st: &LoraState) -> Result<Tensor> {
+    let mut v = la.matmul(&st.a, &st.b)?;
+    v.scale(scale);
+    v.add_scaled(&st.w0, 1.0);
+    if kind == AdapterKind::DoRa {
+        let (m, n) = v.dims2();
+        // column-normalize, then apply magnitudes
+        for j in 0..n {
+            let mut norm = 0.0f64;
+            for i in 0..m {
+                let x = v.data[i * n + j] as f64;
+                norm += x * x;
+            }
+            let norm = norm.sqrt().max(1e-8) as f32;
+            let s = st.mag[j] / norm;
+            for i in 0..m {
+                v.data[i * n + j] *= s;
             }
         }
-        Ok(v)
     }
+    Ok(v)
+}
+
+/// One adapter state's optimizer step (chain rule through the
+/// reparameterization, then the Adam updates); returns the recomputed
+/// effective weight for the caller to write back. Touches only `st`, so
+/// states step concurrently with bit-identical results.
+fn lora_step_one(
+    kind: AdapterKind,
+    scale: f32,
+    la: &Linalg,
+    st: &mut LoraState,
+    g: &Tensor,
+    lr: f32,
+) -> Result<Tensor> {
+    let (m, n) = g.dims2();
+    // dL/dV: for plain LoRA/PiSSA this is just G (V = W_eff);
+    // DoRA projects G through the normalize-and-scale (per column)
+    let dv = if kind == AdapterKind::DoRa {
+        let mut v = la.matmul(&st.a, &st.b)?;
+        v.scale(scale);
+        v.add_scaled(&st.w0, 1.0);
+        let mut dv = Tensor::zeros(&[m, n]);
+        let mut dmag = vec![0.0f32; n];
+        for j in 0..n {
+            let mut norm = 0.0f64;
+            let mut gdotu = 0.0f64;
+            for i in 0..m {
+                norm += (v.data[i * n + j] as f64).powi(2);
+            }
+            let norm = norm.sqrt().max(1e-8);
+            for i in 0..m {
+                gdotu += g.data[i * n + j] as f64 * v.data[i * n + j] as f64 / norm;
+            }
+            dmag[j] = gdotu as f32;
+            let c = st.mag[j] as f64 / norm;
+            for i in 0..m {
+                let u = v.data[i * n + j] as f64 / norm;
+                dv.data[i * n + j] = (c * (g.data[i * n + j] as f64 - gdotu * u)) as f32;
+            }
+        }
+        if let Some(opt_m) = st.opt_m.as_mut() {
+            opt_m.step(&mut st.mag, &dmag, lr);
+        }
+        dv
+    } else {
+        g.clone()
+    };
+    // chain rule through ΔW = s·A B
+    let mut da = la.matmul_nt(&dv, &st.b)?; // (m, r) = dV Bᵀ
+    let mut db = la.matmul_tn(&st.a, &dv)?; // (r, n) = Aᵀ dV
+    da.scale(scale);
+    db.scale(scale);
+    st.opt_a.step(&mut st.a.data, &da.data, lr);
+    st.opt_b.step(&mut st.b.data, &db.data, lr);
+    lora_effective(kind, scale, la, st)
 }
 
 impl Method for LoRa {
@@ -148,57 +236,34 @@ impl Method for LoRa {
         lr: f32,
     ) -> Result<()> {
         let la = ctx.la.clone();
-        let scale = self.scale;
-        let kind = self.kind;
         for st in self.states.iter_mut() {
-            let g = &grads[st.pi];
-            let (m, n) = g.dims2();
-            // dL/dV: for plain LoRA/PiSSA this is just G (V = W_eff);
-            // DoRA projects G through the normalize-and-scale (per column)
-            let dv = if kind == AdapterKind::DoRa {
-                let mut v = la.matmul(&st.a, &st.b)?;
-                v.scale(scale);
-                v.add_scaled(&st.w0, 1.0);
-                let mut dv = Tensor::zeros(&[m, n]);
-                let mut dmag = vec![0.0f32; n];
-                for j in 0..n {
-                    let mut norm = 0.0f64;
-                    let mut gdotu = 0.0f64;
-                    for i in 0..m {
-                        norm += (v.data[i * n + j] as f64).powi(2);
-                    }
-                    let norm = norm.sqrt().max(1e-8);
-                    for i in 0..m {
-                        gdotu += g.data[i * n + j] as f64 * v.data[i * n + j] as f64 / norm;
-                    }
-                    dmag[j] = gdotu as f32;
-                    let c = st.mag[j] as f64 / norm;
-                    for i in 0..m {
-                        let u = v.data[i * n + j] as f64 / norm;
-                        dv.data[i * n + j] =
-                            (c * (g.data[i * n + j] as f64 - gdotu * u)) as f32;
-                    }
-                }
-                if let Some(opt_m) = st.opt_m.as_mut() {
-                    opt_m.step(&mut st.mag, &dmag, lr);
-                }
-                dv
-            } else {
-                g.clone()
-            };
-            // chain rule through ΔW = s·A B
-            let mut da = la.matmul_nt(&dv, &st.b)?; // (m, r) = dV Bᵀ
-            let mut db = la.matmul_tn(&st.a, &dv)?; // (r, n) = Aᵀ dV
-            da.scale(scale);
-            db.scale(scale);
-            st.opt_a.step(&mut st.a.data, &da.data, lr);
-            st.opt_b.step(&mut st.b.data, &db.data, lr);
-        }
-        // write back effective weights
-        for st in &self.states {
-            params[st.pi] = self.effective(&la, st)?;
+            let pi = st.pi;
+            params[pi] = lora_step_one(self.kind, self.scale, &la, st, &grads[pi], lr)?;
         }
         Ok(())
+    }
+
+    /// Adapter states are independent: each worker steps one state's
+    /// (A, B, magnitudes) and returns the new effective weight; write-back
+    /// happens on the caller in param order.
+    fn step_all(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        _step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        let la = ctx.la.clone();
+        let (kind, scale) = (self.kind, self.scale);
+        par_adapter_steps(
+            ctx.workers,
+            &mut self.states,
+            params,
+            grads,
+            |st| st.pi,
+            |st, g| lora_step_one(kind, scale, &la, st, g, lr),
+        )
     }
 
     fn trainable(&self) -> usize {
@@ -210,6 +275,24 @@ impl Method for LoRa {
 
     fn opt_bytes(&self) -> usize {
         self.trainable() * 8
+    }
+
+    fn state_digest(&self) -> u64 {
+        let mut words: Vec<u64> = Vec::new();
+        for st in &self.states {
+            words.push(st.pi as u64);
+            for t in [&st.a, &st.b] {
+                words.extend(t.data.iter().map(|x| x.to_bits() as u64));
+            }
+            words.extend(st.mag.iter().map(|x| x.to_bits() as u64));
+            for o in [&st.opt_a, &st.opt_b] {
+                words.extend(super::adam_words(o.t, &o.m, &o.v));
+            }
+            if let Some(o) = &st.opt_m {
+                words.extend(super::adam_words(o.t, &o.m, &o.v));
+            }
+        }
+        super::digest_words(words)
     }
 }
 
@@ -239,19 +322,42 @@ impl Spectral {
             states: Vec::new(),
         }
     }
+}
 
-    fn effective(&self, la: &Linalg, st: &SpectralState) -> Result<Tensor> {
-        let (m, r) = st.u.dims2();
-        let mut us = st.u.clone();
+fn spectral_effective(la: &Linalg, st: &SpectralState) -> Result<Tensor> {
+    let mut w = self_effective(la, &st.u, &st.v, &st.s)?; // U diag(s) Vᵀ
+    w.add_scaled(&st.w_res, 1.0);
+    Ok(w)
+}
+
+/// One spectral state's optimizer step; returns the new effective weight.
+fn spectral_step_one(la: &Linalg, st: &mut SpectralState, g: &Tensor, lr: f32) -> Result<Tensor> {
+    let (_, r) = st.u.dims2();
+    // dU = G V diag(s); dV = Gᵀ U diag(s); dσ_c = u_cᵀ G v_c
+    let gv = la.matmul(g, &st.v)?; // (m, r)
+    let gtu = la.matmul_tn(g, &st.u)?; // (n, r)
+    let mut du = gv.clone();
+    let mut dv = gtu.clone();
+    let (m, _) = du.dims2();
+    let (n, _) = dv.dims2();
+    let mut ds = vec![0.0f32; r];
+    for c in 0..r {
+        let mut acc = 0.0f64;
         for i in 0..m {
-            for c in 0..r {
-                us.data[i * r + c] *= st.s[c];
-            }
+            acc += st.u.data[i * r + c] as f64 * gv.data[i * r + c] as f64;
         }
-        let mut w = la.matmul_nt(&us, &st.v)?; // U diag(s) Vᵀ
-        w.add_scaled(&st.w_res, 1.0);
-        Ok(w)
+        ds[c] = acc as f32;
+        for i in 0..m {
+            du.data[i * r + c] *= st.s[c];
+        }
+        for j in 0..n {
+            dv.data[j * r + c] *= st.s[c];
+        }
     }
+    st.opt_u.step(&mut st.u.data, &du.data, lr);
+    st.opt_v.step(&mut st.v.data, &dv.data, lr);
+    st.opt_s.step(&mut st.s, &ds, lr);
+    spectral_effective(la, st)
 }
 
 impl Method for Spectral {
@@ -304,37 +410,30 @@ impl Method for Spectral {
     ) -> Result<()> {
         let la = ctx.la.clone();
         for st in self.states.iter_mut() {
-            let g = &grads[st.pi];
-            let (_, r) = st.u.dims2();
-            // dU = G V diag(s); dV = Gᵀ U diag(s); dσ_c = u_cᵀ G v_c
-            let gv = la.matmul(g, &st.v)?; // (m, r)
-            let gtu = la.matmul_tn(g, &st.u)?; // (n, r)
-            let mut du = gv.clone();
-            let mut dv = gtu.clone();
-            let (m, _) = du.dims2();
-            let (n, _) = dv.dims2();
-            let mut ds = vec![0.0f32; r];
-            for c in 0..r {
-                let mut acc = 0.0f64;
-                for i in 0..m {
-                    acc += st.u.data[i * r + c] as f64 * gv.data[i * r + c] as f64;
-                }
-                ds[c] = acc as f32;
-                for i in 0..m {
-                    du.data[i * r + c] *= st.s[c];
-                }
-                for j in 0..n {
-                    dv.data[j * r + c] *= st.s[c];
-                }
-            }
-            st.opt_u.step(&mut st.u.data, &du.data, lr);
-            st.opt_v.step(&mut st.v.data, &dv.data, lr);
-            st.opt_s.step(&mut st.s, &ds, lr);
-        }
-        for st in &self.states {
-            params[st.pi] = self.effective(&la, st)?;
+            let pi = st.pi;
+            params[pi] = spectral_step_one(&la, st, &grads[pi], lr)?;
         }
         Ok(())
+    }
+
+    /// Spectral states are independent — same fan-out as the LoRA family.
+    fn step_all(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        _step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        let la = ctx.la.clone();
+        par_adapter_steps(
+            ctx.workers,
+            &mut self.states,
+            params,
+            grads,
+            |st| st.pi,
+            |st, g| spectral_step_one(&la, st, g, lr),
+        )
     }
 
     fn trainable(&self) -> usize {
@@ -346,6 +445,21 @@ impl Method for Spectral {
 
     fn opt_bytes(&self) -> usize {
         self.trainable() * 8
+    }
+
+    fn state_digest(&self) -> u64 {
+        let mut words: Vec<u64> = Vec::new();
+        for st in &self.states {
+            words.push(st.pi as u64);
+            for t in [&st.u, &st.v] {
+                words.extend(t.data.iter().map(|x| x.to_bits() as u64));
+            }
+            words.extend(st.s.iter().map(|x| x.to_bits() as u64));
+            for o in [&st.opt_u, &st.opt_v, &st.opt_s] {
+                words.extend(super::adam_words(o.t, &o.m, &o.v));
+            }
+        }
+        super::digest_words(words)
     }
 }
 

@@ -52,11 +52,36 @@ impl Method for FullFt {
         Ok(())
     }
 
+    /// Per-tensor dense Adam steps are independent — fan across the pool.
+    fn step_all(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        _step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        self.opt
+            .as_mut()
+            .expect("init not called")
+            .step_all(params, grads, lr, ctx.workers);
+        Ok(())
+    }
+
     fn trainable(&self) -> usize {
         self.n_params
     }
 
     fn opt_bytes(&self) -> usize {
         self.opt.as_ref().map(|o| o.state_bytes()).unwrap_or(0)
+    }
+
+    fn state_digest(&self) -> u64 {
+        let words = self.opt.iter().flat_map(|o| {
+            o.states
+                .iter()
+                .flat_map(|st| super::adam_words(st.t, &st.m, &st.v))
+        });
+        super::digest_words(words)
     }
 }

@@ -31,9 +31,12 @@ pub struct Ctx {
     pub preset: PresetInfo,
     pub rng: Rng,
     pub adam: AdamCfg,
-    /// Worker threads for batched mask selection (`lift::engine`);
-    /// 1 forces the sequential path. Masks are bit-identical either way.
-    pub mask_workers: usize,
+    /// Worker threads for every batched per-matrix stage — mask
+    /// selection, exact decompositions, and the batched optimizer step
+    /// (`lift::engine::par_map`); 1 forces the sequential path. Results
+    /// are bit-identical for any value (the engine's determinism
+    /// contract).
+    pub workers: usize,
 }
 
 pub trait Method {
@@ -63,10 +66,58 @@ pub trait Method {
         step: usize,
         lr: f32,
     ) -> Result<()>;
+    /// Batched optimizer step, issued by the trainer once per step
+    /// *after* `refresh_all` (a mask swap must migrate Adam moments
+    /// before the step reads them — see `train::train`). Methods with
+    /// independent per-matrix updates fan them across `ctx.workers`
+    /// threads via `lift::engine::par_map`; results are bit-identical to
+    /// the sequential `step` for any worker count. The default delegates
+    /// to `step`, so direct `step()` callers and methods without a
+    /// batched path keep the old semantics.
+    fn step_all(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        self.step(ctx, params, grads, step, lr)
+    }
     /// Number of trainable parameters (the rank-budget accounting).
     fn trainable(&self) -> usize;
     /// Optimizer-state bytes (Fig. 6 metric).
     fn opt_bytes(&self) -> usize;
+    /// Deterministic digest of the method's internal state — optimizer
+    /// moments, masks/factors, timesteps. The cross-worker determinism
+    /// suite (`rust/tests/engine.rs`) uses it to prove 1-worker and
+    /// N-worker runs agree bit-for-bit beyond the visible parameters.
+    /// Methods without internal state keep the default.
+    fn state_digest(&self) -> u64 {
+        0
+    }
+}
+
+/// Order-sensitive 64-bit FNV-1a over words — the shared implementation
+/// behind the `Method::state_digest` impls. f32 state is hashed via
+/// `to_bits`, so the digest distinguishes values `==` would conflate
+/// (-0.0 vs 0.0) and never conflates values bit-compare would split.
+pub fn digest_words<I: IntoIterator<Item = u64>>(words: I) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Digest words for a packed Adam state (timestep + both moment vectors).
+fn adam_words<'a>(t: usize, m: &'a [f32], v: &'a [f32]) -> impl Iterator<Item = u64> + 'a {
+    std::iter::once(t as u64)
+        .chain(m.iter().map(|x| x.to_bits() as u64))
+        .chain(v.iter().map(|x| x.to_bits() as u64))
 }
 
 /// Which matrices a method may touch.

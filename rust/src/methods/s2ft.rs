@@ -27,6 +27,53 @@ impl S2Ft {
             initialized: false,
         }
     }
+
+    /// First-step column selection by gradient energy (deterministic, so
+    /// it stays sequential; budget = r(m+n) params).
+    fn ensure_selected(&mut self, ctx: &mut Ctx, grads: &[Tensor]) {
+        if self.initialized {
+            return;
+        }
+        for &pi in &self.matrices {
+            let g = &grads[pi];
+            let (m, n) = g.dims2();
+            let budget = crate::lift::budget_for(m, n, self.rank);
+            let n_cols = (budget / m).clamp(1, n);
+            let mut energy = vec![0.0f32; n];
+            for i in 0..m {
+                for j in 0..n {
+                    energy[j] += g.data[i * n + j] * g.data[i * n + j];
+                }
+            }
+            let cols: Vec<usize> = crate::lift::topk_indices(&energy, n_cols)
+                .into_iter()
+                .map(|c| c as usize)
+                .collect();
+            let opt = DenseAdam::new(cols.len() * m, ctx.adam);
+            self.states.push((pi, cols, opt));
+        }
+        self.initialized = true;
+    }
+}
+
+/// One matrix's packed-column Adam step (shared by `step` / `step_all`).
+fn s2ft_step_one(cols: &[usize], opt: &mut DenseAdam, p: &mut Tensor, g: &Tensor, lr: f32) {
+    let (m, n) = p.dims2();
+    // pack selected columns
+    let mut wpack = Vec::with_capacity(cols.len() * m);
+    let mut gpack = Vec::with_capacity(cols.len() * m);
+    for &j in cols.iter() {
+        for i in 0..m {
+            wpack.push(p.data[i * n + j]);
+            gpack.push(g.data[i * n + j]);
+        }
+    }
+    opt.step(&mut wpack, &gpack, lr);
+    for (cidx, &j) in cols.iter().enumerate() {
+        for i in 0..m {
+            p.data[i * n + j] = wpack[cidx * m + i];
+        }
+    }
 }
 
 impl Method for S2Ft {
@@ -48,47 +95,33 @@ impl Method for S2Ft {
         _step: usize,
         lr: f32,
     ) -> Result<()> {
-        if !self.initialized {
-            // pick columns by gradient energy; budget = r(m+n) params
-            for &pi in &self.matrices {
-                let g = &grads[pi];
-                let (m, n) = g.dims2();
-                let budget = crate::lift::budget_for(m, n, self.rank);
-                let n_cols = (budget / m).clamp(1, n);
-                let mut energy = vec![0.0f32; n];
-                for i in 0..m {
-                    for j in 0..n {
-                        energy[j] += g.data[i * n + j] * g.data[i * n + j];
-                    }
-                }
-                let cols: Vec<usize> = crate::lift::topk_indices(&energy, n_cols)
-                    .into_iter()
-                    .map(|c| c as usize)
-                    .collect();
-                let opt = DenseAdam::new(cols.len() * m, ctx.adam);
-                self.states.push((pi, cols, opt));
-            }
-            self.initialized = true;
-        }
+        self.ensure_selected(ctx, grads);
         for (pi, cols, opt) in self.states.iter_mut() {
-            let (m, n) = params[*pi].dims2();
-            // pack selected columns
-            let mut wpack = Vec::with_capacity(cols.len() * m);
-            let mut gpack = Vec::with_capacity(cols.len() * m);
-            for &j in cols.iter() {
-                for i in 0..m {
-                    wpack.push(params[*pi].data[i * n + j]);
-                    gpack.push(grads[*pi].data[i * n + j]);
-                }
-            }
-            opt.step(&mut wpack, &gpack, lr);
-            for (cidx, &j) in cols.iter().enumerate() {
-                for i in 0..m {
-                    params[*pi].data[i * n + j] = wpack[cidx * m + i];
-                }
-            }
+            s2ft_step_one(cols, opt, &mut params[*pi], &grads[*pi], lr);
         }
-        let _ = ctx;
+        Ok(())
+    }
+
+    /// Column packs touch disjoint matrices — fan across the pool.
+    fn step_all(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        _step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        self.ensure_selected(ctx, grads);
+        crate::lift::engine::par_over_params(
+            self.states
+                .iter_mut()
+                .map(|(pi, cols, opt)| (*pi, (cols.as_slice(), opt)))
+                .collect(),
+            params,
+            grads,
+            ctx.workers,
+            |(cols, opt), p, g| s2ft_step_one(cols, opt, p, g, lr),
+        );
         Ok(())
     }
 
@@ -104,5 +137,14 @@ impl Method for S2Ft {
 
     fn opt_bytes(&self) -> usize {
         self.states.iter().map(|(_, _, o)| o.state_bytes()).sum()
+    }
+
+    fn state_digest(&self) -> u64 {
+        let words = self.states.iter().flat_map(|(pi, cols, opt)| {
+            std::iter::once(*pi as u64)
+                .chain(cols.iter().map(|&c| c as u64))
+                .chain(super::adam_words(opt.t, &opt.m, &opt.v))
+        });
+        super::digest_words(words)
     }
 }

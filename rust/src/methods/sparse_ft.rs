@@ -72,10 +72,16 @@ impl SparseFt {
 
     /// Current mask (flat indices) for a given param index, if trainable.
     pub fn mask_for(&self, param_idx: usize) -> Option<&[u32]> {
+        self.state_for(param_idx).map(|st| st.idx.as_slice())
+    }
+
+    /// Packed optimizer state for a given param index (diagnostics and
+    /// the refresh-ordering regression test).
+    pub fn state_for(&self, param_idx: usize) -> Option<&SparseAdam> {
         self.states
             .iter()
             .find(|(i, _)| *i == param_idx)
-            .map(|(_, st)| st.idx.as_slice())
+            .map(|(_, st)| st)
     }
 
     fn budget(&self, shape: &[usize]) -> usize {
@@ -108,7 +114,7 @@ impl SparseFt {
         // the masks depend on this seed and the param index only, never
         // on worker count or scheduling order
         let seed = ctx.rng.next_u64();
-        let engine = MaskEngine::with_workers(ctx.la.clone(), ctx.mask_workers);
+        let engine = MaskEngine::with_workers(ctx.la.clone(), ctx.workers);
         let reqs: Vec<MaskRequest> = self
             .matrices
             .iter()
@@ -236,11 +242,42 @@ impl Method for SparseFt {
         Ok(())
     }
 
+    /// Layer-parallel batched step: same maintenance (idempotent per
+    /// trainer step, so trainer-driven `refresh_all` + `step_all` never
+    /// maintains twice), then every matrix's packed Adam step fans
+    /// across the worker pool — bit-identical to sequential `step`.
+    fn step_all(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        self.maintain(ctx, params, grads, step)?;
+        anyhow::ensure!(
+            self.initialized,
+            "{}: mask selection never succeeded — no trainable indices",
+            self.label
+        );
+        optim::sparse::step_all(&mut self.states, params, grads, lr, ctx.workers);
+        Ok(())
+    }
+
     fn trainable(&self) -> usize {
         self.states.iter().map(|(_, st)| st.k()).sum()
     }
 
     fn opt_bytes(&self) -> usize {
         self.states.iter().map(|(_, st)| st.state_bytes()).sum()
+    }
+
+    fn state_digest(&self) -> u64 {
+        let words = self.states.iter().flat_map(|(pi, st)| {
+            std::iter::once(*pi as u64)
+                .chain(st.idx.iter().map(|&i| i as u64))
+                .chain(super::adam_words(st.t, &st.m, &st.v))
+        });
+        super::digest_words(words)
     }
 }

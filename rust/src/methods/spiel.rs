@@ -18,6 +18,9 @@ pub struct Spiel {
     /// per matrix: (param idx, opt state, weight value at selection time)
     states: Vec<(usize, SparseAdam, Vec<f32>)>,
     matrices: Vec<usize>,
+    /// last step that ran a grow/drop cycle — makes the cycle idempotent
+    /// per trainer step, so `step` and `step_all` never churn twice
+    last_cycled_step: Option<usize>,
 }
 
 impl Spiel {
@@ -29,6 +32,58 @@ impl Spiel {
             churn: 0.3,
             states: Vec::new(),
             matrices: Vec::new(),
+            last_cycled_step: None,
+        }
+    }
+
+    /// The grow/drop cycle, run every `interval` steps. Sequential on
+    /// purpose: the random padding draws from `ctx.rng`, and keeping one
+    /// canonical draw order is what makes the run worker-count
+    /// invariant. The per-matrix Adam steps (the hot part) are what the
+    /// pool parallelizes.
+    fn grow_drop(&mut self, ctx: &mut Ctx, params: &[Tensor], grads: &[Tensor], step: usize) {
+        if self.last_cycled_step == Some(step) {
+            return;
+        }
+        self.last_cycled_step = Some(step);
+        if step == 0 || step % self.interval != 0 {
+            return;
+        }
+        for (pi, st, snapshot) in self.states.iter_mut() {
+            let w = &params[*pi];
+            let g = &grads[*pi];
+            let k = st.k();
+            let n_churn = ((k as f32 * self.churn) as usize).max(1).min(k - 1);
+            // drop: smallest |w_now - w_at_selection| (least useful)
+            let mut order: Vec<usize> = (0..k).collect();
+            order.sort_by(|&a, &b| {
+                let da = (w.data[st.idx[a] as usize] - snapshot[a]).abs();
+                let db = (w.data[st.idx[b] as usize] - snapshot[b]).abs();
+                da.partial_cmp(&db).unwrap()
+            });
+            let keep: std::collections::HashSet<u32> = order[n_churn..]
+                .iter()
+                .map(|&j| st.idx[j])
+                .collect();
+            // grow: largest |g| outside the kept set
+            let mut new_idx: Vec<u32> = keep.iter().copied().collect();
+            for &cand in topk_indices(&g.data, k + n_churn).iter() {
+                if new_idx.len() >= k {
+                    break;
+                }
+                if !keep.contains(&cand) {
+                    new_idx.push(cand);
+                }
+            }
+            // pad from random if gradient top-k overlapped too much
+            while new_idx.len() < k {
+                let cand = ctx.rng.below(w.len()) as u32;
+                if !new_idx.contains(&cand) {
+                    new_idx.push(cand);
+                }
+            }
+            st.refresh(new_idx);
+            *snapshot = st.idx.iter().map(|&i| w.data[i as usize]).collect();
         }
     }
 }
@@ -67,47 +122,34 @@ impl Method for Spiel {
         step: usize,
         lr: f32,
     ) -> Result<()> {
-        if step > 0 && step % self.interval == 0 {
-            for (pi, st, snapshot) in self.states.iter_mut() {
-                let w = &params[*pi];
-                let g = &grads[*pi];
-                let k = st.k();
-                let n_churn = ((k as f32 * self.churn) as usize).max(1).min(k - 1);
-                // drop: smallest |w_now - w_at_selection| (least useful)
-                let mut order: Vec<usize> = (0..k).collect();
-                order.sort_by(|&a, &b| {
-                    let da = (w.data[st.idx[a] as usize] - snapshot[a]).abs();
-                    let db = (w.data[st.idx[b] as usize] - snapshot[b]).abs();
-                    da.partial_cmp(&db).unwrap()
-                });
-                let keep: std::collections::HashSet<u32> = order[n_churn..]
-                    .iter()
-                    .map(|&j| st.idx[j])
-                    .collect();
-                // grow: largest |g| outside the kept set
-                let mut new_idx: Vec<u32> = keep.iter().copied().collect();
-                for &cand in topk_indices(&g.data, k + n_churn).iter() {
-                    if new_idx.len() >= k {
-                        break;
-                    }
-                    if !keep.contains(&cand) {
-                        new_idx.push(cand);
-                    }
-                }
-                // pad from random if gradient top-k overlapped too much
-                while new_idx.len() < k {
-                    let cand = ctx.rng.below(w.len()) as u32;
-                    if !new_idx.contains(&cand) {
-                        new_idx.push(cand);
-                    }
-                }
-                st.refresh(new_idx);
-                *snapshot = st.idx.iter().map(|&i| w.data[i as usize]).collect();
-            }
-        }
+        self.grow_drop(ctx, params, grads, step);
         for (pi, st, _) in self.states.iter_mut() {
             st.step(&mut params[*pi].data, &grads[*pi].data, lr);
         }
+        Ok(())
+    }
+
+    /// Same grow/drop cycle (sequential, idempotent per step), then the
+    /// packed Adam steps fan across the pool.
+    fn step_all(
+        &mut self,
+        ctx: &mut Ctx,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        step: usize,
+        lr: f32,
+    ) -> Result<()> {
+        self.grow_drop(ctx, params, grads, step);
+        crate::optim::sparse::step_all_refs(
+            self.states
+                .iter_mut()
+                .map(|(pi, st, _)| (*pi, st))
+                .collect(),
+            params,
+            grads,
+            lr,
+            ctx.workers,
+        );
         Ok(())
     }
 
@@ -117,5 +159,15 @@ impl Method for Spiel {
 
     fn opt_bytes(&self) -> usize {
         self.states.iter().map(|(_, st, _)| st.state_bytes()).sum()
+    }
+
+    fn state_digest(&self) -> u64 {
+        let words = self.states.iter().flat_map(|(pi, st, snapshot)| {
+            std::iter::once(*pi as u64)
+                .chain(st.idx.iter().map(|&i| i as u64))
+                .chain(super::adam_words(st.t, &st.m, &st.v))
+                .chain(snapshot.iter().map(|x| x.to_bits() as u64))
+        });
+        super::digest_words(words)
     }
 }

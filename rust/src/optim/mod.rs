@@ -3,7 +3,7 @@
 
 pub mod sparse;
 
-pub use sparse::{refresh_all, KernelAdam, SparseAdam};
+pub use sparse::{refresh_all, step_all, KernelAdam, SparseAdam};
 
 use crate::tensor::Tensor;
 
@@ -86,6 +86,22 @@ impl DenseAdamSet {
         }
     }
 
+    /// Layer-parallel twin of [`DenseAdamSet::step`]: per-tensor AdamW
+    /// steps share no state, so the `par_map` fan-out is bit-identical
+    /// to the sequential loop for any worker count.
+    pub fn step_all(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32, workers: usize) {
+        let jobs: Vec<(&mut DenseAdam, &mut Tensor, &Tensor)> = self
+            .states
+            .iter_mut()
+            .zip(params.iter_mut())
+            .zip(grads)
+            .map(|((st, p), g)| (st, p, g))
+            .collect();
+        crate::lift::engine::par_map(workers, jobs, |_, (st, p, g)| {
+            st.step(&mut p.data, &g.data, lr)
+        });
+    }
+
     pub fn state_bytes(&self) -> usize {
         self.states.iter().map(|s| s.state_bytes()).sum()
     }
@@ -144,6 +160,30 @@ mod tests {
             opt.step(&mut w, &[0.0], 0.01);
         }
         assert!(w[0] < 1.0 && w[0] > 0.0);
+    }
+
+    #[test]
+    fn dense_set_step_all_matches_step() {
+        let mut rng = crate::util::rng::Rng::new(6);
+        let mut p1: Vec<Tensor> = (0..5)
+            .map(|_| Tensor::randn(&[7, 3], 1.0, &mut rng))
+            .collect();
+        let mut p2 = p1.clone();
+        let grads: Vec<Tensor> = (0..5)
+            .map(|_| Tensor::randn(&[7, 3], 1.0, &mut rng))
+            .collect();
+        let mut s1 = DenseAdamSet::new(&p1, AdamCfg::default());
+        let mut s2 = DenseAdamSet::new(&p2, AdamCfg::default());
+        for _ in 0..3 {
+            s1.step(&mut p1, &grads, 0.01);
+            s2.step_all(&mut p2, &grads, 0.01, 3);
+        }
+        assert_eq!(p1, p2, "weights must be bit-identical");
+        for (a, b) in s1.states.iter().zip(&s2.states) {
+            assert_eq!(a.m, b.m);
+            assert_eq!(a.v, b.v);
+            assert_eq!(a.t, b.t);
+        }
     }
 
     #[test]

@@ -128,6 +128,44 @@ pub fn refresh_all(states: &mut [(usize, SparseAdam)], masks: Vec<Vec<u32>>) -> 
     overlap / n as f64
 }
 
+/// Batched optimizer step across many matrices — the trainer-facing twin
+/// of [`refresh_all`] (`Method::step_all` routes here). Each state gets
+/// exclusive access to its parameter's data; per-matrix [`SparseAdam`]
+/// steps share nothing, so fanning them over `workers` threads through
+/// `lift::engine::par_map` is bit-identical to the sequential loop for
+/// any worker count (the cross-worker determinism suite in
+/// `rust/tests/engine.rs` asserts this).
+pub fn step_all(
+    states: &mut [(usize, SparseAdam)],
+    params: &mut [Tensor],
+    grads: &[Tensor],
+    lr: f32,
+    workers: usize,
+) {
+    step_all_refs(
+        states.iter_mut().map(|(pi, st)| (*pi, st)).collect(),
+        params,
+        grads,
+        lr,
+        workers,
+    )
+}
+
+/// [`step_all`] over caller-collected state references, for methods whose
+/// state tuples carry extra per-matrix fields (e.g. SpIEL's snapshots).
+/// The disjoint-`&mut` carving lives in `lift::engine::par_over_params`.
+pub fn step_all_refs(
+    states: Vec<(usize, &mut SparseAdam)>,
+    params: &mut [Tensor],
+    grads: &[Tensor],
+    lr: f32,
+    workers: usize,
+) {
+    crate::lift::engine::par_over_params(states, params, grads, workers, |st, p, g| {
+        st.step(&mut p.data, &g.data, lr)
+    });
+}
+
 /// PJRT-kernel-backed variant: drives the `sparse_adam_<k>` Pallas artifact.
 pub struct KernelAdam<'rt> {
     rt: &'rt Runtime,
@@ -276,6 +314,69 @@ mod tests {
         assert_eq!(states[0].1.idx, vec![2, 6]);
         assert_eq!(states[1].1.idx, vec![0, 5]);
         assert!(states[1].1.m.iter().all(|&m| m != 0.0), "survivors keep state");
+    }
+
+    #[test]
+    fn step_all_matches_sequential_loop() {
+        let mut rng = crate::util::rng::Rng::new(8);
+        let shapes = [(6usize, 8usize), (4, 4), (10, 3)];
+        let mut params: Vec<Tensor> = shapes
+            .iter()
+            .map(|&(m, n)| Tensor::randn(&[m, n], 1.0, &mut rng))
+            .collect();
+        let grads: Vec<Tensor> = shapes
+            .iter()
+            .map(|&(m, n)| Tensor::randn(&[m, n], 1.0, &mut rng))
+            .collect();
+        let mut states: Vec<(usize, SparseAdam)> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(m, n))| {
+                let mut idx: Vec<u32> = rng
+                    .sample_indices(m * n, m * n / 2)
+                    .into_iter()
+                    .map(|x| x as u32)
+                    .collect();
+                idx.sort_unstable();
+                (i, SparseAdam::new(idx, AdamCfg::default()))
+            })
+            .collect();
+        let mut params_seq = params.clone();
+        let mut states_seq = states.clone();
+        for _ in 0..3 {
+            for (pi, st) in states_seq.iter_mut() {
+                st.step(&mut params_seq[*pi].data, &grads[*pi].data, 0.01);
+            }
+            step_all(&mut states, &mut params, &grads, 0.01, 4);
+        }
+        assert_eq!(params, params_seq, "weights must be bit-identical");
+        for ((_, a), (_, b)) in states.iter().zip(&states_seq) {
+            assert_eq!(a.m, b.m, "first moments must be bit-identical");
+            assert_eq!(a.v, b.v, "second moments must be bit-identical");
+            assert_eq!(a.t, b.t);
+        }
+    }
+
+    #[test]
+    fn step_all_leaves_stateless_params_alone() {
+        let mut params = vec![
+            Tensor::full(&[2, 2], 1.0),
+            Tensor::full(&[2, 2], 1.0),
+            Tensor::full(&[2, 2], 1.0),
+        ];
+        let grads = vec![
+            Tensor::full(&[2, 2], 0.5),
+            Tensor::full(&[2, 2], 0.5),
+            Tensor::full(&[2, 2], 0.5),
+        ];
+        let mut states = vec![
+            (0usize, SparseAdam::new(vec![0, 1, 2, 3], AdamCfg::default())),
+            (2usize, SparseAdam::new(vec![1], AdamCfg::default())),
+        ];
+        step_all(&mut states, &mut params, &grads, 0.1, 2);
+        assert!(params[0].data.iter().all(|&w| w != 1.0));
+        assert!(params[1].data.iter().all(|&w| w == 1.0), "no state, no step");
+        assert!(params[2].data[1] != 1.0 && params[2].data[0] == 1.0);
     }
 
     #[test]

@@ -163,21 +163,27 @@ impl Linalg {
     }
 }
 
-/// Rotate (q, b) into singular order via exact SVD of the small factor b
-/// (rp x n, host Jacobi) and truncate to `rank` columns.
+/// Rotate (q, b) into singular order via the exact host decomposition of
+/// the small factor b (rp x n) and truncate to `rank` columns. Only the
+/// top `rank` triplets are requested (`eigh::svd_topr`); at the default
+/// oversample the solver falls back to the full Jacobi oracle, but
+/// callers sweeping larger blocks (Fig. 16 rank sweeps) stop paying for
+/// components the truncation would discard.
 pub fn truncate_factors(q: &Tensor, b: &Tensor, rank: usize) -> (Tensor, Tensor) {
     let (m, rp) = q.dims2();
     let (rp2, n) = b.dims2();
     assert_eq!(rp, rp2);
-    let rank = rank.min(rp);
-    let (ub, sb, vtb) = crate::util::eigh::svd(&b.data, rp, n);
+    // clamp to min(rp, n): b has only min(rp, n) singular triplets, and
+    // the loops below index ub/sb with exactly `rank` of them
+    let rank = rank.min(rp).min(n);
+    let (ub, sb, vtb) = crate::util::eigh::svd_topr(&b.data, rp, n, rank);
     // q' = q @ ub[:, :rank] (m, rank); b' = diag(s) vtb [:rank] (rank, n)
     let mut qr = vec![0.0f32; m * rank];
     for i in 0..m {
         for c in 0..rank {
             let mut acc = 0.0f64;
             for l in 0..rp {
-                acc += q.data[i * rp + l] as f64 * ub[l * rp + c] as f64;
+                acc += q.data[i * rp + l] as f64 * ub[l * rank + c] as f64;
             }
             qr[i * rank + c] = acc as f32;
         }
@@ -320,6 +326,24 @@ mod tests {
             err_rand <= err_exact * 1.05 + 1e-4,
             "rand {err_rand} vs exact {err_exact}"
         );
+    }
+
+    #[test]
+    fn truncate_factors_clamps_rank_to_small_side() {
+        let (la, _c) = linalg();
+        let mut rng = Rng::new(6);
+        let q = Tensor::randn(&[10, 6], 1.0, &mut rng);
+        let b = Tensor::randn(&[6, 4], 1.0, &mut rng);
+        // rank > n: b has only n singular triplets — must clamp, not
+        // panic / read out of bounds
+        let (qr, br) = truncate_factors(&q, &b, 5);
+        assert_eq!(qr.shape, vec![10, 4]);
+        assert_eq!(br.shape, vec![4, 4]);
+        // at b's full rank the "truncation" must reproduce q @ b
+        let rec = la.matmul(&qr, &br).unwrap();
+        let full = la.matmul(&q, &b).unwrap();
+        let diff = crate::util::stats::frobenius_diff(&rec.data, &full.data);
+        assert!(diff < 1e-3, "diff={diff}");
     }
 
     #[test]

@@ -84,9 +84,12 @@ pub fn train(
         let batch = src.next_batch(&mut data_rng);
         let (loss, grads) = exec.train_step(params, &batch)?;
         // one batched mask-maintenance call (layer-parallel for sparse
-        // methods; no-op for dense/adapter methods), then the update
+        // methods; no-op for dense/adapter methods), then one batched
+        // optimizer step. Order matters: a refresh that swaps mask
+        // indices must migrate the Adam moments *before* the step reads
+        // them (regression-tested by rust/tests/engine.rs).
         method.refresh_all(ctx, params, &grads, step)?;
-        method.step(ctx, params, &grads, step, sched.at(step))?;
+        method.step_all(ctx, params, &grads, step, sched.at(step))?;
         log.losses.push(loss);
         log.step_times.push(st.elapsed().as_secs_f64());
         if cfg.log_every > 0 && step % cfg.log_every == 0 {

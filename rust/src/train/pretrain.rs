@@ -40,7 +40,7 @@ pub fn make_ctx(rt: &Runtime, exec: &ModelExec, seed: u64) -> Ctx {
         preset: exec.preset.clone(),
         rng: Rng::new(seed),
         adam: AdamCfg::default(),
-        mask_workers: crate::lift::engine::default_workers(),
+        workers: crate::lift::engine::default_workers(),
     }
 }
 

@@ -1,4 +1,5 @@
-//! Dense symmetric eigensolver (cyclic Jacobi) + exact small-matrix SVD.
+//! Dense symmetric eigensolver (cyclic Jacobi) + exact small-matrix SVD
+//! + the top-r subspace path the exact oracle actually runs on.
 //!
 //! The HLO interchange cannot carry LAPACK custom-calls, and the runtime
 //! path uses randomized subspace iteration (runtime/linalg.rs). This module
@@ -6,6 +7,18 @@
 //! randomized factors in tests, (b) Fig. 13-style rank counting of update
 //! matrices, and (c) the small-side rotation of subspace factors. O(n^3)
 //! per sweep — fine for the n <= ~2k matrices it sees.
+//!
+//! Two tiers live here:
+//!   * [`eigh64`] / [`svd`] — the full-spectrum Jacobi oracle, retained
+//!     for the tail-component ablation strategies, Fig. 13 rank counting,
+//!     and as the reference the property suite checks against;
+//!   * [`svd_topr`] — a deterministic blocked subspace iteration that
+//!     computes only the top-r singular triplets. [`lowrank_approx`]
+//!     (the paper's Eq. 1 oracle) routes through it, so a rank-32
+//!     reconstruction of a 2k-side matrix no longer pays for the other
+//!     ~2k components; accuracy vs the Jacobi oracle is bounded by
+//!     [`TOPR_SV_TOL`] / [`TOPR_RECON_SLACK`] (asserted in
+//!     `rust/tests/properties.rs`).
 
 /// Jacobi eigendecomposition of a symmetric matrix (row-major, n x n).
 /// Returns (eigenvalues desc, eigenvectors as columns, row-major n x n).
@@ -154,15 +167,238 @@ pub fn svd(a: &[f32], m: usize, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     }
 }
 
-/// Rank-r reconstruction from exact SVD (the paper's Eq. 1 oracle).
+/// Accuracy contract of [`svd_topr`] against the full-spectrum [`svd`]
+/// oracle (asserted by `rust/tests/properties.rs`):
+/// every returned singular value is within `TOPR_SV_TOL * s_max` of the
+/// oracle's value at the same position. The worst case is an adversarial
+/// near-flat spectrum (`s_r ~ s_{p+1}`, p = r + oversample), where
+/// subspace iteration converges slowly; observed error there is ~2e-3,
+/// while decaying spectra land near f64 round-off (~1e-15).
+pub const TOPR_SV_TOL: f32 = 1e-2;
+
+/// Companion bound: the top-r reconstruction's Frobenius error exceeds
+/// the oracle's best-rank-r error by at most `TOPR_RECON_SLACK * |A|_F`.
+/// Near-flat spectra are again the worst case (~3e-4 observed), and there
+/// any rank-r subspace is near-optimal, which is what keeps the slack
+/// small even when individual vectors have not converged.
+pub const TOPR_RECON_SLACK: f32 = 1e-3;
+
+/// Oversampling columns of the iteration block (p = r + this).
+const TOPR_OVERSAMPLE: usize = 8;
+/// Iteration cap; each pass multiplies the error by (s_{p+1}/s_r)^2.
+const TOPR_MAX_ITERS: usize = 60;
+/// Early exit when trace(X^T G X) is relatively stable between passes.
+const TOPR_TRACE_TOL: f64 = 1e-12;
+
+/// Top-r thin SVD of an m x n matrix (row-major) by blocked subspace
+/// iteration on the smaller-side Gram matrix, entirely in f64 on the
+/// host. Returns (u m x r, s r, vt r x n), r clamped to min(m, n).
+///
+/// Deterministic: the start block comes from a fixed-seed [`Rng`], so
+/// the result is a pure function of `(a, m, n, r)` — the layer-parallel
+/// engine can run one decomposition per worker without the worker count
+/// or scheduling order leaking into the factors. Small problems
+/// (2(r + oversample) >= min(m, n)) fall back to the full Jacobi
+/// oracle, where iteration would save nothing.
+pub fn svd_topr(a: &[f32], m: usize, n: usize, r: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(a.len(), m * n);
+    let minmn = m.min(n);
+    let r = r.min(minmn);
+    if r == 0 {
+        return (Vec::new(), Vec::new(), Vec::new());
+    }
+    let p = (r + TOPR_OVERSAMPLE).min(minmn);
+    if 2 * p >= minmn {
+        let (uf, sf, vtf) = svd(a, m, n);
+        let mut u = vec![0.0f32; m * r];
+        for i in 0..m {
+            u[i * r..(i + 1) * r].copy_from_slice(&uf[i * minmn..i * minmn + r]);
+        }
+        return (u, sf[..r].to_vec(), vtf[..r * n].to_vec());
+    }
+    if n > m {
+        // transpose route: svd_topr(A^T) then swap factors
+        let mut at = vec![0.0f32; n * m];
+        for i in 0..m {
+            for j in 0..n {
+                at[j * m + i] = a[i * n + j];
+            }
+        }
+        let (ut, s, vtt) = svd_topr(&at, n, m, r);
+        // A = (V_t)^T S U_t^T  =>  U = vtt^T (m x r), V^T = ut^T (r x n)
+        let mut u = vec![0.0f32; m * r];
+        let mut vt = vec![0.0f32; r * n];
+        for i in 0..m {
+            for c in 0..r {
+                u[i * r + c] = vtt[c * m + i];
+            }
+        }
+        for c in 0..r {
+            for j in 0..n {
+                vt[c * n + j] = ut[j * r + c];
+            }
+        }
+        return (u, s, vt);
+    }
+    // n <= m: iterate on G = A^T A (n x n, f64). Basis vectors are rows
+    // of xt (p x n) so Gram-Schmidt and the G-apply stay contiguous.
+    let mut g = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in i..n {
+            let mut acc = 0.0f64;
+            for k in 0..m {
+                acc += a[k * n + i] as f64 * a[k * n + j] as f64;
+            }
+            g[i * n + j] = acc;
+            g[j * n + i] = acc;
+        }
+    }
+    let apply_g = |xt: &[f64]| -> Vec<f64> {
+        let mut yt = vec![0.0f64; p * n];
+        for j in 0..p {
+            let xrow = &xt[j * n..(j + 1) * n];
+            let yrow = &mut yt[j * n..(j + 1) * n];
+            for (k, &x) in xrow.iter().enumerate() {
+                if x == 0.0 {
+                    continue;
+                }
+                let grow = &g[k * n..(k + 1) * n];
+                for i in 0..n {
+                    yrow[i] += x * grow[i];
+                }
+            }
+        }
+        yt
+    };
+    // fixed-seed start block: determinism is part of the contract
+    let mut rng = crate::util::rng::Rng::new(0x70b5_eed0_5bd7_0b5e);
+    let mut xt: Vec<f64> = (0..p * n).map(|_| rng.normal() as f64).collect();
+    orthonormalize_rows(&mut xt, p, n);
+    let mut prev_tr = f64::NEG_INFINITY;
+    for _ in 0..TOPR_MAX_ITERS {
+        let yt = apply_g(&xt);
+        let mut tr = 0.0f64;
+        for j in 0..p {
+            for i in 0..n {
+                tr += xt[j * n + i] * yt[j * n + i];
+            }
+        }
+        let done = prev_tr.is_finite()
+            && (tr - prev_tr).abs() <= TOPR_TRACE_TOL * tr.abs().max(1e-300);
+        prev_tr = tr;
+        xt = yt;
+        orthonormalize_rows(&mut xt, p, n);
+        if done {
+            break;
+        }
+    }
+    // Rayleigh-Ritz: rotate the converged block into singular order
+    let yt = apply_g(&xt);
+    let mut t = vec![0.0f64; p * p];
+    for b in 0..p {
+        for c in b..p {
+            let mut acc = 0.0f64;
+            for i in 0..n {
+                acc += xt[b * n + i] * yt[c * n + i];
+            }
+            t[b * p + c] = acc;
+            t[c * p + b] = acc;
+        }
+    }
+    let (w, z) = eigh64(&t, p);
+    let mut s = vec![0.0f32; r];
+    let mut u = vec![0.0f32; m * r];
+    let mut vt = vec![0.0f32; r * n];
+    let mut vc = vec![0.0f64; n];
+    for c in 0..r {
+        let sc = w[c].max(0.0).sqrt();
+        s[c] = sc as f32;
+        // v_c = sum_b z[b][c] * xt_b
+        for x in vc.iter_mut() {
+            *x = 0.0;
+        }
+        for b in 0..p {
+            let zb = z[b * p + c];
+            if zb == 0.0 {
+                continue;
+            }
+            for i in 0..n {
+                vc[i] += zb * xt[b * n + i];
+            }
+        }
+        for j in 0..n {
+            vt[c * n + j] = vc[j] as f32;
+        }
+        // u_c = A v_c / s_c
+        if sc > 1e-12 {
+            for row in 0..m {
+                let mut acc = 0.0f64;
+                for j in 0..n {
+                    acc += a[row * n + j] as f64 * vc[j];
+                }
+                u[row * r + c] = (acc / sc) as f32;
+            }
+        }
+    }
+    (u, s, vt)
+}
+
+/// Orthonormalize the rows of `xt` (p x n, row-major) by modified
+/// Gram-Schmidt with two projection passes per row ("twice is enough"):
+/// one pass leaves cancellation junk correlated with the earlier rows
+/// when the block is numerically rank-deficient, which inflates the
+/// Ritz values. Rows that collapse entirely are replaced by a cycling
+/// unit basis vector (deterministic), keeping the block full rank for
+/// rank-deficient inputs.
+fn orthonormalize_rows(xt: &mut [f64], p: usize, n: usize) {
+    // project row j against the already-orthonormal rows 0..j, twice
+    fn project_out(head: &[f64], row: &mut [f64], j: usize, n: usize) {
+        for _pass in 0..2 {
+            for i in 0..j {
+                let prev = &head[i * n..(i + 1) * n];
+                let mut dot = 0.0f64;
+                for k in 0..n {
+                    dot += prev[k] * row[k];
+                }
+                for k in 0..n {
+                    row[k] -= dot * prev[k];
+                }
+            }
+        }
+    }
+    for j in 0..p {
+        let (head, tail) = xt.split_at_mut(j * n);
+        let row = &mut tail[..n];
+        project_out(head, row, j, n);
+        let nrm = row.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if nrm < 1e-30 {
+            // dead row (rank-deficient block): deterministic rescue with
+            // a cycling basis vector, re-orthogonalized the same way
+            for (k, x) in row.iter_mut().enumerate() {
+                *x = if k == j % n { 1.0 } else { 0.0 };
+            }
+            project_out(head, row, j, n);
+            let nrm2 = row.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-300);
+            for x in row.iter_mut() {
+                *x /= nrm2;
+            }
+        } else {
+            for x in row.iter_mut() {
+                *x /= nrm;
+            }
+        }
+    }
+}
+
+/// Rank-r reconstruction (the paper's Eq. 1 oracle), now through the
+/// top-r subspace path — only the requested components are computed.
 pub fn lowrank_approx(a: &[f32], m: usize, n: usize, rank: usize) -> Vec<f32> {
-    let (u, s, vt) = svd(a, m, n);
-    let r = m.min(n);
-    let rank = rank.min(r);
+    let rank = rank.min(m.min(n));
+    let (u, s, vt) = svd_topr(a, m, n, rank);
     let mut out = vec![0.0f32; m * n];
     for i in 0..m {
         for c in 0..rank {
-            let uis = u[i * r + c] * s[c];
+            let uis = u[i * rank + c] * s[c];
             if uis == 0.0 {
                 continue;
             }
@@ -281,6 +517,114 @@ mod tests {
         let ar = lowrank_approx(&a, m, n, 2);
         let err: f32 = a.iter().zip(&ar).map(|(x, y)| (x - y) * (x - y)).sum();
         assert!(err.sqrt() < 0.1, "err={}", err.sqrt());
+    }
+
+    #[test]
+    fn topr_matches_full_svd_on_leading_triplets() {
+        let mut rng = Rng::new(21);
+        // large enough that 2(r + oversample) < min(m, n): subspace path
+        for (m, n, r) in [(60usize, 50usize, 5usize), (44, 72, 3)] {
+            let a = rng.normal_vec(m * n, 1.0);
+            let (uf, sf, vtf) = svd(&a, m, n);
+            let (u, s, vt) = svd_topr(&a, m, n, r);
+            assert_eq!(u.len(), m * r);
+            assert_eq!(vt.len(), r * n);
+            for c in 0..r {
+                assert!(
+                    (s[c] - sf[c]).abs() <= TOPR_SV_TOL * sf[0],
+                    "({m},{n}) s[{c}]: topr {} vs oracle {}",
+                    s[c],
+                    sf[c]
+                );
+            }
+            // returned factors actually reconstruct: U diag(s) V^T has the
+            // oracle's rank-r error up to the documented slack
+            let mut rec = vec![0.0f32; m * n];
+            for i in 0..m {
+                for c in 0..r {
+                    let x = u[i * r + c] * s[c];
+                    for j in 0..n {
+                        rec[i * n + j] += x * vt[c * n + j];
+                    }
+                }
+            }
+            let oracle = {
+                let rr = m.min(n);
+                let mut o = vec![0.0f32; m * n];
+                for i in 0..m {
+                    for c in 0..r {
+                        let x = uf[i * rr + c] * sf[c];
+                        for j in 0..n {
+                            o[i * n + j] += x * vtf[c * n + j];
+                        }
+                    }
+                }
+                o
+            };
+            let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+            let err = |rec: &[f32]| -> f32 {
+                a.iter()
+                    .zip(rec)
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum::<f32>()
+                    .sqrt()
+            };
+            assert!(
+                err(&rec) <= err(&oracle) + TOPR_RECON_SLACK * norm,
+                "({m},{n}) recon {} vs oracle {}",
+                err(&rec),
+                err(&oracle)
+            );
+        }
+    }
+
+    #[test]
+    fn topr_rank_deficient_input_is_exact() {
+        // rank-1 all-ones matrix: the iteration block collapses and the
+        // Gram-Schmidt rescue must keep the factors orthonormal — a
+        // single-pass MGS inflates s[0] by sqrt(2) here
+        let (m, n) = (50usize, 40usize);
+        let a = vec![1.0f32; m * n];
+        let (_, s, vt) = svd_topr(&a, m, n, 4);
+        let s1 = ((m * n) as f32).sqrt();
+        assert!((s[0] - s1).abs() < 1e-3 * s1, "s[0]={} want {s1}", s[0]);
+        for c in 1..4 {
+            assert!(s[c].abs() < 1e-3 * s1, "s[{c}]={} should vanish", s[c]);
+        }
+        let row0: f32 = vt[..n].iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((row0 - 1.0).abs() < 1e-4, "v_0 not unit: {row0}");
+    }
+
+    #[test]
+    fn topr_degenerate_shapes() {
+        // m=1 / n=1 / rank 0 / rank = min(m, n) all route through the
+        // full-oracle fallback and must keep the documented shapes
+        let mut rng = Rng::new(23);
+        let row = rng.normal_vec(9, 1.0);
+        let (u, s, vt) = svd_topr(&row, 1, 9, 1);
+        assert_eq!((u.len(), s.len(), vt.len()), (1, 1, 9));
+        let (u, s, vt) = svd_topr(&row, 9, 1, 3);
+        assert_eq!((u.len(), s.len(), vt.len()), (9, 1, 1));
+        let (u, s, vt) = svd_topr(&row, 3, 3, 0);
+        assert!(u.is_empty() && s.is_empty() && vt.is_empty());
+        let sq = rng.normal_vec(36, 1.0);
+        let (_, s, _) = svd_topr(&sq, 6, 6, 6);
+        let (_, sf, _) = svd(&sq, 6, 6);
+        for (a, b) in s.iter().zip(&sf) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn topr_is_deterministic() {
+        let mut rng = Rng::new(29);
+        let (m, n, r) = (56usize, 48usize, 4usize);
+        let a = rng.normal_vec(m * n, 1.0);
+        let (u1, s1, v1) = svd_topr(&a, m, n, r);
+        let (u2, s2, v2) = svd_topr(&a, m, n, r);
+        assert_eq!(u1, u2);
+        assert_eq!(s1, s2);
+        assert_eq!(v1, v2);
     }
 
     #[test]

@@ -1,22 +1,35 @@
-//! Mask-engine contract tests (ISSUE 1):
+//! Engine contract tests (ISSUE 1 + ISSUE 2):
 //!
 //! * parallel-vs-sequential determinism — for every `Selector` and every
-//!   `RankStrategy`, masks from the layer-parallel engine with 1 worker
-//!   and with N workers are bit-identical under a fixed seed;
+//!   `RankStrategy` (including the exact top-r subspace path), masks
+//!   from the layer-parallel engine with 1 worker and with N workers are
+//!   bit-identical under a fixed seed;
+//! * cross-worker trainer determinism — K trainer steps
+//!   (`refresh_all` + `step_all`) with 1 worker and with N workers
+//!   produce bit-identical weights and optimizer moments for every
+//!   `Method`, and the batched path matches direct `step()` drivers;
+//! * refresh/step ordering — a mid-run mask swap migrates Adam moments
+//!   before the batched step reads them;
 //! * randomized-vs-exact parity — the mask built from `svd_lowrank`
-//!   (randomized subspace iteration) overlaps the exact Jacobi-SVD
-//!   oracle's mask by at least [`PARITY_MIN_OVERLAP`] on synthetic
-//!   low-rank-plus-noise matrices.
+//!   (randomized subspace iteration) overlaps the exact oracle's mask by
+//!   at least [`PARITY_MIN_OVERLAP`] on synthetic low-rank-plus-noise
+//!   matrices.
 //!
 //! These run without AOT artifacts: the whole pipeline goes through the
 //! XlaBuilder toolkit.
 
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::Arc;
 
 use lift::lift::engine::MaskEngine;
 use lift::lift::{
     budget_for, mask_overlap, principal_indices, LiftCfg, MaskRequest, RankStrategy, Selector,
 };
+use lift::methods::sparse_ft::SparseFt;
+use lift::methods::{digest_words, make_method, Ctx, Method, Scope};
+use lift::model;
+use lift::optim::AdamCfg;
+use lift::runtime::manifest::{ParamInfo, PresetInfo};
 use lift::runtime::Linalg;
 use lift::tensor::Tensor;
 use lift::util::rng::Rng;
@@ -219,4 +232,281 @@ fn speedup_measurement_reports_a_row() {
     assert!(row.seq_s > 0.0 && row.par_s > 0.0);
     assert_eq!(row.matrices, shapes.len());
     assert!(row.row().contains("mask_refresh"), "row: {}", row.row());
+}
+
+#[test]
+fn step_all_speedup_measurement_reports_a_row() {
+    let shapes = [(16usize, 12usize), (12, 16), (16, 16), (20, 12)];
+    let row = lift::exp::harness::measure_step_all(&shapes, 4, 2, 1, 2).unwrap();
+    assert!(row.seq_s > 0.0 && row.par_s > 0.0);
+    assert_eq!(row.matrices, shapes.len());
+    assert!(row.row().contains("step_all"), "row: {}", row.row());
+}
+
+#[test]
+fn exact_topr_path_is_worker_count_invariant() {
+    // matrices large enough that the exact path's top-r subspace
+    // iteration engages (2(rank + oversample) < min(m, n)); the small
+    // fixture in every_rank_strategy_is_worker_count_invariant covers
+    // the full-Jacobi fallback
+    let mut rng = Rng::new(61);
+    let shapes = [(64usize, 80usize), (96, 64), (72, 72)];
+    let ws: Vec<Tensor> = shapes
+        .iter()
+        .map(|&(m, n)| Tensor::randn(&[m, n], 1.0, &mut rng))
+        .collect();
+    let reqs: Vec<MaskRequest> = ws
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            let (m, n) = w.dims2();
+            MaskRequest {
+                tag: i as u64,
+                w,
+                grad: None,
+                score: None,
+                k: budget_for(m, n, 4),
+            }
+        })
+        .collect();
+    let cfg = LiftCfg {
+        rank: 4,
+        exact: true,
+        ..Default::default()
+    };
+    let la = linalg();
+    let seq = MaskEngine::with_workers(la.clone(), 1)
+        .select_all(Selector::Lift, &cfg, &reqs, 0xE5)
+        .unwrap();
+    let par = MaskEngine::with_workers(la, 4)
+        .select_all(Selector::Lift, &cfg, &reqs, 0xE5)
+        .unwrap();
+    assert_eq!(seq, par, "exact top-r masks diverged across worker counts");
+    for (mi, mask) in seq.iter().enumerate() {
+        assert!(!mask.is_empty(), "matrix {mi} selected nothing");
+    }
+}
+
+// ---- cross-worker trainer determinism: every Method, K steps ----
+
+/// A 2-layer toy preset: enough matrices for real fan-out, plus an
+/// embedding and a norm so dense methods cover non-matrix params too.
+fn toy_preset() -> PresetInfo {
+    let mut params = vec![ParamInfo {
+        name: "embed".into(),
+        shape: vec![32, 16],
+    }];
+    for l in 0..2 {
+        for (kind, shape) in [
+            ("wq", vec![16usize, 16usize]),
+            ("wk", vec![16, 16]),
+            ("wv", vec![16, 16]),
+            ("wo", vec![16, 16]),
+            ("wup", vec![16, 24]),
+            ("wdown", vec![24, 16]),
+        ] {
+            params.push(ParamInfo {
+                name: format!("l{l}.{kind}"),
+                shape,
+            });
+        }
+    }
+    params.push(ParamInfo {
+        name: "final_norm".into(),
+        shape: vec![16],
+    });
+    PresetInfo {
+        name: "toy".into(),
+        d: 16,
+        layers: 2,
+        ffn: 24,
+        vocab: 32,
+        seq: 8,
+        batch: 2,
+        heads: 2,
+        params,
+        executables: BTreeMap::new(),
+    }
+}
+
+fn toy_ctx(workers: usize) -> Ctx {
+    Ctx {
+        la: linalg(),
+        preset: toy_preset(),
+        rng: Rng::new(0xC0FFEE),
+        adam: AdamCfg::default(),
+        workers,
+    }
+}
+
+fn toy_params() -> Vec<Tensor> {
+    model::init_params(&toy_preset(), &mut Rng::new(0x1717))
+}
+
+fn weight_digest(params: &[Tensor]) -> u64 {
+    digest_words(
+        params
+            .iter()
+            .flat_map(|t| t.data.iter().map(|x| x.to_bits() as u64)),
+    )
+}
+
+/// K synthetic trainer steps of `name`; grads are redrawn per step from
+/// a fixed stream, so two runs differ only in worker count. `batched`
+/// drives the trainer path (`refresh_all` + `step_all`); otherwise the
+/// direct-`step` path old drivers use. Returns (weights, state) digests.
+fn run_train(name: &str, workers: usize, steps: usize, batched: bool) -> (u64, u64) {
+    let mut ctx = toy_ctx(workers);
+    let mut params = toy_params();
+    let mut method = make_method(
+        name,
+        4,
+        LiftCfg {
+            rank: 4,
+            ..Default::default()
+        },
+        2, // refresh every 2 steps: migrations happen mid-run
+        Scope::default(),
+    )
+    .unwrap();
+    method.init(&mut ctx, &params).unwrap();
+    let mut grng = Rng::new(0x9e37);
+    for step in 0..steps {
+        let grads: Vec<Tensor> = params
+            .iter()
+            .map(|p| Tensor::randn(&p.shape, 0.1, &mut grng))
+            .collect();
+        if batched {
+            method.refresh_all(&mut ctx, &params, &grads, step).unwrap();
+            method
+                .step_all(&mut ctx, &mut params, &grads, step, 1e-3)
+                .unwrap();
+        } else {
+            method
+                .step(&mut ctx, &mut params, &grads, step, 1e-3)
+                .unwrap();
+        }
+    }
+    (weight_digest(&params), method.state_digest())
+}
+
+/// Every method's names as `make_method` spells them.
+const ALL_METHODS: [&str; 15] = [
+    "lift",
+    "lift_mlp",
+    "lift_structured",
+    "weight_mag",
+    "grad_mag",
+    "movement",
+    "random",
+    "sift",
+    "spiel",
+    "full",
+    "lora",
+    "pissa",
+    "dora",
+    "spectral",
+    "s2ft",
+];
+
+#[test]
+fn every_method_is_worker_count_invariant_over_a_run() {
+    let init = weight_digest(&toy_params());
+    for name in ALL_METHODS {
+        let (w1, d1) = run_train(name, 1, 5, true);
+        let (wn, dn) = run_train(name, 4, 5, true);
+        assert_eq!(w1, wn, "{name}: weights diverged across worker counts");
+        assert_eq!(d1, dn, "{name}: optimizer state diverged across worker counts");
+        assert_ne!(w1, init, "{name}: nothing trained");
+    }
+}
+
+#[test]
+fn direct_step_matches_trainer_batched_path() {
+    // direct `step()` drivers (no trainer refresh_all) keep the exact
+    // semantics of the batched path: the idempotent maintenance guard
+    // makes the two entry points converge on the same per-step work
+    for name in ALL_METHODS {
+        let (wb, db) = run_train(name, 4, 5, true);
+        let (wd, dd) = run_train(name, 4, 5, false);
+        assert_eq!(wb, wd, "{name}: direct step() weights diverged from step_all");
+        assert_eq!(db, dd, "{name}: direct step() state diverged from step_all");
+    }
+}
+
+#[test]
+fn refresh_migrates_moments_before_batched_step() {
+    // guards the refresh-then-step ordering in train::train: a refresh
+    // that swaps mask indices must migrate Adam moments before the
+    // batched step reads them
+    let mut ctx = toy_ctx(3);
+    let mut params = toy_params();
+    let mut m = SparseFt::new(
+        "probe",
+        Selector::Random, // redraws the mask every refresh
+        2,
+        LiftCfg {
+            rank: 2,
+            ..Default::default()
+        },
+        2,
+        Scope::default(),
+    );
+    m.init(&mut ctx, &params).unwrap();
+    let pi = 1; // "l0.wq"
+    let mut grng = Rng::new(3);
+    let mut draw =
+        |params: &[Tensor]| -> Vec<Tensor> {
+            params
+                .iter()
+                .map(|p| Tensor::randn(&p.shape, 0.1, &mut grng))
+                .collect()
+        };
+    for step in 0..2 {
+        let grads = draw(&params);
+        m.refresh_all(&mut ctx, &params, &grads, step).unwrap();
+        m.step_all(&mut ctx, &mut params, &grads, step, 1e-2).unwrap();
+    }
+    let mask_before: Vec<u32> = m.mask_for(pi).unwrap().to_vec();
+    let st_before = m.state_for(pi).unwrap().clone();
+    assert_eq!(st_before.t, 2, "two steps taken");
+    // step 2: the interval fires — mask swap + moment migration, then step
+    let grads = draw(&params);
+    let w_before = params[pi].clone();
+    m.refresh_all(&mut ctx, &params, &grads, 2).unwrap();
+    let mask_after: Vec<u32> = m.mask_for(pi).unwrap().to_vec();
+    assert_ne!(mask_before, mask_after, "Random selector must swap the mask");
+    let st_mid = m.state_for(pi).unwrap().clone();
+    let old_pos: HashMap<u32, usize> = mask_before
+        .iter()
+        .enumerate()
+        .map(|(j, &i)| (i, j))
+        .collect();
+    for (j, &i) in st_mid.idx.iter().enumerate() {
+        match old_pos.get(&i) {
+            Some(&oj) => {
+                assert_eq!(st_mid.m[j], st_before.m[oj], "survivor {i} lost momentum");
+                assert_eq!(st_mid.v[j], st_before.v[oj], "survivor {i} lost variance");
+            }
+            None => {
+                assert_eq!(st_mid.m[j], 0.0, "newcomer {i} not cold");
+                assert_eq!(st_mid.v[j], 0.0, "newcomer {i} not cold");
+            }
+        }
+    }
+    assert_eq!(st_mid.t, st_before.t, "refresh must not advance the timestep");
+    // the batched step then moves exactly the new mask
+    m.step_all(&mut ctx, &mut params, &grads, 2, 1e-2).unwrap();
+    let new_set: HashSet<u32> = mask_after.iter().copied().collect();
+    for i in 0..params[pi].len() {
+        let moved = params[pi].data[i] != w_before.data[i];
+        if new_set.contains(&(i as u32)) {
+            assert!(moved, "new-mask entry {i} did not step");
+        } else {
+            assert!(
+                !moved,
+                "entry {i} outside the new mask moved — the step used a stale mask"
+            );
+        }
+    }
 }

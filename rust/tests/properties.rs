@@ -289,6 +289,198 @@ fn prop_task_batches_targets_are_shifted_answers() {
     });
 }
 
+/// Frobenius norm of `a - u diag(s) vt` (u m x r, vt r x n).
+fn recon_err(a: &[f32], u: &[f32], s: &[f32], vt: &[f32], m: usize, n: usize, r: usize) -> f64 {
+    let mut err = 0.0f64;
+    for i in 0..m {
+        for j in 0..n {
+            let mut rec = 0.0f64;
+            for c in 0..r {
+                rec += u[i * r + c] as f64 * s[c] as f64 * vt[c * n + j] as f64;
+            }
+            let d = a[i * n + j] as f64 - rec;
+            err += d * d;
+        }
+    }
+    err.sqrt()
+}
+
+/// Truncate a full SVD (u m x rfull) to its leading r columns.
+fn truncate_full(
+    u: &[f32],
+    s: &[f32],
+    vt: &[f32],
+    m: usize,
+    n: usize,
+    rfull: usize,
+    r: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut ur = vec![0.0f32; m * r];
+    for i in 0..m {
+        ur[i * r..(i + 1) * r].copy_from_slice(&u[i * rfull..i * rfull + r]);
+    }
+    (ur, s[..r].to_vec(), vt[..r * n].to_vec())
+}
+
+#[test]
+fn prop_svd_topr_matches_full_oracle() {
+    // the top-r subspace path against the retained full-eigh64 oracle:
+    // singular values within the documented tolerance, reconstruction
+    // error no worse than the oracle's best-rank-r + documented slack
+    check("topr svd vs full oracle", |rng| {
+        let m = gen_size(rng, 2, 64);
+        let n = gen_size(rng, 2, 64);
+        let minmn = m.min(n);
+        let r = 1 + rng.below(minmn);
+        let a = rng.normal_vec(m * n, 1.0);
+        let (uf, sf, vtf) = eigh::svd(&a, m, n);
+        let (u, s, vt) = eigh::svd_topr(&a, m, n, r);
+        ensure(
+            u.len() == m * r && s.len() == r && vt.len() == r * n,
+            format!("shapes for ({m},{n}) r={r}"),
+        )?;
+        let smax = sf.first().copied().unwrap_or(0.0).max(1e-12);
+        for c in 0..r {
+            ensure(
+                (s[c] - sf[c]).abs() <= eigh::TOPR_SV_TOL * smax,
+                format!("({m},{n}) r={r} s[{c}]: topr {} vs oracle {}", s[c], sf[c]),
+            )?;
+            ensure(s[c] >= -1e-6, format!("negative singular value {}", s[c]))?;
+        }
+        // sorted descending (up to float noise)
+        for c in 1..r {
+            ensure(
+                s[c - 1] >= s[c] - eigh::TOPR_SV_TOL * smax,
+                format!("s not sorted at {c}: {} < {}", s[c - 1], s[c]),
+            )?;
+        }
+        let (ur, sr, vtr) = truncate_full(&uf, &sf, &vtf, m, n, minmn, r);
+        let err_topr = recon_err(&a, &u, &s, &vt, m, n, r);
+        let err_oracle = recon_err(&a, &ur, &sr, &vtr, m, n, r);
+        let norm = stats::l2_norm(&a);
+        ensure(
+            err_topr <= err_oracle + eigh::TOPR_RECON_SLACK as f64 * norm.max(1e-12),
+            format!("({m},{n}) r={r}: recon {err_topr} vs oracle {err_oracle}"),
+        )
+    });
+}
+
+#[test]
+fn prop_svd_topr_degenerate_shapes() {
+    // m=1, n=1, rank 0, rank=min(m,n): shapes hold and values match the
+    // oracle exactly (all of these route through the full fallback)
+    check("topr degenerate shapes", |rng| {
+        let n = gen_size(rng, 1, 40);
+        let row = rng.normal_vec(n, 1.0);
+        for (m2, n2, r2) in [(1, n, 1), (n, 1, 1)] {
+            let (u, s, vt) = eigh::svd_topr(&row, m2, n2, r2);
+            ensure(
+                u.len() == m2 * r2 && s.len() == r2 && vt.len() == r2 * n2,
+                format!("shape ({m2},{n2})"),
+            )?;
+            let want = stats::l2_norm(&row) as f32;
+            ensure(
+                (s[0] - want).abs() <= 1e-4 * want.max(1.0),
+                format!("vector norm {} vs {}", s[0], want),
+            )?;
+        }
+        let m = gen_size(rng, 2, 24);
+        let k = gen_size(rng, 2, 24);
+        let a = rng.normal_vec(m * k, 1.0);
+        let (u, s, vt) = eigh::svd_topr(&a, m, k, 0);
+        ensure(
+            u.is_empty() && s.is_empty() && vt.is_empty(),
+            "rank 0 must be empty",
+        )?;
+        let r = m.min(k);
+        let (_, s_full, _) = eigh::svd(&a, m, k);
+        let (_, s_topr, _) = eigh::svd_topr(&a, m, k, r);
+        for c in 0..r {
+            ensure(
+                (s_topr[c] - s_full[c]).abs() <= 1e-4 * s_full[0].max(1.0),
+                format!("full-rank topr s[{c}]"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_svd_topr_tied_singular_values() {
+    // A = U diag(s) V^T with tied clusters, the truncation boundary cut
+    // *inside* a cluster: singular values must still match the oracle and
+    // the reconstruction must be as good (any subspace of a tied cluster
+    // is equally optimal)
+    check("topr with tied spectra", |rng| {
+        let m = 40 + rng.below(20);
+        let n = 30 + rng.below(10);
+        let minmn = m.min(n);
+        // orthonormal factors from QR'd gaussians (host Gram-Schmidt)
+        let qa = random_orthonormal(rng, m, minmn);
+        let qb = random_orthonormal(rng, n, minmn);
+        // spectrum 3,3,3,3,2,2,2,2,1,1,... (ties across the r=6 cut)
+        let sv: Vec<f32> = (0..minmn)
+            .map(|i| if i < 4 { 3.0 } else if i < 8 { 2.0 } else { 1.0 })
+            .collect();
+        let mut a = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for c in 0..minmn {
+                    acc += qa[i * minmn + c] as f64 * sv[c] as f64 * qb[j * minmn + c] as f64;
+                }
+                a[i * n + j] = acc as f32;
+            }
+        }
+        let r = 6; // cuts inside the tied 2-cluster
+        let (u, s, vt) = eigh::svd_topr(&a, m, n, r);
+        for (c, want) in sv[..r].iter().enumerate() {
+            ensure(
+                (s[c] - want).abs() <= eigh::TOPR_SV_TOL * sv[0],
+                format!("tied s[{c}]: {} vs {}", s[c], want),
+            )?;
+        }
+        let err = recon_err(&a, &u, &s, &vt, m, n, r);
+        // best rank-6 error: sqrt(2*2^2 + (minmn-8)*1^2) exactly
+        let best = (2.0 * 4.0 + (minmn - 8) as f64).sqrt();
+        let norm = stats::l2_norm(&a);
+        ensure(
+            err <= best + eigh::TOPR_RECON_SLACK as f64 * norm,
+            format!("tied recon {err} vs best {best}"),
+        )
+    });
+}
+
+/// Random column-orthonormal matrix (m x k), built by Gram-Schmidt with
+/// re-orthogonalization (f64) — the test-side oracle for tied spectra.
+fn random_orthonormal(rng: &mut Rng, m: usize, k: usize) -> Vec<f32> {
+    let mut cols: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..m).map(|_| rng.normal() as f64).collect())
+        .collect();
+    for j in 0..k {
+        for _pass in 0..2 {
+            for i in 0..j {
+                let dot: f64 = (0..m).map(|t| cols[i][t] * cols[j][t]).sum();
+                for t in 0..m {
+                    let v = cols[i][t];
+                    cols[j][t] -= dot * v;
+                }
+            }
+        }
+        let nrm = cols[j].iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+        for x in cols[j].iter_mut() {
+            *x /= nrm;
+        }
+    }
+    let mut out = vec![0.0f32; m * k];
+    for (j, col) in cols.iter().enumerate() {
+        for i in 0..m {
+            out[i * k + j] = col[i] as f32;
+        }
+    }
+    out
+}
+
 #[test]
 fn prop_svd_reconstruction_error_bounded() {
     check("jacobi svd reconstructs", |rng| {
