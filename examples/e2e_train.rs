@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
         warmup_frac: 0.05,
         log_every: 0,
         seed: 1,
+        ..Default::default()
     };
     let t0 = std::time::Instant::now();
     let log = train(&exec, &mut corpus, &mut full, &mut ctx, &mut params, &cfg)?;
@@ -96,6 +97,7 @@ fn main() -> anyhow::Result<()> {
             warmup_frac: 0.03,
             log_every: 0,
             seed: 2,
+            ..Default::default()
         };
         let flog = train(&exec, &mut src, &mut *method, &mut ctx, &mut p2, &fcfg)?;
         let mut avg = 0.0;

@@ -66,6 +66,7 @@ fn main() -> anyhow::Result<()> {
             warmup_frac: 0.03,
             log_every: 0,
             seed: 1,
+            ..Default::default()
         };
         train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg)?;
         let acc = eval::accuracy(&exec, &params, &set.test)?;

@@ -10,7 +10,28 @@
 //! Without artifacts (no jax available, or the host-interpreter xla
 //! stub), it degrades to an artifact-free selftest of the layer-parallel
 //! mask engine: a determinism check plus the measured sequential-vs-
-//! parallel refresh row. CI uses that as the smoke invocation.
+//! parallel refresh row, and a versioned-snapshot round trip. CI uses
+//! that as the smoke invocation.
+//!
+//! Checkpoint/restore CLI (ISSUE 3 — see `rust/src/ckpt/` for the
+//! on-disk format):
+//!
+//! ```text
+//! lift train --preset tiny --method lift --rank 32 \
+//!     --ckpt-every 50 --ckpt-dir runs/ckpt      # snapshot every 50 steps
+//! lift train --preset tiny --method lift --rank 32 \
+//!     --ckpt-dir runs/ckpt --resume latest      # continue the newest snapshot
+//! lift train ... --resume runs/ckpt/step_00000050.snap   # or a specific one
+//!
+//! lift matrix --methods lift,full --selectors weight_mag,random \
+//!     --ranks 8,32 --seeds 1,2 --steps 200 --out results/matrix
+//!     # resumable scenario grid: each method × selector × sparsity cell
+//!     # persists its outcome + snapshots under --out; rerunning skips
+//!     # finished cells, resumes interrupted ones from their newest
+//!     # snapshot, and recomputes only deleted/corrupt outcomes.
+//!     # --toy runs artifact-free synthetic cells; --workers caps the
+//!     # cell fan-out (default: LIFT_WORKERS / available parallelism).
+//! ```
 
 use std::sync::Arc;
 
@@ -91,6 +112,7 @@ fn main() -> anyhow::Result<()> {
         warmup_frac: 0.03,
         log_every: 50,
         seed: 1,
+        ..Default::default()
     };
     let log = train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg)?;
 
@@ -146,5 +168,50 @@ fn selftest() -> anyhow::Result<()> {
     }
     let row = measure_step_all(&step_shapes, 32, workers, 3, 10)?;
     println!("{}", row.row());
+    // versioned-snapshot round trip (the ISSUE-3 ckpt subsystem): train a
+    // couple of toy steps, snapshot, reload, digest-compare
+    {
+        use lift::exp::matrix::{synth_step, toy_ctx, toy_params};
+        use lift::train::{train_with, TrainCfg};
+        let mut ctx = toy_ctx(workers, 7)?;
+        let mut params = toy_params(7);
+        let mut method = make_method(
+            "lift",
+            4,
+            LiftCfg { rank: 4, ..Default::default() },
+            2,
+            Scope::default(),
+        )?;
+        let dir = std::env::temp_dir().join(format!("lift_quickstart_ckpt_{}", std::process::id()));
+        let cfg = TrainCfg {
+            steps: 2,
+            log_every: 0,
+            ckpt_every: 2,
+            ckpt_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        train_with(&mut synth_step, &mut *method, &mut ctx, &mut params, &cfg, None)?;
+        let snap = lift::ckpt::latest_snapshot(&dir)?
+            .ok_or_else(|| anyhow::anyhow!("selftest: no snapshot written"))?;
+        let state = lift::ckpt::load_trainer(&snap)?;
+        let mut fresh = make_method(
+            "lift",
+            4,
+            LiftCfg { rank: 4, ..Default::default() },
+            2,
+            Scope::default(),
+        )?;
+        fresh.load_state(&state.method_state)?;
+        anyhow::ensure!(
+            fresh.state_digest() == method.state_digest(),
+            "selftest: snapshot state digest drifted"
+        );
+        let bytes = std::fs::metadata(&snap)?.len();
+        println!(
+            "ckpt selftest OK: {} B snapshot at step {}, save -> load -> digest match",
+            bytes, state.step
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
     Ok(())
 }

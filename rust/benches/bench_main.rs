@@ -12,6 +12,8 @@
 //!                  speedup row (ISSUE-2 acceptance)
 //!   [step-all]     batched optimizer step: sequential vs layer-parallel
 //!                  (ISSUE-2 acceptance row)
+//!   [ckpt]         versioned snapshot save/restore throughput
+//!                  (ISSUE-3 acceptance row)
 //!   [adam]         sparse Adam: host loop vs Pallas kernel via PJRT
 //!   [marshal]      literal marshalling overhead (params -> device)
 //!   [linalg]       matmul throughput through the XlaBuilder toolkit
@@ -21,12 +23,16 @@
 //! Sections that need AOT artifacts ([step], [data], [e2e], the kernel
 //! halves of [mask]/[adam]) skip themselves when `make artifacts` has
 //! not run; everything routed through the XlaBuilder toolkit still runs.
+//!
+//! Every run appends a machine-readable entry (raw bench rows + the
+//! measured speedup rows) to `BENCH_trajectory.json` (override with
+//! $BENCH_TRAJECTORY) so perf is diffable across PRs.
 
 use std::sync::Arc;
 
 use lift::data::tasks::{TaskFamily, TaskMixSource, TaskSet};
 use lift::data::BatchSource;
-use lift::exp::harness::{measure_exact_refresh, measure_mask_refresh, measure_step_all};
+use lift::exp::harness::{measure_exact_refresh, measure_mask_refresh, measure_step_all, Speedup};
 use lift::lift::engine::default_workers;
 use lift::lift::{budget_for, principal_indices, LiftCfg};
 use lift::methods::{make_method, Scope};
@@ -65,6 +71,8 @@ fn main() -> anyhow::Result<()> {
     // the [mask-refresh] engine measurement then reuses
     let la = Arc::new(Linalg::new(&client));
     let mut rng = Rng::new(1);
+    // measured seq-vs-parallel rows, collected for the JSON trajectory
+    let mut speedups: Vec<Speedup> = Vec::new();
 
     if let Some(rt) = &rt {
         println!("\n-- [step] model step latency --");
@@ -130,6 +138,7 @@ fn main() -> anyhow::Result<()> {
         let reps = if fast { 2 } else { 5 };
         let row = measure_mask_refresh(&la, &shapes, 32, 32, workers, reps)?;
         println!("{}", row.row());
+        speedups.push(row);
     }
 
     println!("\n-- [exact-svd] exact oracle: top-r subspace vs full Jacobi --");
@@ -152,6 +161,7 @@ fn main() -> anyhow::Result<()> {
         let reps = if fast { 2 } else { 3 };
         let row = measure_exact_refresh(&la, &shapes, 8, 32, default_workers(), reps)?;
         println!("{}", row.row());
+        speedups.push(row);
     }
 
     println!("\n-- [step-all] batched sparse-Adam step: sequential vs layer-parallel --");
@@ -164,6 +174,58 @@ fn main() -> anyhow::Result<()> {
         let reps = if fast { 3 } else { 5 };
         let row = measure_step_all(&shapes, 64, default_workers(), reps, 10)?;
         println!("{}", row.row());
+        speedups.push(row);
+    }
+
+    println!("\n-- [ckpt] versioned snapshot save/restore --");
+    {
+        use lift::methods::Method;
+        // FullFT carries the heaviest state (dense moments for every
+        // tensor), so it bounds snapshot throughput; 4 layers' worth of
+        // tiny-preset matrices makes a few-MB snapshot
+        let mut shapes = Vec::new();
+        for _ in 0..4 {
+            shapes.extend(lift::exp::harness::tiny_layer_shapes());
+        }
+        let params: Vec<Tensor> = shapes
+            .iter()
+            .map(|&(m, n)| Tensor::randn(&[m, n], 0.05, &mut rng))
+            .collect();
+        let mut ctx = lift::exp::matrix::toy_ctx(1, 7)?;
+        let mut method = lift::methods::full::FullFt::new();
+        method.init(&mut ctx, &params)?;
+        let dir = std::env::temp_dir().join(format!("lift_bench_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir)?;
+        let path = lift::ckpt::snapshot_path(&dir, 1);
+        let data_rng = Rng::new(9);
+        let tlog = lift::train::TrainLog {
+            losses: vec![0.5],
+            seconds: 1.0,
+            step_times: vec![1.0],
+        };
+        let tcfg = lift::train::TrainCfg::default();
+        lift::ckpt::save_trainer(&path, 1, &method, &params, &ctx.rng, &data_rng, &tlog, &tcfg)?;
+        let mb = std::fs::metadata(&path)?.len() as f64 / 1e6;
+        b.bench("ckpt/save_snapshot", || {
+            lift::ckpt::save_trainer(&path, 1, &method, &params, &ctx.rng, &data_rng, &tlog, &tcfg)
+                .unwrap();
+        });
+        let mean = b.results.last().unwrap().mean_ns;
+        println!(
+            "{:<44} {:.0} MB/s ({mb:.1} MB snapshot)",
+            "ckpt/save_snapshot [throughput]",
+            mb / (mean / 1e9)
+        );
+        b.bench("ckpt/load_snapshot", || {
+            let _ = lift::ckpt::load_trainer(&path).unwrap();
+        });
+        let mean = b.results.last().unwrap().mean_ns;
+        println!(
+            "{:<44} {:.0} MB/s",
+            "ckpt/load_snapshot [throughput]",
+            mb / (mean / 1e9)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     println!("\n-- [adam] sparse AdamW step (k = 65536) --");
@@ -245,6 +307,73 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    println!("\n{} benches done.", b.results.len());
+    let traj = std::env::var("BENCH_TRAJECTORY").unwrap_or_else(|_| "BENCH_trajectory.json".into());
+    append_trajectory(&traj, &b, &speedups, fast)?;
+    println!(
+        "\n{} benches done; run appended to {traj} ({} speedup rows).",
+        b.results.len(),
+        speedups.len()
+    );
+    Ok(())
+}
+
+/// Append this run's rows to the machine-readable trajectory file so
+/// perf is diffable across PRs (the "measured, not asserted" record the
+/// EXPERIMENTS plan calls for). A missing or invalid file is replaced by
+/// a fresh `{"format":1,"runs":[]}` container.
+fn append_trajectory(
+    path: &str,
+    b: &Bencher,
+    speedups: &[Speedup],
+    fast: bool,
+) -> anyhow::Result<()> {
+    use lift::util::json::Json;
+    let unix = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let results = Json::arr(b.results.iter().map(|r| {
+        Json::obj(vec![
+            ("name", Json::str(&r.name)),
+            ("iters", Json::from(r.iters)),
+            ("mean_ns", Json::num(r.mean_ns)),
+            ("p50_ns", Json::num(r.p50_ns)),
+            ("p95_ns", Json::num(r.p95_ns)),
+            ("min_ns", Json::num(r.min_ns)),
+        ])
+    }));
+    let sp = Json::arr(speedups.iter().map(|s| {
+        Json::obj(vec![
+            ("label", Json::str(s.label)),
+            ("workers", Json::from(s.workers)),
+            ("matrices", Json::from(s.matrices)),
+            ("seq_s", Json::num(s.seq_s)),
+            ("par_s", Json::num(s.par_s)),
+            ("speedup", Json::num(s.speedup)),
+        ])
+    }));
+    let run = Json::obj(vec![
+        ("unix_time", Json::from(unix as usize)),
+        ("fast", Json::from(fast)),
+        ("workers", Json::from(default_workers())),
+        ("results", results),
+        ("speedups", sp),
+    ]);
+    let mut doc = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .filter(|j| j.get("runs").and_then(|r| r.as_arr()).is_some())
+        .unwrap_or_else(|| {
+            Json::obj(vec![
+                ("format", Json::from(1usize)),
+                ("runs", Json::arr(vec![])),
+            ])
+        });
+    if let Json::Obj(m) = &mut doc {
+        if let Some(Json::Arr(runs)) = m.get_mut("runs") {
+            runs.push(run);
+        }
+    }
+    std::fs::write(path, doc.to_string())?;
     Ok(())
 }

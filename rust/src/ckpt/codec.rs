@@ -1,0 +1,434 @@
+//! Little-endian binary codec for snapshot payloads.
+//!
+//! Every multi-byte integer and float is little-endian; vectors are
+//! length-prefixed with a `u64` count. [`Dec`] is hardened against
+//! corrupted input: every read is bounds-checked, vector lengths are
+//! capped by the remaining payload before any allocation, and
+//! [`Dec::finish`] rejects trailing bytes — so a flipped length byte
+//! yields a clean error, never an OOM or a silent short read. (Whole-file
+//! integrity is the container's job: `ckpt::Snapshot` CRC32-checks each
+//! section before a `Dec` ever sees it.)
+
+use anyhow::Result;
+
+use crate::optim::{AdamCfg, DenseAdam, SparseAdam};
+use crate::tensor::Tensor;
+
+/// Append-only encoder; [`Enc::into_bytes`] yields the payload.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    pub fn bool(&mut self, x: bool) {
+        self.buf.push(x as u8);
+    }
+
+    pub fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, x: usize) {
+        self.u64(x as u64);
+    }
+
+    pub fn f32(&mut self, x: f32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, x: f64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn opt_usize(&mut self, x: Option<usize>) {
+        match x {
+            Some(v) => {
+                self.bool(true);
+                self.usize(v);
+            }
+            None => self.bool(false),
+        }
+    }
+
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.usize(xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn f64s(&mut self, xs: &[f64]) {
+        self.usize(xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn u32s(&mut self, xs: &[u32]) {
+        self.usize(xs.len());
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn usizes(&mut self, xs: &[usize]) {
+        self.usize(xs.len());
+        for &x in xs {
+            self.u64(x as u64);
+        }
+    }
+
+    pub fn tensor(&mut self, t: &Tensor) {
+        self.usize(t.shape.len());
+        for &d in &t.shape {
+            self.u64(d as u64);
+        }
+        self.f32s(&t.data);
+    }
+
+    pub fn adam_cfg(&mut self, c: &AdamCfg) {
+        self.f32(c.beta1);
+        self.f32(c.beta2);
+        self.f32(c.eps);
+        self.f32(c.weight_decay);
+    }
+
+    pub fn dense_adam(&mut self, o: &DenseAdam) {
+        self.adam_cfg(&o.cfg);
+        self.usize(o.t);
+        self.f32s(&o.m);
+        self.f32s(&o.v);
+    }
+
+    pub fn sparse_adam(&mut self, o: &SparseAdam) {
+        self.adam_cfg(&o.cfg);
+        self.usize(o.t);
+        self.u32s(&o.idx);
+        self.f32s(&o.m);
+        self.f32s(&o.v);
+    }
+}
+
+/// Bounds-checked decoder over a payload slice.
+pub struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, i: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "snapshot payload truncated: wanted {n} bytes at offset {}, {} left",
+                    self.i,
+                    self.b.len() - self.i
+                )
+            })?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    /// Vector length prefix, capped by the remaining payload (given
+    /// `elem` bytes per element) before any allocation happens.
+    fn len(&mut self, elem: usize) -> Result<usize> {
+        let n = self.usize()?;
+        anyhow::ensure!(
+            n.checked_mul(elem).is_some_and(|bytes| bytes <= self.remaining()),
+            "snapshot payload corrupted: implausible vector length {n}"
+        );
+        Ok(n)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        Ok(self.u8()? != 0)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.len(1)?;
+        let s = std::str::from_utf8(self.take(n)?)
+            .map_err(|_| anyhow::anyhow!("snapshot string is not UTF-8"))?;
+        Ok(s.to_string())
+    }
+
+    pub fn opt_usize(&mut self) -> Result<Option<usize>> {
+        if self.bool()? {
+            Ok(Some(self.usize()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.len(8)?;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.len(4)?;
+        let raw = self.take(n * 4)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn usizes(&mut self) -> Result<Vec<usize>> {
+        let n = self.len(8)?;
+        let raw = self.take(n * 8)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect())
+    }
+
+    pub fn tensor(&mut self) -> Result<Tensor> {
+        let ndim = self.len(8)?;
+        anyhow::ensure!(ndim <= 8, "snapshot tensor has implausible ndim {ndim}");
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(self.usize()?);
+        }
+        let data = self.f32s()?;
+        let numel = shape
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .ok_or_else(|| anyhow::anyhow!("snapshot tensor shape overflows"))?;
+        anyhow::ensure!(
+            numel == data.len(),
+            "snapshot tensor shape {shape:?} does not match its {} data values",
+            data.len()
+        );
+        Ok(Tensor::from_vec(&shape, data))
+    }
+
+    pub fn adam_cfg(&mut self) -> Result<AdamCfg> {
+        Ok(AdamCfg {
+            beta1: self.f32()?,
+            beta2: self.f32()?,
+            eps: self.f32()?,
+            weight_decay: self.f32()?,
+        })
+    }
+
+    pub fn dense_adam(&mut self) -> Result<DenseAdam> {
+        let cfg = self.adam_cfg()?;
+        let t = self.usize()?;
+        let m = self.f32s()?;
+        let v = self.f32s()?;
+        anyhow::ensure!(m.len() == v.len(), "dense-adam moment lengths differ");
+        Ok(DenseAdam { cfg, m, v, t })
+    }
+
+    pub fn sparse_adam(&mut self) -> Result<SparseAdam> {
+        let cfg = self.adam_cfg()?;
+        let t = self.usize()?;
+        let idx = self.u32s()?;
+        let m = self.f32s()?;
+        let v = self.f32s()?;
+        anyhow::ensure!(
+            idx.len() == m.len() && m.len() == v.len(),
+            "sparse-adam index/moment lengths differ ({}/{}/{})",
+            idx.len(),
+            m.len(),
+            v.len()
+        );
+        Ok(SparseAdam { cfg, idx, m, v, t })
+    }
+
+    /// Assert the whole payload was consumed — catches encoder/decoder
+    /// drift and truncated-then-padded corruption.
+    pub fn finish(self) -> Result<()> {
+        anyhow::ensure!(
+            self.i == self.b.len(),
+            "snapshot payload has {} trailing bytes",
+            self.b.len() - self.i
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scalars_roundtrip() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.bool(true);
+        e.bool(false);
+        e.u32(0xDEAD_BEEF);
+        e.u64(u64::MAX);
+        e.usize(42);
+        e.f32(-0.0);
+        e.f64(std::f64::consts::PI);
+        e.str("héllo");
+        e.opt_usize(Some(9));
+        e.opt_usize(None);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert!(d.bool().unwrap());
+        assert!(!d.bool().unwrap());
+        assert_eq!(d.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(d.u64().unwrap(), u64::MAX);
+        assert_eq!(d.usize().unwrap(), 42);
+        assert_eq!(d.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(d.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(d.str().unwrap(), "héllo");
+        assert_eq!(d.opt_usize().unwrap(), Some(9));
+        assert_eq!(d.opt_usize().unwrap(), None);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn vectors_and_degenerate_tensors_roundtrip() {
+        let mut rng = Rng::new(3);
+        let tensors = [
+            Tensor::randn(&[1, 1], 1.0, &mut rng),
+            Tensor::randn(&[1, 5], 1.0, &mut rng),
+            Tensor::randn(&[5, 1], 1.0, &mut rng),
+            Tensor::zeros(&[3]),
+            Tensor::randn(&[2, 3], 1.0, &mut rng),
+        ];
+        let mut e = Enc::new();
+        e.f32s(&[]);
+        e.u32s(&[]);
+        e.usizes(&[0, usize::MAX]);
+        for t in &tensors {
+            e.tensor(t);
+        }
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert!(d.f32s().unwrap().is_empty());
+        assert!(d.u32s().unwrap().is_empty());
+        assert_eq!(d.usizes().unwrap(), vec![0, usize::MAX]);
+        for t in &tensors {
+            assert_eq!(&d.tensor().unwrap(), t);
+        }
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn optimizer_states_roundtrip_incl_empty_mask() {
+        let mut sp = SparseAdam::new(vec![3, 1, 7], AdamCfg::default());
+        let mut w = vec![0.5f32; 10];
+        sp.step(&mut w, &[1.0; 10], 0.1);
+        let empty = SparseAdam::new(vec![], AdamCfg::default());
+        let mut dn = DenseAdam::new(4, AdamCfg { weight_decay: 0.1, ..Default::default() });
+        dn.step(&mut vec![1.0; 4], &[0.3; 4], 0.01);
+        let mut e = Enc::new();
+        e.sparse_adam(&sp);
+        e.sparse_adam(&empty);
+        e.dense_adam(&dn);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        let sp2 = d.sparse_adam().unwrap();
+        assert_eq!(sp2.idx, sp.idx);
+        assert_eq!(sp2.m, sp.m);
+        assert_eq!(sp2.v, sp.v);
+        assert_eq!(sp2.t, sp.t);
+        let e2 = d.sparse_adam().unwrap();
+        assert!(e2.idx.is_empty() && e2.m.is_empty());
+        let dn2 = d.dense_adam().unwrap();
+        assert_eq!(dn2.m, dn.m);
+        assert_eq!(dn2.v, dn.v);
+        assert_eq!(dn2.t, dn.t);
+        assert_eq!(dn2.cfg.weight_decay, 0.1);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn corrupted_lengths_error_instead_of_allocating() {
+        // a length prefix far beyond the payload must be rejected before
+        // any allocation
+        let mut e = Enc::new();
+        e.u64(u64::MAX / 2);
+        let bytes = e.into_bytes();
+        assert!(Dec::new(&bytes).f32s().is_err());
+        assert!(Dec::new(&bytes).tensor().is_err());
+        // truncation mid-value
+        assert!(Dec::new(&[1, 2]).u32().is_err());
+        // trailing garbage flagged by finish()
+        let mut e = Enc::new();
+        e.u8(1);
+        e.u8(2);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        d.u8().unwrap();
+        assert!(d.finish().is_err());
+    }
+}

@@ -1,0 +1,465 @@
+//! Versioned checkpoint/restore: bit-exact snapshots of a training run.
+//!
+//! LIFT's trainable state is tiny (per matrix: `k` mask indices + `2k`
+//! packed Adam moments — the Fig. 6 memory argument), which makes
+//! frequent, cheap, bit-exact checkpoints feasible where Full FT's would
+//! be prohibitive. This module is the persistence layer behind
+//! `train::train_with`'s checkpoint cadence, the `lift train --resume`
+//! CLI, and the resumable scenario-matrix runner (`exp::matrix`).
+//!
+//! # On-disk layout (all integers little-endian)
+//!
+//! ```text
+//! offset 0   magic           8 bytes   b"LIFTSNAP"
+//!        8   format version  u32       FORMAT_VERSION
+//!       12   section count   u32
+//! then, per section:
+//!            name length     u32
+//!            name            UTF-8 bytes
+//!            payload length  u64
+//!            payload CRC32   u32       ISO-HDLC polynomial (zlib's)
+//!            payload         bytes
+//! ```
+//!
+//! Sections are opaque length-delimited payloads encoded with
+//! [`codec::Enc`]; the reader validates every section's CRC32 before any
+//! payload is parsed, so truncation, bit-flips, and half-written files
+//! are rejected with a specific error instead of misparsing. Writes go
+//! through a same-directory temp file + rename, so a crash mid-save
+//! leaves the previous complete snapshot in place, never a torn one.
+//!
+//! # Versioning policy
+//!
+//! `FORMAT_VERSION` is bumped on ANY layout change — container or
+//! section payloads. A reader only accepts its own version and fails
+//! loudly otherwise ("refusing to guess at the layout"): snapshots are
+//! cheap to regenerate from the run that wrote them, so there is no
+//! migration machinery, only honest rejection. New optional data must
+//! therefore go in a new section *and* bump the version.
+//!
+//! # What a trainer snapshot contains
+//!
+//! * `meta`    — method name, completed-step counter, both RNG stream
+//!   positions (the trainer's data RNG and `Ctx::rng`), the full
+//!   `TrainLog` prefix (loss curve, per-step latencies, accumulated
+//!   wall seconds — so a resumed run reports campaign totals), and the
+//!   schedule-relevant `TrainCfg` (lr / warmup fraction / total steps);
+//! * `params`  — every model tensor, bit-exact f32;
+//! * `method`  — the active [`Method`]'s full internal state via
+//!   `Method::save_state` (SparseAdam idx/m/v/t, DenseAdamSet moments,
+//!   LoRA/Spectral factors and frozen bases, SpIEL grow/drop snapshots,
+//!   S2FT column packs, lazy-init and last-maintained-step guards).
+//!
+//! # Determinism
+//!
+//! Restoring a snapshot and continuing reproduces the uninterrupted run
+//! bit-for-bit (weights AND optimizer moments, any worker count) — the
+//! crash-resume suite in `rust/tests/ckpt.rs` asserts this for every
+//! method. Per-matrix selection RNG streams need no persisting: they are
+//! pure functions of `(refresh seed, param index)` (see
+//! `lift::engine::stream_rng`), and the refresh seeds are drawn from
+//! `Ctx::rng`, whose position IS captured — so mask refresh scheduling
+//! and sampling replay exactly. Mismatched resume configs are rejected
+//! on two levels: `Method::load_state` refuses a different `make_method`
+//! spec, and `train_with` refuses a different schedule-relevant
+//! `TrainCfg` (lr / warmup / total steps). The *gradient source* is the
+//! one thing outside the snapshot: the data RNG position replays the
+//! stream, but the caller must reconstruct the same source (task suite,
+//! sample counts) — the scenario matrix guarantees this by keying every
+//! cell's snapshots on the full `CellSpec`.
+//!
+//! Scaling note: `meta` embeds the whole loss curve and step-latency
+//! history (12 bytes/step) so a resumed run's `TrainLog` covers the
+//! campaign, not just the tail. At this repo's run lengths (≤ a few
+//! thousand steps) that is noise next to the `params` section; for
+//! million-step campaigns the curve should stream to an append-only
+//! sidecar instead — tracked on the ROADMAP.
+
+pub mod codec;
+
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use anyhow::{Context, Result};
+
+use crate::methods::Method;
+use crate::tensor::Tensor;
+use crate::train::{TrainCfg, TrainLog};
+use crate::util::rng::Rng;
+use codec::{Dec, Enc};
+
+pub const MAGIC: &[u8; 8] = b"LIFTSNAP";
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Section names of a trainer snapshot.
+pub const SEC_META: &str = "meta";
+pub const SEC_PARAMS: &str = "params";
+pub const SEC_METHOD: &str = "method";
+
+/// CRC-32 (ISO-HDLC, polynomial 0xEDB88320 reflected — the zlib/PNG
+/// checksum), table-driven.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// A snapshot: ordered named sections, each CRC32-validated on read.
+#[derive(Default)]
+pub struct Snapshot {
+    pub sections: Vec<(String, Vec<u8>)>,
+}
+
+impl Snapshot {
+    pub fn new() -> Snapshot {
+        Snapshot::default()
+    }
+
+    pub fn add(&mut self, name: &str, payload: Vec<u8>) {
+        self.sections.push((name.to_string(), payload));
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[u8]> {
+        self.sections
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, p)| p.as_slice())
+            .ok_or_else(|| anyhow::anyhow!("snapshot has no '{name}' section"))
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for (name, payload) in &self.sections {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(&crc32(payload).to_le_bytes());
+            out.extend_from_slice(payload);
+        }
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Snapshot> {
+        // the container parses through the same hardened reader as the
+        // payloads — one bounds-checking code path to maintain
+        let mut d = Dec::new(b);
+        anyhow::ensure!(
+            d.take(8).map(|m| m == MAGIC).unwrap_or(false),
+            "bad snapshot magic — not a LIFT snapshot file (or truncated before the header)"
+        );
+        let version = d.u32()?;
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "unsupported snapshot format version {version} (this build reads version \
+             {FORMAT_VERSION}); refusing to guess at the layout"
+        );
+        let n_sections = d.u32()? as usize;
+        anyhow::ensure!(n_sections <= 1024, "implausible section count {n_sections}");
+        let mut sections = Vec::with_capacity(n_sections);
+        for _ in 0..n_sections {
+            let name_len = d.u32()? as usize;
+            anyhow::ensure!(name_len <= 256, "implausible section-name length {name_len}");
+            let name = std::str::from_utf8(d.take(name_len)?)
+                .map_err(|_| anyhow::anyhow!("section name is not UTF-8"))?
+                .to_string();
+            let payload_len = d.u64()? as usize;
+            let stored = d.u32()?;
+            let payload = d
+                .take(payload_len)
+                .with_context(|| format!("section '{name}'"))?
+                .to_vec();
+            let got = crc32(&payload);
+            anyhow::ensure!(
+                got == stored,
+                "snapshot section '{name}' failed its CRC32 check (stored {stored:08x}, \
+                 computed {got:08x}) — the file is corrupted"
+            );
+            sections.push((name, payload));
+        }
+        anyhow::ensure!(
+            d.remaining() == 0,
+            "snapshot has {} trailing bytes",
+            d.remaining()
+        );
+        Ok(Snapshot { sections })
+    }
+
+    /// Atomic write: temp file in the same directory, then rename — a
+    /// crash mid-save never leaves a torn snapshot at `path`.
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_bytes())
+            .with_context(|| format!("writing snapshot {tmp:?}"))?;
+        std::fs::rename(&tmp, path).with_context(|| format!("committing snapshot {path:?}"))?;
+        Ok(())
+    }
+
+    pub fn read_from(path: &Path) -> Result<Snapshot> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading snapshot {path:?}"))?;
+        Snapshot::from_bytes(&bytes).with_context(|| format!("parsing snapshot {path:?}"))
+    }
+}
+
+/// Everything `train::train_with` needs to continue a run bit-exactly.
+pub struct TrainerState {
+    /// Completed steps (the resumed loop starts here).
+    pub step: usize,
+    pub method_name: String,
+    /// `Ctx::rng` stream position (feeds mask-refresh seeds).
+    pub ctx_rng: u64,
+    /// Trainer data-RNG stream position (feeds batch sampling).
+    pub data_rng: u64,
+    /// Loss curve, per-step latencies and accumulated wall seconds of
+    /// the completed prefix — restored whole so a resumed run's
+    /// `TrainLog` covers the entire campaign, not just the tail.
+    pub log: TrainLog,
+    /// The writing run's schedule-relevant `TrainCfg` (lr, warmup
+    /// fraction, total steps). `train_with` refuses to resume under a
+    /// different one — the LR schedule would silently diverge from the
+    /// uninterrupted run.
+    pub lr: f32,
+    pub warmup_frac: f32,
+    pub cfg_steps: usize,
+    pub params: Vec<Tensor>,
+    pub method_state: Vec<u8>,
+}
+
+/// Write one trainer snapshot (see the module doc for the layout).
+/// `log.seconds` should already include the wall time up to this
+/// snapshot (`train_with` passes the accumulated value).
+pub fn save_trainer(
+    path: &Path,
+    step: usize,
+    method: &dyn Method,
+    params: &[Tensor],
+    ctx_rng: &Rng,
+    data_rng: &Rng,
+    log: &TrainLog,
+    cfg: &TrainCfg,
+) -> Result<()> {
+    let mut meta = Enc::new();
+    meta.str(&method.name());
+    meta.usize(step);
+    meta.u64(ctx_rng.state());
+    meta.u64(data_rng.state());
+    meta.f32s(&log.losses);
+    meta.f64s(&log.step_times);
+    meta.f64(log.seconds);
+    meta.f32(cfg.lr);
+    meta.f32(cfg.warmup_frac);
+    meta.usize(cfg.steps);
+    let mut ps = Enc::new();
+    ps.usize(params.len());
+    for t in params {
+        ps.tensor(t);
+    }
+    let mut snap = Snapshot::new();
+    snap.add(SEC_META, meta.into_bytes());
+    snap.add(SEC_PARAMS, ps.into_bytes());
+    snap.add(SEC_METHOD, method.save_state()?);
+    snap.write_to(path)
+}
+
+pub fn load_trainer(path: &Path) -> Result<TrainerState> {
+    let snap = Snapshot::read_from(path)?;
+    let mut meta = Dec::new(snap.get(SEC_META)?);
+    let method_name = meta.str()?;
+    let step = meta.usize()?;
+    let ctx_rng = meta.u64()?;
+    let data_rng = meta.u64()?;
+    let log = TrainLog {
+        losses: meta.f32s()?,
+        step_times: meta.f64s()?,
+        seconds: meta.f64()?,
+    };
+    let lr = meta.f32()?;
+    let warmup_frac = meta.f32()?;
+    let cfg_steps = meta.usize()?;
+    meta.finish()?;
+    let mut ps = Dec::new(snap.get(SEC_PARAMS)?);
+    let n = ps.usize()?;
+    let mut params = Vec::new();
+    for _ in 0..n {
+        params.push(ps.tensor()?);
+    }
+    ps.finish()?;
+    let method_state = snap.get(SEC_METHOD)?.to_vec();
+    Ok(TrainerState {
+        step,
+        method_name,
+        ctx_rng,
+        data_rng,
+        log,
+        lr,
+        warmup_frac,
+        cfg_steps,
+        params,
+        method_state,
+    })
+}
+
+impl TrainerState {
+    /// Apply a loaded snapshot to freshly-constructed trainer pieces:
+    /// overwrite `params`, rebuild `method`'s internal state (instead of
+    /// `init`), and reposition both RNG streams. Returns
+    /// `(completed_steps, restored TrainLog)`. The method *name* is
+    /// checked here; the finer construction spec (rank, refresh
+    /// interval, selector, adapter kind, LRA config) is embedded in the
+    /// method payload and validated by each `Method::load_state`, so a
+    /// resume with mismatched `make_method` arguments fails loudly
+    /// instead of continuing as a hybrid run.
+    pub fn restore(
+        self,
+        method: &mut dyn Method,
+        params: &mut [Tensor],
+        ctx_rng: &mut Rng,
+        data_rng: &mut Rng,
+    ) -> Result<(usize, TrainLog)> {
+        anyhow::ensure!(
+            method.name() == self.method_name,
+            "snapshot was written by method '{}' but the resuming run constructed '{}' — \
+             the method spec must match the original run",
+            self.method_name,
+            method.name()
+        );
+        anyhow::ensure!(
+            params.len() == self.params.len(),
+            "snapshot holds {} parameter tensors, the model has {}",
+            self.params.len(),
+            params.len()
+        );
+        for (i, (dst, src)) in params.iter_mut().zip(self.params).enumerate() {
+            anyhow::ensure!(
+                dst.shape == src.shape,
+                "parameter {i} shape mismatch: snapshot {:?} vs model {:?}",
+                src.shape,
+                dst.shape
+            );
+            *dst = src;
+        }
+        method.load_state(&self.method_state)?;
+        *ctx_rng = Rng::from_state(self.ctx_rng);
+        *data_rng = Rng::from_state(self.data_rng);
+        Ok((self.step, self.log))
+    }
+}
+
+/// Canonical snapshot path for a step: `<dir>/step_XXXXXXXX.snap`.
+pub fn snapshot_path(dir: &Path, step: usize) -> PathBuf {
+    dir.join(format!("step_{step:08}.snap"))
+}
+
+/// Newest `step_*.snap` under `dir` (by step number), if any.
+pub fn latest_snapshot(dir: &Path) -> Result<Option<PathBuf>> {
+    if !dir.exists() {
+        return Ok(None);
+    }
+    let mut best: Option<(usize, PathBuf)> = None;
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let step = name
+            .strip_prefix("step_")
+            .and_then(|s| s.strip_suffix(".snap"))
+            .and_then(|s| s.parse::<usize>().ok());
+        if let Some(step) = step {
+            if best.as_ref().is_none_or(|(b, _)| step > *b) {
+                best = Some((step, entry.path()));
+            }
+        }
+    }
+    Ok(best.map(|(_, p)| p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // the standard check value for CRC-32/ISO-HDLC
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn container_roundtrip() {
+        let mut snap = Snapshot::new();
+        snap.add("alpha", vec![1, 2, 3]);
+        snap.add("empty", vec![]);
+        snap.add("beta", (0..255u8).collect());
+        let bytes = snap.to_bytes();
+        let back = Snapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back.sections, snap.sections);
+        assert_eq!(back.get("alpha").unwrap(), &[1, 2, 3]);
+        assert!(back.get("missing").is_err());
+    }
+
+    #[test]
+    fn container_rejects_corruption() {
+        let mut snap = Snapshot::new();
+        snap.add("data", vec![9u8; 64]);
+        let good = snap.to_bytes();
+        // truncation
+        let err = Snapshot::from_bytes(&good[..good.len() - 5]).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err}");
+        // bit flip in the payload -> CRC failure
+        let mut flipped = good.clone();
+        let last = flipped.len() - 1;
+        flipped[last] ^= 0x40;
+        let err = Snapshot::from_bytes(&flipped).unwrap_err();
+        assert!(format!("{err:#}").contains("CRC32"), "{err}");
+        // bumped format version -> loud refusal
+        let mut vbump = good.clone();
+        vbump[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let err = Snapshot::from_bytes(&vbump).unwrap_err();
+        assert!(format!("{err:#}").contains("version 99"), "{err}");
+        // bad magic
+        let mut bad = good;
+        bad[0] = b'X';
+        assert!(Snapshot::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn atomic_write_and_latest() {
+        let dir = std::env::temp_dir().join(format!("lift_ckpt_mod_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(latest_snapshot(&dir).unwrap().is_none());
+        for step in [2usize, 10, 6] {
+            let mut snap = Snapshot::new();
+            snap.add("meta", vec![step as u8]);
+            snap.write_to(&snapshot_path(&dir, step)).unwrap();
+        }
+        let latest = latest_snapshot(&dir).unwrap().unwrap();
+        assert_eq!(latest, snapshot_path(&dir, 10));
+        // files that don't match the pattern are ignored
+        std::fs::write(dir.join("notes.txt"), b"x").unwrap();
+        assert_eq!(latest_snapshot(&dir).unwrap().unwrap(), snapshot_path(&dir, 10));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

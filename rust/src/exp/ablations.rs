@@ -92,6 +92,7 @@ pub fn fig7b(env: &mut ExpEnv, args: &Args) -> Result<()> {
             warmup_frac: 0.03,
             log_every: 0,
             seed: spec.seed,
+            ..Default::default()
         };
         crate::train::train(&exec, &mut src, &mut method, &mut ctx, &mut params, &tcfg)?;
         let mut accs = Vec::new();

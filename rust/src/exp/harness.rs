@@ -231,6 +231,7 @@ pub fn run_ft_from(
         warmup_frac: 0.03,
         log_every: 0,
         seed: spec.seed,
+        ..Default::default()
     };
     let log = train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg)?;
     let mut accs = Vec::with_capacity(sets.len());

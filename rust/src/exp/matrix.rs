@@ -1,0 +1,507 @@
+//! Resumable scenario-matrix runner (ISSUE 3): a grid of
+//! method × selector × sparsity cells, each persisted independently so a
+//! preempted campaign reruns only its unfinished cells.
+//!
+//! Layout under the output directory:
+//!
+//! ```text
+//! <out>/<cell-id>.json    the cell's outcome (written atomically on
+//!                         completion; existing + parseable == done)
+//! <out>/<cell-id>.ckpt/   the cell's trainer snapshots
+//!                         (`step_XXXXXXXX.snap`, see `crate::ckpt`)
+//! ```
+//!
+//! [`run_matrix`] partitions the grid into done/todo by reading outcome
+//! files, then fans the todo cells over the shared
+//! `lift::engine::par_map` worker pool. A cell that crashed mid-train
+//! resumes from its newest snapshot on the next campaign run; a
+//! half-written or corrupted outcome file counts as *not done* and is
+//! recomputed (the atomic temp-file + rename write makes that window
+//! tiny). Cell failures are collected per cell — one broken configuration
+//! never aborts the rest of the campaign.
+//!
+//! Two cell executors share the machinery:
+//! * [`run_toy_cell`] — artifact-free: the toy preset + a synthetic
+//!   gradient stream through the *real* trainer loop
+//!   (`train::train_with`), so checkpoint cadence, resume and the
+//!   skip/recompute ledger are exercisable (and CI-tested,
+//!   `rust/tests/ckpt.rs`) without AOT artifacts;
+//! * [`run_real_cell`] — the full fine-tune + eval path, requiring
+//!   `make artifacts`.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::ckpt;
+use crate::data::tasks::{TaskMixSource, TaskSet};
+use crate::data::TaskFamily;
+use crate::lift::engine::par_map;
+use crate::lift::LiftCfg;
+use crate::methods::{make_method, Ctx, Method, Scope};
+use crate::optim::AdamCfg;
+use crate::runtime::manifest::{ParamInfo, PresetInfo};
+use crate::runtime::model_exec::ModelExec;
+use crate::runtime::{Linalg, Runtime};
+use crate::tensor::Tensor;
+use crate::train::{self, pretrain, TrainCfg};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One cell of the scenario grid. The selector axis rides the method
+/// axis: sparse selectors ARE `make_method` names (lift, weight_mag,
+/// grad_mag, movement, random, sift), so a grid over
+/// `methods ∪ selectors × ranks × seeds` covers method × selector ×
+/// sparsity without a redundant third constructor path.
+#[derive(Clone, Debug)]
+pub struct CellSpec {
+    pub preset: String,
+    pub method: String,
+    /// LoRA-rank-equivalent sparsity budget (`lift::budget_for`).
+    pub rank: usize,
+    pub seed: u64,
+    pub steps: usize,
+    /// mask refresh interval handed to `make_method`
+    pub interval: usize,
+}
+
+impl CellSpec {
+    /// Stable cell identity over EVERY spec field — outcome file and
+    /// checkpoint dir both key on it, so changing the spec (including
+    /// the refresh interval) is a new cell, never a stale reuse.
+    pub fn id(&self) -> String {
+        format!(
+            "{}_{}_r{}_s{}_t{}_i{}",
+            self.preset, self.method, self.rank, self.seed, self.steps, self.interval
+        )
+    }
+
+    /// Construct the cell's method with an explicit LRA rank (the toy
+    /// preset's matrices are too small for large ranks).
+    pub fn method_with_lra(&self, lra_rank: usize) -> Result<Box<dyn Method>> {
+        make_method(
+            &self.method,
+            self.rank,
+            LiftCfg {
+                rank: lra_rank,
+                ..Default::default()
+            },
+            self.interval,
+            Scope::default(),
+        )
+    }
+
+    pub fn method(&self) -> Result<Box<dyn Method>> {
+        self.method_with_lra(self.rank)
+    }
+}
+
+/// Persisted result of one finished cell.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellOutcome {
+    pub label: String,
+    /// accuracy per task family (empty for toy cells)
+    pub accs: Vec<f64>,
+    pub avg: f64,
+    pub tail_loss: f32,
+    pub trainable: usize,
+    pub opt_bytes: usize,
+    pub seconds: f64,
+    pub steps: usize,
+}
+
+impl CellOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(&self.label)),
+            ("accs", Json::arr(self.accs.iter().map(|&a| Json::num(a)))),
+            ("avg", Json::num(self.avg)),
+            ("tail_loss", Json::num(self.tail_loss as f64)),
+            ("trainable", Json::from(self.trainable)),
+            ("opt_bytes", Json::from(self.opt_bytes)),
+            ("seconds", Json::num(self.seconds)),
+            ("steps", Json::from(self.steps)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<CellOutcome> {
+        Some(CellOutcome {
+            label: j.get("label")?.as_str()?.to_string(),
+            accs: j
+                .get("accs")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64())
+                .collect::<Option<Vec<_>>>()?,
+            avg: j.get("avg")?.as_f64()?,
+            tail_loss: j.get("tail_loss")?.as_f64()? as f32,
+            trainable: j.get("trainable")?.as_usize()?,
+            opt_bytes: j.get("opt_bytes")?.as_usize()?,
+            seconds: j.get("seconds")?.as_f64()?,
+            steps: j.get("steps")?.as_usize()?,
+        })
+    }
+}
+
+/// Expand the method × selector × sparsity × seed grid; the selector
+/// axis is deduplicated into the method axis (see [`CellSpec`]).
+pub fn expand_grid(
+    preset: &str,
+    methods: &[String],
+    selectors: &[String],
+    ranks: &[usize],
+    seeds: &[u64],
+    steps: usize,
+    interval: usize,
+) -> Vec<CellSpec> {
+    let mut names: Vec<String> = Vec::new();
+    for n in methods.iter().chain(selectors) {
+        if !names.contains(n) {
+            names.push(n.clone());
+        }
+    }
+    let mut cells = Vec::new();
+    for name in &names {
+        for &rank in ranks {
+            for &seed in seeds {
+                cells.push(CellSpec {
+                    preset: preset.to_string(),
+                    method: name.clone(),
+                    rank,
+                    seed,
+                    steps,
+                    interval,
+                });
+            }
+        }
+    }
+    cells
+}
+
+pub fn outcome_path(out_dir: &Path, id: &str) -> PathBuf {
+    out_dir.join(format!("{id}.json"))
+}
+
+pub fn cell_ckpt_dir(out_dir: &Path, id: &str) -> PathBuf {
+    out_dir.join(format!("{id}.ckpt"))
+}
+
+/// A cell's persisted outcome, if it exists AND parses — corruption or a
+/// torn write reads as "not done", so reruns recompute it.
+pub fn read_outcome(out_dir: &Path, id: &str) -> Option<CellOutcome> {
+    let s = std::fs::read_to_string(outcome_path(out_dir, id)).ok()?;
+    CellOutcome::from_json(&Json::parse(&s).ok()?)
+}
+
+fn write_outcome(out_dir: &Path, id: &str, out: &CellOutcome) -> Result<()> {
+    let path = outcome_path(out_dir, id);
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, out.to_json().to_string())?;
+    std::fs::rename(&tmp, &path)?;
+    Ok(())
+}
+
+#[derive(Debug, Default)]
+pub struct MatrixReport {
+    /// cells executed this run (outcome written)
+    pub ran: Vec<String>,
+    /// cells whose outcome already existed — not recomputed
+    pub skipped: Vec<String>,
+    /// (cell id, error) — the rest of the campaign still completes
+    pub failed: Vec<(String, String)>,
+}
+
+/// Run every unfinished cell of the grid, fanned over
+/// `lift::engine::par_map`. `run_cell` must be a pure function of the
+/// spec (cells execute on any worker in any order); it should route
+/// through the cell's checkpoint dir so an interrupted cell resumes
+/// instead of restarting.
+pub fn run_matrix<F>(
+    out_dir: &Path,
+    cells: &[CellSpec],
+    workers: usize,
+    run_cell: F,
+) -> Result<MatrixReport>
+where
+    F: Fn(&CellSpec) -> Result<CellOutcome> + Sync,
+{
+    std::fs::create_dir_all(out_dir)?;
+    let mut report = MatrixReport::default();
+    let mut todo: Vec<&CellSpec> = Vec::new();
+    for c in cells {
+        if read_outcome(out_dir, &c.id()).is_some() {
+            report.skipped.push(c.id());
+        } else {
+            todo.push(c);
+        }
+    }
+    log::info!(
+        "matrix: {} cells, {} done, {} to run ({} workers)",
+        cells.len(),
+        report.skipped.len(),
+        todo.len(),
+        workers.max(1)
+    );
+    let results = par_map(workers.max(1), todo, |_, spec| {
+        let id = spec.id();
+        let res = run_cell(spec).and_then(|out| {
+            write_outcome(out_dir, &id, &out)?;
+            Ok(out)
+        });
+        (id, res.map_err(|e| format!("{e:#}")))
+    });
+    for (id, res) in results {
+        match res {
+            Ok(_) => report.ran.push(id),
+            Err(e) => report.failed.push((id, e)),
+        }
+    }
+    Ok(report)
+}
+
+// ---- artifact-free toy cells -------------------------------------------
+
+/// The artifact-free toy preset shared by the crash-resume suite and
+/// `--toy` matrix cells: two transformer layers' worth of trainable
+/// matrices plus an embedding and a norm, small enough that every method
+/// trains in milliseconds yet wide enough for real layer fan-out.
+pub fn toy_preset() -> PresetInfo {
+    let mut params = vec![ParamInfo {
+        name: "embed".into(),
+        shape: vec![32, 16],
+    }];
+    for l in 0..2 {
+        for (kind, shape) in [
+            ("wq", vec![16usize, 16usize]),
+            ("wk", vec![16, 16]),
+            ("wv", vec![16, 16]),
+            ("wo", vec![16, 16]),
+            ("wup", vec![16, 24]),
+            ("wdown", vec![24, 16]),
+        ] {
+            params.push(ParamInfo {
+                name: format!("l{l}.{kind}"),
+                shape,
+            });
+        }
+    }
+    params.push(ParamInfo {
+        name: "final_norm".into(),
+        shape: vec![16],
+    });
+    PresetInfo {
+        name: "toy".into(),
+        d: 16,
+        layers: 2,
+        ffn: 24,
+        vocab: 32,
+        seq: 8,
+        batch: 2,
+        heads: 2,
+        params,
+        executables: std::collections::BTreeMap::new(),
+    }
+}
+
+/// A `Ctx` over the toy preset (host-interpreter linalg, no artifacts).
+pub fn toy_ctx(workers: usize, seed: u64) -> Result<Ctx> {
+    Ok(Ctx {
+        la: Arc::new(Linalg::new(&xla::PjRtClient::cpu()?)),
+        preset: toy_preset(),
+        rng: Rng::new(seed),
+        adam: AdamCfg::default(),
+        workers,
+    })
+}
+
+pub fn toy_params(seed: u64) -> Vec<Tensor> {
+    crate::model::init_params(&toy_preset(), &mut Rng::new(seed))
+}
+
+/// Synthetic gradient source for `train::train_with`: one N(0, 0.1²)
+/// tensor per parameter drawn from the trainer's data RNG — a pure
+/// function of the stream position, so a resumed run replays the exact
+/// gradients an uninterrupted run would have seen. Loss is the mean |g|
+/// of the first tensor (deterministic, finite, replayable).
+pub fn synth_step(params: &[Tensor], rng: &mut Rng) -> Result<(f32, Vec<Tensor>)> {
+    let grads: Vec<Tensor> = params
+        .iter()
+        .map(|p| Tensor::randn(&p.shape, 0.1, rng))
+        .collect();
+    let loss = grads[0].data.iter().map(|x| x.abs()).sum::<f32>() / grads[0].len().max(1) as f32;
+    Ok((loss, grads))
+}
+
+/// One artifact-free cell: the real trainer loop over the toy preset
+/// with synthetic gradients, checkpointing every `ckpt_every` steps and
+/// resuming from the cell's newest snapshot when one exists.
+/// `inner_workers` is the per-cell engine pool — keep it 1 when cells
+/// themselves fan over `par_map` (the outer pool already saturates the
+/// machine, and determinism holds for any split either way).
+pub fn run_toy_cell(
+    spec: &CellSpec,
+    out_dir: &Path,
+    ckpt_every: usize,
+    inner_workers: usize,
+) -> Result<CellOutcome> {
+    let mut ctx = toy_ctx(inner_workers, 0xC311 ^ spec.seed)?;
+    let mut params = toy_params(0x1717 ^ spec.seed);
+    // toy matrices are 16-wide: clamp the LRA rank, not the budget
+    let mut method = spec.method_with_lra(spec.rank.clamp(1, 8))?;
+    let ckpt_dir = cell_ckpt_dir(out_dir, &spec.id());
+    let cfg = TrainCfg {
+        steps: spec.steps,
+        lr: 1e-3,
+        warmup_frac: 0.03,
+        log_every: 0,
+        seed: spec.seed,
+        ckpt_every,
+        ckpt_dir: Some(ckpt_dir.clone()),
+    };
+    let resume_from = ckpt::latest_snapshot(&ckpt_dir)?;
+    let log = train::train_with(
+        &mut synth_step,
+        &mut *method,
+        &mut ctx,
+        &mut params,
+        &cfg,
+        resume_from.as_deref(),
+    )?;
+    Ok(CellOutcome {
+        label: method.name(),
+        accs: Vec::new(),
+        avg: 0.0,
+        tail_loss: log.tail_loss(20),
+        trainable: method.trainable(),
+        opt_bytes: method.opt_bytes(),
+        seconds: log.seconds,
+        steps: spec.steps,
+    })
+}
+
+// ---- artifact-backed real cells ----------------------------------------
+
+/// Shared knobs for [`run_real_cell`].
+#[derive(Clone, Debug)]
+pub struct RealCellCfg {
+    pub families: Vec<TaskFamily>,
+    pub pt_steps: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub ckpt_every: usize,
+    /// per-cell engine pool; keep 1 when cells fan over `par_map`
+    pub inner_workers: usize,
+}
+
+/// One real fine-tune + eval cell. Builds its own `Runtime`/`ModelExec`
+/// so cells are pure functions of their spec and can execute on any
+/// matrix worker; the pretrained base must be pre-warmed sequentially
+/// first (the CLI does) so parallel cells hit the `runs/` cache
+/// read-only. Resumes from the cell's newest snapshot when one exists.
+pub fn run_real_cell(spec: &CellSpec, out_dir: &Path, rc: &RealCellCfg) -> Result<CellOutcome> {
+    let rt = Runtime::from_default()?;
+    let exec = ModelExec::load(&rt, &spec.preset)?;
+    let mut params = pretrain::ensure_pretrained(&rt, &exec, rc.pt_steps, 1)?;
+    let corpus = pretrain::world(&exec);
+    let sets: Vec<TaskSet> = rc
+        .families
+        .iter()
+        .map(|&f| {
+            TaskSet::generate(f, &corpus.vocab, &corpus.kg, rc.n_train, rc.n_test, spec.seed)
+        })
+        .collect();
+    let mut src = TaskMixSource {
+        sets: sets.clone(),
+        batch: exec.preset.batch,
+        seq: exec.preset.seq,
+    };
+    let mut ctx = pretrain::make_ctx(&rt, &exec, spec.seed ^ 0xabcd);
+    ctx.workers = rc.inner_workers.max(1);
+    let mut method = spec.method()?;
+    let ckpt_dir = cell_ckpt_dir(out_dir, &spec.id());
+    let cfg = TrainCfg {
+        steps: spec.steps,
+        lr: crate::exp::harness::default_lr(&spec.method),
+        warmup_frac: 0.03,
+        log_every: 0,
+        seed: spec.seed,
+        ckpt_every: rc.ckpt_every,
+        ckpt_dir: Some(ckpt_dir.clone()),
+    };
+    let log = match ckpt::latest_snapshot(&ckpt_dir)? {
+        Some(snap) => train::resume(
+            &exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg, &snap,
+        )?,
+        None => train::train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg)?,
+    };
+    let mut accs = Vec::with_capacity(sets.len());
+    for set in &sets {
+        accs.push(crate::train::eval::accuracy(&exec, &params, &set.test)?);
+    }
+    let avg = accs.iter().sum::<f64>() / accs.len().max(1) as f64;
+    Ok(CellOutcome {
+        label: method.name(),
+        accs,
+        avg,
+        tail_loss: log.tail_loss(20),
+        trainable: method.trainable(),
+        opt_bytes: method.opt_bytes(),
+        seconds: log.seconds,
+        steps: spec.steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_expansion_dedupes_selector_axis() {
+        let cells = expand_grid(
+            "toy",
+            &["lift".into(), "full".into()],
+            &["lift".into(), "weight_mag".into()],
+            &[4, 8],
+            &[1, 2],
+            10,
+            5,
+        );
+        // 3 distinct names (lift deduped) x 2 ranks x 2 seeds
+        assert_eq!(cells.len(), 12);
+        let ids: std::collections::HashSet<String> = cells.iter().map(|c| c.id()).collect();
+        assert_eq!(ids.len(), 12, "cell ids must be unique");
+        assert!(ids.contains("toy_weight_mag_r8_s2_t10_i5"));
+        // every spec field is part of the identity (a changed interval
+        // must not reuse another cell's ledger entry)
+        let a = CellSpec {
+            preset: "toy".into(),
+            method: "lift".into(),
+            rank: 4,
+            seed: 1,
+            steps: 10,
+            interval: 5,
+        };
+        let b = CellSpec { interval: 7, ..a.clone() };
+        assert_ne!(a.id(), b.id());
+    }
+
+    #[test]
+    fn outcome_json_roundtrip() {
+        let out = CellOutcome {
+            label: "LIFT".into(),
+            accs: vec![0.5, 0.75],
+            avg: 0.625,
+            tail_loss: 0.125,
+            trainable: 640,
+            opt_bytes: 7680,
+            seconds: 1.5,
+            steps: 10,
+        };
+        let j = out.to_json().to_string();
+        let back = CellOutcome::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, out);
+        // missing fields read as not-done, not as a panic
+        assert!(CellOutcome::from_json(&Json::parse("{\"label\":\"x\"}").unwrap()).is_none());
+    }
+}

@@ -7,6 +7,7 @@
 pub mod ablations;
 pub mod figures;
 pub mod harness;
+pub mod matrix;
 pub mod memory_fig;
 pub mod perturb_fig;
 pub mod tables;

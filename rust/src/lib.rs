@@ -2,6 +2,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod analysis;
+pub mod ckpt;
 pub mod data;
 pub mod exp;
 pub mod lift;

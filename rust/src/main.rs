@@ -4,10 +4,16 @@
 //!   pretrain  --preset <p> [--steps N] [--seed S]
 //!   train     --preset <p> --method <m> [--rank R] [--suite arith|commonsense|nlu]
 //!             [--steps N] [--lr F] [--interval N] [--seed S]
+//!             [--ckpt-every N --ckpt-dir D] [--resume latest|<path>]
+//!   matrix    resumable scenario grid: --methods a,b --selectors c,d
+//!             --ranks 8,32 --seeds 1,2 [--steps N] [--out D]
+//!             [--ckpt-every N] [--workers W] [--toy]
 //!   eval      --preset <p> [--suite ...]   (pretrained model, no fine-tune)
 //!   exp       <id> [--fast] [--seeds N]    (regenerate a paper table/figure)
 //!   list-exp                                (show available experiment ids)
 //!   inspect                                 (manifest summary)
+
+use std::path::PathBuf;
 
 use anyhow::Result;
 use lift::data::tasks::{TaskMixSource, TaskSet, ARITH, COMMONSENSE, NLU};
@@ -15,7 +21,7 @@ use lift::exp;
 use lift::lift::LiftCfg;
 use lift::methods::{make_method, Scope};
 use lift::runtime::{model_exec::ModelExec, Runtime};
-use lift::train::{eval, pretrain, train, TrainCfg};
+use lift::train::{eval, pretrain, resume as train_resume, train, TrainCfg};
 use lift::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -24,6 +30,7 @@ fn main() -> Result<()> {
     match args.cmd.as_str() {
         "pretrain" => cmd_pretrain(&args),
         "train" => cmd_train(&args),
+        "matrix" => cmd_matrix(&args),
         "eval" => cmd_eval(&args),
         "exp" => exp::run(&args),
         "list-exp" => {
@@ -47,6 +54,15 @@ lift — Low-rank Informed Sparse Fine-Tuning (ICML 2025) reproduction
 USAGE:
   lift pretrain --preset tiny [--steps 1500] [--seed 1]
   lift train --preset tiny --method lift --rank 32 --suite arith [--steps 300]
+       [--ckpt-every 50 --ckpt-dir runs/ckpt]   periodic versioned snapshots
+       [--ckpt-dir runs/ckpt --resume latest]   continue the newest snapshot
+       [--resume path/to/step_00000050.snap]    continue a specific snapshot
+  lift matrix --methods lift,full --selectors weight_mag,random \\
+       --ranks 8,32 --seeds 1,2 --steps 200 --out results/matrix
+                                  resumable scenario grid: finished cells are
+                                  skipped on rerun, interrupted cells resume
+                                  from their newest snapshot; --toy runs the
+                                  artifact-free synthetic cells
   lift eval --preset tiny --suite arith
   lift exp table2 [--fast]        regenerate a paper table/figure
   lift list-exp                   list experiment ids
@@ -95,6 +111,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     let pt_steps = args.usize("pretrain-steps", lift::exp::default_pretrain_steps(&preset));
     let n_train = args.usize("train-samples", 1000);
     let n_test = args.usize("test-samples", 100);
+    let ckpt_every = args.usize("ckpt-every", 0);
+    let ckpt_dir = args.opt_str("ckpt-dir").map(PathBuf::from);
+    let resume_arg = args.opt_str("resume");
     args.finish()?;
 
     let mut params = pretrain::ensure_pretrained(&rt, &exec, pt_steps, 1)?;
@@ -121,8 +140,26 @@ fn cmd_train(args: &Args) -> Result<()> {
         warmup_frac: 0.03,
         log_every: 50,
         seed,
+        ckpt_every,
+        ckpt_dir: ckpt_dir.clone(),
     };
-    let log = train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg)?;
+    let snapshot = match resume_arg.as_deref() {
+        Some("latest") => {
+            let dir = ckpt_dir
+                .ok_or_else(|| anyhow::anyhow!("--resume latest needs --ckpt-dir"))?;
+            Some(lift::ckpt::latest_snapshot(&dir)?.ok_or_else(|| {
+                anyhow::anyhow!("--resume latest: no step_*.snap under {dir:?}")
+            })?)
+        }
+        Some(path) => Some(PathBuf::from(path)),
+        None => None,
+    };
+    let log = match &snapshot {
+        Some(snap) => {
+            train_resume(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg, snap)?
+        }
+        None => train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg)?,
+    };
     println!(
         "method={} trainable={} opt_bytes={} final_loss={:.4} ({:.1}s)",
         method.name(),
@@ -135,6 +172,92 @@ fn cmd_train(args: &Args) -> Result<()> {
         let acc = eval::accuracy(&exec, &params, &set.test)?;
         println!("  {:<12} {acc:.2}", set.family.name());
     }
+    Ok(())
+}
+
+/// Resumable scenario matrix: method × selector × sparsity cells,
+/// persisted per cell under `--out`, finished cells skipped on rerun,
+/// unfinished ones fanned over the `lift::engine::par_map` pool (each
+/// cell resumes from its newest snapshot). `--toy` drives the
+/// artifact-free synthetic cells so the machinery runs without
+/// `make artifacts`.
+fn cmd_matrix(args: &Args) -> Result<()> {
+    use lift::exp::matrix::{self, RealCellCfg};
+    let preset = args.str("preset", "tiny");
+    let methods = args.list("methods", "lift,full");
+    let selectors = args.list("selectors", "");
+    let ranks: Vec<usize> = args
+        .list("ranks", "32")
+        .iter()
+        .map(|r| r.parse().unwrap_or_else(|_| panic!("--ranks expects integers, got '{r}'")))
+        .collect();
+    let seeds: Vec<u64> = args
+        .list("seeds", "1")
+        .iter()
+        .map(|s| s.parse().unwrap_or_else(|_| panic!("--seeds expects integers, got '{s}'")))
+        .collect();
+    let steps = args.usize("steps", 200);
+    let interval = args.usize("interval", 100);
+    let out = PathBuf::from(args.str("out", "results/matrix"));
+    let ckpt_every = args.usize("ckpt-every", 50);
+    let workers = args.usize("workers", lift::lift::engine::default_workers());
+    let toy = args.bool("toy", false);
+    let suite = args.str("suite", "arith");
+    let pt_steps = args.usize("pretrain-steps", lift::exp::default_pretrain_steps(&preset));
+    let n_train = args.usize("train-samples", 1000);
+    let n_test = args.usize("test-samples", 100);
+    args.finish()?;
+
+    let cell_preset = if toy { "toy".to_string() } else { preset.clone() };
+    let cells =
+        matrix::expand_grid(&cell_preset, &methods, &selectors, &ranks, &seeds, steps, interval);
+    anyhow::ensure!(!cells.is_empty(), "empty grid: no methods/selectors given");
+    let report = if toy {
+        matrix::run_matrix(&out, &cells, workers, |spec| {
+            matrix::run_toy_cell(spec, &out, ckpt_every, 1)
+        })?
+    } else {
+        // pre-warm the pretrained base sequentially so parallel cells
+        // hit the runs/ checkpoint cache read-only
+        {
+            let rt = Runtime::from_default()?;
+            let exec = ModelExec::load(&rt, &preset)?;
+            pretrain::ensure_pretrained(&rt, &exec, pt_steps, 1)?;
+        }
+        let rc = RealCellCfg {
+            families: suite_families(&suite),
+            pt_steps,
+            n_train,
+            n_test,
+            ckpt_every,
+            inner_workers: 1,
+        };
+        matrix::run_matrix(&out, &cells, workers, |spec| {
+            matrix::run_real_cell(spec, &out, &rc)
+        })?
+    };
+    println!(
+        "matrix: {} ran, {} skipped, {} failed (out: {})",
+        report.ran.len(),
+        report.skipped.len(),
+        report.failed.len(),
+        out.display()
+    );
+    for c in &cells {
+        if let Some(o) = matrix::read_outcome(&out, &c.id()) {
+            println!(
+                "  {:<44} avg={:>5.1} tail_loss={:.4} trainable={}",
+                c.id(),
+                o.avg,
+                o.tail_loss,
+                o.trainable
+            );
+        }
+    }
+    for (id, err) in &report.failed {
+        println!("  FAILED {id}: {err}");
+    }
+    anyhow::ensure!(report.failed.is_empty(), "{} matrix cells failed", report.failed.len());
     Ok(())
 }
 

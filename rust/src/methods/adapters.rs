@@ -14,6 +14,7 @@
 use anyhow::Result;
 
 use super::{Ctx, Method, Scope};
+use crate::ckpt::codec::{Dec, Enc};
 use crate::optim::DenseAdam;
 use crate::runtime::Linalg;
 use crate::tensor::Tensor;
@@ -294,6 +295,84 @@ impl Method for LoRa {
         }
         super::digest_words(words)
     }
+
+    /// Factors, frozen bases (PiSSA residuals), DoRA magnitudes, and all
+    /// adapter optimizers — `init` is skipped entirely on resume, so the
+    /// frozen base must be in the snapshot too.
+    fn save_state(&self) -> Result<Vec<u8>> {
+        let mut e = Enc::new();
+        e.u8(b'A');
+        e.u8(match self.kind {
+            AdapterKind::LoRa => 0,
+            AdapterKind::PiSsa => 1,
+            AdapterKind::DoRa => 2,
+        });
+        e.usize(self.rank);
+        e.usize(self.states.len());
+        for st in &self.states {
+            e.usize(st.pi);
+            e.tensor(&st.w0);
+            e.tensor(&st.a);
+            e.tensor(&st.b);
+            e.f32s(&st.mag);
+            e.dense_adam(&st.opt_a);
+            e.dense_adam(&st.opt_b);
+            match &st.opt_m {
+                Some(o) => {
+                    e.bool(true);
+                    e.dense_adam(o);
+                }
+                None => e.bool(false),
+            }
+        }
+        Ok(e.into_bytes())
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> Result<()> {
+        let mut d = Dec::new(state);
+        anyhow::ensure!(d.u8()? == b'A', "snapshot does not hold adapter state");
+        let kind_tag = match self.kind {
+            AdapterKind::LoRa => 0u8,
+            AdapterKind::PiSsa => 1,
+            AdapterKind::DoRa => 2,
+        };
+        let same_spec = d.u8()? == kind_tag && d.usize()? == self.rank;
+        anyhow::ensure!(
+            same_spec,
+            "{}: snapshot was written under a different adapter kind/rank spec — \
+             resume must reconstruct the original make_method arguments",
+            self.name()
+        );
+        let n = d.usize()?;
+        let mut states = Vec::new();
+        for _ in 0..n {
+            let pi = d.usize()?;
+            let w0 = d.tensor()?;
+            let a = d.tensor()?;
+            let b = d.tensor()?;
+            let mag = d.f32s()?;
+            let opt_a = d.dense_adam()?;
+            let opt_b = d.dense_adam()?;
+            let opt_m = if d.bool()? { Some(d.dense_adam()?) } else { None };
+            anyhow::ensure!(
+                opt_a.m.len() == a.len() && opt_b.m.len() == b.len(),
+                "adapter optimizer lengths do not match their factors"
+            );
+            states.push(LoraState {
+                pi,
+                w0,
+                a,
+                b,
+                mag,
+                opt_a,
+                opt_b,
+                opt_m,
+            });
+        }
+        self.states = states;
+        d.finish()?;
+        Ok(())
+    }
 }
 
 /// Spectral adapter: fine-tune the top-r singular triplet (U, σ, V).
@@ -460,6 +539,63 @@ impl Method for Spectral {
             }
         }
         super::digest_words(words)
+    }
+
+    fn save_state(&self) -> Result<Vec<u8>> {
+        let mut e = Enc::new();
+        e.u8(b'E');
+        e.usize(self.rank);
+        e.usize(self.states.len());
+        for st in &self.states {
+            e.usize(st.pi);
+            e.tensor(&st.w_res);
+            e.tensor(&st.u);
+            e.tensor(&st.v);
+            e.f32s(&st.s);
+            e.dense_adam(&st.opt_u);
+            e.dense_adam(&st.opt_v);
+            e.dense_adam(&st.opt_s);
+        }
+        Ok(e.into_bytes())
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> Result<()> {
+        let mut d = Dec::new(state);
+        anyhow::ensure!(d.u8()? == b'E', "snapshot does not hold spectral state");
+        anyhow::ensure!(
+            d.usize()? == self.rank,
+            "Spectral: snapshot was written under a different rank spec — \
+             resume must reconstruct the original make_method arguments"
+        );
+        let n = d.usize()?;
+        let mut states = Vec::new();
+        for _ in 0..n {
+            let pi = d.usize()?;
+            let w_res = d.tensor()?;
+            let u = d.tensor()?;
+            let v = d.tensor()?;
+            let s = d.f32s()?;
+            let opt_u = d.dense_adam()?;
+            let opt_v = d.dense_adam()?;
+            let opt_s = d.dense_adam()?;
+            anyhow::ensure!(
+                opt_u.m.len() == u.len() && opt_v.m.len() == v.len() && opt_s.m.len() == s.len(),
+                "spectral optimizer lengths do not match their factors"
+            );
+            states.push(SpectralState {
+                pi,
+                w_res,
+                u,
+                v,
+                s,
+                opt_u,
+                opt_v,
+                opt_s,
+            });
+        }
+        self.states = states;
+        d.finish()?;
+        Ok(())
     }
 }
 

@@ -3,6 +3,7 @@
 use anyhow::Result;
 
 use super::{Ctx, Method};
+use crate::ckpt::codec::{Dec, Enc};
 use crate::optim::DenseAdamSet;
 use crate::tensor::Tensor;
 
@@ -83,5 +84,40 @@ impl Method for FullFt {
                 .flat_map(|st| super::adam_words(st.t, &st.m, &st.v))
         });
         super::digest_words(words)
+    }
+
+    fn save_state(&self) -> Result<Vec<u8>> {
+        let mut e = Enc::new();
+        e.u8(b'F');
+        e.usize(self.n_params);
+        match &self.opt {
+            Some(o) => {
+                e.bool(true);
+                e.usize(o.states.len());
+                for st in &o.states {
+                    e.dense_adam(st);
+                }
+            }
+            None => e.bool(false),
+        }
+        Ok(e.into_bytes())
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> Result<()> {
+        let mut d = Dec::new(state);
+        anyhow::ensure!(d.u8()? == b'F', "snapshot does not hold Full-FT state");
+        self.n_params = d.usize()?;
+        self.opt = if d.bool()? {
+            let n = d.usize()?;
+            let mut states = Vec::new();
+            for _ in 0..n {
+                states.push(d.dense_adam()?);
+            }
+            Some(DenseAdamSet { states })
+        } else {
+            None
+        };
+        d.finish()?;
+        Ok(())
     }
 }

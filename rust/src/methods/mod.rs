@@ -96,6 +96,25 @@ pub trait Method {
     fn state_digest(&self) -> u64 {
         0
     }
+    /// Serialize the method's complete training state — optimizer
+    /// moments and timesteps, masks, adapter factors and frozen bases,
+    /// accumulated scores, lazy-init and last-maintained-step guards —
+    /// as one opaque payload for the versioned snapshot (`crate::ckpt`).
+    /// Paired with [`Method::load_state`]; the crash-resume suite
+    /// (`rust/tests/ckpt.rs`) asserts save → load → continue matches an
+    /// uninterrupted run bit-for-bit on weights *and* `state_digest`.
+    fn save_state(&self) -> Result<Vec<u8>> {
+        anyhow::bail!("{}: checkpoint save not implemented", self.name())
+    }
+    /// Restore state captured by [`Method::save_state`] into a
+    /// freshly-constructed method (same `make_method` arguments, `init`
+    /// NOT called — load replaces it). Implementations must leave the
+    /// method exactly as the saving instance was, including refresh
+    /// scheduling guards, so a resumed run replays `refresh_all`
+    /// decisions on the original step boundaries.
+    fn load_state(&mut self, _state: &[u8]) -> Result<()> {
+        anyhow::bail!("{}: checkpoint load not implemented", self.name())
+    }
 }
 
 /// Order-sensitive 64-bit FNV-1a over words — the shared implementation

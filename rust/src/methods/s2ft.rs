@@ -5,6 +5,7 @@
 use anyhow::Result;
 
 use super::{Ctx, Method, Scope};
+use crate::ckpt::codec::{Dec, Enc};
 use crate::optim::DenseAdam;
 use crate::tensor::Tensor;
 
@@ -146,5 +147,49 @@ impl Method for S2Ft {
                 .chain(super::adam_words(opt.t, &opt.m, &opt.v))
         });
         super::digest_words(words)
+    }
+
+    fn save_state(&self) -> Result<Vec<u8>> {
+        let mut e = Enc::new();
+        e.u8(b'2');
+        e.usize(self.rank);
+        e.usizes(&self.matrices);
+        e.bool(self.initialized);
+        e.usize(self.states.len());
+        for (pi, cols, opt) in &self.states {
+            e.usize(*pi);
+            e.usizes(cols);
+            e.dense_adam(opt);
+        }
+        Ok(e.into_bytes())
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> Result<()> {
+        let mut d = Dec::new(state);
+        anyhow::ensure!(d.u8()? == b'2', "snapshot does not hold S2FT state");
+        anyhow::ensure!(
+            d.usize()? == self.rank,
+            "S2FT: snapshot was written under a different rank spec — \
+             resume must reconstruct the original make_method arguments"
+        );
+        self.matrices = d.usizes()?;
+        self.initialized = d.bool()?;
+        let n = d.usize()?;
+        let mut states = Vec::new();
+        for _ in 0..n {
+            let pi = d.usize()?;
+            let cols = d.usizes()?;
+            let opt = d.dense_adam()?;
+            anyhow::ensure!(
+                cols.is_empty() || opt.m.len() % cols.len() == 0,
+                "S2FT optimizer length {} is not a multiple of {} columns",
+                opt.m.len(),
+                cols.len()
+            );
+            states.push((pi, cols, opt));
+        }
+        self.states = states;
+        d.finish()?;
+        Ok(())
     }
 }

@@ -17,10 +17,34 @@
 use anyhow::Result;
 
 use super::{Ctx, Method, Scope};
+use crate::ckpt::codec::{Dec, Enc};
 use crate::lift::engine::MaskEngine;
 use crate::lift::{budget_for, LiftCfg, MaskRequest, Selector};
 use crate::optim::{self, SparseAdam};
 use crate::tensor::Tensor;
+
+/// Stable snapshot discriminant for a [`Selector`] (checkpoint format —
+/// reorder the enum freely, never these values).
+fn selector_tag(s: Selector) -> u8 {
+    match s {
+        Selector::Lift => 0,
+        Selector::WeightMag => 1,
+        Selector::GradMag => 2,
+        Selector::Movement => 3,
+        Selector::Random => 4,
+    }
+}
+
+/// Stable snapshot discriminant for a rank-reduction strategy.
+fn strategy_tag(s: crate::lift::RankStrategy) -> u8 {
+    use crate::lift::RankStrategy;
+    match s {
+        RankStrategy::Largest => 0,
+        RankStrategy::Smallest => 1,
+        RankStrategy::Random => 2,
+        RankStrategy::Hybrid => 3,
+    }
+}
 
 pub struct SparseFt {
     label: String,
@@ -279,5 +303,90 @@ impl Method for SparseFt {
                 .chain(super::adam_words(st.t, &st.m, &st.v))
         });
         super::digest_words(words)
+    }
+
+    /// Masks + packed Adam state + Movement scores + the maintenance
+    /// guards — everything a resumed run needs to replay refresh
+    /// scheduling and step bit-exactly. The construction spec is
+    /// embedded first so `load_state` can refuse a snapshot written
+    /// under different `make_method` arguments (which would otherwise
+    /// resume silently as a hybrid run).
+    fn save_state(&self) -> Result<Vec<u8>> {
+        let mut e = Enc::new();
+        e.u8(b'S');
+        e.u8(selector_tag(self.selector));
+        e.u8(strategy_tag(self.cfg.strategy));
+        e.bool(self.cfg.exact);
+        e.usize(self.cfg.rank);
+        e.usize(self.cfg.power_iters);
+        e.usize(self.cfg.oversample);
+        e.usize(self.cfg.block);
+        e.usize(self.rank);
+        e.usize(self.refresh_interval);
+        e.usizes(&self.matrices);
+        e.bool(self.initialized);
+        e.opt_usize(self.last_maintained_step);
+        e.f64(self.last_refresh_overlap);
+        e.usize(self.states.len());
+        for (pi, st) in &self.states {
+            e.usize(*pi);
+            e.sparse_adam(st);
+        }
+        e.usize(self.scores.len());
+        for s in &self.scores {
+            e.f32s(s);
+        }
+        Ok(e.into_bytes())
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> Result<()> {
+        let mut d = Dec::new(state);
+        anyhow::ensure!(
+            d.u8()? == b'S',
+            "{}: snapshot does not hold sparse-FT state",
+            self.label
+        );
+        let same_spec = d.u8()? == selector_tag(self.selector)
+            && d.u8()? == strategy_tag(self.cfg.strategy)
+            && d.bool()? == self.cfg.exact
+            && d.usize()? == self.cfg.rank
+            && d.usize()? == self.cfg.power_iters
+            && d.usize()? == self.cfg.oversample
+            && d.usize()? == self.cfg.block
+            && d.usize()? == self.rank
+            && d.usize()? == self.refresh_interval;
+        anyhow::ensure!(
+            same_spec,
+            "{}: snapshot was written under a different method spec \
+             (selector / rank / refresh interval / LRA config) — resume must \
+             reconstruct the original make_method arguments",
+            self.label
+        );
+        self.matrices = d.usizes()?;
+        self.initialized = d.bool()?;
+        self.last_maintained_step = d.opt_usize()?;
+        self.last_refresh_overlap = d.f64()?;
+        let n = d.usize()?;
+        let mut states = Vec::new();
+        for _ in 0..n {
+            let pi = d.usize()?;
+            states.push((pi, d.sparse_adam()?));
+        }
+        self.states = states;
+        let ns = d.usize()?;
+        let mut scores = Vec::new();
+        for _ in 0..ns {
+            scores.push(d.f32s()?);
+        }
+        self.scores = scores;
+        d.finish()?;
+        anyhow::ensure!(
+            !self.initialized || self.states.len() == self.matrices.len(),
+            "{}: snapshot holds {} optimizer states for {} matrices",
+            self.label,
+            self.states.len(),
+            self.matrices.len()
+        );
+        Ok(())
     }
 }

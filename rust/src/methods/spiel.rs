@@ -5,6 +5,7 @@
 use anyhow::Result;
 
 use super::{Ctx, Method, Scope};
+use crate::ckpt::codec::{Dec, Enc};
 use crate::lift::{budget_for, topk_indices};
 use crate::optim::SparseAdam;
 use crate::tensor::Tensor;
@@ -169,5 +170,55 @@ impl Method for Spiel {
                 .chain(snapshot.iter().map(|x| x.to_bits() as u64))
         });
         super::digest_words(words)
+    }
+
+    /// Index sets + packed Adam state + the weight-at-selection snapshots
+    /// the drop criterion compares against, plus the cycle guard.
+    fn save_state(&self) -> Result<Vec<u8>> {
+        let mut e = Enc::new();
+        e.u8(b'P');
+        e.usize(self.rank);
+        e.usize(self.interval);
+        e.usizes(&self.matrices);
+        e.opt_usize(self.last_cycled_step);
+        e.f32(self.churn);
+        e.usize(self.states.len());
+        for (pi, st, snapshot) in &self.states {
+            e.usize(*pi);
+            e.sparse_adam(st);
+            e.f32s(snapshot);
+        }
+        Ok(e.into_bytes())
+    }
+
+    fn load_state(&mut self, state: &[u8]) -> Result<()> {
+        let mut d = Dec::new(state);
+        anyhow::ensure!(d.u8()? == b'P', "snapshot does not hold SpIEL state");
+        let same_spec = d.usize()? == self.rank && d.usize()? == self.interval;
+        anyhow::ensure!(
+            same_spec,
+            "SpIEL: snapshot was written under a different rank/interval spec — \
+             resume must reconstruct the original make_method arguments"
+        );
+        self.matrices = d.usizes()?;
+        self.last_cycled_step = d.opt_usize()?;
+        self.churn = d.f32()?;
+        let n = d.usize()?;
+        let mut states = Vec::new();
+        for _ in 0..n {
+            let pi = d.usize()?;
+            let st = d.sparse_adam()?;
+            let snapshot = d.f32s()?;
+            anyhow::ensure!(
+                snapshot.len() == st.k(),
+                "SpIEL snapshot length {} != mask size {}",
+                snapshot.len(),
+                st.k()
+            );
+            states.push((pi, st, snapshot));
+        }
+        self.states = states;
+        d.finish()?;
+        Ok(())
     }
 }

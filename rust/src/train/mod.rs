@@ -1,16 +1,25 @@
 //! Training loop: drives the train-step executable, hands gradients to the
-//! active `Method`, tracks the loss curve and periodic evals.
+//! active `Method`, tracks the loss curve and periodic evals. The core
+//! loop ([`train_with`]) is generic over the gradient source and
+//! checkpoint/resume-aware: with `TrainCfg::ckpt_every` set it writes a
+//! versioned snapshot (`crate::ckpt`) every N steps, and [`resume`]
+//! continues one bit-exactly — weights, optimizer moments, refresh
+//! scheduling and both RNG streams (asserted by `rust/tests/ckpt.rs`).
 
 pub mod eval;
 pub mod pretrain;
 
+use std::path::{Path, PathBuf};
+
 use anyhow::Result;
 
+use crate::ckpt;
 use crate::data::BatchSource;
 use crate::methods::{Ctx, Method};
 use crate::optim::LrSchedule;
 use crate::runtime::model_exec::ModelExec;
 use crate::tensor::Tensor;
+use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
 pub struct TrainCfg {
@@ -19,6 +28,12 @@ pub struct TrainCfg {
     pub warmup_frac: f32,
     pub log_every: usize,
     pub seed: u64,
+    /// Write a versioned snapshot every N completed steps (0 = never).
+    /// Takes effect only when `ckpt_dir` is set.
+    pub ckpt_every: usize,
+    /// Snapshot directory (`step_XXXXXXXX.snap`); `None` disables
+    /// checkpointing regardless of `ckpt_every`.
+    pub ckpt_dir: Option<PathBuf>,
 }
 
 impl Default for TrainCfg {
@@ -29,6 +44,8 @@ impl Default for TrainCfg {
             warmup_frac: 0.03,
             log_every: 50,
             seed: 0,
+            ckpt_every: 0,
+            ckpt_dir: None,
         }
     }
 }
@@ -53,6 +70,15 @@ impl TrainLog {
     }
 }
 
+/// One gradient evaluation: given the current parameters and the run's
+/// data RNG, produce `(loss, full grads)`. The production source wraps
+/// `ModelExec::train_step` over `BatchSource::next_batch`; the
+/// crash-resume suite and the `--toy` matrix cells substitute a
+/// synthetic stream, exercising the *same* trainer loop without AOT
+/// artifacts. Implementations must be a pure function of
+/// `(params, rng position)` for resume to be bit-exact.
+pub type GradFn<'a> = dyn FnMut(&[Tensor], &mut Rng) -> Result<(f32, Vec<Tensor>)> + 'a;
+
 /// Run `cfg.steps` optimizer steps of `method` starting from `params`
 /// (mutated in place). Returns the loss curve.
 pub fn train(
@@ -63,6 +89,36 @@ pub fn train(
     params: &mut [Tensor],
     cfg: &TrainCfg,
 ) -> Result<TrainLog> {
+    check_shape(exec, src)?;
+    let mut step_fn = |params: &[Tensor], rng: &mut Rng| {
+        let batch = src.next_batch(rng);
+        exec.train_step(params, &batch)
+    };
+    train_with(&mut step_fn, method, ctx, params, cfg, None)
+}
+
+/// Resume a checkpointed run from `snapshot` and continue to
+/// `cfg.steps`. The method must be freshly constructed with the same
+/// spec as the original run (its state is loaded from the snapshot, not
+/// `init`); `params` only supplies shapes — values are overwritten.
+pub fn resume(
+    exec: &ModelExec,
+    src: &mut dyn BatchSource,
+    method: &mut dyn Method,
+    ctx: &mut Ctx,
+    params: &mut [Tensor],
+    cfg: &TrainCfg,
+    snapshot: &Path,
+) -> Result<TrainLog> {
+    check_shape(exec, src)?;
+    let mut step_fn = |params: &[Tensor], rng: &mut Rng| {
+        let batch = src.next_batch(rng);
+        exec.train_step(params, &batch)
+    };
+    train_with(&mut step_fn, method, ctx, params, cfg, Some(snapshot))
+}
+
+fn check_shape(exec: &ModelExec, src: &mut dyn BatchSource) -> Result<()> {
     let (b, s) = src.shape();
     anyhow::ensure!(
         b == exec.preset.batch && s == exec.preset.seq,
@@ -70,19 +126,76 @@ pub fn train(
         exec.preset.batch,
         exec.preset.seq
     );
+    Ok(())
+}
+
+/// The core trainer loop over an abstract gradient source. Fresh runs
+/// `init` the method at step 0; with `resume_from` the snapshot restores
+/// weights, method state, the loss curve and both RNG streams, and the
+/// loop continues at the recorded step — so `refresh_all` scheduling
+/// (interval refreshes, lazy first-step selection, SpIEL grow/drop
+/// cycles) replays on exactly the original step boundaries.
+pub fn train_with(
+    step_fn: &mut GradFn,
+    method: &mut dyn Method,
+    ctx: &mut Ctx,
+    params: &mut [Tensor],
+    cfg: &TrainCfg,
+    resume_from: Option<&Path>,
+) -> Result<TrainLog> {
     let sched = LrSchedule {
         base: cfg.lr,
         warmup: ((cfg.steps as f32) * cfg.warmup_frac) as usize,
         total: cfg.steps,
     };
-    let mut data_rng = crate::util::rng::Rng::new(cfg.seed ^ 0xda7a);
-    method.init(ctx, params)?;
+    let mut data_rng = Rng::new(cfg.seed ^ 0xda7a);
     let mut log = TrainLog::default();
+    let start = match resume_from {
+        Some(path) => {
+            let state = ckpt::load_trainer(path)?;
+            // a different lr / warmup / total changes the LR schedule:
+            // the continuation would silently diverge from the
+            // uninterrupted run, so refuse instead of hybrid-resuming
+            anyhow::ensure!(
+                state.lr.to_bits() == cfg.lr.to_bits()
+                    && state.warmup_frac.to_bits() == cfg.warmup_frac.to_bits()
+                    && state.cfg_steps == cfg.steps,
+                "snapshot was written under a different TrainCfg \
+                 (lr {} / warmup {} / steps {}) than the resuming run \
+                 (lr {} / warmup {} / steps {}) — the LR schedule would diverge",
+                state.lr,
+                state.warmup_frac,
+                state.cfg_steps,
+                cfg.lr,
+                cfg.warmup_frac,
+                cfg.steps
+            );
+            let (step, prior) = state.restore(method, params, &mut ctx.rng, &mut data_rng)?;
+            anyhow::ensure!(
+                step <= cfg.steps,
+                "snapshot is at step {step}, past cfg.steps = {}",
+                cfg.steps
+            );
+            // the whole prefix — losses, step latencies, and wall
+            // seconds — so the returned log covers the campaign, not
+            // just the post-crash tail
+            log = prior;
+            log::info!(
+                "[{}] resumed from {path:?} at step {step}/{}",
+                method.name(),
+                cfg.steps
+            );
+            step
+        }
+        None => {
+            method.init(ctx, params)?;
+            0
+        }
+    };
     let t0 = std::time::Instant::now();
-    for step in 0..cfg.steps {
+    for step in start..cfg.steps {
         let st = std::time::Instant::now();
-        let batch = src.next_batch(&mut data_rng);
-        let (loss, grads) = exec.train_step(params, &batch)?;
+        let (loss, grads) = step_fn(params, &mut data_rng)?;
         // one batched mask-maintenance call (layer-parallel for sparse
         // methods; no-op for dense/adapter methods), then one batched
         // optimizer step. Order matters: a refresh that swaps mask
@@ -101,7 +214,30 @@ pub fn train(
             );
         }
         anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
+        if cfg.ckpt_every > 0 && (step + 1) % cfg.ckpt_every == 0 {
+            if let Some(dir) = &cfg.ckpt_dir {
+                let path = ckpt::snapshot_path(dir, step + 1);
+                // log.seconds still holds the restored-prefix total
+                // during the loop; add this segment's elapsed time so
+                // the snapshot records true wall time up to this step
+                let mut snap_log = log.clone();
+                snap_log.seconds = log.seconds + t0.elapsed().as_secs_f64();
+                ckpt::save_trainer(
+                    &path,
+                    step + 1,
+                    &*method,
+                    params,
+                    &ctx.rng,
+                    &data_rng,
+                    &snap_log,
+                    cfg,
+                )?;
+                log::debug!("[{}] snapshot at step {} -> {path:?}", method.name(), step + 1);
+            }
+        }
     }
-    log.seconds = t0.elapsed().as_secs_f64();
+    // accumulate: restored-prefix seconds (0.0 on a fresh run) + this
+    // segment, so resumed runs report campaign wall time, not tail time
+    log.seconds += t0.elapsed().as_secs_f64();
     Ok(log)
 }

@@ -76,6 +76,7 @@ pub fn ensure_pretrained(
         warmup_frac: 0.05,
         log_every: 100,
         seed,
+        ..Default::default()
     };
     let log = train(exec, &mut corpus, &mut method, &mut ctx, &mut params, &cfg)?;
     log::info!(

@@ -14,7 +14,7 @@ use lift::methods::{make_method, Method, Scope};
 use lift::model;
 use lift::optim::{AdamCfg, KernelAdam, SparseAdam};
 use lift::runtime::model_exec::{Batch, ModelExec};
-use lift::runtime::{ArtifactStatus, Linalg, Runtime};
+use lift::runtime::{ArtifactStatus, Linalg, Manifest, Runtime};
 use lift::tensor::Tensor;
 use lift::train::{pretrain, train, TrainCfg};
 use lift::util::json::Json;
@@ -33,11 +33,59 @@ fn runtime() -> Option<Runtime> {
             None
         }
         Ok(ArtifactStatus::Missing(e)) => {
+            // the CI jax job sets this after `make artifacts`: absence is
+            // then a failure, never a silent skip
+            if std::env::var("LIFT_EXPECT_ARTIFACTS").is_ok() {
+                panic!("LIFT_EXPECT_ARTIFACTS is set but artifacts are missing: {e:#}");
+            }
             eprintln!("SKIP (artifacts unavailable — run `make artifacts`): {e}");
             None
         }
         Err(e) => panic!("{e:#}"),
     }
+}
+
+#[test]
+fn artifact_manifest_is_complete_when_present() {
+    // Validates what `make artifacts` produced — file-level, so it runs
+    // un-skipped even under the host-interpreter xla stub (which can't
+    // *execute* AOT HLO but can absolutely check the contract of the
+    // artifacts dir). The CI jax job relies on this running.
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        if std::env::var("LIFT_EXPECT_ARTIFACTS").is_ok() {
+            panic!("LIFT_EXPECT_ARTIFACTS is set but {dir:?} has no manifest.json");
+        }
+        eprintln!("SKIP (artifacts unavailable — run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let check = |what: &str, file: &str| {
+        let p = dir.join(file);
+        let len = std::fs::metadata(&p)
+            .unwrap_or_else(|e| panic!("{what} artifact missing at {p:?}: {e}"))
+            .len();
+        assert!(len > 0, "{what} artifact is empty: {p:?}");
+    };
+    assert!(!manifest.kernels.is_empty(), "manifest lists no kernels");
+    for (name, file) in &manifest.kernels {
+        check(&format!("kernel {name}"), file);
+    }
+    assert!(!manifest.presets.is_empty(), "manifest lists no presets");
+    for (pname, preset) in &manifest.presets {
+        assert!(
+            !preset.executables.is_empty(),
+            "preset {pname} lists no executables"
+        );
+        for (ename, file) in &preset.executables {
+            check(&format!("preset {pname} executable {ename}"), file);
+        }
+    }
+    // fixtures back the cross-language numeric contract
+    let fx = dir.join("fixtures.json");
+    let text = std::fs::read_to_string(&fx)
+        .unwrap_or_else(|e| panic!("fixtures.json missing at {fx:?}: {e}"));
+    Json::parse(&text).expect("fixtures.json does not parse");
 }
 
 /// Mirror of python/compile/fixtures.py deterministic_params.
@@ -272,6 +320,7 @@ fn lift_training_reduces_loss_and_respects_mask() {
         warmup_frac: 0.1,
         log_every: 0,
         seed: 1,
+        ..Default::default()
     };
     let log = train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg).unwrap();
     assert!(
@@ -343,6 +392,7 @@ fn every_method_trains_without_error() {
             warmup_frac: 0.1,
             log_every: 0,
             seed: 7,
+            ..Default::default()
         };
         let log =
             train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg).unwrap();
@@ -398,6 +448,7 @@ fn mask_refresh_migrates_state_during_training() {
         warmup_frac: 0.0,
         log_every: 0,
         seed: 9,
+        ..Default::default()
     };
     train(&exec, &mut src, &mut method, &mut ctx, &mut params, &cfg).unwrap();
     assert!(method.last_refresh_overlap > 0.0 && method.last_refresh_overlap <= 1.0);
