@@ -6,7 +6,7 @@
 # XlaBuilder toolkit (mask engine, property tests, quickstart selftest);
 # artifact-dependent integration tests skip themselves when absent.
 
-.PHONY: artifacts artifacts-e2e test bench clippy
+.PHONY: artifacts artifacts-e2e test bench bench-check clippy
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -19,6 +19,13 @@ test:
 
 bench:
 	cargo bench
+
+# appends to BENCH_trajectory.json, then fails if any speedup row
+# (warm refresh, arenas, async ckpt, worker-pool fan-outs) regressed
+# beyond $$BENCH_CHECK_TOL (default 0.4) vs the previous same-mode run.
+# Worker count for all pool measurements comes from LIFT_WORKERS.
+bench-check:
+	cargo bench -- --fast --check
 
 clippy:
 	cargo clippy --all-targets

@@ -19,6 +19,10 @@
 //! ```text
 //! lift train --preset tiny --method lift --rank 32 \
 //!     --ckpt-every 50 --ckpt-dir runs/ckpt      # snapshot every 50 steps
+//!                                               # (written off-loop; the loss
+//!                                               # curve streams to the
+//!                                               # curve.sidecar next to them)
+//! lift train ... --ckpt-keep 3                  # keep-last-N retention
 //! lift train --preset tiny --method lift --rank 32 \
 //!     --ckpt-dir runs/ckpt --resume latest      # continue the newest snapshot
 //! lift train ... --resume runs/ckpt/step_00000050.snap   # or a specific one
@@ -36,7 +40,9 @@
 use std::sync::Arc;
 
 use lift::data::tasks::{TaskFamily, TaskMixSource, TaskSet};
-use lift::exp::harness::{mask_requests, measure_mask_refresh, measure_step_all, tiny_layer_shapes};
+use lift::exp::harness::{
+    mask_requests, measure_mask_refresh, measure_step_all, measure_warm_refresh, tiny_layer_shapes,
+};
 use lift::lift::engine::{default_workers, MaskEngine};
 use lift::lift::{LiftCfg, Selector};
 use lift::methods::{make_method, Method, Scope};
@@ -167,6 +173,10 @@ fn selftest() -> anyhow::Result<()> {
         step_shapes.extend(tiny_layer_shapes());
     }
     let row = measure_step_all(&step_shapes, 32, workers, 3, 10)?;
+    println!("{}", row.row());
+    // warm-started exact refresh vs cold on a drifting steady state
+    // (seq = cold, Nw column = warm — see measure_warm_refresh)
+    let row = measure_warm_refresh(&shapes, 16, 2)?;
     println!("{}", row.row());
     // versioned-snapshot round trip (the ISSUE-3 ckpt subsystem): train a
     // couple of toy steps, snapshot, reload, digest-compare

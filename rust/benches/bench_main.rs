@@ -12,6 +12,12 @@
 //!                  speedup row (ISSUE-2 acceptance)
 //!   [step-all]     batched optimizer step: sequential vs layer-parallel
 //!                  (ISSUE-2 acceptance row)
+//!   [warm-refresh] warm-started exact refresh vs cold on a drifting
+//!                  steady state (ISSUE-4 acceptance row)
+//!   [arena-step]   per-worker scratch arenas vs per-job allocation on
+//!                  the refresh/step hot paths (ISSUE-4 acceptance row)
+//!   [async-ckpt]   double-buffered background snapshot writes vs
+//!                  synchronous saves (ISSUE-4 acceptance row)
 //!   [ckpt]         versioned snapshot save/restore throughput
 //!                  (ISSUE-3 acceptance row)
 //!   [adam]         sparse Adam: host loop vs Pallas kernel via PJRT
@@ -26,13 +32,21 @@
 //!
 //! Every run appends a machine-readable entry (raw bench rows + the
 //! measured speedup rows) to `BENCH_trajectory.json` (override with
-//! $BENCH_TRAJECTORY) so perf is diffable across PRs.
+//! $BENCH_TRAJECTORY) so perf is diffable across PRs. With `--check`
+//! the run then gates on that history: every speedup row is compared
+//! against the previous run of the same mode and the bench exits
+//! nonzero if any regressed beyond the documented tolerance
+//! ($BENCH_CHECK_TOL, default 0.4 — i.e. a 40% drop; speedup ratios
+//! are self-normalizing against machine speed, which is what makes a
+//! CI gate on shared runners tenable at all).
 
 use std::sync::Arc;
 
 use lift::data::tasks::{TaskFamily, TaskMixSource, TaskSet};
 use lift::data::BatchSource;
-use lift::exp::harness::{measure_exact_refresh, measure_mask_refresh, measure_step_all, Speedup};
+use lift::exp::harness::{
+    measure_exact_refresh, measure_mask_refresh, measure_step_all, measure_warm_refresh, Speedup,
+};
 use lift::lift::engine::default_workers;
 use lift::lift::{budget_for, principal_indices, LiftCfg};
 use lift::methods::{make_method, Scope};
@@ -46,6 +60,7 @@ use lift::util::rng::Rng;
 fn main() -> anyhow::Result<()> {
     lift::util::logging::init();
     let fast = std::env::args().any(|a| a == "--fast");
+    let check = std::env::args().any(|a| a == "--check");
     let mut b = if fast { Bencher::fast() } else { Bencher::default() };
     // `?` on a broken artifacts dir aborts the bench loudly; the skip
     // policy itself lives in Runtime::artifact_status
@@ -175,6 +190,152 @@ fn main() -> anyhow::Result<()> {
         let row = measure_step_all(&shapes, 64, default_workers(), reps, 10)?;
         println!("{}", row.row());
         speedups.push(row);
+    }
+
+    println!("\n-- [warm-refresh] warm-started exact refresh vs cold --");
+    {
+        // the steady-state fixture: a model's worth of matrices that
+        // drifted slightly since their last refresh (carrier reuse)
+        let layers = if fast { 1 } else { 2 };
+        let mut shapes = Vec::new();
+        for _ in 0..layers {
+            shapes.extend(lift::exp::harness::tiny_layer_shapes());
+        }
+        let reps = if fast { 2 } else { 3 };
+        let row = measure_warm_refresh(&shapes, 16, reps)?;
+        println!("{}", row.row());
+        speedups.push(row);
+    }
+
+    println!("\n-- [arena-step] scratch-arena reuse vs per-job allocation --");
+    {
+        use lift::util::eigh::{lowrank_approx_warm, EighScratch};
+        let layers = if fast { 1 } else { 2 };
+        let mut shapes = Vec::new();
+        for _ in 0..layers {
+            shapes.extend(lift::exp::harness::tiny_layer_shapes());
+        }
+        let ws: Vec<Tensor> = shapes
+            .iter()
+            .map(|&(m, n)| Tensor::randn(&[m, n], 0.05, &mut rng))
+            .collect();
+        let reps = if fast { 2 } else { 4 };
+        // fresh-arena side: exactly what every per-job `vec![0.0; ..]`
+        // allocation used to cost, via the cold convenience wrapper
+        let time_side = |reuse: bool| -> f64 {
+            let mut arena = EighScratch::new();
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let t0 = std::time::Instant::now();
+                for w in &ws {
+                    let (m, n) = w.dims2();
+                    if reuse {
+                        let _ = lowrank_approx_warm(&w.data, m, n, 16, None, &mut arena);
+                    } else {
+                        let _ = lift::util::eigh::lowrank_approx(&w.data, m, n, 16);
+                    }
+                }
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            best
+        };
+        let alloc_s = time_side(false);
+        let arena_s = time_side(true);
+        let row = Speedup {
+            label: "arena_step",
+            workers: 1,
+            matrices: shapes.len(),
+            seq_s: alloc_s,
+            par_s: arena_s,
+            speedup: alloc_s / arena_s.max(1e-12),
+        };
+        println!("{}", row.row());
+        speedups.push(row);
+        // and the optimizer-side arena: batched moment migration reuses
+        // one survivor table + moment buffers across every matrix
+        let k = 4096;
+        let mut st = SparseAdam::new((0..k as u32).collect(), AdamCfg::default());
+        let mut scratch = lift::optim::sparse::RefreshScratch::default();
+        let mut flip = 0u32;
+        b.bench("arena/refresh_migrate_reuse", || {
+            flip ^= 1;
+            st.refresh_with((flip..k as u32 + flip).collect(), &mut scratch);
+        });
+    }
+
+    println!("\n-- [async-ckpt] background double-buffered saves vs synchronous --");
+    {
+        use lift::methods::Method;
+        // a training-shaped loop: compute, then snapshot every step —
+        // the async side should hide most of the write latency behind
+        // the next step's compute
+        let mut shapes = Vec::new();
+        for _ in 0..4 {
+            shapes.extend(lift::exp::harness::tiny_layer_shapes());
+        }
+        let params: Vec<Tensor> = shapes
+            .iter()
+            .map(|&(m, n)| Tensor::randn(&[m, n], 0.05, &mut rng))
+            .collect();
+        let mut ctx = lift::exp::matrix::toy_ctx(1, 11)?;
+        let mut method = lift::methods::full::FullFt::new();
+        method.init(&mut ctx, &params)?;
+        let data_rng = Rng::new(9);
+        let tcfg = lift::train::TrainCfg::default();
+        let dir = std::env::temp_dir().join(format!("lift_bench_actkpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir)?;
+        let steps = if fast { 4 } else { 8 };
+        let ca = Tensor::randn(&[192, 192], 1.0, &mut rng);
+        let compute = |t: &Tensor| std::hint::black_box(t.matmul(t));
+        let tlog = lift::train::TrainLog {
+            losses: vec![0.5],
+            seconds: 1.0,
+            step_times: vec![1.0],
+        };
+        let reps = if fast { 2 } else { 3 };
+        let mut sync_s = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            for step in 1..=steps {
+                let _ = compute(&ca);
+                lift::ckpt::save_trainer(
+                    &lift::ckpt::snapshot_path(&dir, step),
+                    step,
+                    &method,
+                    &params,
+                    &ctx.rng,
+                    &data_rng,
+                    &tlog,
+                    &tcfg,
+                )?;
+            }
+            sync_s = sync_s.min(t0.elapsed().as_secs_f64());
+        }
+        let mut async_s = f64::INFINITY;
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let mut writer = lift::ckpt::AsyncSnapshotWriter::new();
+            for step in 1..=steps {
+                let _ = compute(&ca);
+                let bytes = lift::ckpt::trainer_snapshot_bytes(
+                    step, &method, &params, &ctx.rng, &data_rng, 1.0, &tcfg,
+                )?;
+                writer.submit(lift::ckpt::snapshot_path(&dir, step), bytes, 0)?;
+            }
+            writer.finish()?;
+            async_s = async_s.min(t0.elapsed().as_secs_f64());
+        }
+        let row = Speedup {
+            label: "async_ckpt",
+            workers: 1,
+            matrices: steps,
+            seq_s: sync_s,
+            par_s: async_s,
+            speedup: sync_s / async_s.max(1e-12),
+        };
+        println!("{}", row.row());
+        speedups.push(row);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     println!("\n-- [ckpt] versioned snapshot save/restore --");
@@ -313,6 +474,113 @@ fn main() -> anyhow::Result<()> {
         "\n{} benches done; run appended to {traj} ({} speedup rows).",
         b.results.len(),
         speedups.len()
+    );
+    if check {
+        check_regression(&traj, fast)?;
+    }
+    Ok(())
+}
+
+/// The `--check` regression gate: compare the just-appended run's
+/// speedup rows against the previous run of the same mode (`fast` vs
+/// full) and fail when any labeled speedup dropped by more than the
+/// tolerance. Tolerance: $BENCH_CHECK_TOL as a fraction, default 0.4 —
+/// generous because CI runners are noisy, but speedup *ratios* (seq vs
+/// par on the same box, cold vs warm on the same matrices) are
+/// self-normalizing, so a real regression (a serialized pool, a
+/// disabled warm path) shows up as a 2-10x drop, far outside it.
+fn check_regression(path: &str, fast: bool) -> anyhow::Result<()> {
+    use lift::util::json::Json;
+    let tol: f64 = std::env::var("BENCH_CHECK_TOL")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.4);
+    let doc = Json::parse(&std::fs::read_to_string(path)?)
+        .map_err(|e| anyhow::anyhow!("unparseable {path}: {e:?}"))?;
+    let runs = doc
+        .get("runs")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("{path} has no runs array"))?;
+    let same_mode: Vec<&Json> = runs
+        .iter()
+        .filter(|r| r.get("fast").and_then(|f| f.as_bool()) == Some(fast))
+        .collect();
+    if same_mode.len() < 2 {
+        println!(
+            "--check: no prior {} run in {path} to compare against; gate passes vacuously",
+            if fast { "fast" } else { "full" }
+        );
+        return Ok(());
+    }
+    let rows = |run: &Json| -> Vec<(String, f64)> {
+        run.get("speedups")
+            .and_then(|s| s.as_arr())
+            .map(|arr| {
+                arr.iter()
+                    .filter_map(|s| {
+                        Some((
+                            s.get("label")?.as_str()?.to_string(),
+                            s.get("speedup")?.as_f64()?,
+                        ))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default()
+    };
+    let prev = rows(same_mode[same_mode.len() - 2]);
+    let cur = rows(same_mode[same_mode.len() - 1]);
+    let mut regressed = Vec::new();
+    println!("--check: gating against the previous run (tolerance {:.0}%):", tol * 100.0);
+    for (label, cur_v) in &cur {
+        match prev.iter().find(|(l, _)| l == label) {
+            Some((_, prev_v)) => {
+                let floor = prev_v * (1.0 - tol);
+                let ok = *cur_v >= floor;
+                println!(
+                    "  {label:<16} prev {prev_v:>7.2}x -> now {cur_v:>7.2}x (floor {floor:.2}x) {}",
+                    if ok { "OK" } else { "REGRESSED" }
+                );
+                if !ok {
+                    regressed.push(label.clone());
+                }
+            }
+            None => println!("  {label:<16} new row, no baseline"),
+        }
+    }
+    // reverse pass: a row that silently stopped being measured (a
+    // skipped section, an early return) is itself a regression — the
+    // gate exists to notice exactly that kind of quiet disablement
+    for (label, _) in &prev {
+        if !cur.iter().any(|(l, _)| l == label) {
+            println!("  {label:<16} VANISHED (present in the previous run, missing now)");
+            regressed.push(label.clone());
+        }
+    }
+    // absolute floors for rows whose ratio is an algorithmic invariant
+    // rather than a scheduler outcome: warm refresh runs <= 10 iteration
+    // passes against a cold start's up-to-60 on the same matrices, so it
+    // must beat cold on any machine. This half of the gate works even
+    // when the baseline entry comes from the same commit (as in CI,
+    // where the committed trajectory starts empty) — a disabled warm
+    // path fails here regardless of what the previous run measured.
+    const FLOORS: &[(&str, f64)] = &[("warm_refresh", 1.1)];
+    for &(label, floor) in FLOORS {
+        if let Some((_, v)) = cur.iter().find(|(l, _)| l == label) {
+            let ok = *v >= floor;
+            println!(
+                "  {label:<16} absolute floor {floor:.2}x: measured {v:.2}x {}",
+                if ok { "OK" } else { "REGRESSED" }
+            );
+            if !ok {
+                regressed.push(format!("{label} (below absolute floor)"));
+            }
+        }
+    }
+    anyhow::ensure!(
+        regressed.is_empty(),
+        "bench regression gate failed: {regressed:?} dropped more than {:.0}% below the previous \
+         run (or vanished from it)",
+        tol * 100.0
     );
     Ok(())
 }

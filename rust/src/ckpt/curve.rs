@@ -1,0 +1,179 @@
+//! Append-only loss/latency sidecar: the training curve stream that
+//! keeps snapshots O(model).
+//!
+//! Snapshots used to embed the full loss + step-latency history, which
+//! made snapshot bytes grow linearly with step count (quadratic total
+//! I/O over a long campaign — the ROADMAP scaling item). The curve now
+//! streams to one `curve.sidecar` file per checkpoint directory:
+//!
+//! ```text
+//! offset 0   magic    8 bytes   b"LIFTCRV1"
+//! then, per completed step (12 bytes):
+//!            loss     f32 LE
+//!            seconds  f64 LE   (step wall latency)
+//! ```
+//!
+//! Consistency contract with the snapshots next to it: a snapshot at
+//! step `k` requires the sidecar's first `k` records (the trainer
+//! flushes the sidecar before enqueueing the snapshot). Records past the
+//! newest snapshot are a crash tail; [`CurveWriter::open`] truncates to
+//! the restored prefix on resume, so duplicates can never accumulate.
+//! Torn final records are handled the same way — truncation on the next
+//! open, never a parse error for the prefix a snapshot vouches for.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Sidecar file name inside a checkpoint directory.
+pub const CURVE_FILE: &str = "curve.sidecar";
+
+const CURVE_MAGIC: &[u8; 8] = b"LIFTCRV1";
+/// Bytes per record: f32 loss + f64 step seconds.
+const REC_BYTES: usize = 12;
+
+pub fn curve_path(dir: &Path) -> PathBuf {
+    dir.join(CURVE_FILE)
+}
+
+/// Buffered appender over the sidecar. Opening rewrites the file as
+/// `magic + prefix` (the restored curve on resume, empty on a fresh
+/// run), which is both the truncation of crash tails and the migration
+/// of a restored prefix into a new checkpoint directory. The rewrite is
+/// atomic — temp file + rename, like the snapshots — so a crash during
+/// a resume's prefix install never destroys the only copy of the curve
+/// the directory's snapshots depend on; appends after that go straight
+/// to the committed file (a torn appended tail is truncated by the next
+/// open, never parsed).
+pub struct CurveWriter {
+    file: std::io::BufWriter<std::fs::File>,
+}
+
+impl CurveWriter {
+    pub fn open(dir: &Path, prefix: &[(f32, f64)]) -> Result<CurveWriter> {
+        let path = curve_path(dir);
+        let mut bytes = Vec::with_capacity(CURVE_MAGIC.len() + prefix.len() * REC_BYTES);
+        bytes.extend_from_slice(CURVE_MAGIC);
+        for &(loss, secs) in prefix {
+            bytes.extend_from_slice(&loss.to_le_bytes());
+            bytes.extend_from_slice(&secs.to_le_bytes());
+        }
+        // same tmp+rename (and dir creation) as the snapshots — one
+        // atomic-write implementation to harden
+        super::write_atomic(&path, &bytes)
+            .with_context(|| format!("installing curve sidecar prefix {path:?}"))?;
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening curve sidecar {path:?} for append"))?;
+        Ok(CurveWriter {
+            file: std::io::BufWriter::new(file),
+        })
+    }
+
+    /// One completed step's record. Buffered — call [`CurveWriter::flush`]
+    /// before a snapshot of that step is enqueued.
+    pub fn append(&mut self, loss: f32, secs: f64) -> Result<()> {
+        self.file.write_all(&loss.to_le_bytes())?;
+        self.file.write_all(&secs.to_le_bytes())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+/// Read the first `steps` records — the curve prefix a snapshot at
+/// `steps` vouches for. Fails loudly when the sidecar is missing,
+/// mis-tagged, or shorter than the snapshot claims (the snapshot and
+/// its sidecar are a pair; one without the other is corruption).
+pub fn read_curve(dir: &Path, steps: usize) -> Result<(Vec<f32>, Vec<f64>)> {
+    let path = curve_path(dir);
+    let bytes = std::fs::read(&path).with_context(|| {
+        format!(
+            "reading curve sidecar {path:?} (snapshots store only O(model) state; \
+             the loss curve lives in the sidecar next to them)"
+        )
+    })?;
+    anyhow::ensure!(
+        bytes.len() >= CURVE_MAGIC.len() && &bytes[..CURVE_MAGIC.len()] == CURVE_MAGIC,
+        "{path:?} is not a LIFT curve sidecar"
+    );
+    let body = &bytes[CURVE_MAGIC.len()..];
+    anyhow::ensure!(
+        body.len() / REC_BYTES >= steps,
+        "curve sidecar {path:?} holds {} complete records but the snapshot is at step {steps}",
+        body.len() / REC_BYTES
+    );
+    let mut losses = Vec::with_capacity(steps);
+    let mut times = Vec::with_capacity(steps);
+    for rec in body.chunks_exact(REC_BYTES).take(steps) {
+        losses.push(f32::from_le_bytes(rec[..4].try_into().unwrap()));
+        times.push(f64::from_le_bytes(rec[4..].try_into().unwrap()));
+    }
+    Ok((losses, times))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lift_curve_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let dir = tmp("roundtrip");
+        let mut w = CurveWriter::open(&dir, &[]).unwrap();
+        let recs = [(0.5f32, 0.001f64), (-0.0, 2.5), (f32::MIN_POSITIVE, 1e-9)];
+        for &(l, t) in &recs {
+            w.append(l, t).unwrap();
+        }
+        w.flush().unwrap();
+        let (ls, ts) = read_curve(&dir, 3).unwrap();
+        for (i, &(l, t)) in recs.iter().enumerate() {
+            assert_eq!(ls[i].to_bits(), l.to_bits());
+            assert_eq!(ts[i].to_bits(), t.to_bits());
+        }
+        // shorter prefixes read fine; longer ones fail loudly
+        assert_eq!(read_curve(&dir, 1).unwrap().0.len(), 1);
+        assert!(read_curve(&dir, 4).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn reopen_truncates_to_the_prefix() {
+        let dir = tmp("truncate");
+        let mut w = CurveWriter::open(&dir, &[]).unwrap();
+        for i in 0..5 {
+            w.append(i as f32, 0.1).unwrap();
+        }
+        w.flush().unwrap();
+        drop(w);
+        // resume at step 2: crash tail (records 2..5) must vanish
+        let prefix: Vec<(f32, f64)> = vec![(0.0, 0.1), (1.0, 0.1)];
+        let mut w = CurveWriter::open(&dir, &prefix).unwrap();
+        w.append(9.0, 0.2).unwrap();
+        w.flush().unwrap();
+        let (ls, _) = read_curve(&dir, 3).unwrap();
+        assert_eq!(ls, vec![0.0, 1.0, 9.0]);
+        assert!(read_curve(&dir, 4).is_err(), "tail records must be gone");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_or_mistagged_sidecar_errors() {
+        let dir = tmp("missing");
+        assert!(read_curve(&dir, 0).is_err(), "missing file");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(curve_path(&dir), b"garbage!x").unwrap();
+        assert!(read_curve(&dir, 0).is_err(), "bad magic");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

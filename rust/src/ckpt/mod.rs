@@ -40,15 +40,27 @@
 //! # What a trainer snapshot contains
 //!
 //! * `meta`    — method name, completed-step counter, both RNG stream
-//!   positions (the trainer's data RNG and `Ctx::rng`), the full
-//!   `TrainLog` prefix (loss curve, per-step latencies, accumulated
-//!   wall seconds — so a resumed run reports campaign totals), and the
-//!   schedule-relevant `TrainCfg` (lr / warmup fraction / total steps);
+//!   positions (the trainer's data RNG and `Ctx::rng`), accumulated
+//!   wall seconds, and the schedule-relevant `TrainCfg` (lr / warmup
+//!   fraction / total steps). The loss curve and per-step latencies are
+//!   NOT here: they stream to the append-only `curve.sidecar` next to
+//!   the snapshots ([`curve`]), which is what keeps snapshot bytes
+//!   O(model) — flat in step count — instead of O(model + steps);
 //! * `params`  — every model tensor, bit-exact f32;
 //! * `method`  — the active [`Method`]'s full internal state via
 //!   `Method::save_state` (SparseAdam idx/m/v/t, DenseAdamSet moments,
 //!   LoRA/Spectral factors and frozen bases, SpIEL grow/drop snapshots,
-//!   S2FT column packs, lazy-init and last-maintained-step guards).
+//!   S2FT column packs, warm-start subspace carriers, lazy-init and
+//!   last-maintained-step guards).
+//!
+//! # Off-loop writes and retention
+//!
+//! The trainer serializes snapshots on the hot loop (it needs the live
+//! state) but hands the bytes to a double-buffered background
+//! [`writer::AsyncSnapshotWriter`]; disk latency overlaps the next
+//! training steps, and [`prune_snapshots`] enforces a keep-last-N
+//! policy (`TrainCfg::ckpt_keep`) after every write so long campaigns
+//! don't accrete one snapshot per cadence tick.
 //!
 //! # Determinism
 //!
@@ -68,14 +80,16 @@
 //! sample counts) — the scenario matrix guarantees this by keying every
 //! cell's snapshots on the full `CellSpec`.
 //!
-//! Scaling note: `meta` embeds the whole loss curve and step-latency
-//! history (12 bytes/step) so a resumed run's `TrainLog` covers the
-//! campaign, not just the tail. At this repo's run lengths (≤ a few
-//! thousand steps) that is noise next to the `params` section; for
-//! million-step campaigns the curve should stream to an append-only
-//! sidecar instead — tracked on the ROADMAP.
+//! Scaling note (closed by the hot-loop overhaul): the curve streams
+//! to `curve.sidecar` at 12 bytes/step, snapshots stay flat in step
+//! count (asserted by `rust/tests/ckpt.rs`), and keep-last-N retention
+//! bounds the directory over million-step campaigns.
 
 pub mod codec;
+pub mod curve;
+pub mod writer;
+
+pub use writer::AsyncSnapshotWriter;
 
 use std::path::{Path, PathBuf};
 use std::sync::OnceLock;
@@ -89,7 +103,11 @@ use crate::util::rng::Rng;
 use codec::{Dec, Enc};
 
 pub const MAGIC: &[u8; 8] = b"LIFTSNAP";
-pub const FORMAT_VERSION: u32 = 1;
+/// v2: the loss/latency curve moved out of `meta` into the append-only
+/// sidecar ([`curve`]), and sparse methods persist warm-start subspace
+/// carriers. Per the versioning policy, v1 snapshots are rejected
+/// loudly, not migrated.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Section names of a trainer snapshot.
 pub const SEC_META: &str = "meta";
@@ -204,16 +222,7 @@ impl Snapshot {
     /// Atomic write: temp file in the same directory, then rename — a
     /// crash mid-save never leaves a torn snapshot at `path`.
     pub fn write_to(&self, path: &Path) -> Result<()> {
-        if let Some(dir) = path.parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir)?;
-            }
-        }
-        let tmp = path.with_extension("tmp");
-        std::fs::write(&tmp, self.to_bytes())
-            .with_context(|| format!("writing snapshot {tmp:?}"))?;
-        std::fs::rename(&tmp, path).with_context(|| format!("committing snapshot {path:?}"))?;
-        Ok(())
+        write_atomic(path, &self.to_bytes())
     }
 
     pub fn read_from(path: &Path) -> Result<Snapshot> {
@@ -221,6 +230,45 @@ impl Snapshot {
             std::fs::read(path).with_context(|| format!("reading snapshot {path:?}"))?;
         Snapshot::from_bytes(&bytes).with_context(|| format!("parsing snapshot {path:?}"))
     }
+}
+
+/// Atomic byte write shared by the synchronous path and the background
+/// writer: temp file in the same directory, then rename — a crash
+/// mid-save never leaves a torn file at `path`.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating snapshot dir {dir:?}"))?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes).with_context(|| format!("writing snapshot {tmp:?}"))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("committing snapshot {path:?}"))?;
+    Ok(())
+}
+
+/// Keep-last-N retention: delete all but the newest `keep` `step_*.snap`
+/// files under `dir` (by step number). `keep == 0` disables pruning.
+/// Everything that is not a step snapshot — the curve sidecar, cell
+/// outcome JSONs, stray files — is never touched.
+pub fn prune_snapshots(dir: &Path, keep: usize) -> Result<()> {
+    if keep == 0 || !dir.exists() {
+        return Ok(());
+    }
+    let mut snaps: Vec<(usize, PathBuf)> = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        if let Some(step) = snapshot_step(&entry.path()) {
+            snaps.push((step, entry.path()));
+        }
+    }
+    snaps.sort_by_key(|(step, _)| std::cmp::Reverse(*step));
+    for (_, path) in snaps.into_iter().skip(keep) {
+        std::fs::remove_file(&path)
+            .with_context(|| format!("pruning old snapshot {path:?}"))?;
+    }
+    Ok(())
 }
 
 /// Everything `train::train_with` needs to continue a run bit-exactly.
@@ -232,10 +280,12 @@ pub struct TrainerState {
     pub ctx_rng: u64,
     /// Trainer data-RNG stream position (feeds batch sampling).
     pub data_rng: u64,
-    /// Loss curve, per-step latencies and accumulated wall seconds of
-    /// the completed prefix — restored whole so a resumed run's
-    /// `TrainLog` covers the entire campaign, not just the tail.
-    pub log: TrainLog,
+    /// Accumulated wall seconds of the completed prefix. The loss curve
+    /// and per-step latencies are NOT in the snapshot (that would make
+    /// snapshot bytes grow with step count): `train_with` reconstructs
+    /// them from the `curve.sidecar` next to the snapshot, so a resumed
+    /// run's `TrainLog` still covers the entire campaign.
+    pub seconds: f64,
     /// The writing run's schedule-relevant `TrainCfg` (lr, warmup
     /// fraction, total steps). `train_with` refuses to resume under a
     /// different one — the LR schedule would silently diverge from the
@@ -247,27 +297,25 @@ pub struct TrainerState {
     pub method_state: Vec<u8>,
 }
 
-/// Write one trainer snapshot (see the module doc for the layout).
-/// `log.seconds` should already include the wall time up to this
-/// snapshot (`train_with` passes the accumulated value).
-pub fn save_trainer(
-    path: &Path,
+/// Serialize one trainer snapshot to bytes (see the module doc for the
+/// layout) without touching disk — the form the hot loop hands to the
+/// background [`AsyncSnapshotWriter`]. `seconds` is the accumulated
+/// wall time up to this snapshot; the curve itself lives in the sidecar.
+pub fn trainer_snapshot_bytes(
     step: usize,
     method: &dyn Method,
     params: &[Tensor],
     ctx_rng: &Rng,
     data_rng: &Rng,
-    log: &TrainLog,
+    seconds: f64,
     cfg: &TrainCfg,
-) -> Result<()> {
+) -> Result<Vec<u8>> {
     let mut meta = Enc::new();
     meta.str(&method.name());
     meta.usize(step);
     meta.u64(ctx_rng.state());
     meta.u64(data_rng.state());
-    meta.f32s(&log.losses);
-    meta.f64s(&log.step_times);
-    meta.f64(log.seconds);
+    meta.f64(seconds);
     meta.f32(cfg.lr);
     meta.f32(cfg.warmup_frac);
     meta.usize(cfg.steps);
@@ -280,7 +328,27 @@ pub fn save_trainer(
     snap.add(SEC_META, meta.into_bytes());
     snap.add(SEC_PARAMS, ps.into_bytes());
     snap.add(SEC_METHOD, method.save_state()?);
-    snap.write_to(path)
+    Ok(snap.to_bytes())
+}
+
+/// Synchronous snapshot write — serialization + atomic write in one
+/// call. Only `log.seconds` is persisted from the log (the curve lives
+/// in the sidecar); the trainer's hot loop uses
+/// [`trainer_snapshot_bytes`] + [`AsyncSnapshotWriter`] instead.
+#[allow(clippy::too_many_arguments)]
+pub fn save_trainer(
+    path: &Path,
+    step: usize,
+    method: &dyn Method,
+    params: &[Tensor],
+    ctx_rng: &Rng,
+    data_rng: &Rng,
+    log: &TrainLog,
+    cfg: &TrainCfg,
+) -> Result<()> {
+    let bytes =
+        trainer_snapshot_bytes(step, method, params, ctx_rng, data_rng, log.seconds, cfg)?;
+    write_atomic(path, &bytes)
 }
 
 pub fn load_trainer(path: &Path) -> Result<TrainerState> {
@@ -290,11 +358,7 @@ pub fn load_trainer(path: &Path) -> Result<TrainerState> {
     let step = meta.usize()?;
     let ctx_rng = meta.u64()?;
     let data_rng = meta.u64()?;
-    let log = TrainLog {
-        losses: meta.f32s()?,
-        step_times: meta.f64s()?,
-        seconds: meta.f64()?,
-    };
+    let seconds = meta.f64()?;
     let lr = meta.f32()?;
     let warmup_frac = meta.f32()?;
     let cfg_steps = meta.usize()?;
@@ -312,7 +376,7 @@ pub fn load_trainer(path: &Path) -> Result<TrainerState> {
         method_name,
         ctx_rng,
         data_rng,
-        log,
+        seconds,
         lr,
         warmup_frac,
         cfg_steps,
@@ -325,19 +389,21 @@ impl TrainerState {
     /// Apply a loaded snapshot to freshly-constructed trainer pieces:
     /// overwrite `params`, rebuild `method`'s internal state (instead of
     /// `init`), and reposition both RNG streams. Returns
-    /// `(completed_steps, restored TrainLog)`. The method *name* is
-    /// checked here; the finer construction spec (rank, refresh
-    /// interval, selector, adapter kind, LRA config) is embedded in the
-    /// method payload and validated by each `Method::load_state`, so a
-    /// resume with mismatched `make_method` arguments fails loudly
-    /// instead of continuing as a hybrid run.
+    /// `(completed_steps, accumulated wall seconds)`; the caller
+    /// reconstructs the loss/latency curve from the sidecar
+    /// ([`curve::read_curve`]). The method *name* is checked here; the
+    /// finer construction spec (rank, refresh interval, selector,
+    /// adapter kind, LRA config) is embedded in the method payload and
+    /// validated by each `Method::load_state`, so a resume with
+    /// mismatched `make_method` arguments fails loudly instead of
+    /// continuing as a hybrid run.
     pub fn restore(
         self,
         method: &mut dyn Method,
         params: &mut [Tensor],
         ctx_rng: &mut Rng,
         data_rng: &mut Rng,
-    ) -> Result<(usize, TrainLog)> {
+    ) -> Result<(usize, f64)> {
         anyhow::ensure!(
             method.name() == self.method_name,
             "snapshot was written by method '{}' but the resuming run constructed '{}' — \
@@ -363,13 +429,23 @@ impl TrainerState {
         method.load_state(&self.method_state)?;
         *ctx_rng = Rng::from_state(self.ctx_rng);
         *data_rng = Rng::from_state(self.data_rng);
-        Ok((self.step, self.log))
+        Ok((self.step, self.seconds))
     }
 }
 
 /// Canonical snapshot path for a step: `<dir>/step_XXXXXXXX.snap`.
 pub fn snapshot_path(dir: &Path, step: usize) -> PathBuf {
     dir.join(format!("step_{step:08}.snap"))
+}
+
+/// Step number encoded in a `step_XXXXXXXX.snap` file name, if it is one.
+pub fn snapshot_step(path: &Path) -> Option<usize> {
+    path.file_name()?
+        .to_string_lossy()
+        .strip_prefix("step_")?
+        .strip_suffix(".snap")?
+        .parse()
+        .ok()
 }
 
 /// Newest `step_*.snap` under `dir` (by step number), if any.
@@ -380,13 +456,7 @@ pub fn latest_snapshot(dir: &Path) -> Result<Option<PathBuf>> {
     let mut best: Option<(usize, PathBuf)> = None;
     for entry in std::fs::read_dir(dir)? {
         let entry = entry?;
-        let name = entry.file_name();
-        let name = name.to_string_lossy();
-        let step = name
-            .strip_prefix("step_")
-            .and_then(|s| s.strip_suffix(".snap"))
-            .and_then(|s| s.parse::<usize>().ok());
-        if let Some(step) = step {
+        if let Some(step) = snapshot_step(&entry.path()) {
             if best.as_ref().is_none_or(|(b, _)| step > *b) {
                 best = Some((step, entry.path()));
             }

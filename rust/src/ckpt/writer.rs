@@ -1,0 +1,230 @@
+//! Double-buffered background snapshot writer: moves checkpoint I/O off
+//! the training hot loop.
+//!
+//! The trainer serializes a snapshot to bytes (O(model) memcpy — the
+//! part that needs `&method`/`&params`) and hands the buffer to a
+//! dedicated writer thread, which performs the atomic temp-file +
+//! rename write and then applies the keep-last-N retention policy. The
+//! channel is bounded at depth 1, so at most one buffer is being
+//! written while one more is queued — "double buffered": a burst of
+//! snapshots backpressures the trainer instead of growing memory
+//! without bound.
+//!
+//! Correctness properties the crash-resume suite leans on:
+//!
+//! * writes stay atomic (same tmp+rename as the synchronous path), so a
+//!   kill mid-write still leaves only complete snapshots on disk;
+//! * [`AsyncSnapshotWriter::finish`] — and `Drop`, for error-path
+//!   unwinds — drains the queue and joins the thread, so by the time
+//!   `train_with` returns (normally OR with an error), every submitted
+//!   snapshot is durable and `ckpt::latest_snapshot` sees it;
+//! * retention runs on the writer thread after each write, so the
+//!   directory never exceeds `keep` snapshots (+ the curve sidecar) at
+//!   any quiescent point.
+//!
+//! Write errors are reported at the next [`AsyncSnapshotWriter::submit`]
+//! or at [`AsyncSnapshotWriter::finish`], whichever comes first.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, SyncSender};
+
+use anyhow::Result;
+
+use super::{prune_snapshots, write_atomic};
+
+struct Job {
+    path: PathBuf,
+    bytes: Vec<u8>,
+    /// keep-last-N policy applied to `path`'s directory after the write
+    /// (0 = keep everything).
+    keep: usize,
+}
+
+/// Background snapshot writer; one per training run with checkpointing
+/// enabled. See the module doc for the buffering and error contract.
+pub struct AsyncSnapshotWriter {
+    tx: Option<SyncSender<Job>>,
+    handle: Option<std::thread::JoinHandle<Result<usize>>>,
+}
+
+impl AsyncSnapshotWriter {
+    pub fn new() -> AsyncSnapshotWriter {
+        // depth 1 + the job being written = two buffers in flight
+        let (tx, rx) = sync_channel::<Job>(1);
+        let handle = std::thread::spawn(move || -> Result<usize> {
+            let mut written = 0usize;
+            for job in rx {
+                write_atomic(&job.path, &job.bytes)?;
+                if job.keep > 0 {
+                    if let Some(dir) = job.path.parent() {
+                        prune_snapshots(dir, job.keep)?;
+                    }
+                }
+                written += 1;
+            }
+            Ok(written)
+        });
+        AsyncSnapshotWriter {
+            tx: Some(tx),
+            handle: Some(handle),
+        }
+    }
+
+    /// Enqueue one serialized snapshot. Blocks only when both buffers
+    /// are in flight (backpressure). A send failure means the writer
+    /// thread died on a prior write — the thread is joined here so the
+    /// caller gets the underlying I/O error (path + cause), not a
+    /// generic "thread stopped".
+    pub fn submit(&mut self, path: PathBuf, bytes: Vec<u8>, keep: usize) -> Result<()> {
+        let sent = self
+            .tx
+            .as_ref()
+            .expect("submit after finish")
+            .send(Job { path, bytes, keep });
+        if sent.is_err() {
+            return Err(match self.finish_inner() {
+                Err(e) => e.context("snapshot writer thread stopped"),
+                Ok(n) => anyhow::anyhow!(
+                    "snapshot writer thread stopped unexpectedly after {n} clean writes"
+                ),
+            });
+        }
+        Ok(())
+    }
+
+    /// Close the queue, wait for every pending write, and return how
+    /// many snapshots this writer committed — or the first write error.
+    pub fn finish(mut self) -> Result<usize> {
+        self.finish_inner()
+    }
+
+    fn finish_inner(&mut self) -> Result<usize> {
+        drop(self.tx.take()); // close the channel so the thread drains and exits
+        match self.handle.take() {
+            Some(h) => h
+                .join()
+                .map_err(|_| anyhow::anyhow!("snapshot writer thread panicked"))?,
+            None => Ok(0),
+        }
+    }
+}
+
+impl Default for AsyncSnapshotWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Drop for AsyncSnapshotWriter {
+    /// Error-path safety net: a `?`-unwind in the trainer still drains
+    /// pending writes before the run returns, so crash-resume finds the
+    /// newest snapshot. Errors here are swallowed — call
+    /// [`AsyncSnapshotWriter::finish`] on the happy path to observe them.
+    fn drop(&mut self) {
+        let _ = self.finish_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckpt::{snapshot_path, Snapshot};
+
+    fn tmp(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lift_writer_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn snap_bytes(step: usize) -> Vec<u8> {
+        let mut s = Snapshot::new();
+        s.add("meta", vec![step as u8; 64]);
+        s.to_bytes()
+    }
+
+    #[test]
+    fn writes_everything_before_finish_returns() {
+        let dir = tmp("drain");
+        let mut w = AsyncSnapshotWriter::new();
+        for step in 1..=5 {
+            w.submit(snapshot_path(&dir, step), snap_bytes(step), 0).unwrap();
+        }
+        let n = w.finish().unwrap();
+        assert_eq!(n, 5);
+        for step in 1..=5 {
+            let snap = Snapshot::read_from(&snapshot_path(&dir, step)).unwrap();
+            assert_eq!(snap.get("meta").unwrap()[0], step as u8, "content intact");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn retention_caps_the_directory() {
+        let dir = tmp("retain");
+        // an unrelated file must survive pruning
+        std::fs::write(dir.join("curve.sidecar"), b"LIFTCRV1").unwrap();
+        let mut w = AsyncSnapshotWriter::new();
+        for step in 1..=7 {
+            w.submit(snapshot_path(&dir, step), snap_bytes(step), 3).unwrap();
+        }
+        w.finish().unwrap();
+        let mut snaps: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.ends_with(".snap"))
+            .collect();
+        snaps.sort();
+        assert_eq!(
+            snaps,
+            vec!["step_00000005.snap", "step_00000006.snap", "step_00000007.snap"],
+            "keep-last-3 must hold at quiescence"
+        );
+        assert!(dir.join("curve.sidecar").exists(), "sidecar untouched");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn drop_drains_like_finish() {
+        let dir = tmp("drop");
+        {
+            let mut w = AsyncSnapshotWriter::new();
+            w.submit(snapshot_path(&dir, 9), snap_bytes(9), 0).unwrap();
+            // no finish(): simulates the trainer's error-path unwind
+        }
+        assert!(
+            snapshot_path(&dir, 9).exists(),
+            "drop must drain pending writes"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn write_failure_surfaces_the_underlying_error() {
+        // target's parent is a FILE, so create_dir_all inside
+        // write_atomic fails on the writer thread; the failure must
+        // reach the caller with the real cause attached, via a later
+        // submit (channel disconnected -> join) or via finish
+        let dir = tmp("fail");
+        let blocker = dir.join("not_a_dir");
+        std::fs::write(&blocker, b"x").unwrap();
+        let bad = blocker.join("step_00000001.snap");
+        let mut w = AsyncSnapshotWriter::new();
+        let mut err = None;
+        for _ in 0..16 {
+            if let Err(e) = w.submit(bad.clone(), snap_bytes(1), 0) {
+                err = Some(format!("{e:#}"));
+                break;
+            }
+        }
+        let msg = match err {
+            Some(m) => m,
+            None => format!("{:#}", w.finish().unwrap_err()),
+        };
+        assert!(
+            msg.contains("not_a_dir") || msg.contains("snapshot"),
+            "error lost its cause: {msg}"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

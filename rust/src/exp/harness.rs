@@ -456,6 +456,68 @@ pub fn measure_step_all(
     })
 }
 
+/// Time cold vs warm-started exact refreshes over a drifting steady
+/// state — the `[warm-refresh]` acceptance row of the hot-loop
+/// overhaul. Each matrix first runs a cold refresh (producing its
+/// carrier), then drifts slightly (like `interval` optimizer steps
+/// between refreshes); the timed comparison is a full cold re-refresh
+/// of the drifted model vs a carrier-seeded warm one, both through one
+/// reusable scratch arena. `seq_s` holds the cold time and `par_s` the
+/// warm time, so `speedup` reads as cold/warm.
+pub fn measure_warm_refresh(
+    shapes: &[(usize, usize)],
+    lra_rank: usize,
+    reps: usize,
+) -> Result<Speedup> {
+    use crate::util::eigh::{lowrank_approx_warm, EighScratch, SubspaceWarm};
+    let mut rng = Rng::new(0x3a9d_cafe);
+    let ws: Vec<Tensor> = shapes
+        .iter()
+        .map(|&(m, n)| Tensor::randn(&[m, n], 0.05, &mut rng))
+        .collect();
+    let mut scratch = EighScratch::new();
+    // the "previous refresh": cold decompositions yielding the carriers
+    let carriers: Vec<Option<SubspaceWarm>> = ws
+        .iter()
+        .map(|w| {
+            let (m, n) = w.dims2();
+            lowrank_approx_warm(&w.data, m, n, lra_rank, None, &mut scratch).1
+        })
+        .collect();
+    // drift every matrix a little, as interval optimizer steps would
+    let drifted: Vec<Tensor> = ws
+        .iter()
+        .map(|w| {
+            let mut d = w.clone();
+            d.add_scaled(&Tensor::randn(&w.shape, 0.001, &mut rng), 1.0);
+            d
+        })
+        .collect();
+    let mut time_side = |warm: bool| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = std::time::Instant::now();
+            for (i, w) in drifted.iter().enumerate() {
+                let (m, n) = w.dims2();
+                let seed = if warm { carriers[i].as_ref() } else { None };
+                let _ = lowrank_approx_warm(&w.data, m, n, lra_rank, seed, &mut scratch);
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let cold_s = time_side(false);
+    let warm_s = time_side(true);
+    Ok(Speedup {
+        label: "warm_refresh",
+        workers: 1,
+        matrices: shapes.len(),
+        seq_s: cold_s,
+        par_s: warm_s,
+        speedup: cold_s / warm_s.max(1e-12),
+    })
+}
+
 /// Evaluate a family suite on given params (e.g. source-domain retention).
 pub fn eval_suite(
     env: &mut ExpEnv,

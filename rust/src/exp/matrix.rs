@@ -260,6 +260,84 @@ where
     Ok(report)
 }
 
+// ---- campaign summary ---------------------------------------------------
+
+/// Paper-style method × rank summary over the persisted cell outcomes:
+/// rows are methods, columns are sparsity budgets (ranks), each cell the
+/// mean over seeds of the outcome metric — average task accuracy for
+/// real cells, tail loss for `--toy` cells (which have no eval). Cells
+/// without a finished outcome render as `-`, so a partially-run
+/// campaign still summarizes cleanly.
+pub fn summary_table(out_dir: &Path, cells: &[CellSpec]) -> String {
+    let mut methods: Vec<String> = Vec::new();
+    let mut ranks: Vec<usize> = Vec::new();
+    for c in cells {
+        if !methods.contains(&c.method) {
+            methods.push(c.method.clone());
+        }
+        if !ranks.contains(&c.rank) {
+            ranks.push(c.rank);
+        }
+    }
+    ranks.sort_unstable();
+    // (method, rank) -> (sum avg, sum tail loss, count, label)
+    let mut agg: std::collections::BTreeMap<(String, usize), (f64, f64, usize, String)> =
+        std::collections::BTreeMap::new();
+    let mut done = 0usize;
+    let mut any_acc = false;
+    for c in cells {
+        if let Some(o) = read_outcome(out_dir, &c.id()) {
+            done += 1;
+            any_acc |= !o.accs.is_empty();
+            let e = agg
+                .entry((c.method.clone(), c.rank))
+                .or_insert((0.0, 0.0, 0, o.label.clone()));
+            e.0 += o.avg;
+            e.1 += o.tail_loss as f64;
+            e.2 += 1;
+        }
+    }
+    let metric = if any_acc { "mean avg accuracy" } else { "mean tail loss" };
+    let mut out = format!(
+        "scenario matrix: {done}/{} cells finished | cell = {metric} over seeds\n\n",
+        cells.len()
+    );
+    out.push_str(&format!("{:<18}", "method"));
+    for &r in &ranks {
+        out.push_str(&format!("{:>12}", format!("r={r}")));
+    }
+    out.push('\n');
+    for m in &methods {
+        // prefer the method's self-reported label when any cell finished
+        let label = ranks
+            .iter()
+            .find_map(|r| agg.get(&(m.clone(), *r)).map(|e| e.3.clone()))
+            .unwrap_or_else(|| m.clone());
+        out.push_str(&format!("{label:<18}"));
+        for &r in &ranks {
+            match agg.get(&(m.clone(), r)) {
+                Some(&(sum_avg, sum_tail, n, _)) if n > 0 => {
+                    let sum = if any_acc { sum_avg } else { sum_tail };
+                    let v = sum / n as f64;
+                    out.push_str(&format!("{:>12}", format!("{v:.4} ({n}s)")));
+                }
+                _ => out.push_str(&format!("{:>12}", "-")),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render [`summary_table`] and persist it as `summary.txt` in the
+/// campaign directory — the readable artifact a matrix run ends with.
+pub fn write_summary(out_dir: &Path, cells: &[CellSpec]) -> Result<(PathBuf, String)> {
+    let table = summary_table(out_dir, cells);
+    let path = out_dir.join("summary.txt");
+    std::fs::write(&path, &table)?;
+    Ok((path, table))
+}
+
 // ---- artifact-free toy cells -------------------------------------------
 
 /// The artifact-free toy preset shared by the crash-resume suite and
@@ -334,15 +412,17 @@ pub fn synth_step(params: &[Tensor], rng: &mut Rng) -> Result<(f32, Vec<Tensor>)
 }
 
 /// One artifact-free cell: the real trainer loop over the toy preset
-/// with synthetic gradients, checkpointing every `ckpt_every` steps and
-/// resuming from the cell's newest snapshot when one exists.
-/// `inner_workers` is the per-cell engine pool — keep it 1 when cells
-/// themselves fan over `par_map` (the outer pool already saturates the
-/// machine, and determinism holds for any split either way).
+/// with synthetic gradients, checkpointing every `ckpt_every` steps
+/// (keep-last-`ckpt_keep` retention; 0 = keep all) and resuming from
+/// the cell's newest snapshot when one exists. `inner_workers` is the
+/// per-cell engine pool — keep it 1 when cells themselves fan over
+/// `par_map` (the outer pool already saturates the machine, and
+/// determinism holds for any split either way).
 pub fn run_toy_cell(
     spec: &CellSpec,
     out_dir: &Path,
     ckpt_every: usize,
+    ckpt_keep: usize,
     inner_workers: usize,
 ) -> Result<CellOutcome> {
     let mut ctx = toy_ctx(inner_workers, 0xC311 ^ spec.seed)?;
@@ -358,6 +438,7 @@ pub fn run_toy_cell(
         seed: spec.seed,
         ckpt_every,
         ckpt_dir: Some(ckpt_dir.clone()),
+        ckpt_keep,
     };
     let resume_from = ckpt::latest_snapshot(&ckpt_dir)?;
     let log = train::train_with(
@@ -390,6 +471,8 @@ pub struct RealCellCfg {
     pub n_train: usize,
     pub n_test: usize,
     pub ckpt_every: usize,
+    /// keep-last-N snapshot retention per cell (0 = keep all)
+    pub ckpt_keep: usize,
     /// per-cell engine pool; keep 1 when cells fan over `par_map`
     pub inner_workers: usize,
 }
@@ -428,6 +511,7 @@ pub fn run_real_cell(spec: &CellSpec, out_dir: &Path, rc: &RealCellCfg) -> Resul
         seed: spec.seed,
         ckpt_every: rc.ckpt_every,
         ckpt_dir: Some(ckpt_dir.clone()),
+        ckpt_keep: rc.ckpt_keep,
     };
     let log = match ckpt::latest_snapshot(&ckpt_dir)? {
         Some(snap) => train::resume(
@@ -484,6 +568,49 @@ mod tests {
         };
         let b = CellSpec { interval: 7, ..a.clone() };
         assert_ne!(a.id(), b.id());
+    }
+
+    #[test]
+    fn summary_table_aggregates_seeds_and_marks_missing_cells() {
+        let dir = std::env::temp_dir().join(format!("lift_matrix_summary_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let cells = expand_grid("toy", &["lift".into(), "full".into()], &[], &[2, 4], &[1, 2], 4, 2);
+        assert_eq!(cells.len(), 8);
+        // finish both seeds of (lift, r=2) and one seed of (full, r=4)
+        let finish = |method: &str, rank: usize, seed: u64, tail: f32| {
+            let c = cells
+                .iter()
+                .find(|c| c.method == method && c.rank == rank && c.seed == seed)
+                .unwrap();
+            let out = CellOutcome {
+                label: method.to_uppercase(),
+                accs: Vec::new(),
+                avg: 0.0,
+                tail_loss: tail,
+                trainable: 1,
+                opt_bytes: 12,
+                seconds: 0.1,
+                steps: 4,
+            };
+            write_outcome(&dir, &c.id(), &out).unwrap();
+        };
+        finish("lift", 2, 1, 0.5);
+        finish("lift", 2, 2, 0.7);
+        finish("full", 4, 1, 0.25);
+        let table = summary_table(&dir, &cells);
+        assert!(table.contains("3/8 cells finished"), "{table}");
+        assert!(table.contains("mean tail loss"), "toy cells report loss: {table}");
+        // (lift, r=2): mean of 0.5 and 0.7 over 2 seeds
+        assert!(table.contains("0.6000 (2s)"), "{table}");
+        assert!(table.contains("0.2500 (1s)"), "{table}");
+        // unfinished cells render as '-', and both rank columns appear
+        assert!(table.contains("r=2") && table.contains("r=4"), "{table}");
+        assert!(table.contains('-'), "{table}");
+        let (path, persisted) = write_summary(&dir, &cells).unwrap();
+        assert_eq!(persisted, table);
+        assert_eq!(std::fs::read_to_string(path).unwrap(), table);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! are skewed. Jobs are consumed by value, which lets callers hand each
 //! worker exclusive `&mut` access to disjoint state (the batched
 //! optimizer step moves `&mut` parameter slices in; selection moves
-//! shared references). `select_all`'s workers share one [`Linalg`]: its
+//! shared references plus an exclusive warm-carrier slot per matrix).
+//! Each worker owns one scratch arena ([`par_map_scratch`]) reused
+//! across every job it steals — the steady-state loop allocates no
+//! per-job O(n²) intermediates. `select_all`'s workers share one [`Linalg`]: its
 //! compile cache is sharded-locked and executables are immutable `Arc`s,
 //! so concurrent rank reductions only contend for the few microseconds
 //! of a cache probe. Worker count comes from `LIFT_WORKERS` (or the
@@ -52,9 +55,10 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use super::{select_indices, LiftCfg, Selector};
+use super::{select_indices_warm, LiftCfg, Selector};
 use crate::runtime::Linalg;
 use crate::tensor::Tensor;
+use crate::util::eigh::{EighScratch, SubspaceWarm};
 use crate::util::rng::Rng;
 
 /// One matrix's selection job.
@@ -106,9 +110,37 @@ where
     R: Send,
     F: Fn(usize, T) -> R + Sync,
 {
+    par_map_scratch(workers, jobs, || (), |i, job, _: &mut ()| f(i, job))
+}
+
+/// [`par_map`] with a per-worker scratch arena: each worker thread calls
+/// `mk_scratch` ONCE and reuses the arena across every job it steals, so
+/// per-job allocation churn (Gram matrices, iteration blocks, packing
+/// buffers — see `util::eigh::EighScratch`) disappears from the steady
+/// state. `f(i, job, scratch)` must treat the arena as uninitialized
+/// workspace — results must be a pure function of `(i, job)` alone,
+/// never of which jobs previously used the arena; under that contract
+/// the output is bit-identical for any worker count (the determinism
+/// suite runs every batched stage at 1 and N workers).
+pub fn par_map_scratch<T, R, S, F>(
+    workers: usize,
+    jobs: Vec<T>,
+    mk_scratch: impl Fn() -> S + Sync,
+    f: F,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T, &mut S) -> R + Sync,
+{
     let n_workers = workers.min(jobs.len()).max(1);
     if n_workers == 1 {
-        return jobs.into_iter().enumerate().map(|(i, j)| f(i, j)).collect();
+        let mut scratch = mk_scratch();
+        return jobs
+            .into_iter()
+            .enumerate()
+            .map(|(i, j)| f(i, j, &mut scratch))
+            .collect();
     }
     // slot i holds the pending job, then its result; the cursor hands
     // each index to exactly one worker
@@ -119,19 +151,23 @@ where
     let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..n_workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= slots.len() {
-                    break;
+            s.spawn(|| {
+                // one arena per worker, reused across all stolen jobs
+                let mut scratch = mk_scratch();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= slots.len() {
+                        break;
+                    }
+                    let job = slots[i]
+                        .lock()
+                        .expect("par_map slot poisoned")
+                        .0
+                        .take()
+                        .expect("par_map job taken twice");
+                    let res = f(i, job, &mut scratch);
+                    slots[i].lock().expect("par_map slot poisoned").1 = Some(res);
                 }
-                let job = slots[i]
-                    .lock()
-                    .expect("par_map slot poisoned")
-                    .0
-                    .take()
-                    .expect("par_map job taken twice");
-                let res = f(i, job);
-                slots[i].lock().expect("par_map slot poisoned").1 = Some(res);
             });
         }
     });
@@ -203,20 +239,11 @@ impl MaskEngine {
         self.workers
     }
 
-    fn select_one(
-        &self,
-        sel: Selector,
-        cfg: &LiftCfg,
-        req: &MaskRequest,
-        seed: u64,
-    ) -> Result<Vec<u32>> {
-        let mut rng = stream_rng(seed, req.tag);
-        select_indices(sel, &self.la, req.w, req.grad, req.score, req.k, cfg, &mut rng)
-    }
-
     /// Compute the mask for every request. Identical output for any
     /// worker count (see the determinism contract above); errors are
-    /// reported for the lowest-index failing request.
+    /// reported for the lowest-index failing request. One-shot callers'
+    /// entry point — warm carriers are neither consumed nor produced
+    /// (the first refresh of a run is always cold anyway).
     pub fn select_all(
         &self,
         sel: Selector,
@@ -224,9 +251,42 @@ impl MaskEngine {
         reqs: &[MaskRequest],
         seed: u64,
     ) -> Result<Vec<Vec<u32>>> {
-        let jobs: Vec<&MaskRequest> = reqs.iter().collect();
-        par_map(self.workers, jobs, |_, req| {
-            self.select_one(sel, cfg, req, seed)
+        let mut warms: Vec<Option<SubspaceWarm>> = (0..reqs.len()).map(|_| None).collect();
+        self.select_all_warm(sel, cfg, reqs, seed, &mut warms)
+    }
+
+    /// [`MaskEngine::select_all`] with per-matrix warm-start carriers —
+    /// the steady-state refresh path. `warms[i]` seeds request `i`'s
+    /// exact decomposition (when the selector/config route through the
+    /// exact top-r path) and is overwritten with the carrier for the
+    /// next refresh; carriers for other paths pass through untouched.
+    /// Each job owns its carrier slot exclusively and every worker
+    /// reuses one [`EighScratch`] arena across the jobs it steals, so
+    /// the masks AND the updated carriers are bit-identical for any
+    /// worker count — the carrier is part of the determinism contract
+    /// (it is checkpointed and replayed by crash-resume).
+    pub fn select_all_warm(
+        &self,
+        sel: Selector,
+        cfg: &LiftCfg,
+        reqs: &[MaskRequest],
+        seed: u64,
+        warms: &mut [Option<SubspaceWarm>],
+    ) -> Result<Vec<Vec<u32>>> {
+        assert_eq!(
+            reqs.len(),
+            warms.len(),
+            "select_all_warm: {} requests vs {} warm slots",
+            reqs.len(),
+            warms.len()
+        );
+        let jobs: Vec<(&MaskRequest, &mut Option<SubspaceWarm>)> =
+            reqs.iter().zip(warms.iter_mut()).collect();
+        par_map_scratch(self.workers, jobs, EighScratch::new, |_, (req, warm), scratch| {
+            let mut rng = stream_rng(seed, req.tag);
+            select_indices_warm(
+                sel, &self.la, req.w, req.grad, req.score, req.k, cfg, &mut rng, warm, scratch,
+            )
         })
         .into_iter()
         .collect()

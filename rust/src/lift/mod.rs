@@ -22,6 +22,7 @@ use anyhow::Result;
 
 use crate::runtime::Linalg;
 use crate::tensor::Tensor;
+use crate::util::eigh::{EighScratch, SubspaceWarm};
 use crate::util::rng::Rng;
 use crate::util::stats::topk_abs_threshold;
 
@@ -107,12 +108,30 @@ pub fn topk_indices(values: &[f32], k: usize) -> Vec<u32> {
     idx
 }
 
-/// The rank-r approximation W' per the configured strategy.
+/// The rank-r approximation W' per the configured strategy. Cold-start
+/// wrapper over [`rank_reduce_warm`] (fresh scratch, no carrier).
 pub fn rank_reduce(
     la: &Linalg,
     w: &Tensor,
     cfg: &LiftCfg,
     rng: &mut Rng,
+) -> Result<Tensor> {
+    rank_reduce_warm(la, w, cfg, rng, &mut None, &mut EighScratch::new())
+}
+
+/// [`rank_reduce`] with a warm-start carrier slot and a reusable scratch
+/// arena — the steady-state refresh path the layer-parallel engine
+/// drives. On the exact `Largest` route the carrier seeds (and is
+/// replaced by) the top-r subspace iteration (`eigh::svd_topr_warm`);
+/// on the randomized and full-spectrum ablation routes it passes
+/// through untouched (those paths have no persistent iteration block).
+pub fn rank_reduce_warm(
+    la: &Linalg,
+    w: &Tensor,
+    cfg: &LiftCfg,
+    rng: &mut Rng,
+    warm: &mut Option<SubspaceWarm>,
+    scratch: &mut EighScratch,
 ) -> Result<Tensor> {
     let (m, n) = w.dims2();
     let minmn = m.min(n);
@@ -120,8 +139,17 @@ pub fn rank_reduce(
     if cfg.exact || cfg.strategy != RankStrategy::Largest {
         if cfg.strategy == RankStrategy::Largest {
             // the exact oracle only needs the leading subspace — top-r
-            // subspace iteration instead of the full-spectrum Jacobi
-            let out = crate::util::eigh::lowrank_approx(&w.data, m, n, rank);
+            // subspace iteration instead of the full-spectrum Jacobi,
+            // warm-started from the previous refresh of this matrix
+            let (out, carrier) = crate::util::eigh::lowrank_approx_warm(
+                &w.data,
+                m,
+                n,
+                rank,
+                warm.as_ref(),
+                scratch,
+            );
+            *warm = carrier;
             return Ok(Tensor::from_vec(&[m, n], out));
         }
         // tail/random ablation strategies need the full spectrum
@@ -153,11 +181,12 @@ pub fn rank_reduce(
         }
         Ok(Tensor::from_vec(&[m, n], out))
     } else {
-        la.lowrank_approx(w, rank, cfg.power_iters, cfg.oversample, rng)
+        la.lowrank_approx_with(w, rank, cfg.power_iters, cfg.oversample, rng, scratch)
     }
 }
 
 /// LIFT principal-weight indices: rank-reduce, then top-k magnitude.
+/// Cold-start wrapper over [`principal_indices_warm`].
 pub fn principal_indices(
     la: &Linalg,
     w: &Tensor,
@@ -165,7 +194,21 @@ pub fn principal_indices(
     cfg: &LiftCfg,
     rng: &mut Rng,
 ) -> Result<Vec<u32>> {
-    let wr = rank_reduce(la, w, cfg, rng)?;
+    principal_indices_warm(la, w, k, cfg, rng, &mut None, &mut EighScratch::new())
+}
+
+/// [`principal_indices`] with warm carrier + scratch arena (the
+/// engine's per-request path).
+pub fn principal_indices_warm(
+    la: &Linalg,
+    w: &Tensor,
+    k: usize,
+    cfg: &LiftCfg,
+    rng: &mut Rng,
+    warm: &mut Option<SubspaceWarm>,
+    scratch: &mut EighScratch,
+) -> Result<Vec<u32>> {
+    let wr = rank_reduce_warm(la, w, cfg, rng, warm, scratch)?;
     if cfg.block > 1 {
         Ok(block_topk(&wr, k, cfg.block))
     } else {
@@ -174,7 +217,9 @@ pub fn principal_indices(
 }
 
 /// Generic selection across all criteria (Fig. 2 / Fig. 3 comparisons).
-/// `grad` is needed for GradMag, `score` for Movement.
+/// `grad` is needed for GradMag, `score` for Movement. Cold-start
+/// wrapper over [`select_indices_warm`].
+#[allow(clippy::too_many_arguments)]
 pub fn select_indices(
     sel: Selector,
     la: &Linalg,
@@ -185,8 +230,38 @@ pub fn select_indices(
     cfg: &LiftCfg,
     rng: &mut Rng,
 ) -> Result<Vec<u32>> {
+    select_indices_warm(
+        sel,
+        la,
+        w,
+        grad,
+        score,
+        k,
+        cfg,
+        rng,
+        &mut None,
+        &mut EighScratch::new(),
+    )
+}
+
+/// [`select_indices`] with warm carrier + scratch arena. Only the LIFT
+/// selector's exact path consumes/produces carriers; every other
+/// selector ignores both and behaves exactly as before.
+#[allow(clippy::too_many_arguments)]
+pub fn select_indices_warm(
+    sel: Selector,
+    la: &Linalg,
+    w: &Tensor,
+    grad: Option<&Tensor>,
+    score: Option<&[f32]>,
+    k: usize,
+    cfg: &LiftCfg,
+    rng: &mut Rng,
+    warm: &mut Option<SubspaceWarm>,
+    scratch: &mut EighScratch,
+) -> Result<Vec<u32>> {
     match sel {
-        Selector::Lift => principal_indices(la, w, k, cfg, rng),
+        Selector::Lift => principal_indices_warm(la, w, k, cfg, rng, warm, scratch),
         Selector::WeightMag => Ok(if cfg.block > 1 {
             block_topk(w, k, cfg.block)
         } else {

@@ -55,6 +55,9 @@ USAGE:
   lift pretrain --preset tiny [--steps 1500] [--seed 1]
   lift train --preset tiny --method lift --rank 32 --suite arith [--steps 300]
        [--ckpt-every 50 --ckpt-dir runs/ckpt]   periodic versioned snapshots
+                                  (written off-loop by a background writer;
+                                  the loss curve streams to curve.sidecar)
+       [--ckpt-keep 3]            keep-last-N snapshot retention (0 = all)
        [--ckpt-dir runs/ckpt --resume latest]   continue the newest snapshot
        [--resume path/to/step_00000050.snap]    continue a specific snapshot
   lift matrix --methods lift,full --selectors weight_mag,random \\
@@ -62,7 +65,9 @@ USAGE:
                                   resumable scenario grid: finished cells are
                                   skipped on rerun, interrupted cells resume
                                   from their newest snapshot; --toy runs the
-                                  artifact-free synthetic cells
+                                  artifact-free synthetic cells; ends with a
+                                  method × rank summary table (summary.txt);
+                                  [--ckpt-keep N] prunes per-cell snapshots
   lift eval --preset tiny --suite arith
   lift exp table2 [--fast]        regenerate a paper table/figure
   lift list-exp                   list experiment ids
@@ -113,6 +118,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let n_test = args.usize("test-samples", 100);
     let ckpt_every = args.usize("ckpt-every", 0);
     let ckpt_dir = args.opt_str("ckpt-dir").map(PathBuf::from);
+    let ckpt_keep = args.usize("ckpt-keep", 0);
     let resume_arg = args.opt_str("resume");
     args.finish()?;
 
@@ -142,6 +148,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed,
         ckpt_every,
         ckpt_dir: ckpt_dir.clone(),
+        ckpt_keep,
     };
     let snapshot = match resume_arg.as_deref() {
         Some("latest") => {
@@ -200,6 +207,7 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     let interval = args.usize("interval", 100);
     let out = PathBuf::from(args.str("out", "results/matrix"));
     let ckpt_every = args.usize("ckpt-every", 50);
+    let ckpt_keep = args.usize("ckpt-keep", 0);
     let workers = args.usize("workers", lift::lift::engine::default_workers());
     let toy = args.bool("toy", false);
     let suite = args.str("suite", "arith");
@@ -214,7 +222,7 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     anyhow::ensure!(!cells.is_empty(), "empty grid: no methods/selectors given");
     let report = if toy {
         matrix::run_matrix(&out, &cells, workers, |spec| {
-            matrix::run_toy_cell(spec, &out, ckpt_every, 1)
+            matrix::run_toy_cell(spec, &out, ckpt_every, ckpt_keep, 1)
         })?
     } else {
         // pre-warm the pretrained base sequentially so parallel cells
@@ -230,6 +238,7 @@ fn cmd_matrix(args: &Args) -> Result<()> {
             n_train,
             n_test,
             ckpt_every,
+            ckpt_keep,
             inner_workers: 1,
         };
         matrix::run_matrix(&out, &cells, workers, |spec| {
@@ -257,6 +266,11 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     for (id, err) in &report.failed {
         println!("  FAILED {id}: {err}");
     }
+    // the campaign's readable artifact: a paper-style method × rank
+    // table over every persisted outcome, also saved as summary.txt
+    let (summary_path, table) = matrix::write_summary(&out, &cells)?;
+    println!("\n{table}");
+    println!("summary written to {}", summary_path.display());
     anyhow::ensure!(report.failed.is_empty(), "{} matrix cells failed", report.failed.len());
     Ok(())
 }

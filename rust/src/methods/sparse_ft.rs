@@ -22,6 +22,7 @@ use crate::lift::engine::MaskEngine;
 use crate::lift::{budget_for, LiftCfg, MaskRequest, Selector};
 use crate::optim::{self, SparseAdam};
 use crate::tensor::Tensor;
+use crate::util::eigh::SubspaceWarm;
 
 /// Stable snapshot discriminant for a [`Selector`] (checkpoint format —
 /// reorder the enum freely, never these values).
@@ -58,6 +59,12 @@ pub struct SparseFt {
     states: Vec<(usize, SparseAdam)>,
     /// movement scores per trainable matrix (Selector::Movement)
     scores: Vec<Vec<f32>>,
+    /// per-matrix warm-start carriers for the exact decomposition path
+    /// (`eigh::svd_topr_warm`), parallel to `matrices`. Populated only
+    /// by configs that route through the exact top-r subspace
+    /// iteration; checkpointed bit-exactly so crash-resume replays warm
+    /// refreshes identically.
+    warm: Vec<Option<SubspaceWarm>>,
     matrices: Vec<usize>,
     initialized: bool,
     /// last step that ran mask maintenance (score accumulation, init,
@@ -87,6 +94,7 @@ impl SparseFt {
             scope,
             states: Vec::new(),
             scores: Vec::new(),
+            warm: Vec::new(),
             matrices: Vec::new(),
             initialized: false,
             last_maintained_step: None,
@@ -108,10 +116,6 @@ impl SparseFt {
             .map(|(_, st)| st)
     }
 
-    fn budget(&self, shape: &[usize]) -> usize {
-        budget_for(shape[0], shape[1], self.rank)
-    }
-
     /// Movement scores accumulate once per trainer step: S += -w * g
     /// (the caller, `maintain`, guarantees once-per-step).
     fn accumulate_scores(&mut self, params: &[Tensor], grads: &[Tensor]) {
@@ -128,8 +132,12 @@ impl SparseFt {
     }
 
     /// One batched, layer-parallel selection over every matrix in scope.
+    /// Each matrix's warm-start carrier seeds its exact decomposition
+    /// (when the config routes through that path) and is replaced with
+    /// the carrier for the next refresh — the reason this takes
+    /// `&mut self`.
     fn compute_masks(
-        &self,
+        &mut self,
         ctx: &mut Ctx,
         params: &[Tensor],
         grads: Option<&[Tensor]>,
@@ -139,6 +147,9 @@ impl SparseFt {
         // on worker count or scheduling order
         let seed = ctx.rng.next_u64();
         let engine = MaskEngine::with_workers(ctx.la.clone(), ctx.workers);
+        // the carriers move out while the requests hold shared borrows
+        // of self; they are put back below even when selection errors
+        let mut warm = std::mem::take(&mut self.warm);
         let reqs: Vec<MaskRequest> = self
             .matrices
             .iter()
@@ -152,10 +163,13 @@ impl SparseFt {
                     .get(mi)
                     .map(|s| s.as_slice())
                     .filter(|s| !s.is_empty()),
-                k: self.budget(&params[pi].shape),
+                k: budget_for(params[pi].shape[0], params[pi].shape[1], self.rank),
             })
             .collect();
-        engine.select_all(self.selector, &self.cfg, &reqs, seed)
+        let masks = engine.select_all_warm(self.selector, &self.cfg, &reqs, seed, &mut warm);
+        drop(reqs);
+        self.warm = warm;
+        masks
     }
 
     fn init_states(
@@ -212,6 +226,8 @@ impl Method for SparseFt {
     fn init(&mut self, ctx: &mut Ctx, params: &[Tensor]) -> Result<()> {
         self.matrices = self.scope.matrices(&ctx.preset);
         anyhow::ensure!(!self.matrices.is_empty(), "no trainable matrices in scope");
+        // one warm-carrier slot per matrix; the first refresh is cold
+        self.warm = (0..self.matrices.len()).map(|_| None).collect();
         if self.selector == Selector::Movement {
             self.scores = self
                 .matrices
@@ -297,11 +313,25 @@ impl Method for SparseFt {
     }
 
     fn state_digest(&self) -> u64 {
-        let words = self.states.iter().flat_map(|(pi, st)| {
-            std::iter::once(*pi as u64)
-                .chain(st.idx.iter().map(|&i| i as u64))
-                .chain(super::adam_words(st.t, &st.m, &st.v))
-        });
+        let words = self
+            .states
+            .iter()
+            .flat_map(|(pi, st)| {
+                std::iter::once(*pi as u64)
+                    .chain(st.idx.iter().map(|&i| i as u64))
+                    .chain(super::adam_words(st.t, &st.m, &st.v))
+            })
+            .chain(self.warm.iter().flat_map(|w| match w {
+                // carriers are part of the replayable state: the
+                // determinism and crash-resume suites must catch a
+                // carrier that diverges even when this step's masks
+                // happen to agree
+                Some(c) => std::iter::once(1u64)
+                    .chain([c.p as u64, c.n as u64])
+                    .chain(c.xt.iter().map(|x| x.to_bits()))
+                    .collect::<Vec<u64>>(),
+                None => vec![0u64],
+            }));
         super::digest_words(words)
     }
 
@@ -335,6 +365,20 @@ impl Method for SparseFt {
         e.usize(self.scores.len());
         for s in &self.scores {
             e.f32s(s);
+        }
+        // warm-start carriers, bit-exact (f64): a resumed run's next
+        // refresh must seed from the same block the straight run would
+        e.usize(self.warm.len());
+        for w in &self.warm {
+            match w {
+                Some(c) => {
+                    e.bool(true);
+                    e.usize(c.p);
+                    e.usize(c.n);
+                    e.f64s(&c.xt);
+                }
+                None => e.bool(false),
+            }
         }
         Ok(e.into_bytes())
     }
@@ -379,12 +423,38 @@ impl Method for SparseFt {
             scores.push(d.f32s()?);
         }
         self.scores = scores;
+        let nw = d.usize()?;
+        let mut warm = Vec::new();
+        for _ in 0..nw {
+            warm.push(if d.bool()? {
+                let p = d.usize()?;
+                let n = d.usize()?;
+                let xt = d.f64s()?;
+                anyhow::ensure!(
+                    xt.len() == p * n,
+                    "{}: warm carrier block is {} values for a {p}x{n} shape",
+                    self.label,
+                    xt.len()
+                );
+                Some(SubspaceWarm { p, n, xt })
+            } else {
+                None
+            });
+        }
+        self.warm = warm;
         d.finish()?;
         anyhow::ensure!(
             !self.initialized || self.states.len() == self.matrices.len(),
             "{}: snapshot holds {} optimizer states for {} matrices",
             self.label,
             self.states.len(),
+            self.matrices.len()
+        );
+        anyhow::ensure!(
+            self.warm.len() == self.matrices.len(),
+            "{}: snapshot holds {} warm carriers for {} matrices",
+            self.label,
+            self.warm.len(),
             self.matrices.len()
         );
         Ok(())

@@ -71,28 +71,40 @@ impl SparseAdam {
     }
 
     /// Mask refresh (Algorithm 1 lines 5-12): moments for indices present
-    /// in both masks survive; fresh indices start cold.
+    /// in both masks survive; fresh indices start cold. One-shot wrapper
+    /// over [`SparseAdam::refresh_with`].
     pub fn refresh(&mut self, new_idx: Vec<u32>) {
-        let old: HashMap<u32, usize> = self
-            .idx
-            .iter()
-            .enumerate()
-            .map(|(j, &i)| (i, j))
-            .collect();
+        self.refresh_with(new_idx, &mut RefreshScratch::default());
+    }
+
+    /// [`SparseAdam::refresh`] with a caller-owned scratch: the survivor
+    /// lookup table and the replacement moment vectors are drawn from
+    /// (and returned to) `scratch`, so a batched refresh over a whole
+    /// model reuses three allocations instead of making three per
+    /// matrix. Numerically identical to the one-shot form.
+    pub fn refresh_with(&mut self, new_idx: Vec<u32>, scratch: &mut RefreshScratch) {
+        scratch.old.clear();
+        for (j, &i) in self.idx.iter().enumerate() {
+            scratch.old.insert(i, j as u32);
+        }
         let mut new_idx = new_idx;
         new_idx.sort_unstable();
         new_idx.dedup();
-        let mut m = vec![0.0; new_idx.len()];
-        let mut v = vec![0.0; new_idx.len()];
+        scratch.m.clear();
+        scratch.m.resize(new_idx.len(), 0.0);
+        scratch.v.clear();
+        scratch.v.resize(new_idx.len(), 0.0);
         for (j, &i) in new_idx.iter().enumerate() {
-            if let Some(&oj) = old.get(&i) {
-                m[j] = self.m[oj];
-                v[j] = self.v[oj];
+            if let Some(&oj) = scratch.old.get(&i) {
+                scratch.m[j] = self.m[oj as usize];
+                scratch.v[j] = self.v[oj as usize];
             }
         }
         self.idx = new_idx;
-        self.m = m;
-        self.v = v;
+        // swap the built vectors in; the retired ones become next
+        // matrix's scratch capacity
+        std::mem::swap(&mut self.m, &mut scratch.m);
+        std::mem::swap(&mut self.v, &mut scratch.v);
     }
 
     /// Fraction of the new mask that survived from the old one.
@@ -105,12 +117,23 @@ impl SparseAdam {
     }
 }
 
+/// Scratch for [`SparseAdam::refresh_with`]: the survivor lookup table
+/// plus the two replacement moment vectors, reused across every matrix
+/// of a batched refresh (and across refreshes, when the caller keeps it).
+#[derive(Default)]
+pub struct RefreshScratch {
+    /// old flat index → packed position
+    old: HashMap<u32, u32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
 /// Batched mask refresh across many matrices — the trainer-facing form of
 /// Algorithm 1 lines 5-12. `masks[i]` is the new index set for
 /// `states[i]`; each `SparseAdam` migrates (survivors keep moments, fresh
-/// entries start cold). Returns the mean survivor overlap for
-/// diagnostics. Masks typically come from one layer-parallel
-/// `lift::engine::MaskEngine::select_all` call.
+/// entries start cold) through one shared [`RefreshScratch`]. Returns
+/// the mean survivor overlap for diagnostics. Masks typically come from
+/// one layer-parallel `lift::engine::MaskEngine::select_all_warm` call.
 pub fn refresh_all(states: &mut [(usize, SparseAdam)], masks: Vec<Vec<u32>>) -> f64 {
     assert_eq!(
         states.len(),
@@ -121,9 +144,10 @@ pub fn refresh_all(states: &mut [(usize, SparseAdam)], masks: Vec<Vec<u32>>) -> 
     );
     let n = states.len().max(1);
     let mut overlap = 0.0;
+    let mut scratch = RefreshScratch::default();
     for ((_, st), idx) in states.iter_mut().zip(masks) {
         overlap += st.overlap(&idx);
-        st.refresh(idx);
+        st.refresh_with(idx, &mut scratch);
     }
     overlap / n as f64
 }

@@ -141,6 +141,7 @@ impl Linalg {
     }
 
     /// Rank-r approximation W' = Q B (materialized, for host top-k).
+    /// Cold-scratch wrapper over [`Linalg::lowrank_approx_with`].
     pub fn lowrank_approx(
         &self,
         w: &Tensor,
@@ -149,13 +150,36 @@ impl Linalg {
         oversample: usize,
         rng: &mut Rng,
     ) -> Result<Tensor> {
+        self.lowrank_approx_with(
+            w,
+            rank,
+            power_iters,
+            oversample,
+            rng,
+            &mut crate::util::eigh::EighScratch::new(),
+        )
+    }
+
+    /// [`Linalg::lowrank_approx`] with a caller-owned scratch arena: the
+    /// host-side factor rotation's decomposition intermediates come from
+    /// `scratch`, so an engine worker running many rank reductions
+    /// allocates them once.
+    pub fn lowrank_approx_with(
+        &self,
+        w: &Tensor,
+        rank: usize,
+        power_iters: usize,
+        oversample: usize,
+        rng: &mut Rng,
+        scratch: &mut crate::util::eigh::EighScratch,
+    ) -> Result<Tensor> {
         let (m, n) = w.dims2();
         let rp = (rank + oversample).min(m).min(n);
         let (q, b) = self.svd_lowrank(w, rp, power_iters, rng)?;
         if rp > rank {
             // drop the oversampled tail: rotate so columns of Q align with
             // singular directions, then truncate to `rank`.
-            let (qr, br) = truncate_factors(&q, &b, rank);
+            let (qr, br) = truncate_factors_with(&q, &b, rank, scratch);
             self.matmul(&qr, &br)
         } else {
             self.matmul(&q, &b)
@@ -168,26 +192,33 @@ impl Linalg {
 /// top `rank` triplets are requested (`eigh::svd_topr`); at the default
 /// oversample the solver falls back to the full Jacobi oracle, but
 /// callers sweeping larger blocks (Fig. 16 rank sweeps) stop paying for
-/// components the truncation would discard.
+/// components the truncation would discard. The `q @ ub` rotation runs
+/// through the cache-tiled kernel in `util::gemm` (shared with the
+/// exact decomposition path), f64-accumulated as before.
 pub fn truncate_factors(q: &Tensor, b: &Tensor, rank: usize) -> (Tensor, Tensor) {
+    truncate_factors_with(q, b, rank, &mut crate::util::eigh::EighScratch::new())
+}
+
+/// [`truncate_factors`] with a caller-owned scratch arena for the
+/// small-factor decomposition's intermediates.
+pub fn truncate_factors_with(
+    q: &Tensor,
+    b: &Tensor,
+    rank: usize,
+    scratch: &mut crate::util::eigh::EighScratch,
+) -> (Tensor, Tensor) {
     let (m, rp) = q.dims2();
     let (rp2, n) = b.dims2();
     assert_eq!(rp, rp2);
     // clamp to min(rp, n): b has only min(rp, n) singular triplets, and
     // the loops below index ub/sb with exactly `rank` of them
     let rank = rank.min(rp).min(n);
-    let (ub, sb, vtb) = crate::util::eigh::svd_topr(&b.data, rp, n, rank);
+    let (ub, sb, vtb, _) =
+        crate::util::eigh::svd_topr_warm(&b.data, rp, n, rank, None, scratch);
     // q' = q @ ub[:, :rank] (m, rank); b' = diag(s) vtb [:rank] (rank, n)
+    let ub64: Vec<f64> = ub.iter().map(|&x| x as f64).collect();
     let mut qr = vec![0.0f32; m * rank];
-    for i in 0..m {
-        for c in 0..rank {
-            let mut acc = 0.0f64;
-            for l in 0..rp {
-                acc += q.data[i * rp + l] as f64 * ub[l * rank + c] as f64;
-            }
-            qr[i * rank + c] = acc as f32;
-        }
-    }
+    crate::util::gemm::matmul_f32xf64(&q.data, &ub64, m, rp, rank, &mut qr);
     let mut br = vec![0.0f32; rank * n];
     for c in 0..rank {
         for j in 0..n {

@@ -5,6 +5,24 @@
 //! versioned snapshot (`crate::ckpt`) every N steps, and [`resume`]
 //! continues one bit-exactly — weights, optimizer moments, refresh
 //! scheduling and both RNG streams (asserted by `rust/tests/ckpt.rs`).
+//!
+//! # Checkpoint I/O stays off the hot loop
+//!
+//! Snapshot persistence is split so the training loop never blocks on
+//! disk:
+//!
+//! * the per-step loss/latency record appends to the buffered
+//!   `curve.sidecar` (`ckpt::curve`, 12 bytes/step) instead of being
+//!   cloned wholesale into every snapshot — snapshot bytes are flat in
+//!   step count;
+//! * snapshot bytes are serialized in-loop (O(model) memcpy, needs the
+//!   live state) and handed to the double-buffered background
+//!   `ckpt::AsyncSnapshotWriter`, which performs the atomic write and
+//!   applies the `ckpt_keep` keep-last-N retention policy;
+//! * the writer is drained before `train_with` returns — on the error
+//!   path too — so crash-resume always sees every snapshot the run
+//!   reported writing, and a resumed run reconstructs the full campaign
+//!   curve from the sidecar next to the snapshot it restores.
 
 pub mod eval;
 pub mod pretrain;
@@ -31,9 +49,13 @@ pub struct TrainCfg {
     /// Write a versioned snapshot every N completed steps (0 = never).
     /// Takes effect only when `ckpt_dir` is set.
     pub ckpt_every: usize,
-    /// Snapshot directory (`step_XXXXXXXX.snap`); `None` disables
-    /// checkpointing regardless of `ckpt_every`.
+    /// Snapshot directory (`step_XXXXXXXX.snap` + `curve.sidecar`);
+    /// `None` disables checkpointing regardless of `ckpt_every`.
     pub ckpt_dir: Option<PathBuf>,
+    /// Keep only the newest N snapshots (0 = keep every snapshot). The
+    /// curve sidecar is never pruned — it is the O(steps) record the
+    /// snapshots deliberately don't duplicate.
+    pub ckpt_keep: usize,
 }
 
 impl Default for TrainCfg {
@@ -46,6 +68,7 @@ impl Default for TrainCfg {
             seed: 0,
             ckpt_every: 0,
             ckpt_dir: None,
+            ckpt_keep: 0,
         }
     }
 }
@@ -170,16 +193,24 @@ pub fn train_with(
                 cfg.warmup_frac,
                 cfg.steps
             );
-            let (step, prior) = state.restore(method, params, &mut ctx.rng, &mut data_rng)?;
+            let (step, seconds) = state.restore(method, params, &mut ctx.rng, &mut data_rng)?;
             anyhow::ensure!(
                 step <= cfg.steps,
                 "snapshot is at step {step}, past cfg.steps = {}",
                 cfg.steps
             );
-            // the whole prefix — losses, step latencies, and wall
-            // seconds — so the returned log covers the campaign, not
-            // just the post-crash tail
-            log = prior;
+            // the whole curve prefix — losses and step latencies — is
+            // reconstructed from the append-only sidecar next to the
+            // snapshot, so the returned log covers the campaign, not
+            // just the post-crash tail (snapshots themselves stay
+            // O(model))
+            let side_dir = path.parent().unwrap_or_else(|| Path::new("."));
+            let (losses, step_times) = ckpt::curve::read_curve(side_dir, step)?;
+            log = TrainLog {
+                losses,
+                step_times,
+                seconds,
+            };
             log::info!(
                 "[{}] resumed from {path:?} at step {step}/{}",
                 method.name(),
@@ -192,6 +223,57 @@ pub fn train_with(
             0
         }
     };
+    // off-loop checkpoint plumbing: the buffered curve sidecar (seeded
+    // with the restored prefix — which also truncates any crash tail)
+    // and the double-buffered background snapshot writer
+    let ckpt_on = cfg.ckpt_every > 0 && cfg.ckpt_dir.is_some();
+    let mut curve = match (&cfg.ckpt_dir, ckpt_on) {
+        (Some(dir), true) => {
+            // opening the sidecar rewrites it as the restored prefix. A
+            // snapshot AHEAD of this run's start (a fresh run pointed at
+            // a used directory, or a resume from an older-than-newest
+            // snapshot) depends on the records that rewrite would
+            // destroy — refuse loudly instead of silently orphaning it.
+            if let Some(newest) = ckpt::latest_snapshot(dir)? {
+                let newest_step = ckpt::snapshot_step(&newest).unwrap_or(0);
+                anyhow::ensure!(
+                    newest_step <= start,
+                    "checkpoint dir {dir:?} holds a snapshot at step {newest_step}, ahead of \
+                     this run's start step {start}; starting here would truncate the curve \
+                     sidecar that snapshot depends on — resume from the newest snapshot \
+                     (`--resume latest`) or point at a fresh --ckpt-dir"
+                );
+                // a dir that already holds snapshots belongs to one
+                // campaign: installing a FOREIGN snapshot's curve prefix
+                // over its sidecar would silently re-pair the existing
+                // snapshots with the wrong campaign's records
+                if let Some(src) = resume_from {
+                    anyhow::ensure!(
+                        src.parent() == Some(dir.as_path()),
+                        "resuming snapshot {src:?} into checkpoint dir {dir:?}, which already \
+                         holds snapshots from a different run — their curve sidecar would be \
+                         overwritten with the resumed campaign's records; migrate into an \
+                         empty --ckpt-dir instead"
+                    );
+                }
+            }
+            let prefix: Vec<(f32, f64)> = log
+                .losses
+                .iter()
+                .copied()
+                .zip(log.step_times.iter().copied())
+                .collect();
+            Some(ckpt::curve::CurveWriter::open(dir, &prefix)?)
+        }
+        _ => None,
+    };
+    // if the run errors out mid-loop, the writer's Drop still drains the
+    // queue, so the newest submitted snapshot is durable for resume
+    let mut writer = if ckpt_on {
+        Some(ckpt::AsyncSnapshotWriter::new())
+    } else {
+        None
+    };
     let t0 = std::time::Instant::now();
     for step in start..cfg.steps {
         let st = std::time::Instant::now();
@@ -203,8 +285,12 @@ pub fn train_with(
         // them (regression-tested by rust/tests/engine.rs).
         method.refresh_all(ctx, params, &grads, step)?;
         method.step_all(ctx, params, &grads, step, sched.at(step))?;
+        let dt = st.elapsed().as_secs_f64();
         log.losses.push(loss);
-        log.step_times.push(st.elapsed().as_secs_f64());
+        log.step_times.push(dt);
+        if let Some(c) = curve.as_mut() {
+            c.append(loss, dt)?;
+        }
         if cfg.log_every > 0 && step % cfg.log_every == 0 {
             log::info!(
                 "[{}] step {step}/{} loss {loss:.4} lr {:.2e}",
@@ -214,27 +300,39 @@ pub fn train_with(
             );
         }
         anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}: {loss}");
-        if cfg.ckpt_every > 0 && (step + 1) % cfg.ckpt_every == 0 {
-            if let Some(dir) = &cfg.ckpt_dir {
-                let path = ckpt::snapshot_path(dir, step + 1);
-                // log.seconds still holds the restored-prefix total
-                // during the loop; add this segment's elapsed time so
-                // the snapshot records true wall time up to this step
-                let mut snap_log = log.clone();
-                snap_log.seconds = log.seconds + t0.elapsed().as_secs_f64();
-                ckpt::save_trainer(
-                    &path,
-                    step + 1,
-                    &*method,
-                    params,
-                    &ctx.rng,
-                    &data_rng,
-                    &snap_log,
-                    cfg,
-                )?;
-                log::debug!("[{}] snapshot at step {} -> {path:?}", method.name(), step + 1);
+        if ckpt_on && (step + 1) % cfg.ckpt_every == 0 {
+            let dir = cfg.ckpt_dir.as_ref().expect("ckpt_on implies ckpt_dir");
+            let path = ckpt::snapshot_path(dir, step + 1);
+            // the sidecar must cover every step this snapshot claims
+            // before the snapshot can land on disk
+            if let Some(c) = curve.as_mut() {
+                c.flush()?;
             }
+            // serialize in-loop (needs the live state), write off-loop;
+            // log.seconds still holds the restored-prefix total during
+            // the loop, so add this segment's elapsed time
+            let bytes = ckpt::trainer_snapshot_bytes(
+                step + 1,
+                &*method,
+                params,
+                &ctx.rng,
+                &data_rng,
+                log.seconds + t0.elapsed().as_secs_f64(),
+                cfg,
+            )?;
+            writer
+                .as_mut()
+                .expect("ckpt_on implies a writer")
+                .submit(path.clone(), bytes, cfg.ckpt_keep)?;
+            log::debug!("[{}] snapshot at step {} -> {path:?}", method.name(), step + 1);
         }
+    }
+    if let Some(c) = curve.as_mut() {
+        c.flush()?;
+    }
+    if let Some(w) = writer {
+        // surface any background write error before reporting success
+        w.finish()?;
     }
     // accumulate: restored-prefix seconds (0.0 on a fresh run) + this
     // segment, so resumed runs report campaign wall time, not tail time

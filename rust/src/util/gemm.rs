@@ -1,0 +1,250 @@
+//! Cache-tiled host GEMM kernels shared by the exact decomposition path
+//! (`util::eigh::svd_topr`) and the factor-rotation matmuls in
+//! `runtime::linalg::truncate_factors`.
+//!
+//! These are not a BLAS replacement: the matrices here top out around a
+//! couple thousand on a side, f32 in / f64 accumulate, and the callers
+//! need *deterministic* summation order (the engine's 1-worker ≡
+//! N-workers contract hashes results bit-for-bit). The two tricks that
+//! matter at this scale:
+//!
+//! * **k-blocking** — the inner product dimension is walked in
+//!   [`KC`]-sized panels so the streamed rows of `b` stay in L1/L2
+//!   across the whole `a`-row sweep instead of being evicted between
+//!   rows;
+//! * **transpose packing** — Gram builds (`A^T A`) and `A^T B` products
+//!   read their left operand column-wise; packing the transpose once
+//!   into a contiguous scratch buffer turns every inner loop into a
+//!   unit-stride dot product the autovectorizer handles.
+//!
+//! Summation order is fixed by the loop structure alone (no
+//! data-dependent skipping), so every kernel is a pure function of its
+//! inputs — results are bit-identical run-to-run and worker-to-worker.
+
+/// Panel width of the inner-product dimension. 64 f64 columns = 512 B
+/// per `b`-row panel — comfortably L1-resident alongside the `c` row.
+const KC: usize = 64;
+
+/// C (m×n, f64) = A (m×k, f64) · B (k×n, f64), k-blocked. `c` is
+/// overwritten, not accumulated into.
+pub fn matmul_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64]) {
+    assert_eq!(a.len(), m * k, "gemm: a is not m×k");
+    assert_eq!(b.len(), k * n, "gemm: b is not k×n");
+    assert_eq!(c.len(), m * n, "gemm: c is not m×n");
+    c.fill(0.0);
+    let mut kk = 0;
+    while kk < k {
+        let kend = (kk + KC).min(k);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for l in kk..kend {
+                let ail = arow[l];
+                let brow = &b[l * n..(l + 1) * n];
+                for j in 0..n {
+                    crow[j] += ail * brow[j];
+                }
+            }
+        }
+        kk = kend;
+    }
+}
+
+/// C (m×n, f64) = Aᵀ · B where A is k×m and B is k×n (both f64, row
+/// major) — the projection shape (`V = Xᵀ Z` in the Rayleigh–Ritz
+/// rotation). Walking `l` (the shared leading dimension) outermost keeps
+/// every read and write unit-stride without materializing Aᵀ.
+pub fn matmul_tn_f64(a: &[f64], b: &[f64], k: usize, m: usize, n: usize, c: &mut [f64]) {
+    assert_eq!(a.len(), k * m, "gemm_tn: a is not k×m");
+    assert_eq!(b.len(), k * n, "gemm_tn: b is not k×n");
+    assert_eq!(c.len(), m * n, "gemm_tn: c is not m×n");
+    c.fill(0.0);
+    let mut kk = 0;
+    while kk < k {
+        let kend = (kk + KC).min(k);
+        for l in kk..kend {
+            let arow = &a[l * m..(l + 1) * m];
+            let brow = &b[l * n..(l + 1) * n];
+            for (i, &ail) in arow.iter().enumerate() {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += ail * brow[j];
+                }
+            }
+        }
+        kk = kend;
+    }
+}
+
+/// C (m×n, f32) = A (m×k, f32) · B (k×n, f64), f64 accumulation —
+/// the `U = A V` projection and the `q @ ub` factor rotation. k-blocked
+/// like [`matmul_f64`]; the f64 accumulator matches the precision the
+/// previous per-element loops used, so tolerances are unchanged.
+pub fn matmul_f32xf64(a: &[f32], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "gemm_32x64: a is not m×k");
+    assert_eq!(b.len(), k * n, "gemm_32x64: b is not k×n");
+    assert_eq!(c.len(), m * n, "gemm_32x64: c is not m×n");
+    // f64 row accumulator: KC-blocking alone would round each panel's
+    // partial sum through f32
+    let mut acc = vec![0.0f64; n];
+    for i in 0..m {
+        acc.fill(0.0);
+        let arow = &a[i * k..(i + 1) * k];
+        let mut kk = 0;
+        while kk < k {
+            let kend = (kk + KC).min(k);
+            for l in kk..kend {
+                let ail = arow[l] as f64;
+                let brow = &b[l * n..(l + 1) * n];
+                for j in 0..n {
+                    acc[j] += ail * brow[j];
+                }
+            }
+            kk = kend;
+        }
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            crow[j] = acc[j] as f32;
+        }
+    }
+}
+
+/// G (n×n, f64) = Aᵀ A for A m×n (f32), transpose-packed: A is packed
+/// column-major (as f64) into `pack` once, turning every Gram entry into
+/// a unit-stride dot product; only the upper triangle is computed and
+/// mirrored. `pack` is caller-owned scratch (resized here) so the
+/// per-refresh allocation disappears when an arena is threaded through.
+pub fn gram_f64(a: &[f32], m: usize, n: usize, pack: &mut Vec<f64>, g: &mut [f64]) {
+    assert_eq!(a.len(), m * n, "gram: a is not m×n");
+    assert_eq!(g.len(), n * n, "gram: g is not n×n");
+    pack.clear();
+    pack.resize(n * m, 0.0);
+    for i in 0..m {
+        let arow = &a[i * n..(i + 1) * n];
+        for (j, &x) in arow.iter().enumerate() {
+            pack[j * m + i] = x as f64;
+        }
+    }
+    for i in 0..n {
+        let ci = &pack[i * m..(i + 1) * m];
+        for j in i..n {
+            let cj = &pack[j * m..(j + 1) * m];
+            let mut acc = 0.0f64;
+            for l in 0..m {
+                acc += ci[l] * cj[l];
+            }
+            g[i * n + j] = acc;
+            g[j * n + i] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for l in 0..k {
+                    acc += a[i * k + l] * b[l * n + j];
+                }
+                c[i * n + j] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn blocked_matches_naive_across_panel_boundaries() {
+        let mut rng = Rng::new(3);
+        // sizes straddling the KC panel boundary, incl. degenerate dims
+        for (m, k, n) in [(7usize, 130usize, 9usize), (1, 64, 5), (5, 63, 1), (3, 65, 4)] {
+            let a: Vec<f64> = (0..m * k).map(|_| rng.normal() as f64).collect();
+            let b: Vec<f64> = (0..k * n).map(|_| rng.normal() as f64).collect();
+            let mut c = vec![1.0f64; m * n]; // nonzero: kernel must overwrite
+            matmul_f64(&a, &b, m, k, n, &mut c);
+            let want = naive(&a, &b, m, k, n);
+            for (x, y) in c.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn tn_variant_matches_explicit_transpose() {
+        let mut rng = Rng::new(5);
+        let (k, m, n) = (70usize, 6usize, 11usize);
+        let a: Vec<f64> = (0..k * m).map(|_| rng.normal() as f64).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal() as f64).collect();
+        let mut at = vec![0.0f64; m * k];
+        for l in 0..k {
+            for i in 0..m {
+                at[i * k + l] = a[l * m + i];
+            }
+        }
+        let want = naive(&at, &b, m, k, n);
+        let mut c = vec![0.0f64; m * n];
+        matmul_tn_f64(&a, &b, k, m, n, &mut c);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn mixed_precision_matches_f64_reference() {
+        let mut rng = Rng::new(7);
+        let (m, k, n) = (9usize, 129usize, 8usize);
+        let a32: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal() as f64).collect();
+        let a64: Vec<f64> = a32.iter().map(|&x| x as f64).collect();
+        let want = naive(&a64, &b, m, k, n);
+        let mut c = vec![0.0f32; m * n];
+        matmul_f32xf64(&a32, &b, m, k, n, &mut c);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((*x as f64 - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_and_exact() {
+        let mut rng = Rng::new(9);
+        let (m, n) = (37usize, 12usize);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut pack = Vec::new();
+        let mut g = vec![0.0f64; n * n];
+        gram_f64(&a, m, n, &mut pack, &mut g);
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for l in 0..m {
+                    acc += a[l * n + i] as f64 * a[l * n + j] as f64;
+                }
+                assert!((g[i * n + j] - acc).abs() < 1e-9);
+                assert_eq!(g[i * n + j].to_bits(), g[j * n + i].to_bits(), "not symmetric");
+            }
+        }
+        // pack scratch is reusable: second call over a different shape
+        let (m2, n2) = (5usize, 4usize);
+        let a2: Vec<f32> = (0..m2 * n2).map(|_| rng.normal()).collect();
+        let mut g2 = vec![0.0f64; n2 * n2];
+        gram_f64(&a2, m2, n2, &mut pack, &mut g2);
+        assert!((g2[0] - (0..m2).map(|l| (a2[l * n2] as f64).powi(2)).sum::<f64>()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_bitwise() {
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (8usize, 100usize, 7usize);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal() as f64).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal() as f64).collect();
+        let mut c1 = vec![0.0f64; m * n];
+        let mut c2 = vec![0.0f64; m * n];
+        matmul_f64(&a, &b, m, k, n, &mut c1);
+        matmul_f64(&a, &b, m, k, n, &mut c2);
+        assert!(c1.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+}

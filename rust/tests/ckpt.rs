@@ -21,11 +21,14 @@
 
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use lift::ckpt::{self, Snapshot};
 use lift::exp::matrix::{self, CellSpec};
 use lift::lift::LiftCfg;
-use lift::methods::{digest_words, make_method, Method, Scope};
+use lift::methods::{digest_words, make_method, Ctx, Method, Scope};
+use lift::optim::AdamCfg;
+use lift::runtime::Linalg;
 use lift::tensor::Tensor;
 use lift::train::{train_with, TrainCfg, TrainLog};
 use lift::util::prop::{check, ensure};
@@ -80,6 +83,7 @@ fn base_cfg(steps: usize) -> TrainCfg {
         seed: 5,
         ckpt_every: 0,
         ckpt_dir: None,
+        ckpt_keep: 0,
     }
 }
 
@@ -310,6 +314,301 @@ fn resume_rejects_a_different_train_cfg() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+// ---- hot-loop overhaul: warm carriers, retention, flat snapshots --------
+
+/// A preset whose matrices have a min side of 40+, so the exact top-r
+/// subspace path engages (2(rank + oversample) < min(m, n)) and warm
+/// carriers are actually produced — the toy preset's 16-wide matrices
+/// always take the full-Jacobi fallback, which carries none.
+fn wide_preset() -> lift::runtime::manifest::PresetInfo {
+    use lift::runtime::manifest::{ParamInfo, PresetInfo};
+    let mut params = vec![ParamInfo {
+        name: "embed".into(),
+        shape: vec![32, 16],
+    }];
+    for (kind, shape) in [
+        ("wq", vec![48usize, 40usize]),
+        ("wk", vec![40, 48]),
+        ("wup", vec![40, 64]),
+        ("wdown", vec![64, 40]),
+    ] {
+        params.push(ParamInfo {
+            name: format!("l0.{kind}"),
+            shape,
+        });
+    }
+    PresetInfo {
+        name: "wide".into(),
+        d: 40,
+        layers: 1,
+        ffn: 64,
+        vocab: 32,
+        seq: 8,
+        batch: 2,
+        heads: 2,
+        params,
+        executables: Default::default(),
+    }
+}
+
+fn wide_ctx(workers: usize, seed: u64) -> Ctx {
+    Ctx {
+        la: Arc::new(Linalg::new(&xla::PjRtClient::cpu().unwrap())),
+        preset: wide_preset(),
+        rng: Rng::new(seed),
+        adam: AdamCfg::default(),
+        workers,
+    }
+}
+
+fn wide_params(seed: u64) -> Vec<Tensor> {
+    lift::model::init_params(&wide_preset(), &mut Rng::new(seed))
+}
+
+/// Exact-path LIFT (refresh every 2 steps): its refreshes run the
+/// warm-started subspace iteration and persist the carriers.
+fn make_exact_lift() -> Box<dyn Method> {
+    make_method(
+        "lift",
+        4,
+        LiftCfg {
+            rank: 4,
+            exact: true,
+            ..Default::default()
+        },
+        2,
+        Scope::default(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn warm_carriers_crash_resume_bit_identically() {
+    // straight vs crash-at-3 + restore + continue, on the wide preset
+    // where warm carriers exist. `state_digest` hashes the carriers
+    // themselves, so a resume that dropped or perturbed them — leaving
+    // the post-resume refresh to re-converge cold, within tolerance but
+    // not bitwise — fails this test even if the masks happen to agree.
+    let (total, k) = (6usize, 3usize);
+    for workers in [1usize, lift::lift::engine::default_workers().max(2)] {
+        let (ws, ss, straight_bytes) = {
+            let mut ctx = wide_ctx(workers, 0xC0FFEE);
+            let mut params = wide_params(0x1717);
+            let mut method = make_exact_lift();
+            train_with(
+                &mut matrix::synth_step,
+                &mut *method,
+                &mut ctx,
+                &mut params,
+                &base_cfg(total),
+                None,
+            )
+            .unwrap();
+            (weight_digest(&params), method.state_digest(), method.save_state().unwrap())
+        };
+        let dir = tmpdir(&format!("warm_resume_{workers}w"));
+        {
+            let mut ctx = wide_ctx(workers, 0xC0FFEE);
+            let mut params = wide_params(0x1717);
+            let mut method = make_exact_lift();
+            let cfg = TrainCfg {
+                ckpt_every: k,
+                ckpt_dir: Some(dir.clone()),
+                ..base_cfg(total)
+            };
+            let mut served = 0usize;
+            let mut crashing = |params: &[Tensor], rng: &mut Rng| {
+                if served == k {
+                    anyhow::bail!("simulated crash");
+                }
+                served += 1;
+                matrix::synth_step(params, rng)
+            };
+            train_with(&mut crashing, &mut *method, &mut ctx, &mut params, &cfg, None)
+                .unwrap_err();
+        }
+        let snap = ckpt::latest_snapshot(&dir).unwrap().expect("snapshot at k");
+        let mut ctx = wide_ctx(workers, 0xDEAD_BEEF);
+        let mut params = wide_params(0x9999);
+        let mut method = make_exact_lift();
+        train_with(
+            &mut matrix::synth_step,
+            &mut *method,
+            &mut ctx,
+            &mut params,
+            &base_cfg(total),
+            Some(&snap),
+        )
+        .unwrap();
+        assert_eq!(ws, weight_digest(&params), "{workers}w: weights diverged");
+        assert_eq!(ss, method.state_digest(), "{workers}w: state (incl. warm carriers) diverged");
+        assert_eq!(
+            straight_bytes,
+            method.save_state().unwrap(),
+            "{workers}w: serialized state diverged after resume"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn snapshot_bytes_are_flat_in_step_count() {
+    // the sidecar satellite's regression test: with the curve streamed
+    // to curve.sidecar, a snapshot at step 40 must be byte-for-byte the
+    // same SIZE as the one at step 5 — O(model), not O(model + steps)
+    let dir = tmpdir("flat_size");
+    let mut ctx = matrix::toy_ctx(1, 3).unwrap();
+    let mut params = matrix::toy_params(3);
+    let mut method = make("lift");
+    let cfg = TrainCfg {
+        ckpt_every: 5,
+        ckpt_dir: Some(dir.clone()),
+        ..base_cfg(40)
+    };
+    train_with(
+        &mut matrix::synth_step,
+        &mut *method,
+        &mut ctx,
+        &mut params,
+        &cfg,
+        None,
+    )
+    .unwrap();
+    let size = |step: usize| std::fs::metadata(ckpt::snapshot_path(&dir, step)).unwrap().len();
+    assert_eq!(
+        size(5),
+        size(40),
+        "snapshot bytes grew with step count — the curve leaked back into the snapshot"
+    );
+    // the curve lives in the sidecar instead: 8-byte magic + 12 B/step
+    let side = std::fs::metadata(lift::ckpt::curve::curve_path(&dir)).unwrap().len();
+    assert_eq!(side, 8 + 40 * 12);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn retention_caps_the_directory_and_resume_still_restores_the_campaign() {
+    let dir = tmpdir("retention");
+    {
+        let mut ctx = matrix::toy_ctx(2, 0xC0FFEE).unwrap();
+        let mut params = matrix::toy_params(0x1717);
+        let mut method = make("lift");
+        let cfg = TrainCfg {
+            ckpt_every: 1,
+            ckpt_dir: Some(dir.clone()),
+            ckpt_keep: 3,
+            ..base_cfg(7)
+        };
+        train_with(
+            &mut matrix::synth_step,
+            &mut *method,
+            &mut ctx,
+            &mut params,
+            &cfg,
+            None,
+        )
+        .unwrap();
+    }
+    let mut snaps: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".snap"))
+        .collect();
+    snaps.sort();
+    assert_eq!(
+        snaps,
+        vec!["step_00000005.snap", "step_00000006.snap", "step_00000007.snap"],
+        "keep-last-3 must bound the directory"
+    );
+    assert!(
+        lift::ckpt::curve::curve_path(&dir).exists(),
+        "the sidecar is never pruned"
+    );
+    // resuming from the newest retained snapshot reconstructs the FULL
+    // campaign curve from the sidecar, including pruned steps' records
+    let snap = ckpt::latest_snapshot(&dir).unwrap().unwrap();
+    let mut ctx = matrix::toy_ctx(2, 1).unwrap();
+    let mut params = matrix::toy_params(9);
+    let mut method = make("lift");
+    let log = train_with(
+        &mut matrix::synth_step,
+        &mut *method,
+        &mut ctx,
+        &mut params,
+        &base_cfg(7),
+        Some(&snap),
+    )
+    .unwrap();
+    assert_eq!(log.losses.len(), 7);
+    assert_eq!(log.step_times.len(), 7);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn fresh_run_refuses_a_directory_with_newer_snapshots() {
+    // opening the curve sidecar rewrites it; a run whose start is
+    // behind an existing snapshot would orphan that snapshot's curve
+    // records — the trainer must refuse loudly, not truncate
+    let dir = tmpdir("sidecar_guard");
+    {
+        let mut ctx = matrix::toy_ctx(1, 0xC0FFEE).unwrap();
+        let mut params = matrix::toy_params(0x1717);
+        let mut method = make("lift");
+        let cfg = TrainCfg {
+            ckpt_every: 2,
+            ckpt_dir: Some(dir.clone()),
+            ..base_cfg(4)
+        };
+        train_with(
+            &mut matrix::synth_step,
+            &mut *method,
+            &mut ctx,
+            &mut params,
+            &cfg,
+            None,
+        )
+        .unwrap();
+    }
+    assert!(ckpt::latest_snapshot(&dir).unwrap().is_some());
+    let before = std::fs::metadata(lift::ckpt::curve::curve_path(&dir)).unwrap().len();
+    // same directory, fresh run (no --resume): must error, and must
+    // leave the sidecar bytes untouched
+    let mut ctx = matrix::toy_ctx(1, 0xC0FFEE).unwrap();
+    let mut params = matrix::toy_params(0x1717);
+    let mut method = make("lift");
+    let cfg = TrainCfg {
+        ckpt_every: 2,
+        ckpt_dir: Some(dir.clone()),
+        ..base_cfg(4)
+    };
+    let err = train_with(
+        &mut matrix::synth_step,
+        &mut *method,
+        &mut ctx,
+        &mut params,
+        &cfg,
+        None,
+    )
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("ahead of this run's start"), "{msg}");
+    let after = std::fs::metadata(lift::ckpt::curve::curve_path(&dir)).unwrap().len();
+    assert_eq!(before, after, "the sidecar must not be truncated on refusal");
+    // resuming from the newest snapshot is the sanctioned way in
+    let snap = ckpt::latest_snapshot(&dir).unwrap().unwrap();
+    let mut method2 = make("lift");
+    train_with(
+        &mut matrix::synth_step,
+        &mut *method2,
+        &mut ctx,
+        &mut params,
+        &cfg,
+        Some(&snap),
+    )
+    .unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 // ---- corruption / compatibility ----------------------------------------
 
 /// Write one real trainer snapshot to tamper with.
@@ -440,9 +739,7 @@ fn trainer_state_roundtrips_degenerate_shapes() {
         meta.usize(rng.below(100));
         meta.u64(rng.next_u64());
         meta.u64(rng.next_u64());
-        meta.f32s(&[]); // losses
-        meta.f64s(&[]); // step_times
-        meta.f64(0.25); // seconds
+        meta.f64(0.25); // seconds (the curve itself lives in the sidecar)
         meta.f32(1e-3); // cfg: lr
         meta.f32(0.03); // cfg: warmup_frac
         meta.usize(100); // cfg: steps
@@ -458,7 +755,7 @@ fn trainer_state_roundtrips_degenerate_shapes() {
         snap.write_to(&path).map_err(|e| e.to_string())?;
         let st = ckpt::load_trainer(&path).map_err(|e| e.to_string())?;
         ensure(st.method_name == "probe", "name drifted")?;
-        ensure(st.log.seconds == 0.25, "seconds drifted")?;
+        ensure(st.seconds == 0.25, "seconds drifted")?;
         ensure(st.cfg_steps == 100, "cfg steps drifted")?;
         ensure(st.params == params, "params drifted")?;
         ensure(st.method_state == method_state, "method bytes drifted")?;
@@ -492,7 +789,7 @@ fn matrix_skips_finished_cells_and_recomputes_deleted_ones() {
     let count = AtomicUsize::new(0);
     let run = |spec: &CellSpec| {
         count.fetch_add(1, Ordering::SeqCst);
-        matrix::run_toy_cell(spec, &dir, 0, 1)
+        matrix::run_toy_cell(spec, &dir, 0, 0, 1)
     };
     // first run executes everything
     let r1 = matrix::run_matrix(&dir, &cells, 2, &run).unwrap();
@@ -525,7 +822,7 @@ fn matrix_collects_failures_without_aborting_the_campaign() {
         if spec.method == "random" {
             anyhow::bail!("synthetic cell failure");
         }
-        matrix::run_toy_cell(spec, &dir, 0, 1)
+        matrix::run_toy_cell(spec, &dir, 0, 0, 1)
     };
     let r = matrix::run_matrix(&dir, &cells, 2, run).unwrap();
     assert_eq!(r.ran.len(), 1);
@@ -534,7 +831,7 @@ fn matrix_collects_failures_without_aborting_the_campaign() {
     assert!(r.failed[0].1.contains("synthetic cell failure"));
     // the failed cell left no outcome, so a rerun retries only it
     let r2 = matrix::run_matrix(&dir, &cells, 2, |spec| {
-        matrix::run_toy_cell(spec, &dir, 0, 1)
+        matrix::run_toy_cell(spec, &dir, 0, 0, 1)
     })
     .unwrap();
     assert_eq!(r2.ran.len(), 1);
@@ -554,7 +851,7 @@ fn interrupted_toy_cell_resumes_from_its_checkpoint() {
     };
     // straight run in its own directory
     let dir_straight = tmpdir("cell_straight");
-    let straight = matrix::run_toy_cell(&spec, &dir_straight, 0, 1).unwrap();
+    let straight = matrix::run_toy_cell(&spec, &dir_straight, 0, 0, 1).unwrap();
     // "crashed" run: the cell's own config, interrupted after 2 of 4
     // steps (snapshot at 2 already on disk); rerunning the cell must
     // pick the snapshot up instead of restarting
@@ -572,6 +869,7 @@ fn interrupted_toy_cell_resumes_from_its_checkpoint() {
             seed: spec.seed,
             ckpt_every: 2,
             ckpt_dir: Some(full_ckpt.clone()),
+            ckpt_keep: 0,
         };
         let mut served = 0usize;
         let mut crashing = |params: &[Tensor], rng: &mut Rng| {
@@ -585,7 +883,7 @@ fn interrupted_toy_cell_resumes_from_its_checkpoint() {
             .unwrap_err();
     }
     assert!(ckpt::latest_snapshot(&full_ckpt).unwrap().is_some());
-    let resumed = matrix::run_toy_cell(&spec, &dir_crash, 2, 1).unwrap();
+    let resumed = matrix::run_toy_cell(&spec, &dir_crash, 2, 0, 1).unwrap();
     assert_eq!(
         resumed.tail_loss.to_bits(),
         straight.tail_loss.to_bits(),

@@ -235,6 +235,17 @@ fn speedup_measurement_reports_a_row() {
 }
 
 #[test]
+fn warm_refresh_measurement_reports_a_row() {
+    // min side 32 > 2(4 + oversample), so the subspace path (and its
+    // carrier) actually engages in the measured refreshes
+    let shapes = [(40usize, 32usize), (32, 48)];
+    let row = lift::exp::harness::measure_warm_refresh(&shapes, 4, 1).unwrap();
+    assert!(row.seq_s > 0.0 && row.par_s > 0.0);
+    assert_eq!(row.matrices, shapes.len());
+    assert!(row.row().contains("warm_refresh"), "row: {}", row.row());
+}
+
+#[test]
 fn step_all_speedup_measurement_reports_a_row() {
     let shapes = [(16usize, 12usize), (12, 16), (16, 16), (20, 12)];
     let row = lift::exp::harness::measure_step_all(&shapes, 4, 2, 1, 2).unwrap();
@@ -284,6 +295,118 @@ fn exact_topr_path_is_worker_count_invariant() {
     assert_eq!(seq, par, "exact top-r masks diverged across worker counts");
     for (mi, mask) in seq.iter().enumerate() {
         assert!(!mask.is_empty(), "matrix {mi} selected nothing");
+    }
+}
+
+#[test]
+fn warm_refresh_masks_and_carriers_are_worker_count_invariant() {
+    // two consecutive refreshes of a drifting model through
+    // select_all_warm: the second is warm-started from the first's
+    // carriers. Masks AND carriers must be bit-identical at 1 and 4
+    // workers — the carriers are checkpointed state, so worker-count
+    // leakage here would break crash-resume determinism, not just perf.
+    use lift::util::eigh::SubspaceWarm;
+    let mut rng = Rng::new(67);
+    let shapes = [(64usize, 80usize), (96, 64), (72, 72)];
+    let cfg = LiftCfg {
+        rank: 4,
+        exact: true,
+        ..Default::default()
+    };
+    let la = linalg();
+    let run = |workers: usize, ws: &[Tensor], drifted: &[Tensor]| {
+        let eng = MaskEngine::with_workers(la.clone(), workers);
+        let reqs: Vec<MaskRequest> = ws
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let (m, n) = w.dims2();
+                MaskRequest {
+                    tag: i as u64,
+                    w,
+                    grad: None,
+                    score: None,
+                    k: budget_for(m, n, 4),
+                }
+            })
+            .collect();
+        let mut warms: Vec<Option<SubspaceWarm>> = (0..reqs.len()).map(|_| None).collect();
+        let first = eng
+            .select_all_warm(Selector::Lift, &cfg, &reqs, 0xF1, &mut warms)
+            .unwrap();
+        assert!(
+            warms.iter().all(|w| w.is_some()),
+            "subspace-path refreshes must emit carriers"
+        );
+        let dreqs: Vec<MaskRequest> = drifted
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let (m, n) = w.dims2();
+                MaskRequest {
+                    tag: i as u64,
+                    w,
+                    grad: None,
+                    score: None,
+                    k: budget_for(m, n, 4),
+                }
+            })
+            .collect();
+        let second = eng
+            .select_all_warm(Selector::Lift, &cfg, &dreqs, 0xF2, &mut warms)
+            .unwrap();
+        (first, second, warms)
+    };
+    let ws: Vec<Tensor> = shapes
+        .iter()
+        .map(|&(m, n)| Tensor::randn(&[m, n], 1.0, &mut rng))
+        .collect();
+    let drifted: Vec<Tensor> = ws
+        .iter()
+        .map(|w| {
+            let mut d = w.clone();
+            d.add_scaled(&Tensor::randn(&w.shape, 0.02, &mut rng), 1.0);
+            d
+        })
+        .collect();
+    let (f1, s1, c1) = run(1, &ws, &drifted);
+    let (f4, s4, c4) = run(4, &ws, &drifted);
+    assert_eq!(f1, f4, "cold masks diverged across worker counts");
+    assert_eq!(s1, s4, "warm masks diverged across worker counts");
+    assert_eq!(c1, c4, "warm carriers diverged across worker counts");
+    // and a warm refresh selects what a cold one would: on a drifted
+    // model the two factorizations agree to tolerance, so the masks
+    // overlap near-perfectly (exact equality is tie-break luck)
+    let eng = MaskEngine::with_workers(la, 2);
+    let dreqs: Vec<MaskRequest> = drifted
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            let (m, n) = w.dims2();
+            MaskRequest {
+                tag: i as u64,
+                w,
+                grad: None,
+                score: None,
+                k: budget_for(m, n, 4),
+            }
+        })
+        .collect();
+    let cold_second = eng
+        .select_all_warm(
+            Selector::Lift,
+            &cfg,
+            &dreqs,
+            0xF2,
+            &mut (0..dreqs.len()).map(|_| None).collect::<Vec<_>>(),
+        )
+        .unwrap();
+    for (mi, (warm_mask, cold_mask)) in s1.iter().zip(&cold_second).enumerate() {
+        let ov = mask_overlap(warm_mask, cold_mask);
+        assert!(
+            ov >= 0.97,
+            "matrix {mi}: warm-refresh mask drifted from cold selection (overlap {ov:.4})"
+        );
     }
 }
 

@@ -482,6 +482,53 @@ fn random_orthonormal(rng: &mut Rng, m: usize, k: usize) -> Vec<f32> {
 }
 
 #[test]
+fn prop_warm_refresh_stays_inside_the_cold_contract() {
+    // randomized steady states: decompose, drift the matrix a little,
+    // then refresh warm-started from the carrier. The warm result must
+    // satisfy the SAME tolerances as a cold svd_topr of the drifted
+    // matrix — the drift guard's job is to make accuracy independent of
+    // how stale the carrier is.
+    check("warm refresh vs cold contract", |rng| {
+        let m = 40 + rng.below(25);
+        let n = 40 + rng.below(25);
+        let r = 2 + rng.below(4); // p = r + 8, 2p < 40 <= min(m, n)
+        let mut a = rng.normal_vec(m * n, 1.0);
+        let mut scratch = eigh::EighScratch::new();
+        let (_, _, _, carrier) = eigh::svd_topr_warm(&a, m, n, r, None, &mut scratch);
+        ensure(carrier.is_some(), "subspace path must emit a carrier")?;
+        // drift, as `interval` optimizer steps would
+        for x in a.iter_mut() {
+            *x += rng.normal() * 0.03;
+        }
+        let (_, sw, _, _) = eigh::svd_topr_warm(&a, m, n, r, carrier.as_ref(), &mut scratch);
+        let (_, sf, _) = eigh::svd(&a, m, n);
+        let smax = sf[0].max(1e-12);
+        for c in 0..r {
+            ensure(
+                (sw[c] - sf[c]).abs() <= eigh::TOPR_SV_TOL * smax,
+                format!("warm s[{c}]: {} vs oracle {}", sw[c], sf[c]),
+            )?;
+        }
+        // the masks a warm refresh selects match cold selection: both
+        // reconstructions sit within tolerance of the oracle, so the
+        // top-k of |W'| agrees on all but threshold-tie entries
+        let (wr_warm, _) = eigh::lowrank_approx_warm(&a, m, n, r, carrier.as_ref(), &mut scratch);
+        let (wr_cold, _) = eigh::lowrank_approx_warm(&a, m, n, r, None, &mut scratch);
+        let k = budget_for(m, n, 2);
+        let warm_mask = topk_indices(&wr_warm, k);
+        let cold_mask = topk_indices(&wr_cold, k);
+        let ov = mask_overlap(&warm_mask, &cold_mask);
+        // the two factorizations agree far inside the selection margin,
+        // so only entries within rounding distance of the top-k
+        // threshold can flip — a handful out of k >= 150
+        ensure(
+            ov >= 0.95,
+            format!("warm mask diverged from cold selection: overlap {ov:.4}"),
+        )
+    });
+}
+
+#[test]
 fn prop_svd_reconstruction_error_bounded() {
     check("jacobi svd reconstructs", |rng| {
         let m = gen_size(rng, 2, 28);
