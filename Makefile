@@ -6,7 +6,7 @@
 # XlaBuilder toolkit (mask engine, property tests, quickstart selftest);
 # artifact-dependent integration tests skip themselves when absent.
 
-.PHONY: artifacts artifacts-e2e test bench bench-check clippy
+.PHONY: artifacts artifacts-e2e test bench bench-check clippy matrix-smoke
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -29,3 +29,18 @@ bench-check:
 
 clippy:
 	cargo clippy --all-targets
+
+# the ISSUE-5 acceptance flow, locally: run an artifact-free grid over
+# the preset + interval + seed axes, kill it mid-campaign, resume it,
+# and leave both ledgers under /tmp for inspection (CI diffs them).
+matrix-smoke:
+	cargo build --release
+	target/release/lift matrix --toy --methods lift,full \
+	  --axis "interval=2,4;seed=1,2" --steps 8 --ckpt-every 2 \
+	  --out /tmp/lift_mx_straight
+	LIFT_MATRIX_KILL_AFTER=3 target/release/lift matrix --toy \
+	  --methods lift,full --axis "interval=2,4;seed=1,2" --steps 8 \
+	  --ckpt-every 2 --out /tmp/lift_mx_resumed; test $$? -eq 41
+	target/release/lift matrix --toy --methods lift,full \
+	  --axis "interval=2,4;seed=1,2" --steps 8 --ckpt-every 2 \
+	  --out /tmp/lift_mx_resumed

@@ -29,10 +29,18 @@
 //!
 //! lift matrix --methods lift,full --selectors weight_mag,random \
 //!     --ranks 8,32 --seeds 1,2 --steps 200 --out results/matrix
-//!     # resumable scenario grid: each method × selector × sparsity cell
-//!     # persists its outcome + snapshots under --out; rerunning skips
-//!     # finished cells, resumes interrupted ones from their newest
-//!     # snapshot, and recomputes only deleted/corrupt outcomes.
+//!     # resumable N-axis scenario grid (exp::grid): any subset of
+//!     # preset × method × suite × rank × interval × seed, e.g.
+//!     #   --suites arith,nlu --intervals 50,100 --presets tiny,small
+//!     #   --axis "interval=50,100;seed=1,2,3"   (one spec string)
+//!     # Each cell persists a v2 outcome (versioned ledger: target-suite
+//!     # scores + held-out source-domain retention, exp::retention) plus
+//!     # snapshots under --out; rerunning skips finished cells, resumes
+//!     # interrupted ones from their newest snapshot, and recomputes
+//!     # only corrupt outcomes (loudly). Pre-v2 ledgers REFUSE the run
+//!     # until migrated with --migrate-v1 — finished v1 work is never
+//!     # silently recomputed. Ends with summary.txt: per-method target
+//!     # (`tgt`) and source-retention (`ret`) columns per rank.
 //!     # --toy runs artifact-free synthetic cells; --workers caps the
 //!     # cell fan-out (default: LIFT_WORKERS / available parallelism).
 //! ```
@@ -222,6 +230,33 @@ fn selftest() -> anyhow::Result<()> {
             bytes, state.step
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+    // scenario-grid selftest (ISSUE 5): the N-axis expansion is a pure
+    // function of cell field values — axis insertion order must not move
+    // a single cell id (ledger entries key on them)
+    {
+        use lift::exp::grid::{Axis, Grid};
+        use lift::exp::matrix::LEDGER_VERSION;
+        let forward = Grid::new(4)
+            .with_axis(Axis::Method(vec!["lift".into(), "weight_mag".into()]))
+            .with_axis(Axis::Interval(vec![2, 4]))
+            .with_axis(Axis::Seed(vec![1, 2]))
+            .expand();
+        let reversed = Grid::new(4)
+            .with_axis(Axis::Seed(vec![1, 2]))
+            .with_axis(Axis::Interval(vec![2, 4]))
+            .with_axis(Axis::Method(vec!["lift".into(), "weight_mag".into()]))
+            .expand();
+        anyhow::ensure!(
+            forward.len() == 8 && forward == reversed,
+            "grid selftest: axis order moved cell ids"
+        );
+        println!(
+            "grid selftest OK: {} cells (outcome ledger v{LEDGER_VERSION}), \
+             axis-order-invariant ids, e.g. {}",
+            forward.len(),
+            forward[0].id()
+        );
     }
     Ok(())
 }

@@ -80,6 +80,22 @@ pub const NLU: [TaskFamily; 8] = [
     TaskFamily::Stsb,
 ];
 
+/// The named eval suites — `--suite` CLI values and the scenario grid's
+/// suite-axis vocabulary.
+pub const SUITES: [&str; 4] = ["arith", "commonsense", "nlu", "gpqa"];
+
+/// Resolve a named suite to its task families (shared by the CLI and
+/// the scenario-matrix cells, so both reject unknown names identically).
+pub fn suite_families(suite: &str) -> anyhow::Result<Vec<TaskFamily>> {
+    Ok(match suite {
+        "arith" => ARITH.to_vec(),
+        "commonsense" => COMMONSENSE.to_vec(),
+        "nlu" => NLU.to_vec(),
+        "gpqa" => vec![TaskFamily::Gpqa],
+        other => anyhow::bail!("unknown suite '{other}' (known: {})", SUITES.join(", ")),
+    })
+}
+
 impl TaskFamily {
     pub fn name(&self) -> &'static str {
         match self {

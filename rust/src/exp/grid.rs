@@ -1,0 +1,385 @@
+//! N-dimensional scenario grid (ISSUE 5): the generalized axis system
+//! behind `lift matrix`.
+//!
+//! The v1 runner hard-coded a method × selector × rank triple. This
+//! module turns every swept dimension into a first-class [`Axis`] —
+//! preset, method (selectors ride this axis, see
+//! [`crate::exp::matrix::CellSpec`]), task suite, sparsity budget
+//! (`rank`), mask refresh interval, and seed — and a [`Grid`] that
+//! expands any subset of them into [`CellSpec`] cells.
+//!
+//! # Identity contract
+//!
+//! Cell identity must be a pure function of the cell's *field values*,
+//! never of how the grid was described:
+//!
+//! * axes are normalized into one **canonical order** (preset → method →
+//!   suite → rank → interval → seed) before expansion, so building the
+//!   same grid with axes added in any order yields the identical cell
+//!   vector (golden-file-locked by `rust/tests/grid.rs`);
+//! * values within an axis are deduplicated preserving first occurrence,
+//!   and merging two same-kind axes appends + dedups;
+//! * any spec-field change yields a new id (property-tested in
+//!   `rust/tests/properties.rs`), so a changed interval/suite/… can
+//!   never reuse a stale ledger entry.
+//!
+//! Axes absent from a grid take single-value defaults
+//! ([`Axis::default_for`]), so a grid over `{interval, seed}` alone is
+//! still a complete cell description.
+
+use anyhow::Result;
+
+use super::matrix::CellSpec;
+
+/// The six sweepable dimensions, in canonical expansion order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AxisKind {
+    Preset,
+    Method,
+    Suite,
+    Rank,
+    Interval,
+    Seed,
+}
+
+pub const AXIS_KINDS: [AxisKind; 6] = [
+    AxisKind::Preset,
+    AxisKind::Method,
+    AxisKind::Suite,
+    AxisKind::Rank,
+    AxisKind::Interval,
+    AxisKind::Seed,
+];
+
+impl AxisKind {
+    pub fn key(&self) -> &'static str {
+        match self {
+            AxisKind::Preset => "preset",
+            AxisKind::Method => "method",
+            AxisKind::Suite => "suite",
+            AxisKind::Rank => "rank",
+            AxisKind::Interval => "interval",
+            AxisKind::Seed => "seed",
+        }
+    }
+}
+
+/// One grid dimension with its value list.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Axis {
+    Preset(Vec<String>),
+    /// Selector names are method names (`make_method`), so the selector
+    /// axis of the v1 CLI merges into this one.
+    Method(Vec<String>),
+    /// Named eval suite (`data::tasks::suite_families`).
+    Suite(Vec<String>),
+    /// LoRA-rank-equivalent sparsity budget (`lift::budget_for`).
+    Rank(Vec<usize>),
+    /// Mask refresh interval handed to `make_method`.
+    Interval(Vec<usize>),
+    Seed(Vec<u64>),
+}
+
+impl Axis {
+    pub fn kind(&self) -> AxisKind {
+        match self {
+            Axis::Preset(_) => AxisKind::Preset,
+            Axis::Method(_) => AxisKind::Method,
+            Axis::Suite(_) => AxisKind::Suite,
+            Axis::Rank(_) => AxisKind::Rank,
+            Axis::Interval(_) => AxisKind::Interval,
+            Axis::Seed(_) => AxisKind::Seed,
+        }
+    }
+
+    pub fn key(&self) -> &'static str {
+        self.kind().key()
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Axis::Preset(v) | Axis::Method(v) | Axis::Suite(v) => v.len(),
+            Axis::Rank(v) | Axis::Interval(v) => v.len(),
+            Axis::Seed(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The single-value axis an absent dimension defaults to.
+    pub fn default_for(kind: AxisKind) -> Axis {
+        match kind {
+            AxisKind::Preset => Axis::Preset(vec!["tiny".to_string()]),
+            AxisKind::Method => Axis::Method(vec!["lift".to_string()]),
+            AxisKind::Suite => Axis::Suite(vec!["arith".to_string()]),
+            AxisKind::Rank => Axis::Rank(vec![32]),
+            AxisKind::Interval => Axis::Interval(vec![100]),
+            AxisKind::Seed => Axis::Seed(vec![1]),
+        }
+    }
+
+    /// Parse one `key=v1,v2,…` axis description (the CLI `--axis` form).
+    pub fn parse(key: &str, values: &str) -> Result<Axis> {
+        let vals: Vec<&str> = values
+            .split(',')
+            .map(|v| v.trim())
+            .filter(|v| !v.is_empty())
+            .collect();
+        anyhow::ensure!(!vals.is_empty(), "axis '{key}' has no values");
+        let ints = |what: &str| -> Result<Vec<usize>> {
+            vals.iter()
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("axis '{what}' expects integers, got '{v}'"))
+                })
+                .collect()
+        };
+        Ok(match key {
+            "preset" => Axis::Preset(vals.iter().map(|v| v.to_string()).collect()),
+            "method" | "selector" => Axis::Method(vals.iter().map(|v| v.to_string()).collect()),
+            "suite" => Axis::Suite(vals.iter().map(|v| v.to_string()).collect()),
+            "rank" | "sparsity" => Axis::Rank(ints(key)?),
+            "interval" => Axis::Interval(ints(key)?),
+            "seed" => Axis::Seed(
+                vals.iter()
+                    .map(|v| {
+                        v.parse::<u64>()
+                            .map_err(|_| anyhow::anyhow!("axis 'seed' expects integers, got '{v}'"))
+                    })
+                    .collect::<Result<Vec<u64>>>()?,
+            ),
+            other => anyhow::bail!(
+                "unknown axis '{other}' (known: preset, method, suite, rank, interval, seed)"
+            ),
+        })
+    }
+
+    /// Append `other`'s values (same kind only), deduplicating while
+    /// preserving first occurrence.
+    fn merge(&mut self, other: Axis) {
+        fn extend_dedup<T: PartialEq>(dst: &mut Vec<T>, src: Vec<T>) {
+            for v in src {
+                if !dst.contains(&v) {
+                    dst.push(v);
+                }
+            }
+        }
+        match (self, other) {
+            (Axis::Preset(a), Axis::Preset(b)) => extend_dedup(a, b),
+            (Axis::Method(a), Axis::Method(b)) => extend_dedup(a, b),
+            (Axis::Suite(a), Axis::Suite(b)) => extend_dedup(a, b),
+            (Axis::Rank(a), Axis::Rank(b)) => extend_dedup(a, b),
+            (Axis::Interval(a), Axis::Interval(b)) => extend_dedup(a, b),
+            (Axis::Seed(a), Axis::Seed(b)) => extend_dedup(a, b),
+            (a, b) => unreachable!("merge of mismatched axes {:?} / {:?}", a.kind(), b.kind()),
+        }
+    }
+
+    /// Drop duplicate values in place (first occurrence wins).
+    fn dedup_values(&mut self) {
+        fn dd<T: PartialEq + Clone>(v: &mut Vec<T>) {
+            let mut out: Vec<T> = Vec::with_capacity(v.len());
+            for x in v.iter() {
+                if !out.contains(x) {
+                    out.push(x.clone());
+                }
+            }
+            *v = out;
+        }
+        match self {
+            Axis::Preset(v) | Axis::Method(v) | Axis::Suite(v) => dd(v),
+            Axis::Rank(v) | Axis::Interval(v) => dd(v),
+            Axis::Seed(v) => dd(v),
+        }
+    }
+}
+
+/// Parse a whole `--axis` flag value: `key=v1,v2[;key2=v3,…]`.
+pub fn parse_axes(spec: &str) -> Result<Vec<Axis>> {
+    let mut axes = Vec::new();
+    for part in spec.split(';').map(|p| p.trim()).filter(|p| !p.is_empty()) {
+        let (key, values) = part
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("axis spec '{part}' is not key=v1,v2,…"))?;
+        axes.push(Axis::parse(key.trim(), values)?);
+    }
+    Ok(axes)
+}
+
+/// An N-dimensional scenario grid: a set of axes plus the per-cell step
+/// count (steps is campaign config, not a swept dimension — every cell
+/// of one campaign trains the same number of steps).
+#[derive(Clone, Debug)]
+pub struct Grid {
+    axes: Vec<Axis>,
+    pub steps: usize,
+}
+
+impl Grid {
+    pub fn new(steps: usize) -> Grid {
+        Grid {
+            axes: Vec::new(),
+            steps,
+        }
+    }
+
+    /// Add an axis; a same-kind axis already present merges (append +
+    /// dedup) instead of duplicating the dimension. Empty axes are
+    /// ignored — an absent dimension takes its default at expansion.
+    pub fn with_axis(mut self, mut axis: Axis) -> Grid {
+        if axis.is_empty() {
+            return self;
+        }
+        axis.dedup_values();
+        match self.axes.iter().position(|a| a.kind() == axis.kind()) {
+            Some(i) => self.axes[i].merge(axis),
+            None => self.axes.push(axis),
+        }
+        self
+    }
+
+    /// Replace a dimension wholesale (e.g. `--toy` pinning the preset
+    /// axis to `toy` regardless of what the flags described).
+    pub fn set_axis(mut self, mut axis: Axis) -> Grid {
+        axis.dedup_values();
+        self.axes.retain(|a| a.kind() != axis.kind());
+        if !axis.is_empty() {
+            self.axes.push(axis);
+        }
+        self
+    }
+
+    /// Whether a dimension was explicitly given (vs. default-filled at
+    /// expansion) — lets the CLI distinguish "absent" from "swept".
+    pub fn has_axis(&self, kind: AxisKind) -> bool {
+        self.axes.iter().any(|a| a.kind() == kind)
+    }
+
+    /// The values of one dimension, defaulted if absent (string form,
+    /// for reporting).
+    pub fn axis(&self, kind: AxisKind) -> Axis {
+        self.axes
+            .iter()
+            .find(|a| a.kind() == kind)
+            .cloned()
+            .unwrap_or_else(|| Axis::default_for(kind))
+    }
+
+    /// Expand into the full cell list. Axes are walked in canonical
+    /// order (preset → method → suite → rank → interval → seed) no
+    /// matter the order they were added, so both the expansion order
+    /// and every cell id are stable under axis reordering.
+    pub fn expand(&self) -> Vec<CellSpec> {
+        let presets = match self.axis(AxisKind::Preset) {
+            Axis::Preset(v) => v,
+            _ => unreachable!(),
+        };
+        let methods = match self.axis(AxisKind::Method) {
+            Axis::Method(v) => v,
+            _ => unreachable!(),
+        };
+        let suites = match self.axis(AxisKind::Suite) {
+            Axis::Suite(v) => v,
+            _ => unreachable!(),
+        };
+        let ranks = match self.axis(AxisKind::Rank) {
+            Axis::Rank(v) => v,
+            _ => unreachable!(),
+        };
+        let intervals = match self.axis(AxisKind::Interval) {
+            Axis::Interval(v) => v,
+            _ => unreachable!(),
+        };
+        let seeds = match self.axis(AxisKind::Seed) {
+            Axis::Seed(v) => v,
+            _ => unreachable!(),
+        };
+        let mut cells =
+            Vec::with_capacity(presets.len() * methods.len() * suites.len() * ranks.len());
+        for preset in &presets {
+            for method in &methods {
+                for suite in &suites {
+                    for &rank in &ranks {
+                        for &interval in &intervals {
+                            for &seed in &seeds {
+                                cells.push(CellSpec {
+                                    preset: preset.clone(),
+                                    method: method.clone(),
+                                    suite: suite.clone(),
+                                    rank,
+                                    seed,
+                                    steps: self.steps,
+                                    interval,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axes_merge_and_default() {
+        let g = Grid::new(10)
+            .with_axis(Axis::Method(vec!["lift".into(), "full".into()]))
+            .with_axis(Axis::Method(vec!["full".into(), "weight_mag".into()]))
+            .with_axis(Axis::Seed(vec![1, 2, 1]));
+        let cells = g.expand();
+        // 3 methods (full deduped) x 2 seeds (1 deduped), defaults elsewhere
+        assert_eq!(cells.len(), 6);
+        assert!(cells.iter().all(|c| c.preset == "tiny" && c.suite == "arith"));
+        assert!(cells.iter().all(|c| c.rank == 32 && c.interval == 100));
+        let ids: std::collections::HashSet<String> = cells.iter().map(|c| c.id()).collect();
+        assert_eq!(ids.len(), 6);
+    }
+
+    #[test]
+    fn expansion_is_axis_order_invariant() {
+        let a = Grid::new(5)
+            .with_axis(Axis::Seed(vec![1, 2]))
+            .with_axis(Axis::Interval(vec![2, 4]))
+            .with_axis(Axis::Method(vec!["lift".into(), "full".into()]));
+        let b = Grid::new(5)
+            .with_axis(Axis::Method(vec!["lift".into(), "full".into()]))
+            .with_axis(Axis::Interval(vec![2, 4]))
+            .with_axis(Axis::Seed(vec![1, 2]));
+        assert_eq!(a.expand(), b.expand());
+    }
+
+    #[test]
+    fn set_axis_replaces() {
+        let g = Grid::new(5)
+            .with_axis(Axis::Preset(vec!["tiny".into(), "small".into()]))
+            .set_axis(Axis::Preset(vec!["toy".into()]));
+        assert!(g.expand().iter().all(|c| c.preset == "toy"));
+    }
+
+    #[test]
+    fn parse_axes_specs() {
+        let axes = parse_axes("interval=2,4; seed=1,2,3 ;suite=arith,nlu").unwrap();
+        assert_eq!(
+            axes,
+            vec![
+                Axis::Interval(vec![2, 4]),
+                Axis::Seed(vec![1, 2, 3]),
+                Axis::Suite(vec!["arith".into(), "nlu".into()]),
+            ]
+        );
+        assert!(parse_axes("bogus=1").is_err());
+        assert!(parse_axes("interval=abc").is_err());
+        assert!(parse_axes("interval").is_err());
+        assert!(parse_axes("interval=").is_err());
+        assert!(parse_axes("").unwrap().is_empty());
+        // sparsity is an alias for the rank axis
+        assert_eq!(parse_axes("sparsity=8,16").unwrap(), vec![Axis::Rank(vec![8, 16])]);
+    }
+}

@@ -1,31 +1,50 @@
-//! Resumable scenario-matrix runner (ISSUE 3): a grid of
-//! method × selector × sparsity cells, each persisted independently so a
+//! Resumable scenario-matrix runner (ISSUE 3, generalized by ISSUE 5):
+//! an N-dimensional grid of cells (`exp::grid` — preset × method ×
+//! suite × rank × interval × seed), each persisted independently so a
 //! preempted campaign reruns only its unfinished cells.
 //!
 //! Layout under the output directory:
 //!
 //! ```text
 //! <out>/<cell-id>.json    the cell's outcome (written atomically on
-//!                         completion; existing + parseable == done)
+//!                         completion; existing + parseable v2 == done)
 //! <out>/<cell-id>.ckpt/   the cell's trainer snapshots
 //!                         (`step_XXXXXXXX.snap`, see `crate::ckpt`)
+//! <out>/summary.txt       paper-style target-vs-retention table
 //! ```
 //!
-//! [`run_matrix`] partitions the grid into done/todo by reading outcome
-//! files, then fans the todo cells over the shared
-//! `lift::engine::par_map` worker pool. A cell that crashed mid-train
-//! resumes from its newest snapshot on the next campaign run; a
-//! half-written or corrupted outcome file counts as *not done* and is
-//! recomputed (the atomic temp-file + rename write makes that window
-//! tiny). Cell failures are collected per cell — one broken configuration
+//! # Outcome ledger v2
+//!
+//! Outcome files are versioned (`"v": 2`, [`LEDGER_VERSION`]) and carry
+//! the per-cell evaluation pass of `exp::retention`: target-suite scores
+//! plus held-out source-domain scores and the headline `retention`
+//! ratio. The versioning policy mirrors the `LIFTSNAP` snapshot
+//! container:
+//!
+//! * a **corrupt / torn** file reads as *not done* and is recomputed —
+//!   loudly, logging what was discarded (the atomic temp-file + rename
+//!   write makes that window tiny);
+//! * a **v1** (pre-versioning) file is finished work: [`run_matrix`]
+//!   refuses to run until it is explicitly migrated ([`migrate_v1`],
+//!   CLI `--migrate-v1`) or moved aside — it is **never** silently
+//!   recomputed;
+//! * a **future-version** file aborts the campaign (an older binary
+//!   must not destroy a newer one's ledger).
+//!
+//! [`run_matrix`] partitions the grid into done/todo by classifying
+//! outcome files, then fans the todo cells over the shared
+//! `lift::engine::par_map` worker pool — resume-mid-axis: a campaign
+//! interrupted anywhere in the grid skips every finished cell on rerun,
+//! and a cell that crashed mid-train resumes from its newest snapshot.
+//! Cell failures are collected per cell — one broken configuration
 //! never aborts the rest of the campaign.
 //!
 //! Two cell executors share the machinery:
 //! * [`run_toy_cell`] — artifact-free: the toy preset + a synthetic
 //!   gradient stream through the *real* trainer loop
-//!   (`train::train_with`), so checkpoint cadence, resume and the
-//!   skip/recompute ledger are exercisable (and CI-tested,
-//!   `rust/tests/ckpt.rs`) without AOT artifacts;
+//!   (`train::train_with`), so checkpoint cadence, resume, the
+//!   skip/recompute ledger and the retention columns are exercisable
+//!   (and CI-tested, `rust/tests/{ckpt,grid}.rs`) without AOT artifacts;
 //! * [`run_real_cell`] — the full fine-tune + eval path, requiring
 //!   `make artifacts`.
 
@@ -35,8 +54,9 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::ckpt;
-use crate::data::tasks::{TaskMixSource, TaskSet};
-use crate::data::TaskFamily;
+use crate::data::tasks::{suite_families, TaskMixSource, TaskSet};
+use crate::exp::grid::{Axis, Grid};
+use crate::exp::retention::{self, RetentionCfg, SuiteScores};
 use crate::lift::engine::par_map;
 use crate::lift::LiftCfg;
 use crate::methods::{make_method, Ctx, Method, Scope};
@@ -52,12 +72,14 @@ use crate::util::rng::Rng;
 /// One cell of the scenario grid. The selector axis rides the method
 /// axis: sparse selectors ARE `make_method` names (lift, weight_mag,
 /// grad_mag, movement, random, sift), so a grid over
-/// `methods ∪ selectors × ranks × seeds` covers method × selector ×
-/// sparsity without a redundant third constructor path.
-#[derive(Clone, Debug)]
+/// `methods ∪ selectors × …` covers method × selector × sparsity
+/// without a redundant third constructor path.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CellSpec {
     pub preset: String,
     pub method: String,
+    /// named target suite (`data::tasks::suite_families`)
+    pub suite: String,
     /// LoRA-rank-equivalent sparsity budget (`lift::budget_for`).
     pub rank: usize,
     pub seed: u64,
@@ -69,8 +91,21 @@ pub struct CellSpec {
 impl CellSpec {
     /// Stable cell identity over EVERY spec field — outcome file and
     /// checkpoint dir both key on it, so changing the spec (including
-    /// the refresh interval) is a new cell, never a stale reuse.
+    /// the suite or refresh interval) is a new cell, never a stale
+    /// reuse. Pure function of the field values: axis order, CLI
+    /// spelling, etc. cannot move a cell (golden-locked by
+    /// `rust/tests/grid.rs`).
     pub fn id(&self) -> String {
+        format!(
+            "{}_{}_{}_r{}_s{}_t{}_i{}",
+            self.preset, self.method, self.suite, self.rank, self.seed, self.steps, self.interval
+        )
+    }
+
+    /// The id this cell had under the pre-suite v1 ledger — where
+    /// [`migrate_v1`] looks for finished v1 outcomes and orphaned v1
+    /// checkpoint dirs.
+    pub fn v1_id(&self) -> String {
         format!(
             "{}_{}_r{}_s{}_t{}_i{}",
             self.preset, self.method, self.rank, self.seed, self.steps, self.interval
@@ -97,11 +132,39 @@ impl CellSpec {
     }
 }
 
-/// Persisted result of one finished cell.
+/// Version of the on-disk outcome schema this binary reads and writes.
+pub const LEDGER_VERSION: u64 = 2;
+
+/// Why an outcome file did not read as a finished v2 cell.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LedgerError {
+    /// pre-versioning (PR 3/4) outcome — finished work, needs migration
+    V1,
+    /// written by a newer lift than this binary
+    Future(u64),
+    /// unparseable / missing fields — carries what was discarded
+    Corrupt(String),
+}
+
+impl std::fmt::Display for LedgerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LedgerError::V1 => write!(f, "v1 (pre-versioning) outcome"),
+            LedgerError::Future(v) => {
+                write!(f, "ledger version {v} is newer than this binary's v{LEDGER_VERSION}")
+            }
+            LedgerError::Corrupt(why) => write!(f, "corrupt outcome: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for LedgerError {}
+
+/// Persisted result of one finished cell (ledger v2).
 #[derive(Clone, Debug, PartialEq)]
 pub struct CellOutcome {
     pub label: String,
-    /// accuracy per task family (empty for toy cells)
+    /// accuracy per target family (empty for toy cells)
     pub accs: Vec<f64>,
     pub avg: f64,
     pub tail_loss: f32,
@@ -109,11 +172,24 @@ pub struct CellOutcome {
     pub opt_bytes: usize,
     pub seconds: f64,
     pub steps: usize,
+    /// target-suite scores (`None` only on migrated v1 entries)
+    pub target: Option<SuiteScores>,
+    /// held-out source-domain scores (`None` for toy / migrated cells)
+    pub source: Option<SuiteScores>,
+    /// headline source retention (`exp::retention`): real cells the
+    /// post/pre fact-recall ratio, toy cells the untouched-weight
+    /// fraction; `None` where unmeasurable
+    pub retention: Option<f64>,
 }
 
 impl CellOutcome {
     pub fn to_json(&self) -> Json {
+        let scores = |s: &Option<SuiteScores>| match s {
+            Some(s) => s.to_json(),
+            None => Json::Null,
+        };
         Json::obj(vec![
+            ("v", Json::from(LEDGER_VERSION as usize)),
             ("label", Json::str(&self.label)),
             ("accs", Json::arr(self.accs.iter().map(|&a| Json::num(a)))),
             ("avg", Json::num(self.avg)),
@@ -122,30 +198,98 @@ impl CellOutcome {
             ("opt_bytes", Json::from(self.opt_bytes)),
             ("seconds", Json::num(self.seconds)),
             ("steps", Json::from(self.steps)),
+            ("target", scores(&self.target)),
+            ("source", scores(&self.source)),
+            ("retention", retention::opt_json(self.retention)),
         ])
     }
 
-    pub fn from_json(j: &Json) -> Option<CellOutcome> {
-        Some(CellOutcome {
-            label: j.get("label")?.as_str()?.to_string(),
-            accs: j
-                .get("accs")?
-                .as_arr()?
-                .iter()
-                .map(|x| x.as_f64())
-                .collect::<Option<Vec<_>>>()?,
-            avg: j.get("avg")?.as_f64()?,
-            tail_loss: j.get("tail_loss")?.as_f64()? as f32,
-            trainable: j.get("trainable")?.as_usize()?,
-            opt_bytes: j.get("opt_bytes")?.as_usize()?,
-            seconds: j.get("seconds")?.as_f64()?,
-            steps: j.get("steps")?.as_usize()?,
+    /// Version-aware parse. A v1 file (or an unknown/future version) is
+    /// a typed error, never a silent `None` — the caller decides whether
+    /// that means refuse, migrate, or recompute-with-logging; see the
+    /// module policy.
+    pub fn from_json(j: &Json) -> Result<CellOutcome, LedgerError> {
+        let v = match j.get("v").and_then(|v| v.as_f64()) {
+            Some(v) => v as u64,
+            None => {
+                return Err(if v1_fields(j).is_some() {
+                    LedgerError::V1
+                } else {
+                    LedgerError::Corrupt(
+                        "no ledger version field and not a recognizable v1 outcome".into(),
+                    )
+                });
+            }
+        };
+        if v == 1 {
+            return Err(LedgerError::V1);
+        }
+        if v > LEDGER_VERSION {
+            return Err(LedgerError::Future(v));
+        }
+        if v != LEDGER_VERSION {
+            return Err(LedgerError::Corrupt(format!("unknown ledger version {v}")));
+        }
+        v2_fields(j).ok_or_else(|| {
+            LedgerError::Corrupt("v2 outcome is missing fields or has mistyped ones".into())
         })
     }
 }
 
-/// Expand the method × selector × sparsity × seed grid; the selector
-/// axis is deduplicated into the method axis (see [`CellSpec`]).
+/// The fields shared by the v1 and v2 schemas, with the v2-only columns
+/// left empty.
+fn base_fields(j: &Json) -> Option<CellOutcome> {
+    Some(CellOutcome {
+        label: j.get("label")?.as_str()?.to_string(),
+        accs: j
+            .get("accs")?
+            .as_arr()?
+            .iter()
+            .map(|x| x.as_f64())
+            .collect::<Option<Vec<_>>>()?,
+        avg: j.get("avg")?.as_f64()?,
+        tail_loss: j.get("tail_loss")?.as_f64()? as f32,
+        trainable: j.get("trainable")?.as_usize()?,
+        opt_bytes: j.get("opt_bytes")?.as_usize()?,
+        seconds: j.get("seconds")?.as_f64()?,
+        steps: j.get("steps")?.as_usize()?,
+        target: None,
+        source: None,
+        retention: None,
+    })
+}
+
+/// A pre-versioning outcome: all v1 fields present, no version marker.
+/// Migration maps it onto v2 with empty retention columns.
+fn v1_fields(j: &Json) -> Option<CellOutcome> {
+    if j.get("v").is_some() {
+        return None;
+    }
+    base_fields(j)
+}
+
+fn v2_fields(j: &Json) -> Option<CellOutcome> {
+    let scores = |key: &str| -> Option<Option<SuiteScores>> {
+        match j.get(key)? {
+            Json::Null => Some(None),
+            v => Some(Some(SuiteScores::from_json(v)?)),
+        }
+    };
+    let mut out = base_fields(j)?;
+    out.target = scores("target")?;
+    out.source = scores("source")?;
+    out.retention = match j.get("retention")? {
+        Json::Null => None,
+        v => Some(v.as_f64()?),
+    };
+    Some(out)
+}
+
+/// Expand the method × selector × sparsity × seed grid of the v1 CLI;
+/// the selector axis is deduplicated into the method axis (see
+/// [`CellSpec`]). Kept as the simple-flags entry point — richer grids go
+/// through `exp::grid::Grid` directly. The suite axis takes its default
+/// (`arith`).
 pub fn expand_grid(
     preset: &str,
     methods: &[String],
@@ -155,28 +299,14 @@ pub fn expand_grid(
     steps: usize,
     interval: usize,
 ) -> Vec<CellSpec> {
-    let mut names: Vec<String> = Vec::new();
-    for n in methods.iter().chain(selectors) {
-        if !names.contains(n) {
-            names.push(n.clone());
-        }
-    }
-    let mut cells = Vec::new();
-    for name in &names {
-        for &rank in ranks {
-            for &seed in seeds {
-                cells.push(CellSpec {
-                    preset: preset.to_string(),
-                    method: name.clone(),
-                    rank,
-                    seed,
-                    steps,
-                    interval,
-                });
-            }
-        }
-    }
-    cells
+    Grid::new(steps)
+        .with_axis(Axis::Preset(vec![preset.to_string()]))
+        .with_axis(Axis::Method(methods.to_vec()))
+        .with_axis(Axis::Method(selectors.to_vec()))
+        .with_axis(Axis::Rank(ranks.to_vec()))
+        .with_axis(Axis::Seed(seeds.to_vec()))
+        .with_axis(Axis::Interval(vec![interval]))
+        .expand()
 }
 
 pub fn outcome_path(out_dir: &Path, id: &str) -> PathBuf {
@@ -187,11 +317,73 @@ pub fn cell_ckpt_dir(out_dir: &Path, id: &str) -> PathBuf {
     out_dir.join(format!("{id}.ckpt"))
 }
 
-/// A cell's persisted outcome, if it exists AND parses — corruption or a
-/// torn write reads as "not done", so reruns recompute it.
+/// What the ledger holds for one cell id.
+#[derive(Clone, Debug)]
+pub enum LedgerEntry {
+    Missing,
+    Done(Box<CellOutcome>),
+    V1,
+    Future(u64),
+    Corrupt(String),
+}
+
+/// Classify a cell's outcome file without committing to a policy.
+pub fn classify_outcome(out_dir: &Path, id: &str) -> LedgerEntry {
+    let path = outcome_path(out_dir, id);
+    let s = match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return LedgerEntry::Missing,
+        Err(e) => return LedgerEntry::Corrupt(format!("unreadable: {e}")),
+    };
+    let j = match Json::parse(&s) {
+        Ok(j) => j,
+        Err(e) => {
+            let head: String = s.chars().take(48).collect();
+            return LedgerEntry::Corrupt(format!("unparseable ({e}); starts {head:?}"));
+        }
+    };
+    match CellOutcome::from_json(&j) {
+        Ok(o) => LedgerEntry::Done(Box::new(o)),
+        Err(LedgerError::V1) => LedgerEntry::V1,
+        Err(LedgerError::Future(v)) => LedgerEntry::Future(v),
+        Err(LedgerError::Corrupt(why)) => LedgerEntry::Corrupt(why),
+    }
+}
+
+/// A cell's persisted outcome, if it exists AND parses as the current
+/// ledger version. Anything else reads as `None` *with a log line
+/// naming what was discarded* — and [`run_matrix`] additionally refuses
+/// to recompute over v1/future entries rather than wasting their
+/// finished work (this function is the render-side convenience; the
+/// policy gate lives in `run_matrix`).
 pub fn read_outcome(out_dir: &Path, id: &str) -> Option<CellOutcome> {
+    match classify_outcome(out_dir, id) {
+        LedgerEntry::Done(o) => Some(*o),
+        LedgerEntry::Missing => None,
+        LedgerEntry::V1 => {
+            log::warn!(
+                "outcome {id} is a v1 ledger entry — not readable as v{LEDGER_VERSION}; \
+                 migrate with `lift matrix --migrate-v1`"
+            );
+            None
+        }
+        LedgerEntry::Future(v) => {
+            log::warn!(
+                "outcome {id} was written by ledger v{v} (> v{LEDGER_VERSION}); refusing to read"
+            );
+            None
+        }
+        LedgerEntry::Corrupt(why) => {
+            log::warn!("discarding corrupt outcome {id}: {why}");
+            None
+        }
+    }
+}
+
+/// A finished v1 outcome at the given (v1) id, if present.
+fn read_v1(out_dir: &Path, id: &str) -> Option<CellOutcome> {
     let s = std::fs::read_to_string(outcome_path(out_dir, id)).ok()?;
-    CellOutcome::from_json(&Json::parse(&s).ok()?)
+    v1_fields(&Json::parse(&s).ok()?)
 }
 
 fn write_outcome(out_dir: &Path, id: &str, out: &CellOutcome) -> Result<()> {
@@ -200,6 +392,82 @@ fn write_outcome(out_dir: &Path, id: &str, out: &CellOutcome) -> Result<()> {
     std::fs::write(&tmp, out.to_json().to_string())?;
     std::fs::rename(&tmp, &path)?;
     Ok(())
+}
+
+/// Explicitly migrate a campaign directory's v1 ledger onto the given
+/// cells: finished v1 outcomes are rewritten as v2 under the cell's v2
+/// id (every v1 field preserved; the retention columns start empty and
+/// render `-`), and orphaned v1 checkpoint dirs are renamed so
+/// interrupted v1 cells resume instead of restarting. Every move is
+/// logged. Returns the ids whose outcome was migrated.
+///
+/// A v1 id records no suite, so a v1 artifact can only be migrated when
+/// the grid maps it onto exactly ONE v2 cell — if the grid sweeps
+/// several suites, the migration would have to guess which suite the v1
+/// campaign trained, and a wrong guess silently mislabels finished
+/// work. That case is refused: rerun with the single original suite.
+pub fn migrate_v1(out_dir: &Path, cells: &[CellSpec]) -> Result<Vec<String>> {
+    let mut by_v1: std::collections::BTreeMap<String, Vec<&CellSpec>> =
+        std::collections::BTreeMap::new();
+    for c in cells {
+        by_v1.entry(c.v1_id()).or_default().push(c);
+    }
+    let mut migrated = Vec::new();
+    for (v1, candidates) in &by_v1 {
+        // a v1-FORMAT file already sitting at a v2 path (hand-renamed)
+        // names its suite in the filename — always unambiguous, rewrite
+        // in place
+        for c in candidates {
+            let id = c.id();
+            if matches!(classify_outcome(out_dir, &id), LedgerEntry::V1) {
+                if let Some(out) = read_v1(out_dir, &id) {
+                    write_outcome(out_dir, &id, &out)?;
+                    log::info!(
+                        "migrated v1-format outcome at {id} in place \
+                         (retention columns start empty)"
+                    );
+                    migrated.push(id);
+                }
+            }
+        }
+        // artifacts under the suite-less v1 id need the unambiguity check
+        let v1_outcome = read_v1(out_dir, v1);
+        let v1_ckpt = cell_ckpt_dir(out_dir, v1);
+        if v1_outcome.is_none() && !v1_ckpt.is_dir() {
+            continue;
+        }
+        if candidates.len() > 1 {
+            let suites: Vec<&str> = candidates.iter().map(|c| c.suite.as_str()).collect();
+            anyhow::bail!(
+                "cannot migrate v1 cell {v1}: the grid maps it onto {} v2 cells \
+                 (suites {}) and a v1 ledger records no suite — rerun --migrate-v1 \
+                 with only the suite the v1 campaign actually trained",
+                candidates.len(),
+                suites.join(", ")
+            );
+        }
+        let c = candidates[0];
+        let id = c.id();
+        if let Some(out) = v1_outcome {
+            if !matches!(classify_outcome(out_dir, &id), LedgerEntry::Done(_)) {
+                write_outcome(out_dir, &id, &out)?;
+                std::fs::remove_file(outcome_path(out_dir, v1))?;
+                log::info!("migrated v1 outcome {v1} -> {id} (retention columns start empty)");
+                migrated.push(id.clone());
+            }
+        }
+        // snapshots: an interrupted v1 cell has a ckpt dir but no outcome
+        let new_ckpt = cell_ckpt_dir(out_dir, &id);
+        if v1_ckpt.is_dir() && !new_ckpt.exists() {
+            std::fs::rename(&v1_ckpt, &new_ckpt)?;
+            log::info!(
+                "migrated v1 checkpoint dir {} -> {}",
+                v1_ckpt.display(),
+                new_ckpt.display()
+            );
+        }
+    }
+    Ok(migrated)
 }
 
 #[derive(Debug, Default)]
@@ -217,6 +485,11 @@ pub struct MatrixReport {
 /// spec (cells execute on any worker in any order); it should route
 /// through the cell's checkpoint dir so an interrupted cell resumes
 /// instead of restarting.
+///
+/// Ledger policy (see the module doc): finished v2 cells are skipped,
+/// corrupt files are recomputed loudly, and the campaign **refuses to
+/// start** while v1 or future-version entries are present — finished
+/// work is never silently recomputed.
 pub fn run_matrix<F>(
     out_dir: &Path,
     cells: &[CellSpec],
@@ -229,12 +502,49 @@ where
     std::fs::create_dir_all(out_dir)?;
     let mut report = MatrixReport::default();
     let mut todo: Vec<&CellSpec> = Vec::new();
+    let mut v1_pending: Vec<String> = Vec::new();
     for c in cells {
-        if read_outcome(out_dir, &c.id()).is_some() {
-            report.skipped.push(c.id());
-        } else {
-            todo.push(c);
+        let id = c.id();
+        match classify_outcome(out_dir, &id) {
+            LedgerEntry::Done(_) => report.skipped.push(id),
+            LedgerEntry::V1 => v1_pending.push(format!("{id} (v1 format at the v2 path)")),
+            LedgerEntry::Future(v) => anyhow::bail!(
+                "outcome {id} under {out_dir:?} was written by ledger v{v}, newer than this \
+                 binary's v{LEDGER_VERSION} — refusing to run over it; upgrade lift or point \
+                 --out at a fresh directory"
+            ),
+            LedgerEntry::Corrupt(why) => {
+                log::warn!("outcome {id} is corrupt ({why}); recomputing the cell");
+                todo.push(c);
+            }
+            LedgerEntry::Missing => {
+                let v1 = c.v1_id();
+                if read_v1(out_dir, &v1).is_some() {
+                    v1_pending.push(format!("{v1} (finished v1 cell)"));
+                } else {
+                    // a v1-era file that does not even parse as v1 is
+                    // corrupt: recompute, but say what is being ignored
+                    // (the loud-recompute policy applies to v1 too)
+                    let v1_path = outcome_path(out_dir, &v1);
+                    if v1_path.exists() {
+                        log::warn!(
+                            "ignoring unreadable v1-era outcome file {} (recomputing cell {id})",
+                            v1_path.display()
+                        );
+                    }
+                    todo.push(c);
+                }
+            }
         }
+    }
+    if !v1_pending.is_empty() {
+        anyhow::bail!(
+            "{} v1 ledger file(s) under {out_dir:?}:\n  {}\nthese hold finished work this \
+             binary would otherwise recompute — migrate them with `lift matrix --migrate-v1` \
+             (or `exp::matrix::migrate_v1`), or point --out at a fresh directory",
+            v1_pending.len(),
+            v1_pending.join("\n  ")
+        );
     }
     log::info!(
         "matrix: {} cells, {} done, {} to run ({} workers)",
@@ -243,10 +553,27 @@ where
         todo.len(),
         workers.max(1)
     );
+    // Test hook for the CI kill/resume smoke: LIFT_MATRIX_KILL_AFTER=N
+    // hard-exits the process (code 41) once N cell outcomes have LANDED
+    // on disk this run — after write_outcome, so exactly N finished
+    // cells are skippable on resume while other workers die mid-cell
+    // (a faithful `kill -9` mid-campaign).
+    let kill_after: Option<usize> = std::env::var("LIFT_MATRIX_KILL_AFTER")
+        .ok()
+        .and_then(|v| v.parse().ok());
+    let landed = std::sync::atomic::AtomicUsize::new(0);
     let results = par_map(workers.max(1), todo, |_, spec| {
         let id = spec.id();
         let res = run_cell(spec).and_then(|out| {
             write_outcome(out_dir, &id, &out)?;
+            if let Some(n) = kill_after {
+                if landed.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1 >= n {
+                    eprintln!(
+                        "LIFT_MATRIX_KILL_AFTER={n}: killing the campaign after cell {id}"
+                    );
+                    std::process::exit(41);
+                }
+            }
             Ok(out)
         });
         (id, res.map_err(|e| format!("{e:#}")))
@@ -262,12 +589,15 @@ where
 
 // ---- campaign summary ---------------------------------------------------
 
-/// Paper-style method × rank summary over the persisted cell outcomes:
-/// rows are methods, columns are sparsity budgets (ranks), each cell the
-/// mean over seeds of the outcome metric — average task accuracy for
-/// real cells, tail loss for `--toy` cells (which have no eval). Cells
-/// without a finished outcome render as `-`, so a partially-run
-/// campaign still summarizes cleanly.
+/// Paper-style summary over the persisted cell outcomes: rows are
+/// methods, and each sparsity budget (rank) contributes a `tgt` column
+/// (mean over seeds — and any other swept axes — of the target metric:
+/// average task accuracy for real cells, tail loss for `--toy` cells)
+/// and a `ret` column (mean source retention, `exp::retention` — the
+/// paper's "LIFT forgets less" claim as a table). Cells without a
+/// finished v2 outcome render as `-`, so an empty, partially-run,
+/// all-failed or partially-corrupt campaign still summarizes cleanly
+/// (regression-tested by `rust/tests/grid.rs`).
 pub fn summary_table(out_dir: &Path, cells: &[CellSpec]) -> String {
     let mut methods: Vec<String> = Vec::new();
     let mut ranks: Vec<usize> = Vec::new();
@@ -280,8 +610,16 @@ pub fn summary_table(out_dir: &Path, cells: &[CellSpec]) -> String {
         }
     }
     ranks.sort_unstable();
-    // (method, rank) -> (sum avg, sum tail loss, count, label)
-    let mut agg: std::collections::BTreeMap<(String, usize), (f64, f64, usize, String)> =
+    #[derive(Default)]
+    struct Agg {
+        avg: f64,
+        tail: f64,
+        n: usize,
+        ret: f64,
+        n_ret: usize,
+        label: String,
+    }
+    let mut agg: std::collections::BTreeMap<(String, usize), Agg> =
         std::collections::BTreeMap::new();
     let mut done = 0usize;
     let mut any_acc = false;
@@ -289,39 +627,54 @@ pub fn summary_table(out_dir: &Path, cells: &[CellSpec]) -> String {
         if let Some(o) = read_outcome(out_dir, &c.id()) {
             done += 1;
             any_acc |= !o.accs.is_empty();
-            let e = agg
-                .entry((c.method.clone(), c.rank))
-                .or_insert((0.0, 0.0, 0, o.label.clone()));
-            e.0 += o.avg;
-            e.1 += o.tail_loss as f64;
-            e.2 += 1;
+            let e = agg.entry((c.method.clone(), c.rank)).or_default();
+            if e.label.is_empty() {
+                e.label = o.label.clone();
+            }
+            e.avg += o.avg;
+            e.tail += o.tail_loss as f64;
+            e.n += 1;
+            if let Some(r) = o.retention {
+                e.ret += r;
+                e.n_ret += 1;
+            }
         }
     }
     let metric = if any_acc { "mean avg accuracy" } else { "mean tail loss" };
     let mut out = format!(
-        "scenario matrix: {done}/{} cells finished | cell = {metric} over seeds\n\n",
+        "scenario matrix: {done}/{} cells finished | tgt = {metric} over seeds | \
+         ret = mean source retention (1.0 = nothing forgotten)\n\n",
         cells.len()
     );
     out.push_str(&format!("{:<18}", "method"));
     for &r in &ranks {
-        out.push_str(&format!("{:>12}", format!("r={r}")));
+        out.push_str(&format!("{:>14}{:>10}", format!("r={r} tgt"), format!("r={r} ret")));
     }
     out.push('\n');
     for m in &methods {
         // prefer the method's self-reported label when any cell finished
         let label = ranks
             .iter()
-            .find_map(|r| agg.get(&(m.clone(), *r)).map(|e| e.3.clone()))
+            .find_map(|r| {
+                agg.get(&(m.clone(), *r))
+                    .map(|e| e.label.clone())
+                    .filter(|l| !l.is_empty())
+            })
             .unwrap_or_else(|| m.clone());
         out.push_str(&format!("{label:<18}"));
         for &r in &ranks {
             match agg.get(&(m.clone(), r)) {
-                Some(&(sum_avg, sum_tail, n, _)) if n > 0 => {
-                    let sum = if any_acc { sum_avg } else { sum_tail };
-                    let v = sum / n as f64;
-                    out.push_str(&format!("{:>12}", format!("{v:.4} ({n}s)")));
+                Some(e) if e.n > 0 => {
+                    let sum = if any_acc { e.avg } else { e.tail };
+                    let v = sum / e.n as f64;
+                    out.push_str(&format!("{:>14}", format!("{v:.4} ({}s)", e.n)));
+                    if e.n_ret > 0 {
+                        out.push_str(&format!("{:>10}", format!("{:.4}", e.ret / e.n_ret as f64)));
+                    } else {
+                        out.push_str(&format!("{:>10}", "-"));
+                    }
                 }
-                _ => out.push_str(&format!("{:>12}", "-")),
+                _ => out.push_str(&format!("{:>14}{:>10}", "-", "-")),
             }
         }
         out.push('\n');
@@ -418,6 +771,12 @@ pub fn synth_step(params: &[Tensor], rng: &mut Rng) -> Result<(f32, Vec<Tensor>)
 /// per-cell engine pool — keep it 1 when cells themselves fan over
 /// `par_map` (the outer pool already saturates the machine, and
 /// determinism holds for any split either way).
+///
+/// Toy cells have no executable model, so their ledger entry carries
+/// the artifact-free retention proxy: `target.perplexity` is the tail
+/// training perplexity and `retention` the untouched-weight fraction
+/// (`exp::retention::toy_retention`) — both bit-deterministic for any
+/// worker count and across crash-resume.
 pub fn run_toy_cell(
     spec: &CellSpec,
     out_dir: &Path,
@@ -449,6 +808,9 @@ pub fn run_toy_cell(
         &cfg,
         resume_from.as_deref(),
     )?;
+    // retention proxy vs the (regenerated, deterministic) init weights
+    let init = toy_params(0x1717 ^ spec.seed);
+    let kept = retention::toy_retention(&init, &params);
     Ok(CellOutcome {
         label: method.name(),
         accs: Vec::new(),
@@ -458,16 +820,26 @@ pub fn run_toy_cell(
         opt_bytes: method.opt_bytes(),
         seconds: log.seconds,
         steps: spec.steps,
+        target: Some(SuiteScores {
+            accuracy: None,
+            perplexity: retention::fin(log.tail_ppl(20)),
+            fact_recall: None,
+        }),
+        source: None,
+        retention: retention::fin(kept),
     })
 }
 
 // ---- artifact-backed real cells ----------------------------------------
 
-/// Shared knobs for [`run_real_cell`].
+/// Shared knobs for [`run_real_cell`]. The target suite is per-cell
+/// (`CellSpec::suite`); this carries everything suite-independent.
 #[derive(Clone, Debug)]
 pub struct RealCellCfg {
-    pub families: Vec<TaskFamily>,
-    pub pt_steps: usize,
+    /// pretrain steps for the base model; `None` = the per-preset
+    /// default (`exp::harness::default_pretrain_steps`), so multi-preset
+    /// grids don't inherit one preset's step count
+    pub pt_steps: Option<usize>,
     pub n_train: usize,
     pub n_test: usize,
     pub ckpt_every: usize,
@@ -475,6 +847,14 @@ pub struct RealCellCfg {
     pub ckpt_keep: usize,
     /// per-cell engine pool; keep 1 when cells fan over `par_map`
     pub inner_workers: usize,
+    /// source-domain scoring knobs (held-out probe suite, corpus ppl,
+    /// fact recall) — see `exp::retention`
+    pub retention: RetentionCfg,
+    /// pre-computed base-model source scores per preset (the retention
+    /// ratio's denominator — identical for every cell of a preset, so
+    /// the CLI scores each base once; a missing entry is computed
+    /// in-cell as a fallback)
+    pub base_source: std::collections::BTreeMap<String, SuiteScores>,
 }
 
 /// One real fine-tune + eval cell. Builds its own `Runtime`/`ModelExec`
@@ -482,13 +862,19 @@ pub struct RealCellCfg {
 /// matrix worker; the pretrained base must be pre-warmed sequentially
 /// first (the CLI does) so parallel cells hit the `runs/` cache
 /// read-only. Resumes from the cell's newest snapshot when one exists.
+/// Ends with the per-cell evaluation pass: target-suite scores plus
+/// held-out source-domain scores against the pretrained base
+/// (`exp::retention`).
 pub fn run_real_cell(spec: &CellSpec, out_dir: &Path, rc: &RealCellCfg) -> Result<CellOutcome> {
     let rt = Runtime::from_default()?;
     let exec = ModelExec::load(&rt, &spec.preset)?;
-    let mut params = pretrain::ensure_pretrained(&rt, &exec, rc.pt_steps, 1)?;
+    let pt_steps = rc
+        .pt_steps
+        .unwrap_or_else(|| crate::exp::harness::default_pretrain_steps(&spec.preset));
+    let mut params = pretrain::ensure_pretrained(&rt, &exec, pt_steps, 1)?;
     let corpus = pretrain::world(&exec);
-    let sets: Vec<TaskSet> = rc
-        .families
+    let families = suite_families(&spec.suite)?;
+    let sets: Vec<TaskSet> = families
         .iter()
         .map(|&f| {
             TaskSet::generate(f, &corpus.vocab, &corpus.kg, rc.n_train, rc.n_test, spec.seed)
@@ -519,10 +905,25 @@ pub fn run_real_cell(spec: &CellSpec, out_dir: &Path, rc: &RealCellCfg) -> Resul
         )?,
         None => train::train(&exec, &mut src, &mut *method, &mut ctx, &mut params, &cfg)?,
     };
-    let mut accs = Vec::with_capacity(sets.len());
-    for set in &sets {
-        accs.push(crate::train::eval::accuracy(&exec, &params, &set.test)?);
-    }
+    // per-cell evaluation pass: target suite, then the held-out source
+    // domain for the tuned weights AND the base (the retention ratio's
+    // denominator)
+    let (accs, target) = retention::score_target(&exec, &params, &sets)?;
+    let source = retention::score_source(&rt, &exec, &params, &corpus, &rc.retention)?;
+    let base_src = match rc.base_source.get(&spec.preset) {
+        Some(s) => *s,
+        None => {
+            // fallback for direct callers: re-obtain the base from the
+            // runs/ disk cache (cheap) instead of keeping a full clone
+            // of it resident through the whole fine-tune
+            let base = pretrain::ensure_pretrained(&rt, &exec, pt_steps, 1)?;
+            retention::score_source(&rt, &exec, &base, &corpus, &rc.retention)?
+        }
+    };
+    let ret = match (base_src.fact_recall, source.fact_recall) {
+        (Some(b), Some(a)) => retention::retention_ratio(b, a),
+        _ => None,
+    };
     let avg = accs.iter().sum::<f64>() / accs.len().max(1) as f64;
     Ok(CellOutcome {
         label: method.name(),
@@ -533,6 +934,9 @@ pub fn run_real_cell(spec: &CellSpec, out_dir: &Path, rc: &RealCellCfg) -> Resul
         opt_bytes: method.opt_bytes(),
         seconds: log.seconds,
         steps: spec.steps,
+        target: Some(target),
+        source: Some(source),
+        retention: ret,
     })
 }
 
@@ -555,12 +959,13 @@ mod tests {
         assert_eq!(cells.len(), 12);
         let ids: std::collections::HashSet<String> = cells.iter().map(|c| c.id()).collect();
         assert_eq!(ids.len(), 12, "cell ids must be unique");
-        assert!(ids.contains("toy_weight_mag_r8_s2_t10_i5"));
+        assert!(ids.contains("toy_weight_mag_arith_r8_s2_t10_i5"));
         // every spec field is part of the identity (a changed interval
-        // must not reuse another cell's ledger entry)
+        // or suite must not reuse another cell's ledger entry)
         let a = CellSpec {
             preset: "toy".into(),
             method: "lift".into(),
+            suite: "arith".into(),
             rank: 4,
             seed: 1,
             steps: 10,
@@ -568,6 +973,10 @@ mod tests {
         };
         let b = CellSpec { interval: 7, ..a.clone() };
         assert_ne!(a.id(), b.id());
+        let c = CellSpec { suite: "nlu".into(), ..a.clone() };
+        assert_ne!(a.id(), c.id());
+        // and the v1 id is the pre-suite form
+        assert_eq!(a.v1_id(), "toy_lift_r4_s1_t10_i5");
     }
 
     #[test]
@@ -578,7 +987,7 @@ mod tests {
         let cells = expand_grid("toy", &["lift".into(), "full".into()], &[], &[2, 4], &[1, 2], 4, 2);
         assert_eq!(cells.len(), 8);
         // finish both seeds of (lift, r=2) and one seed of (full, r=4)
-        let finish = |method: &str, rank: usize, seed: u64, tail: f32| {
+        let finish = |method: &str, rank: usize, seed: u64, tail: f32, ret: Option<f64>| {
             let c = cells
                 .iter()
                 .find(|c| c.method == method && c.rank == rank && c.seed == seed)
@@ -592,20 +1001,24 @@ mod tests {
                 opt_bytes: 12,
                 seconds: 0.1,
                 steps: 4,
+                target: None,
+                source: None,
+                retention: ret,
             };
             write_outcome(&dir, &c.id(), &out).unwrap();
         };
-        finish("lift", 2, 1, 0.5);
-        finish("lift", 2, 2, 0.7);
-        finish("full", 4, 1, 0.25);
+        finish("lift", 2, 1, 0.5, Some(0.9));
+        finish("lift", 2, 2, 0.7, Some(0.7));
+        finish("full", 4, 1, 0.25, None);
         let table = summary_table(&dir, &cells);
         assert!(table.contains("3/8 cells finished"), "{table}");
         assert!(table.contains("mean tail loss"), "toy cells report loss: {table}");
-        // (lift, r=2): mean of 0.5 and 0.7 over 2 seeds
+        // (lift, r=2): mean of 0.5 and 0.7 over 2 seeds; retention 0.8
         assert!(table.contains("0.6000 (2s)"), "{table}");
+        assert!(table.contains("0.8000"), "{table}");
         assert!(table.contains("0.2500 (1s)"), "{table}");
-        // unfinished cells render as '-', and both rank columns appear
-        assert!(table.contains("r=2") && table.contains("r=4"), "{table}");
+        // unfinished cells render as '-', and both column kinds appear
+        assert!(table.contains("r=2 tgt") && table.contains("r=4 ret"), "{table}");
         assert!(table.contains('-'), "{table}");
         let (path, persisted) = write_summary(&dir, &cells).unwrap();
         assert_eq!(persisted, table);
@@ -614,7 +1027,7 @@ mod tests {
     }
 
     #[test]
-    fn outcome_json_roundtrip() {
+    fn outcome_json_roundtrip_and_version_gate() {
         let out = CellOutcome {
             label: "LIFT".into(),
             accs: vec![0.5, 0.75],
@@ -624,11 +1037,41 @@ mod tests {
             opt_bytes: 7680,
             seconds: 1.5,
             steps: 10,
+            target: Some(SuiteScores {
+                accuracy: Some(62.5),
+                perplexity: Some(1.25),
+                fact_recall: None,
+            }),
+            source: Some(SuiteScores {
+                accuracy: Some(40.0),
+                perplexity: Some(3.5),
+                fact_recall: Some(0.2),
+            }),
+            retention: Some(0.8),
         };
         let j = out.to_json().to_string();
+        assert!(j.contains("\"v\":2"), "{j}");
         let back = CellOutcome::from_json(&Json::parse(&j).unwrap()).unwrap();
         assert_eq!(back, out);
-        // missing fields read as not-done, not as a panic
-        assert!(CellOutcome::from_json(&Json::parse("{\"label\":\"x\"}").unwrap()).is_none());
+        // missing fields read as corrupt (not-done), not as a panic
+        assert_eq!(
+            CellOutcome::from_json(&Json::parse("{\"label\":\"x\",\"v\":2}").unwrap()),
+            Err(LedgerError::Corrupt(
+                "v2 outcome is missing fields or has mistyped ones".into()
+            ))
+        );
+        // a v1-shaped file is a typed V1 error, never corrupt
+        let v1 = "{\"label\":\"x\",\"accs\":[],\"avg\":0,\"tail_loss\":0.5,\"trainable\":1,\
+                  \"opt_bytes\":8,\"seconds\":0.1,\"steps\":4}";
+        assert_eq!(
+            CellOutcome::from_json(&Json::parse(v1).unwrap()),
+            Err(LedgerError::V1)
+        );
+        // a future version is a typed rejection
+        let v9 = "{\"v\":9,\"label\":\"x\"}";
+        assert_eq!(
+            CellOutcome::from_json(&Json::parse(v9).unwrap()),
+            Err(LedgerError::Future(9))
+        );
     }
 }

@@ -6,10 +6,12 @@
 
 pub mod ablations;
 pub mod figures;
+pub mod grid;
 pub mod harness;
 pub mod matrix;
 pub mod memory_fig;
 pub mod perturb_fig;
+pub mod retention;
 pub mod tables;
 pub mod toy;
 

@@ -1,0 +1,250 @@
+//! Per-cell evaluation pass: target-suite scores plus **source-domain
+//! retention** (ISSUE 5).
+//!
+//! The paper's second headline claim is that LIFT retains up to 20% more
+//! source-domain knowledge than Full FT / LoRA. To make that claim a
+//! reproducible table, every finished matrix cell is scored on two
+//! suites:
+//!
+//! * **target** — the suite the cell fine-tuned on: exact-match accuracy
+//!   per family plus teacher-forced perplexity over the held-out test
+//!   split;
+//! * **source** — the *pretraining world* the cell never fine-tuned on:
+//!   accuracy on a held-out relational-QA probe suite (generated at a
+//!   reserved seed, disjoint from every fine-tune set by the prompt-hash
+//!   split), held-out corpus perplexity (the Wikitext analog, Fig. 2a)
+//!   and KG fact recall (Fig. 2b).
+//!
+//! The headline `retention` number is the ratio of post-fine-tune to
+//! pre-fine-tune source fact recall ([`retention_ratio`]): 1.0 = nothing
+//! forgotten, 0.5 = half the base model's factual probability mass lost.
+//! `--toy` cells have no executable model, so their retention proxy is
+//! the untouched-weight fraction ([`toy_retention`]) — sparse methods
+//! leave non-principal weights bit-identical while Full FT moves all of
+//! them, which reproduces the paper's qualitative ordering in the
+//! artifact-free world (asserted by `rust/tests/grid.rs`).
+//!
+//! All scores are persisted in the v2 outcome ledger
+//! (`exp::matrix::CellOutcome`) and surfaced as the `ret` columns of
+//! `summary.txt`.
+
+use anyhow::Result;
+
+use crate::data::tasks::TaskSet;
+use crate::data::{CorpusGen, TaskFamily};
+use crate::runtime::model_exec::ModelExec;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::train::eval;
+use crate::util::json::Json;
+
+/// The three suite-level metrics of one evaluation pass. `None` means
+/// "not applicable / not measured" (e.g. fact recall on a target suite,
+/// or everything on a migrated v1 ledger entry) and renders as `-`.
+/// Non-finite values are stored as `None` ([`fin`]) — the JSON ledger
+/// cannot hold NaN/inf.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct SuiteScores {
+    /// exact-match accuracy in percent (mean over the suite's families)
+    pub accuracy: Option<f64>,
+    /// teacher-forced perplexity over the suite's held-out split
+    pub perplexity: Option<f64>,
+    /// mean P(ground-truth entity | "e r") over probed KG facts
+    pub fact_recall: Option<f64>,
+}
+
+/// Clamp a metric for the JSON ledger: finite values pass through,
+/// NaN/inf become `None` (rendered `-`), never invalid JSON.
+pub fn fin(x: f64) -> Option<f64> {
+    x.is_finite().then_some(x)
+}
+
+/// `Option<f64>` → JSON with the ledger's None encoding (`null`).
+/// Shared with `exp::matrix`'s outcome writer so the rule lives once.
+pub(crate) fn opt_json(x: Option<f64>) -> Json {
+    match x {
+        Some(v) => Json::num(v),
+        None => Json::Null,
+    }
+}
+
+fn opt_f64(j: &Json, key: &str) -> Option<Option<f64>> {
+    match j.get(key)? {
+        Json::Null => Some(None),
+        v => Some(Some(v.as_f64()?)),
+    }
+}
+
+impl SuiteScores {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("accuracy", opt_json(self.accuracy)),
+            ("perplexity", opt_json(self.perplexity)),
+            ("fact_recall", opt_json(self.fact_recall)),
+        ])
+    }
+
+    /// Strict parse: all three keys must be present (`null` = None).
+    pub fn from_json(j: &Json) -> Option<SuiteScores> {
+        Some(SuiteScores {
+            accuracy: opt_f64(j, "accuracy")?,
+            perplexity: opt_f64(j, "perplexity")?,
+            fact_recall: opt_f64(j, "fact_recall")?,
+        })
+    }
+}
+
+/// Knobs for the source-domain scoring pass.
+#[derive(Clone, Debug)]
+pub struct RetentionCfg {
+    /// held-out source probe suite: relational-QA families whose samples
+    /// query the pretraining KG directly
+    pub source_families: Vec<TaskFamily>,
+    /// test samples per source family
+    pub n_test: usize,
+    /// held-out corpus batches for source perplexity
+    pub ppl_batches: usize,
+    /// KG facts probed for fact recall
+    pub n_facts: usize,
+    /// reserved seed for the probe suite + corpus batches — fixed so
+    /// every cell (and the base model) is scored on the same probes
+    pub probe_seed: u64,
+}
+
+impl Default for RetentionCfg {
+    fn default() -> Self {
+        RetentionCfg {
+            source_families: vec![TaskFamily::BoolQ, TaskFamily::ArcE],
+            n_test: 60,
+            ppl_batches: 8,
+            n_facts: 50,
+            probe_seed: 0x5EED_0F,
+        }
+    }
+}
+
+/// Score the target suite: per-family exact-match accuracies plus the
+/// suite-level [`SuiteScores`] (mean accuracy + teacher-forced test-split
+/// perplexity; fact recall is a source-domain probe, so `None` here).
+pub fn score_target(
+    exec: &ModelExec,
+    params: &[Tensor],
+    sets: &[TaskSet],
+) -> Result<(Vec<f64>, SuiteScores)> {
+    let mut accs = Vec::with_capacity(sets.len());
+    let mut test: Vec<_> = Vec::new();
+    for set in sets {
+        accs.push(eval::accuracy(exec, params, &set.test)?);
+        test.extend(set.test.iter().cloned());
+    }
+    let avg = accs.iter().sum::<f64>() / accs.len().max(1) as f64;
+    let ppl = eval::sample_perplexity(exec, params, &test)?;
+    Ok((
+        accs,
+        SuiteScores {
+            accuracy: fin(avg),
+            perplexity: fin(ppl),
+            fact_recall: None,
+        },
+    ))
+}
+
+/// Score the held-out source domain: probe-suite accuracy, corpus
+/// perplexity and KG fact recall, all at the reserved probe seed.
+pub fn score_source(
+    rt: &Runtime,
+    exec: &ModelExec,
+    params: &[Tensor],
+    corpus: &CorpusGen,
+    rc: &RetentionCfg,
+) -> Result<SuiteScores> {
+    let mut accs = Vec::with_capacity(rc.source_families.len());
+    for &f in &rc.source_families {
+        let set = TaskSet::generate(f, &corpus.vocab, &corpus.kg, 1, rc.n_test, rc.probe_seed);
+        accs.push(eval::accuracy(exec, params, &set.test)?);
+    }
+    let acc = accs.iter().sum::<f64>() / accs.len().max(1) as f64;
+    let ppl = eval::perplexity(exec, params, corpus, rc.ppl_batches, rc.probe_seed)?;
+    let recall = eval::fact_recall(rt, exec, params, corpus, rc.n_facts, rc.probe_seed)?;
+    Ok(SuiteScores {
+        accuracy: fin(acc),
+        perplexity: fin(ppl),
+        fact_recall: fin(recall),
+    })
+}
+
+/// The headline retention number: post-fine-tune source fact recall as a
+/// fraction of the base model's. `None` when the base recall is too
+/// small to ratio against (an unpretrained base knows nothing to
+/// forget).
+pub fn retention_ratio(base_recall: f64, after_recall: f64) -> Option<f64> {
+    if !base_recall.is_finite() || !after_recall.is_finite() || base_recall <= 1e-9 {
+        return None;
+    }
+    fin(after_recall / base_recall)
+}
+
+/// Artifact-free retention proxy for `--toy` cells: the fraction of
+/// weights left **bit-identical** by fine-tuning. Deterministic for any
+/// worker count (the engine's weights are), so resumed cells reproduce
+/// it exactly. Two empty parameter lists retain everything (1.0).
+pub fn toy_retention(init: &[Tensor], tuned: &[Tensor]) -> f64 {
+    assert_eq!(init.len(), tuned.len(), "param list mismatch");
+    let mut total = 0usize;
+    let mut kept = 0usize;
+    for (a, b) in init.iter().zip(tuned) {
+        assert_eq!(a.shape, b.shape, "param shape mismatch");
+        total += a.data.len();
+        kept += a
+            .data
+            .iter()
+            .zip(&b.data)
+            .filter(|(x, y)| x.to_bits() == y.to_bits())
+            .count();
+    }
+    if total == 0 {
+        return 1.0;
+    }
+    kept as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_scores_json_roundtrip_with_nulls() {
+        let s = SuiteScores {
+            accuracy: Some(62.5),
+            perplexity: None,
+            fact_recall: Some(0.25),
+        };
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(SuiteScores::from_json(&j), Some(s));
+        // a missing key is a parse failure, not a silent None
+        assert_eq!(SuiteScores::from_json(&Json::parse("{\"accuracy\":1}").unwrap()), None);
+    }
+
+    #[test]
+    fn fin_guards_the_ledger_against_non_finite_metrics() {
+        assert_eq!(fin(2.0), Some(2.0));
+        assert_eq!(fin(f64::NAN), None);
+        assert_eq!(fin(f64::INFINITY), None);
+        let s = SuiteScores {
+            accuracy: fin(f64::NAN),
+            perplexity: fin(f64::INFINITY),
+            fact_recall: fin(0.5),
+        };
+        // the serialized form must reparse (NaN/inf would be invalid JSON)
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(SuiteScores::from_json(&j), Some(s));
+    }
+
+    #[test]
+    fn retention_ratio_edges() {
+        assert_eq!(retention_ratio(0.5, 0.4), Some(0.8));
+        assert_eq!(retention_ratio(0.0, 0.4), None);
+        assert_eq!(retention_ratio(f64::NAN, 0.4), None);
+        assert_eq!(retention_ratio(0.5, f64::NAN), None);
+    }
+}

@@ -1,10 +1,17 @@
 //! Table runners (Tables 1-4 and 8-17).
+//!
+//! The shootout tables additionally report **source-domain retention**
+//! (ISSUE 5): alongside each method's target accuracies, the held-out
+//! pretraining-world perplexity and KG fact recall of the fine-tuned
+//! weights (`exp::retention::score_source`) — the paper's "LIFT forgets
+//! less than Full FT / LoRA" claim surfaced in the same row.
 
 use anyhow::Result;
 
 use super::harness::*;
 use crate::data::tasks::{ARITH, COMMONSENSE, NLU};
 use crate::data::TaskFamily;
+use crate::exp::retention::{self, RetentionCfg};
 use crate::train::eval;
 use crate::util::cli::Args;
 
@@ -14,18 +21,31 @@ fn print_header(title: &str, families: &[TaskFamily]) {
     for f in families {
         print!("{:>10}", f.name());
     }
-    println!("{:>10}", "Avg.");
+    println!("{:>10}{:>10}{:>10}", "Avg.", "src-ppl", "recall");
 }
 
-fn print_row(preset: &str, out: &FtOutcome) {
+fn fmt_opt(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) => format!("{x:.prec$}"),
+        None => "-".to_string(),
+    }
+}
+
+fn print_row(preset: &str, out: &FtOutcome, src_ppl: Option<f64>, recall: Option<f64>) {
     print!("{:<8} {:<18}", preset, out.label);
     for a in &out.accs {
         print!("{a:>10.2}");
     }
-    println!("{:>10.2}", out.avg);
+    println!(
+        "{:>10.2}{:>10}{:>10}",
+        out.avg,
+        fmt_opt(src_ppl, 2),
+        fmt_opt(recall, 3)
+    );
 }
 
-/// Generic "methods x families" table on one or more presets.
+/// Generic "methods x families" table on one or more presets, with the
+/// per-run source-retention columns averaged over seeds.
 fn shootout(
     env: &mut ExpEnv,
     args: &Args,
@@ -37,21 +57,42 @@ fn shootout(
     rank: usize,
 ) -> Result<()> {
     let seeds = args.usize("seeds", 1);
+    let rcfg = RetentionCfg {
+        n_test: if env.fast { 30 } else { 60 },
+        ppl_batches: if env.fast { 4 } else { 8 },
+        n_facts: if env.fast { 30 } else { 50 },
+        ..Default::default()
+    };
     let mut csv = env.csv(
         id,
-        &["preset", "method", "rank", "seed", "task", "acc"],
+        &["preset", "method", "rank", "seed", "task", "acc", "src_ppl", "src_recall"],
     )?;
     print_header(title, families);
     for preset in presets {
+        // loop-invariant per preset: the executable handle and the
+        // synthetic pretraining world the retention probes query
+        let exec = env.exec(preset)?;
+        let corpus = env.world(preset)?;
         for m in methods {
             let mut sum = vec![0.0f64; families.len()];
             let mut label = String::new();
             let mut avg_over_seeds = 0.0;
+            let mut ppl_sum = 0.0f64;
+            let mut recall_sum = 0.0f64;
+            let mut n_src = 0usize;
             for seed in 0..seeds {
                 let mut spec = RunSpec::new(preset, families, env.fast);
                 spec.seed = 1 + seed as u64;
                 let ms = MethodSpec::new(m, rank);
-                let out = run_ft(env, &spec, &ms, false)?;
+                let out = run_ft(env, &spec, &ms, true)?;
+                // source-domain retention of the tuned weights
+                let (_, after) = out.params.as_ref().expect("keep_params requested");
+                let src = retention::score_source(&env.rt, &exec, after, &corpus, &rcfg)?;
+                if let (Some(p), Some(r)) = (src.perplexity, src.fact_recall) {
+                    ppl_sum += p;
+                    recall_sum += r;
+                    n_src += 1;
+                }
                 for (i, a) in out.accs.iter().enumerate() {
                     sum[i] += a;
                     csv.row(&[
@@ -61,6 +102,8 @@ fn shootout(
                         spec.seed.to_string(),
                         families[i].name().to_string(),
                         format!("{a:.3}"),
+                        fmt_opt(src.perplexity, 3),
+                        fmt_opt(src.fact_recall, 4),
                     ])?;
                 }
                 label = out.label;
@@ -76,7 +119,12 @@ fn shootout(
                 opt_bytes: 0,
                 params: None,
             };
-            print_row(preset, &out);
+            let (ppl, rec) = if n_src > 0 {
+                (Some(ppl_sum / n_src as f64), Some(recall_sum / n_src as f64))
+            } else {
+                (None, None)
+            };
+            print_row(preset, &out, ppl, rec);
         }
     }
     println!("(csv: {})", csv.path().display());
@@ -294,7 +342,7 @@ pub fn table16(env: &mut ExpEnv, args: &Args) -> Result<()> {
     for m in ["lift", "lift_mlp", "full", "lora"] {
         let spec = RunSpec::new(&preset, &ARITH, env.fast);
         let out = run_ft(env, &spec, &MethodSpec::new(m, 32), false)?;
-        print_row(&preset, &out);
+        print_row(&preset, &out, None, None);
         csv.row(&[
             out.label.clone(),
             format!("{:.3}", out.avg),

@@ -5,9 +5,10 @@
 //!   train     --preset <p> --method <m> [--rank R] [--suite arith|commonsense|nlu]
 //!             [--steps N] [--lr F] [--interval N] [--seed S]
 //!             [--ckpt-every N --ckpt-dir D] [--resume latest|<path>]
-//!   matrix    resumable scenario grid: --methods a,b --selectors c,d
-//!             --ranks 8,32 --seeds 1,2 [--steps N] [--out D]
-//!             [--ckpt-every N] [--workers W] [--toy]
+//!   matrix    resumable N-axis scenario grid: --methods a,b --selectors c,d
+//!             --ranks 8,32 --seeds 1,2 --suites arith,nlu --intervals 50,100
+//!             --presets tiny,small [--axis "key=v1,v2;key2=..."] [--steps N]
+//!             [--out D] [--ckpt-every N] [--workers W] [--toy] [--migrate-v1]
 //!   eval      --preset <p> [--suite ...]   (pretrained model, no fine-tune)
 //!   exp       <id> [--fast] [--seeds N]    (regenerate a paper table/figure)
 //!   list-exp                                (show available experiment ids)
@@ -16,7 +17,7 @@
 use std::path::PathBuf;
 
 use anyhow::Result;
-use lift::data::tasks::{TaskMixSource, TaskSet, ARITH, COMMONSENSE, NLU};
+use lift::data::tasks::{suite_families, TaskMixSource, TaskSet};
 use lift::exp;
 use lift::lift::LiftCfg;
 use lift::methods::{make_method, Scope};
@@ -66,8 +67,17 @@ USAGE:
                                   skipped on rerun, interrupted cells resume
                                   from their newest snapshot; --toy runs the
                                   artifact-free synthetic cells; ends with a
-                                  method × rank summary table (summary.txt);
+                                  target-vs-retention summary (summary.txt);
                                   [--ckpt-keep N] prunes per-cell snapshots
+       [--suites arith,nlu --intervals 50,100 --presets tiny,small]
+       [--axis \"interval=50,100;seed=1,2,3\"]  any subset of the six axes
+                                  (preset, method, suite, rank, interval,
+                                  seed) as one spec string; merges with
+                                  explicitly passed flags, and dimensions
+                                  nobody swept take single-value defaults
+       [--migrate-v1]             migrate a pre-v2 outcome ledger in place
+                                  (v1 entries otherwise refuse to run —
+                                  they are never silently recomputed)
   lift eval --preset tiny --suite arith
   lift exp table2 [--fast]        regenerate a paper table/figure
   lift list-exp                   list experiment ids
@@ -92,15 +102,6 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn suite_families(suite: &str) -> Vec<lift::data::TaskFamily> {
-    match suite {
-        "arith" => ARITH.to_vec(),
-        "commonsense" => COMMONSENSE.to_vec(),
-        "nlu" => NLU.to_vec(),
-        "gpqa" => vec![lift::data::TaskFamily::Gpqa],
-        other => panic!("unknown suite '{other}'"),
-    }
-}
 
 fn cmd_train(args: &Args) -> Result<()> {
     let preset = args.str("preset", "tiny");
@@ -124,7 +125,7 @@ fn cmd_train(args: &Args) -> Result<()> {
 
     let mut params = pretrain::ensure_pretrained(&rt, &exec, pt_steps, 1)?;
     let corpus = pretrain::world(&exec);
-    let fams = suite_families(&suite);
+    let fams = suite_families(&suite)?;
     let sets: Vec<TaskSet> = fams
         .iter()
         .map(|&f| TaskSet::generate(f, &corpus.vocab, &corpus.kg, n_train, n_test, seed))
@@ -182,64 +183,131 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Resumable scenario matrix: method × selector × sparsity cells,
-/// persisted per cell under `--out`, finished cells skipped on rerun,
-/// unfinished ones fanned over the `lift::engine::par_map` pool (each
-/// cell resumes from its newest snapshot). `--toy` drives the
-/// artifact-free synthetic cells so the machinery runs without
-/// `make artifacts`.
+/// Resumable N-axis scenario matrix (`exp::grid`): preset × method ×
+/// suite × rank × interval × seed cells, persisted per cell under
+/// `--out`, finished cells skipped on rerun, unfinished ones fanned
+/// over the `lift::engine::par_map` pool (each cell resumes from its
+/// newest snapshot — resume-mid-axis works at any grid position).
+/// `--toy` drives the artifact-free synthetic cells so the machinery
+/// runs without `make artifacts`; `--migrate-v1` upgrades a pre-v2
+/// outcome ledger in place (v1 entries otherwise refuse the run).
 fn cmd_matrix(args: &Args) -> Result<()> {
+    use lift::exp::grid::{parse_axes, Axis, AxisKind, Grid};
     use lift::exp::matrix::{self, RealCellCfg};
-    let preset = args.str("preset", "tiny");
-    let methods = args.list("methods", "lift,full");
-    let selectors = args.list("selectors", "");
-    let ranks: Vec<usize> = args
-        .list("ranks", "32")
+    use lift::exp::retention::{score_source, RetentionCfg};
+    // a dedicated flag seeds its axis only when the user actually passed
+    // it — otherwise an --axis sweep of the same dimension would merge
+    // with the flag's DEFAULT (e.g. `--axis interval=2,4` silently
+    // gaining interval 100). Absent dimensions default at expansion
+    // (`Axis::default_for`); the one historical exception is the method
+    // axis, whose CLI default is `lift,full` (seeded below).
+    let explicit = |key: &str| -> Option<Vec<String>> {
+        args.opt_str(key).map(|v| {
+            v.split(',').filter(|s| !s.is_empty()).map(str::to_string).collect()
+        })
+    };
+    let presets = explicit("presets")
+        .or_else(|| args.opt_str("preset").map(|p| vec![p]))
+        .unwrap_or_default();
+    let methods = explicit("methods");
+    let selectors = explicit("selectors");
+    let ranks: Vec<usize> = explicit("ranks")
+        .unwrap_or_default()
         .iter()
         .map(|r| r.parse().unwrap_or_else(|_| panic!("--ranks expects integers, got '{r}'")))
         .collect();
-    let seeds: Vec<u64> = args
-        .list("seeds", "1")
+    let seeds: Vec<u64> = explicit("seeds")
+        .unwrap_or_default()
         .iter()
         .map(|s| s.parse().unwrap_or_else(|_| panic!("--seeds expects integers, got '{s}'")))
         .collect();
     let steps = args.usize("steps", 200);
-    let interval = args.usize("interval", 100);
+    let intervals: Vec<usize> = explicit("intervals")
+        .or_else(|| args.opt_str("interval").map(|i| vec![i]))
+        .unwrap_or_default()
+        .iter()
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("--intervals expects integers, got '{v}'")))
+        .collect();
+    let suites = explicit("suites")
+        .or_else(|| args.opt_str("suite").map(|s| vec![s]))
+        .unwrap_or_default();
+    let axis_spec = args.str("axis", "");
     let out = PathBuf::from(args.str("out", "results/matrix"));
     let ckpt_every = args.usize("ckpt-every", 50);
     let ckpt_keep = args.usize("ckpt-keep", 0);
     let workers = args.usize("workers", lift::lift::engine::default_workers());
     let toy = args.bool("toy", false);
-    let suite = args.str("suite", "arith");
-    let pt_steps = args.usize("pretrain-steps", lift::exp::default_pretrain_steps(&preset));
+    let migrate = args.bool("migrate-v1", false);
+    // None = the per-preset default, so a multi-preset grid pretrains
+    // each base for its own step count (the runs/ cache keys on it)
+    let pt_steps: Option<usize> = args.opt_str("pretrain-steps").map(|v| {
+        v.parse().unwrap_or_else(|_| panic!("--pretrain-steps expects an integer, got '{v}'"))
+    });
     let n_train = args.usize("train-samples", 1000);
     let n_test = args.usize("test-samples", 100);
     args.finish()?;
 
-    let cell_preset = if toy { "toy".to_string() } else { preset.clone() };
-    let cells =
-        matrix::expand_grid(&cell_preset, &methods, &selectors, &ranks, &seeds, steps, interval);
-    anyhow::ensure!(!cells.is_empty(), "empty grid: no methods/selectors given");
+    let method_flags_given = methods.is_some() || selectors.is_some();
+    let mut grid = Grid::new(steps)
+        .with_axis(Axis::Preset(presets))
+        .with_axis(Axis::Method(methods.unwrap_or_default()))
+        .with_axis(Axis::Method(selectors.unwrap_or_default()))
+        .with_axis(Axis::Suite(suites))
+        .with_axis(Axis::Rank(ranks))
+        .with_axis(Axis::Interval(intervals))
+        .with_axis(Axis::Seed(seeds));
+    for axis in parse_axes(&axis_spec)? {
+        grid = grid.with_axis(axis);
+    }
+    if !grid.has_axis(AxisKind::Method) {
+        // the user explicitly passed empty method/selector lists: loud
+        // error, not an unrequested default campaign
+        anyhow::ensure!(!method_flags_given, "empty grid: no methods/selectors given");
+        grid = grid.with_axis(Axis::Method(vec!["lift".to_string(), "full".to_string()]));
+    }
+    if toy {
+        // toy cells run the artifact-free preset whatever the flags say
+        grid = grid.set_axis(Axis::Preset(vec!["toy".to_string()]));
+    }
+    let cells = grid.expand();
+    for s in cells.iter().map(|c| &c.suite).collect::<std::collections::BTreeSet<_>>() {
+        suite_families(s)?; // reject unknown suite axis values before running
+    }
+    if migrate {
+        let migrated = matrix::migrate_v1(&out, &cells)?;
+        println!("migrated {} v1 ledger entr(ies) under {}", migrated.len(), out.display());
+        for id in &migrated {
+            println!("  migrated -> {id}");
+        }
+    }
     let report = if toy {
         matrix::run_matrix(&out, &cells, workers, |spec| {
             matrix::run_toy_cell(spec, &out, ckpt_every, ckpt_keep, 1)
         })?
     } else {
-        // pre-warm the pretrained base sequentially so parallel cells
-        // hit the runs/ checkpoint cache read-only
-        {
+        // pre-warm each preset's pretrained base sequentially so
+        // parallel cells hit the runs/ checkpoint cache read-only, and
+        // score the base's source-domain knowledge ONCE per preset (it
+        // is the same retention denominator for every cell of a preset)
+        let rcfg = RetentionCfg::default();
+        let mut base_source = std::collections::BTreeMap::new();
+        for p in cells.iter().map(|c| &c.preset).collect::<std::collections::BTreeSet<_>>() {
             let rt = Runtime::from_default()?;
-            let exec = ModelExec::load(&rt, &preset)?;
-            pretrain::ensure_pretrained(&rt, &exec, pt_steps, 1)?;
+            let exec = ModelExec::load(&rt, p)?;
+            let pt = pt_steps.unwrap_or_else(|| lift::exp::default_pretrain_steps(p));
+            let base = pretrain::ensure_pretrained(&rt, &exec, pt, 1)?;
+            let corpus = pretrain::world(&exec);
+            base_source.insert(p.clone(), score_source(&rt, &exec, &base, &corpus, &rcfg)?);
         }
         let rc = RealCellCfg {
-            families: suite_families(&suite),
             pt_steps,
             n_train,
             n_test,
             ckpt_every,
             ckpt_keep,
             inner_workers: 1,
+            retention: rcfg,
+            base_source,
         };
         matrix::run_matrix(&out, &cells, workers, |spec| {
             matrix::run_real_cell(spec, &out, &rc)
@@ -254,8 +322,12 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     );
     for c in &cells {
         if let Some(o) = matrix::read_outcome(&out, &c.id()) {
+            let ret = o
+                .retention
+                .map(|r| format!("{r:.4}"))
+                .unwrap_or_else(|| "-".to_string());
             println!(
-                "  {:<44} avg={:>5.1} tail_loss={:.4} trainable={}",
+                "  {:<52} avg={:>5.1} tail_loss={:.4} ret={ret} trainable={}",
                 c.id(),
                 o.avg,
                 o.tail_loss,
@@ -266,8 +338,8 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     for (id, err) in &report.failed {
         println!("  FAILED {id}: {err}");
     }
-    // the campaign's readable artifact: a paper-style method × rank
-    // table over every persisted outcome, also saved as summary.txt
+    // the campaign's readable artifact: the paper-style target-vs-
+    // retention table over every persisted outcome, saved as summary.txt
     let (summary_path, table) = matrix::write_summary(&out, &cells)?;
     println!("\n{table}");
     println!("summary written to {}", summary_path.display());
@@ -285,7 +357,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     args.finish()?;
     let params = pretrain::ensure_pretrained(&rt, &exec, pt_steps, 1)?;
     let corpus = pretrain::world(&exec);
-    for &f in &suite_families(&suite) {
+    for &f in &suite_families(&suite)? {
         let set = TaskSet::generate(f, &corpus.vocab, &corpus.kg, 1, n_test, 1);
         let acc = eval::accuracy(&exec, &params, &set.test)?;
         println!("{:<12} {acc:.2}", set.family.name());

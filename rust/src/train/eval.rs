@@ -1,6 +1,14 @@
 //! Evaluation harness: task accuracy (teacher-forced exact match),
 //! held-out perplexity, fact-recall probe, and an autoregressive sampler
 //! for pass@k (code-gen, Table 12).
+//!
+//! Each metric is split into an executable-driven wrapper and a **pure
+//! scoring kernel** ([`exact_match_counts`], [`ppl_from_total_nll`],
+//! [`recall_from_probs`], [`pass_at_k_with`]) so the metric arithmetic —
+//! including empty-sample and all-wrong edge cases — is locked by
+//! hand-computed oracles in `rust/tests/eval_oracle.rs` without AOT
+//! artifacts. These metrics also back the scenario matrix's per-cell
+//! retention pass (`exp::retention`).
 
 use anyhow::Result;
 
@@ -10,6 +18,46 @@ use crate::runtime::model_exec::ModelExec;
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
+
+/// Pure exact-match kernel over one batch's rows: `(correct, scored)`.
+/// A row is scored iff it has at least one masked position, and counts
+/// correct iff **every** masked position is predicted exactly.
+pub fn exact_match_counts(
+    preds: &[i32],
+    targets: &[i32],
+    loss_mask: &[f32],
+    rows: usize,
+    seq: usize,
+) -> (usize, usize) {
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for row in 0..rows {
+        let mut ok = true;
+        let mut any = false;
+        for i in 0..seq {
+            if loss_mask[row * seq + i] == 1.0 {
+                any = true;
+                if preds[row * seq + i] != targets[row * seq + i] {
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if any {
+            total += 1;
+            if ok {
+                correct += 1;
+            }
+        }
+    }
+    (correct, total)
+}
+
+/// Percent accuracy from match counts; zero scored rows read as 0.0
+/// (no evidence of capability), never a division panic.
+pub fn accuracy_from_counts(correct: usize, total: usize) -> f64 {
+    100.0 * correct as f64 / total.max(1) as f64
+}
 
 /// Accuracy over samples: a sample counts iff every answer position is
 /// greedy-predicted correctly.
@@ -22,27 +70,18 @@ pub fn accuracy(exec: &ModelExec, params: &[Tensor], samples: &[Sample]) -> Resu
     let mut total = 0usize;
     for (batch, used) in samples_to_batches(samples, b, s) {
         let (_, preds) = exec.eval_step(params, &batch)?;
-        for row in 0..used {
-            let mut ok = true;
-            let mut any = false;
-            for i in 0..s {
-                if batch.loss_mask[row * s + i] == 1.0 {
-                    any = true;
-                    if preds[row * s + i] != batch.targets[row * s + i] {
-                        ok = false;
-                        break;
-                    }
-                }
-            }
-            if any {
-                total += 1;
-                if ok {
-                    correct += 1;
-                }
-            }
-        }
+        let (c, t) = exact_match_counts(&preds, &batch.targets, &batch.loss_mask, used, s);
+        correct += c;
+        total += t;
     }
-    Ok(100.0 * correct as f64 / total.max(1) as f64)
+    Ok(accuracy_from_counts(correct, total))
+}
+
+/// Pure perplexity kernel: `exp` of the mean per-batch NLL. Zero
+/// batches read as 1.0 — an empty eval stream carries no surprise, not
+/// infinite surprise (and the ledger needs a finite value).
+pub fn ppl_from_total_nll(total_nll: f64, n_batches: usize) -> f64 {
+    (total_nll / n_batches.max(1) as f64).exp()
 }
 
 /// Held-out corpus perplexity (the Wikitext-ppl analog, Fig. 2a).
@@ -60,7 +99,29 @@ pub fn perplexity(
         total += loss as f64;
         n += 1;
     }
-    Ok((total / n.max(1) as f64).exp())
+    Ok(ppl_from_total_nll(total, n))
+}
+
+/// Teacher-forced perplexity over task samples (loss masked to answer
+/// spans): `exp` of the mean per-batch eval loss. The scenario matrix's
+/// target-suite metric. Empty `samples` read as 1.0 (see
+/// [`ppl_from_total_nll`]).
+pub fn sample_perplexity(exec: &ModelExec, params: &[Tensor], samples: &[Sample]) -> Result<f64> {
+    let (b, s) = (exec.preset.batch, exec.preset.seq);
+    let mut total = 0.0f64;
+    let mut n = 0usize;
+    for (batch, _) in samples_to_batches(samples, b, s) {
+        let (loss, _) = exec.eval_step(params, &batch)?;
+        total += loss as f64;
+        n += 1;
+    }
+    Ok(ppl_from_total_nll(total, n))
+}
+
+/// Pure recall kernel: mean ground-truth probability; zero probes read
+/// as 0.0 (nothing recalled), never a division panic.
+pub fn recall_from_probs(probs: &[f64]) -> f64 {
+    probs.iter().sum::<f64>() / probs.len().max(1) as f64
 }
 
 /// Fact-recall probe (Fig. 2b): P(correct target | "e r") for a set of
@@ -74,7 +135,7 @@ pub fn fact_recall(
     seed: u64,
 ) -> Result<f64> {
     let mut rng = Rng::new(seed ^ 0xfac7);
-    let mut total = 0.0f64;
+    let mut probs = Vec::with_capacity(n_facts);
     let s = exec.preset.seq;
     for _ in 0..n_facts {
         let (e, r, t) = corpus.kg.sample_fact_tier(&mut rng, true);
@@ -82,10 +143,10 @@ pub fn fact_recall(
         toks[0] = crate::data::vocab::BOS;
         toks[1] = corpus.vocab.entity(e);
         toks[2] = corpus.vocab.relation(r);
-        let probs = exec.probe(rt, params, &toks, 2)?;
-        total += probs[corpus.vocab.entity(t) as usize] as f64;
+        let dist = exec.probe(rt, params, &toks, 2)?;
+        probs.push(dist[corpus.vocab.entity(t) as usize] as f64);
     }
-    Ok(total / n_facts.max(1) as f64)
+    Ok(recall_from_probs(&probs))
 }
 
 /// Autoregressive sampling of `len` answer tokens after a prompt, using
@@ -142,6 +203,32 @@ fn sample_from(probs: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
     (exps.len() - 1) as i32
 }
 
+/// Pure pass@k driver over an abstract per-attempt sampler: attempt 0
+/// is always greedy (temperature 0.0), later attempts receive
+/// `temperature`; a sample passes iff **any** attempt reproduces the
+/// reference answer exactly (further attempts are skipped). Empty
+/// `samples` or `max_samples == 0` read as 0.0.
+pub fn pass_at_k_with(
+    samples: &[Sample],
+    k: usize,
+    temperature: f32,
+    max_samples: usize,
+    sample_fn: &mut dyn FnMut(&Sample, f32) -> Result<Vec<i32>>,
+) -> Result<f64> {
+    let eval: Vec<&Sample> = samples.iter().take(max_samples).collect();
+    let mut pass = 0usize;
+    for &s in &eval {
+        for t in 0..k {
+            let temp = if t == 0 { 0.0 } else { temperature };
+            if sample_fn(s, temp)? == s.answer() {
+                pass += 1;
+                break;
+            }
+        }
+    }
+    Ok(100.0 * pass as f64 / eval.len().max(1) as f64)
+}
+
 /// pass@k for generation tasks: a sample passes if any of k temperature
 /// samples exactly matches the reference answer.
 #[allow(clippy::too_many_arguments)]
@@ -156,23 +243,9 @@ pub fn pass_at_k(
     max_samples: usize,
 ) -> Result<f64> {
     let mut rng = Rng::new(seed ^ 0x9a55);
-    let mut pass = 0usize;
-    let eval: Vec<&Sample> = samples.iter().take(max_samples).collect();
-    for s in &eval {
-        let mut ok = false;
-        for t in 0..k {
-            let temp = if t == 0 { 0.0 } else { temperature };
-            let got = sample_answer(rt, exec, params, s.prompt(), s.answer_len, temp, &mut rng)?;
-            if got == s.answer() {
-                ok = true;
-                break;
-            }
-        }
-        if ok {
-            pass += 1;
-        }
-    }
-    Ok(100.0 * pass as f64 / eval.len().max(1) as f64)
+    pass_at_k_with(samples, k, temperature, max_samples, &mut |s, temp| {
+        sample_answer(rt, exec, params, s.prompt(), s.answer_len, temp, &mut rng)
+    })
 }
 
 #[cfg(test)]

@@ -91,6 +91,14 @@ impl TrainLog {
         }
         tail.iter().sum::<f32>() / tail.len() as f32
     }
+
+    /// `exp` of [`tail_loss`](Self::tail_loss) — the perplexity the run
+    /// converged to. Artifact-free (`--toy`) matrix cells persist this
+    /// as their target-suite metric (`exp::retention`); an empty curve
+    /// yields NaN, which the ledger stores as `null`.
+    pub fn tail_ppl(&self, n: usize) -> f64 {
+        (self.tail_loss(n) as f64).exp()
+    }
 }
 
 /// One gradient evaluation: given the current parameters and the run's

@@ -844,6 +844,7 @@ fn interrupted_toy_cell_resumes_from_its_checkpoint() {
     let spec = CellSpec {
         preset: "toy".into(),
         method: "lift".into(),
+        suite: "arith".into(),
         rank: 2,
         seed: 1,
         steps: 4,

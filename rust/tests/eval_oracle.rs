@@ -1,0 +1,211 @@
+//! Hand-computed oracles for the pure eval kernels (ISSUE 5): the
+//! metric arithmetic behind `train::eval::{accuracy, perplexity,
+//! fact_recall, pass_at_k}` and the retention pass (`exp::retention`),
+//! asserted on tiny fixtures worked out by hand — including the
+//! empty-sample and all-wrong edge cases that previously had no
+//! coverage. No AOT artifacts, no model execution: the executable-
+//! driven wrappers feed these exact kernels.
+
+use lift::data::tasks::Sample;
+use lift::exp::retention::{retention_ratio, toy_retention};
+use lift::tensor::Tensor;
+use lift::train::eval::{
+    accuracy_from_counts, exact_match_counts, pass_at_k_with, ppl_from_total_nll,
+    recall_from_probs,
+};
+
+// ---- exact match (accuracy) --------------------------------------------
+
+#[test]
+fn exact_match_counts_hand_fixtures() {
+    let seq = 4;
+    // row 0: answer span at positions 2..4, both predicted right -> correct
+    // row 1: answer at 1..3, second answer position wrong -> scored, wrong
+    // row 2: no masked positions (padding row) -> not scored at all
+    let targets = vec![
+        9, 9, 5, 6, //
+        9, 7, 8, 9, //
+        0, 0, 0, 0,
+    ];
+    let preds = vec![
+        1, 2, 5, 6, // prompt positions differ, answer positions match
+        9, 7, 3, 9, // masked pos 1 matches, masked pos 2 wrong
+        1, 1, 1, 1,
+    ];
+    let mask = vec![
+        0.0, 0.0, 1.0, 1.0, //
+        0.0, 1.0, 1.0, 0.0, //
+        0.0, 0.0, 0.0, 0.0,
+    ];
+    assert_eq!(exact_match_counts(&preds, &targets, &mask, 3, seq), (1, 2));
+    // all-wrong predictions: every scored row misses
+    let all_wrong = vec![-1; 12];
+    assert_eq!(exact_match_counts(&all_wrong, &targets, &mask, 3, seq), (0, 2));
+    // empty batch: zero rows, zero scored
+    assert_eq!(exact_match_counts(&[], &[], &[], 0, seq), (0, 0));
+    // one flipped PROMPT position must not affect the row (mask gates it)
+    let mut prompt_flipped = preds.clone();
+    prompt_flipped[0] = -7;
+    assert_eq!(exact_match_counts(&prompt_flipped, &targets, &mask, 3, seq), (1, 2));
+}
+
+#[test]
+fn accuracy_from_counts_hand_fixtures() {
+    assert_eq!(accuracy_from_counts(1, 2), 50.0);
+    assert_eq!(accuracy_from_counts(3, 4), 75.0);
+    // zero scored rows: 0.0, not a division panic or NaN
+    assert_eq!(accuracy_from_counts(0, 0), 0.0);
+    // all-wrong
+    assert_eq!(accuracy_from_counts(0, 5), 0.0);
+    // all-right
+    assert_eq!(accuracy_from_counts(5, 5), 100.0);
+}
+
+// ---- perplexity ---------------------------------------------------------
+
+#[test]
+fn ppl_from_total_nll_hand_fixtures() {
+    // two batches with mean NLL ln(4) -> perplexity exactly 4
+    let total = 2.0 * 4.0f64.ln();
+    assert!((ppl_from_total_nll(total, 2) - 4.0).abs() < 1e-12);
+    // one batch at ln(2) -> 2
+    assert!((ppl_from_total_nll(2.0f64.ln(), 1) - 2.0).abs() < 1e-12);
+    // zero batches: no evidence -> 1.0 (finite for the ledger), not NaN
+    assert_eq!(ppl_from_total_nll(0.0, 0), 1.0);
+    // zero loss -> the floor perplexity of 1
+    assert_eq!(ppl_from_total_nll(0.0, 3), 1.0);
+}
+
+// ---- fact recall --------------------------------------------------------
+
+#[test]
+fn recall_from_probs_hand_fixtures() {
+    assert_eq!(recall_from_probs(&[0.25, 0.75]), 0.5);
+    assert_eq!(recall_from_probs(&[1.0]), 1.0);
+    // zero probes: nothing recalled, not a division panic
+    assert_eq!(recall_from_probs(&[]), 0.0);
+    // all-wrong model: zero mass on every ground truth
+    assert_eq!(recall_from_probs(&[0.0, 0.0, 0.0]), 0.0);
+}
+
+#[test]
+fn retention_ratio_hand_fixtures() {
+    // base recall 0.5, after 0.4 -> 80% retained
+    assert_eq!(retention_ratio(0.5, 0.4), Some(0.8));
+    // nothing forgotten, even improved
+    assert_eq!(retention_ratio(0.4, 0.5), Some(1.25));
+    // an unpretrained base (recall ~ 0) has nothing to forget
+    assert_eq!(retention_ratio(0.0, 0.3), None);
+    assert_eq!(retention_ratio(1e-12, 0.3), None);
+}
+
+// ---- pass@k -------------------------------------------------------------
+
+fn sample(prompt: &[i32], answer: &[i32]) -> Sample {
+    let mut tokens = prompt.to_vec();
+    let answer_start = tokens.len();
+    tokens.extend_from_slice(answer);
+    Sample {
+        tokens,
+        answer_start,
+        answer_len: answer.len(),
+    }
+}
+
+#[test]
+fn pass_at_k_with_scripted_sampler() {
+    let s1 = sample(&[1, 2], &[7, 8]);
+    let s2 = sample(&[3], &[9]);
+    let samples = vec![s1, s2];
+    // s1 answers correctly only on its 3rd attempt; s2 never
+    let mut temps: Vec<f32> = Vec::new();
+    let mut attempts = std::collections::HashMap::<Vec<i32>, usize>::new();
+    let mut sampler = |s: &Sample, temp: f32| -> anyhow::Result<Vec<i32>> {
+        temps.push(temp);
+        let t = attempts.entry(s.prompt().to_vec()).or_insert(0);
+        let cur = *t;
+        *t += 1;
+        Ok(if s.prompt() == [1, 2] && cur == 2 {
+            vec![7, 8]
+        } else {
+            vec![0; s.answer_len]
+        })
+    };
+    // pass@3: s1 passes (3rd attempt), s2 fails -> 50%
+    let p = pass_at_k_with(&samples, 3, 0.7, 10, &mut sampler).unwrap();
+    assert_eq!(p, 50.0);
+    // attempt 0 is always greedy (temp 0.0); retries carry the caller's
+    // temperature; a passing sample stops sampling (3 calls each here)
+    assert_eq!(temps, vec![0.0, 0.7, 0.7, 0.0, 0.7, 0.7]);
+    // pass@1 is greedy-only: nothing passes on attempt 0 (fresh sampler)
+    let mut greedy_temps: Vec<f32> = Vec::new();
+    let mut never = |s: &Sample, temp: f32| -> anyhow::Result<Vec<i32>> {
+        greedy_temps.push(temp);
+        Ok(vec![-1; s.answer_len])
+    };
+    let p1 = pass_at_k_with(&samples, 1, 0.7, 10, &mut never).unwrap();
+    assert_eq!(p1, 0.0);
+    assert_eq!(greedy_temps, vec![0.0, 0.0]);
+}
+
+#[test]
+fn pass_at_k_greedy_pass_short_circuits() {
+    let s = sample(&[5], &[6]);
+    let mut calls = 0usize;
+    let mut sampler = |s: &Sample, _t: f32| -> anyhow::Result<Vec<i32>> {
+        calls += 1;
+        Ok(s.answer().to_vec())
+    };
+    let p = pass_at_k_with(std::slice::from_ref(&s), 5, 0.9, 10, &mut sampler).unwrap();
+    assert_eq!((p, calls), (100.0, 1), "a greedy pass must skip the other k-1 attempts");
+}
+
+#[test]
+fn pass_at_k_edge_cases() {
+    // empty samples / max_samples == 0 -> 0.0, sampler never called
+    let mut calls = 0usize;
+    let mut sampler = |s: &Sample, _t: f32| -> anyhow::Result<Vec<i32>> {
+        calls += 1;
+        Ok(s.answer().to_vec())
+    };
+    assert_eq!(pass_at_k_with(&[], 3, 0.7, 10, &mut sampler).unwrap(), 0.0);
+    let s = sample(&[5], &[6]);
+    assert_eq!(pass_at_k_with(std::slice::from_ref(&s), 3, 0.7, 0, &mut sampler).unwrap(), 0.0);
+    assert_eq!(calls, 0);
+    // all-wrong sampler -> 0.0 across every attempt
+    let samples = vec![sample(&[1], &[2]), sample(&[3], &[4])];
+    let mut wrong = |s: &Sample, _t: f32| -> anyhow::Result<Vec<i32>> {
+        Ok(vec![-1; s.answer_len])
+    };
+    assert_eq!(pass_at_k_with(&samples, 4, 0.7, 10, &mut wrong).unwrap(), 0.0);
+    // max_samples truncates the denominator: only the first sample counts
+    let mut first_only = |s: &Sample, _t: f32| -> anyhow::Result<Vec<i32>> {
+        Ok(if s.prompt() == [1] { s.answer().to_vec() } else { vec![-1] })
+    };
+    assert_eq!(pass_at_k_with(&samples, 1, 0.7, 1, &mut first_only).unwrap(), 100.0);
+}
+
+// ---- toy retention proxy ------------------------------------------------
+
+#[test]
+fn toy_retention_hand_fixtures() {
+    let a = vec![Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0])];
+    let mut b = a.clone();
+    assert_eq!(toy_retention(&a, &b), 1.0);
+    b[0].data[2] = 9.0;
+    assert_eq!(toy_retention(&a, &b), 0.75);
+    // multiple tensors pool their counts: 1 of 6 weights changed -> 5/6
+    let x = vec![
+        Tensor::from_vec(&[2], vec![1.0, 2.0]),
+        Tensor::from_vec(&[4], vec![0.0, -1.0, 5.0, 2.5]),
+    ];
+    let mut y = x.clone();
+    y[1].data[0] = 0.5;
+    assert!((toy_retention(&x, &y) - 5.0 / 6.0).abs() < 1e-12);
+    // empty parameter lists trivially retain everything
+    assert_eq!(toy_retention(&[], &[]), 1.0);
+    // bit identity, not numeric equality: -0.0 != 0.0 bitwise
+    let p = vec![Tensor::from_vec(&[1], vec![0.0])];
+    let q = vec![Tensor::from_vec(&[1], vec![-0.0])];
+    assert_eq!(toy_retention(&p, &q), 0.0);
+}

@@ -1,0 +1,416 @@
+//! Golden-ledger & eval-oracle lock-in for the generalized scenario
+//! matrix (ISSUE 5):
+//!
+//! * cell ids are a pure function of cell field values — expanding the
+//!   same grid with axes added in ANY order yields the identical id
+//!   vector, pinned byte-for-byte by `golden/grid_ids.txt`;
+//! * ledger v2 policy round-trips: a v1 (pre-versioning) outcome makes
+//!   the campaign REFUSE until explicitly migrated — migration preserves
+//!   every v1 field, carries orphaned checkpoint dirs, and the migrated
+//!   cell is skipped (never recomputed); a future-version ledger aborts;
+//!   corrupt files recompute loudly; `summary.txt` renders `-` instead
+//!   of panicking on empty/failed/corrupt campaigns;
+//! * resume-mid-axis determinism: a campaign over the NEW axes
+//!   (interval × seed), interrupted both mid-cell (crash with a snapshot
+//!   on disk) and mid-axis (some cells finished, some untouched), then
+//!   resumed — per-cell outcomes bit-identical to an uninterrupted
+//!   campaign, at 1 worker and at N workers, and identical across
+//!   worker counts;
+//! * the artifact-free retention proxy reproduces the paper's
+//!   qualitative ordering: sparse methods retain, Full FT forgets.
+//!
+//! Everything here runs without AOT artifacts (toy cells drive the real
+//! trainer loop via `exp::matrix::synth_step`).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use lift::ckpt;
+use lift::exp::grid::{Axis, Grid};
+use lift::exp::matrix::{self, CellSpec};
+use lift::tensor::Tensor;
+use lift::train::{train_with, TrainCfg};
+use lift::util::rng::Rng;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lift_grid_test_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+// ---- golden cell-id stability ------------------------------------------
+
+fn golden_axes() -> Vec<Axis> {
+    vec![
+        Axis::Preset(vec!["toy".into(), "tiny".into()]),
+        Axis::Method(vec!["lift".into(), "full".into(), "weight_mag".into()]),
+        Axis::Suite(vec!["arith".into(), "nlu".into()]),
+        Axis::Rank(vec![2, 4]),
+        Axis::Interval(vec![2, 4]),
+        Axis::Seed(vec![1, 2]),
+    ]
+}
+
+/// The expansion of the reference grid is pinned byte-for-byte: content
+/// AND order. If this golden diff ever fires, either cell identity or
+/// the canonical axis order changed — both invalidate every on-disk
+/// ledger, so the change must ship a migration, not a silent rename.
+#[test]
+fn golden_cell_ids_are_stable_across_axis_order_permutations() {
+    let golden: Vec<String> = include_str!("golden/grid_ids.txt")
+        .lines()
+        .map(str::to_string)
+        .collect();
+    assert_eq!(golden.len(), 96, "golden file shape changed");
+    let perms: [[usize; 6]; 4] = [
+        [0, 1, 2, 3, 4, 5],
+        [5, 4, 3, 2, 1, 0],
+        [2, 0, 5, 1, 4, 3],
+        [3, 5, 0, 4, 2, 1],
+    ];
+    for perm in perms {
+        let axes = golden_axes();
+        let mut grid = Grid::new(6);
+        for &i in &perm {
+            grid = grid.with_axis(axes[i].clone());
+        }
+        let ids: Vec<String> = grid.expand().iter().map(|c| c.id()).collect();
+        assert_eq!(ids, golden, "axis insertion order {perm:?} moved cell ids");
+    }
+}
+
+// ---- ledger v1 -> v2 ----------------------------------------------------
+
+#[test]
+fn v1_ledger_refuses_then_migrates_without_recompute() {
+    let dir = tmpdir("v1_migrate");
+    let cells = matrix::expand_grid(
+        "toy",
+        &["weight_mag".to_string(), "random".to_string()],
+        &[],
+        &[2],
+        &[1],
+        4,
+        2,
+    );
+    assert_eq!(cells.len(), 2);
+    // a finished v1 outcome for cell 0 under its PRE-SUITE id
+    let v1_json = "{\"label\":\"WMAG\",\"accs\":[1.5,2.5],\"avg\":2,\"tail_loss\":0.5,\
+                   \"trainable\":3,\"opt_bytes\":24,\"seconds\":0.25,\"steps\":4}";
+    std::fs::write(matrix::outcome_path(&dir, &cells[0].v1_id()), v1_json).unwrap();
+    // and an orphaned v1 checkpoint dir for cell 1 (interrupted v1 cell)
+    let old_ckpt = matrix::cell_ckpt_dir(&dir, &cells[1].v1_id());
+    std::fs::create_dir_all(&old_ckpt).unwrap();
+    std::fs::write(old_ckpt.join("marker"), b"x").unwrap();
+    // the campaign refuses: finished v1 work is never silently recomputed
+    let err = matrix::run_matrix(&dir, &cells, 2, |s| matrix::run_toy_cell(s, &dir, 0, 0, 1))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("v1"), "{err}");
+    assert!(err.contains("--migrate-v1"), "{err}");
+    // the v1 file survived the refusal byte-identically
+    assert_eq!(
+        std::fs::read_to_string(matrix::outcome_path(&dir, &cells[0].v1_id())).unwrap(),
+        v1_json
+    );
+    // migrate: the outcome moves to the v2 id with every v1 field kept
+    let migrated = matrix::migrate_v1(&dir, &cells).unwrap();
+    assert_eq!(migrated, vec![cells[0].id()]);
+    let got = matrix::read_outcome(&dir, &cells[0].id()).unwrap();
+    assert_eq!(got.label, "WMAG");
+    assert_eq!(got.accs, vec![1.5, 2.5]);
+    assert_eq!(got.avg, 2.0);
+    assert_eq!(got.tail_loss, 0.5);
+    assert_eq!(got.trainable, 3);
+    assert_eq!(got.opt_bytes, 24);
+    assert_eq!(got.seconds, 0.25);
+    assert_eq!(got.steps, 4);
+    // retention columns start empty on migrated entries (render '-')
+    assert_eq!(got.target, None);
+    assert_eq!(got.source, None);
+    assert_eq!(got.retention, None);
+    assert!(
+        !matrix::outcome_path(&dir, &cells[0].v1_id()).exists(),
+        "v1 file must be consumed by migration"
+    );
+    // the orphaned v1 ckpt dir was renamed onto the v2 id
+    assert!(matrix::cell_ckpt_dir(&dir, &cells[1].id()).join("marker").exists());
+    assert!(!old_ckpt.exists());
+    // rerun: the migrated cell is SKIPPED (zero recompute), only the
+    // never-finished cell executes
+    let count = AtomicUsize::new(0);
+    let report = matrix::run_matrix(&dir, &cells, 2, |s| {
+        count.fetch_add(1, Ordering::SeqCst);
+        matrix::run_toy_cell(s, &dir, 0, 0, 1)
+    })
+    .unwrap();
+    assert_eq!(report.skipped, vec![cells[0].id()]);
+    assert_eq!(report.ran, vec![cells[1].id()]);
+    assert_eq!(count.load(Ordering::SeqCst), 1, "migrated cell must not recompute");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn migration_roundtrips_a_v2_rewrite_of_the_v1_fields() {
+    // v1 json -> migrate -> v2 file -> reparse: the v2 file carries the
+    // version marker and reparses equal to the migrated outcome
+    let dir = tmpdir("v1_roundtrip");
+    let cells = matrix::expand_grid("toy", &["lift".to_string()], &[], &[4], &[7], 9, 3);
+    let v1_json = "{\"label\":\"LIFT\",\"accs\":[10,20,30],\"avg\":20,\"tail_loss\":0.125,\
+                   \"trainable\":640,\"opt_bytes\":7680,\"seconds\":1.5,\"steps\":9}";
+    std::fs::write(matrix::outcome_path(&dir, &cells[0].v1_id()), v1_json).unwrap();
+    matrix::migrate_v1(&dir, &cells).unwrap();
+    let raw = std::fs::read_to_string(matrix::outcome_path(&dir, &cells[0].id())).unwrap();
+    assert!(raw.contains("\"v\":2"), "{raw}");
+    let a = matrix::read_outcome(&dir, &cells[0].id()).unwrap();
+    assert_eq!(a.accs, vec![10.0, 20.0, 30.0]);
+    assert_eq!(a.avg, 20.0);
+    // a second migration is a no-op (nothing left to move)
+    assert!(matrix::migrate_v1(&dir, &cells).unwrap().is_empty());
+    assert_eq!(matrix::read_outcome(&dir, &cells[0].id()).unwrap(), a);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn migration_refuses_an_ambiguous_multi_suite_grid() {
+    // a v1 id records no suite: migrating it onto a grid that sweeps
+    // several suites would have to guess which suite the v1 campaign
+    // trained — that must refuse, never mislabel finished work
+    let dir = tmpdir("v1_ambiguous");
+    let cells = Grid::new(4)
+        .with_axis(Axis::Preset(vec!["toy".into()]))
+        .with_axis(Axis::Method(vec!["lift".into()]))
+        .with_axis(Axis::Suite(vec!["arith".into(), "nlu".into()]))
+        .with_axis(Axis::Rank(vec![2]))
+        .with_axis(Axis::Interval(vec![2]))
+        .with_axis(Axis::Seed(vec![1]))
+        .expand();
+    assert_eq!(cells.len(), 2);
+    assert_eq!(cells[0].v1_id(), cells[1].v1_id(), "same v1 id across suites");
+    let v1_json = "{\"label\":\"LIFT\",\"accs\":[],\"avg\":0,\"tail_loss\":0.5,\
+                   \"trainable\":3,\"opt_bytes\":24,\"seconds\":0.25,\"steps\":4}";
+    std::fs::write(matrix::outcome_path(&dir, &cells[0].v1_id()), v1_json).unwrap();
+    let err = matrix::migrate_v1(&dir, &cells).unwrap_err().to_string();
+    assert!(err.contains("arith, nlu"), "{err}");
+    // nothing moved: the v1 file is intact and no v2 outcome appeared
+    assert_eq!(
+        std::fs::read_to_string(matrix::outcome_path(&dir, &cells[0].v1_id())).unwrap(),
+        v1_json
+    );
+    assert!(matrix::read_outcome(&dir, &cells[0].id()).is_none());
+    assert!(matrix::read_outcome(&dir, &cells[1].id()).is_none());
+    // narrowing to the single original suite migrates cleanly
+    let arith: Vec<CellSpec> = cells.iter().filter(|c| c.suite == "arith").cloned().collect();
+    let migrated = matrix::migrate_v1(&dir, &arith).unwrap();
+    assert_eq!(migrated, vec![arith[0].id()]);
+    assert!(matrix::read_outcome(&dir, &arith[0].id()).is_some());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn future_ledger_version_aborts_instead_of_recomputing() {
+    let dir = tmpdir("future_ledger");
+    let cells = matrix::expand_grid("toy", &["weight_mag".to_string()], &[], &[2], &[1], 4, 2);
+    let future = "{\"v\":3,\"label\":\"FUTURE\"}";
+    std::fs::write(matrix::outcome_path(&dir, &cells[0].id()), future).unwrap();
+    let err = matrix::run_matrix(&dir, &cells, 1, |s| matrix::run_toy_cell(s, &dir, 0, 0, 1))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("newer"), "{err}");
+    // the future file is untouched by the refusal
+    assert_eq!(
+        std::fs::read_to_string(matrix::outcome_path(&dir, &cells[0].id())).unwrap(),
+        future
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---- summary regression -------------------------------------------------
+
+#[test]
+fn summary_renders_dashes_for_empty_failed_and_corrupt_ledgers() {
+    let dir = tmpdir("summary_dashes");
+    let cells = matrix::expand_grid(
+        "toy",
+        &["weight_mag".to_string(), "random".to_string()],
+        &[],
+        &[2, 4],
+        &[1],
+        4,
+        2,
+    );
+    assert_eq!(cells.len(), 4);
+    // zero finished cells: header + '-' everywhere, rows intact, no panic
+    let t0 = matrix::summary_table(&dir, &cells);
+    assert!(t0.contains("0/4 cells finished"), "{t0}");
+    assert!(t0.contains("r=2 tgt") && t0.contains("r=4 ret"), "{t0}");
+    for m in ["weight_mag", "random"] {
+        assert!(t0.contains(m), "method row dropped: {t0}");
+    }
+    assert!(
+        t0.matches('-').count() >= 8,
+        "2 methods x 2 ranks x (tgt, ret) must all render '-': {t0}"
+    );
+    // all-failed campaign: no outcomes land -> same all-dash shape
+    let report = matrix::run_matrix(&dir, &cells, 2, |_s| -> anyhow::Result<matrix::CellOutcome> {
+        anyhow::bail!("synthetic cell failure")
+    })
+    .unwrap();
+    assert_eq!(report.failed.len(), 4);
+    let t1 = matrix::summary_table(&dir, &cells);
+    assert!(t1.contains("0/4 cells finished"), "{t1}");
+    // run for real, then corrupt one outcome: that cell reverts to '-'
+    let r2 = matrix::run_matrix(&dir, &cells, 2, |s| matrix::run_toy_cell(s, &dir, 0, 0, 1))
+        .unwrap();
+    assert_eq!(r2.ran.len(), 4, "{:?}", r2.failed);
+    let t2 = matrix::summary_table(&dir, &cells);
+    assert!(t2.contains("4/4 cells finished"), "{t2}");
+    std::fs::write(matrix::outcome_path(&dir, &cells[0].id()), "{torn-write").unwrap();
+    let t3 = matrix::summary_table(&dir, &cells);
+    assert!(t3.contains("3/4 cells finished"), "{t3}");
+    assert!(t3.contains('-'), "{t3}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---- resume-mid-axis determinism ---------------------------------------
+
+/// The acceptance scenario: a grid spanning the new axes (interval ×
+/// seed on the toy preset), one campaign straight, one interrupted both
+/// mid-cell (crash leaving a snapshot) and mid-axis (some cells done,
+/// the rest untouched), then resumed. Per-cell outcomes must be
+/// bit-identical — within each worker count AND across worker counts.
+#[test]
+fn interrupted_campaign_resumes_bit_identically_on_the_new_axes() {
+    let cells = Grid::new(4)
+        .with_axis(Axis::Preset(vec!["toy".into()]))
+        .with_axis(Axis::Method(vec!["lift".into(), "full".into()]))
+        .with_axis(Axis::Interval(vec![2, 3]))
+        .with_axis(Axis::Seed(vec![1, 2]))
+        .expand();
+    assert_eq!(cells.len(), 8);
+    let mut reference: Option<Vec<(String, u32, Option<f64>)>> = None;
+    for workers in [1usize, 4] {
+        let dir_a = tmpdir(&format!("straight_{workers}"));
+        let ra = matrix::run_matrix(&dir_a, &cells, workers, |s| {
+            matrix::run_toy_cell(s, &dir_a, 2, 0, 1)
+        })
+        .unwrap();
+        assert_eq!(ra.ran.len(), 8, "failed: {:?}", ra.failed);
+        let dir_b = tmpdir(&format!("resumed_{workers}"));
+        // crash one cell mid-train: snapshot at step 2 of 4 lands, then
+        // the gradient source dies (the ckpt.rs crash pattern)
+        let victim = &cells[3];
+        {
+            let ckpt_dir = matrix::cell_ckpt_dir(&dir_b, &victim.id());
+            let mut ctx = matrix::toy_ctx(1, 0xC311 ^ victim.seed).unwrap();
+            let mut params = matrix::toy_params(0x1717 ^ victim.seed);
+            let mut method = victim.method_with_lra(victim.rank.clamp(1, 8)).unwrap();
+            let cfg = TrainCfg {
+                steps: victim.steps,
+                lr: 1e-3,
+                warmup_frac: 0.03,
+                log_every: 0,
+                seed: victim.seed,
+                ckpt_every: 2,
+                ckpt_dir: Some(ckpt_dir.clone()),
+                ckpt_keep: 0,
+            };
+            let mut served = 0usize;
+            let mut dying = |params: &[Tensor], rng: &mut Rng| {
+                if served == 2 {
+                    anyhow::bail!("simulated crash");
+                }
+                served += 1;
+                matrix::synth_step(params, rng)
+            };
+            train_with(&mut dying, &mut *method, &mut ctx, &mut params, &cfg, None)
+                .unwrap_err();
+            assert!(ckpt::latest_snapshot(&ckpt_dir).unwrap().is_some());
+        }
+        // pre-finish two other cells so the rerun starts mid-axis
+        let pre: Vec<CellSpec> = vec![cells[0].clone(), cells[6].clone()];
+        let rp = matrix::run_matrix(&dir_b, &pre, workers, |s| {
+            matrix::run_toy_cell(s, &dir_b, 2, 0, 1)
+        })
+        .unwrap();
+        assert_eq!(rp.ran.len(), 2);
+        // resume the whole campaign: done cells skip, the crashed cell
+        // picks up its snapshot, the rest run fresh
+        let rb = matrix::run_matrix(&dir_b, &cells, workers, |s| {
+            matrix::run_toy_cell(s, &dir_b, 2, 0, 1)
+        })
+        .unwrap();
+        assert_eq!(rb.skipped.len(), 2);
+        assert_eq!(rb.ran.len(), 6);
+        // every outcome bit-identical to the straight campaign (seconds
+        // is wall time, the one legitimately nondeterministic field)
+        for c in &cells {
+            let a = matrix::read_outcome(&dir_a, &c.id()).unwrap();
+            let b = matrix::read_outcome(&dir_b, &c.id()).unwrap();
+            assert_eq!(a.tail_loss.to_bits(), b.tail_loss.to_bits(), "{}", c.id());
+            assert_eq!(a.retention, b.retention, "{}", c.id());
+            assert_eq!(a.target, b.target, "{}", c.id());
+            assert_eq!(a.source, b.source, "{}", c.id());
+            assert_eq!(a.label, b.label, "{}", c.id());
+            assert_eq!(a.accs, b.accs, "{}", c.id());
+            assert_eq!(a.trainable, b.trainable, "{}", c.id());
+            assert_eq!(a.opt_bytes, b.opt_bytes, "{}", c.id());
+            assert_eq!(a.steps, b.steps, "{}", c.id());
+        }
+        // and across worker counts: 1w ≡ Nw per cell
+        let snap: Vec<(String, u32, Option<f64>)> = cells
+            .iter()
+            .map(|c| {
+                let o = matrix::read_outcome(&dir_a, &c.id()).unwrap();
+                (c.id(), o.tail_loss.to_bits(), o.retention)
+            })
+            .collect();
+        match &reference {
+            None => reference = Some(snap),
+            Some(r) => assert_eq!(r, &snap, "outcomes differ across worker counts"),
+        }
+        std::fs::remove_dir_all(&dir_a).unwrap();
+        std::fs::remove_dir_all(&dir_b).unwrap();
+    }
+}
+
+// ---- retention ordering -------------------------------------------------
+
+#[test]
+fn toy_retention_separates_sparse_from_full_ft() {
+    let dir = tmpdir("toy_retention");
+    let cells = matrix::expand_grid(
+        "toy",
+        &["full".to_string(), "weight_mag".to_string()],
+        &[],
+        &[2],
+        &[1],
+        4,
+        2,
+    );
+    let r = matrix::run_matrix(&dir, &cells, 2, |s| matrix::run_toy_cell(s, &dir, 0, 0, 1))
+        .unwrap();
+    assert_eq!(r.ran.len(), 2, "{:?}", r.failed);
+    let by_method = |m: &str| {
+        let c = cells.iter().find(|c| c.method == m).unwrap();
+        matrix::read_outcome(&dir, &c.id()).unwrap()
+    };
+    let full = by_method("full");
+    let sparse = by_method("weight_mag");
+    let rf = full.retention.unwrap();
+    let rs = sparse.retention.unwrap();
+    assert!((0.0..=1.0).contains(&rf), "full retention out of range: {rf}");
+    assert!((0.0..=1.0).contains(&rs), "sparse retention out of range: {rs}");
+    // the paper's qualitative ordering in the toy world: Full FT moves
+    // (almost) every weight; the budgeted sparse method leaves the
+    // non-principal ones bit-identical
+    assert!(rs > rf + 0.2, "sparse {rs} should retain far more than full {rf}");
+    assert!(rs > 0.5, "sparse method should keep most weights: {rs}");
+    // toy cells also carry the target tail-perplexity metric
+    assert!(sparse.target.unwrap().perplexity.unwrap() > 0.0);
+    // and the summary surfaces the retention columns
+    let (_, table) = matrix::write_summary(&dir, &cells).unwrap();
+    assert!(table.contains("ret"), "{table}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}

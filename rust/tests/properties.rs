@@ -3,6 +3,8 @@
 
 use lift::data::tasks::{gen_sample, samples_to_batches, TaskFamily};
 use lift::data::{Kg, Vocab};
+use lift::exp::grid::{Axis, Grid};
+use lift::exp::matrix::CellSpec;
 use lift::lift::{budget_for, mask_overlap, topk_indices};
 use lift::model;
 use lift::optim::{AdamCfg, DenseAdam, SparseAdam};
@@ -561,6 +563,112 @@ fn prop_mask_overlap_bounds_and_identity() {
         let o = mask_overlap(&a, &b);
         ensure((0.0..=1.0).contains(&o), "bounds")?;
         ensure_close(mask_overlap(&a, &a), 1.0, 1e-12, "self overlap")
+    });
+}
+
+#[test]
+fn prop_grid_dedups_and_ids_are_unique() {
+    // axis values drawn WITH duplicates: the expansion must collapse
+    // them (cell count = product of deduped axis sizes) and every cell
+    // id must be unique
+    fn uniq_count<T: Ord + Clone>(v: &[T]) -> usize {
+        let mut s: Vec<T> = v.to_vec();
+        s.sort();
+        s.dedup();
+        s.len()
+    }
+    check("grid dedup + unique ids", |rng| {
+        let methods: Vec<String> =
+            (0..1 + rng.below(5)).map(|_| format!("m{}", rng.below(3))).collect();
+        let suites: Vec<String> =
+            (0..1 + rng.below(3)).map(|_| format!("s{}", rng.below(2))).collect();
+        let ranks: Vec<usize> = (0..1 + rng.below(4)).map(|_| 1 + rng.below(3)).collect();
+        let seeds: Vec<u64> = (0..1 + rng.below(4)).map(|_| rng.below(3) as u64).collect();
+        let cells = Grid::new(4)
+            .with_axis(Axis::Method(methods.clone()))
+            .with_axis(Axis::Suite(suites.clone()))
+            .with_axis(Axis::Rank(ranks.clone()))
+            .with_axis(Axis::Seed(seeds.clone()))
+            .expand();
+        let want =
+            uniq_count(&methods) * uniq_count(&suites) * uniq_count(&ranks) * uniq_count(&seeds);
+        ensure(
+            cells.len() == want,
+            format!("{} cells, want {want} after dedup", cells.len()),
+        )?;
+        let ids: std::collections::HashSet<String> = cells.iter().map(|c| c.id()).collect();
+        ensure(ids.len() == cells.len(), "duplicate cell ids in a deduped grid")
+    });
+}
+
+#[test]
+fn prop_grid_expansion_is_axis_order_invariant() {
+    // the same axes added in a random permutation order must expand to
+    // the identical cell vector (content AND order) — the invariant the
+    // golden file in rust/tests/grid.rs pins for one reference grid
+    check("grid axis-order invariance", |rng| {
+        let axes = vec![
+            Axis::Preset(vec![format!("p{}", rng.below(3)), "toy".to_string()]),
+            Axis::Method(vec!["lift".to_string(), format!("m{}", rng.below(3))]),
+            Axis::Suite(vec![format!("s{}", rng.below(2))]),
+            Axis::Rank(vec![1 + rng.below(4), 1 + rng.below(4)]),
+            Axis::Interval(vec![1 + rng.below(5)]),
+            Axis::Seed(vec![rng.below(4) as u64, rng.below(4) as u64]),
+        ];
+        let mut order: Vec<usize> = (0..axes.len()).collect();
+        for i in (1..order.len()).rev() {
+            let j = rng.below(i + 1);
+            order.swap(i, j);
+        }
+        let canonical = axes
+            .iter()
+            .cloned()
+            .fold(Grid::new(3), |g, a| g.with_axis(a))
+            .expand();
+        let permuted = order
+            .iter()
+            .map(|&i| axes[i].clone())
+            .fold(Grid::new(3), |g, a| g.with_axis(a))
+            .expand();
+        ensure(
+            canonical == permuted,
+            format!("axis order {order:?} changed the expansion"),
+        )
+    });
+}
+
+#[test]
+fn prop_any_spec_field_change_changes_the_id() {
+    // cell identity covers EVERY spec field: mutating any one of them
+    // (others held fixed) must produce a different id, so no changed
+    // configuration can ever reuse a stale ledger entry
+    check("cell id injective per field", |rng| {
+        let base = CellSpec {
+            preset: format!("p{}", rng.below(4)),
+            method: format!("m{}", rng.below(4)),
+            suite: format!("s{}", rng.below(4)),
+            rank: rng.below(64),
+            seed: rng.below(64) as u64,
+            steps: 1 + rng.below(64),
+            interval: 1 + rng.below(64),
+        };
+        let id = base.id();
+        let variants = vec![
+            CellSpec { preset: format!("{}x", base.preset), ..base.clone() },
+            CellSpec { method: format!("{}x", base.method), ..base.clone() },
+            CellSpec { suite: format!("{}x", base.suite), ..base.clone() },
+            CellSpec { rank: base.rank + 1, ..base.clone() },
+            CellSpec { seed: base.seed + 1, ..base.clone() },
+            CellSpec { steps: base.steps + 1, ..base.clone() },
+            CellSpec { interval: base.interval + 1, ..base.clone() },
+        ];
+        for v in variants {
+            ensure(
+                v.id() != id,
+                format!("changing {v:?} kept the id {id}"),
+            )?;
+        }
+        Ok(())
     });
 }
 
