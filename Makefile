@@ -6,7 +6,7 @@
 # XlaBuilder toolkit (mask engine, property tests, quickstart selftest);
 # artifact-dependent integration tests skip themselves when absent.
 
-.PHONY: artifacts artifacts-e2e test bench bench-check clippy matrix-smoke
+.PHONY: artifacts artifacts-e2e test bench bench-check clippy matrix-smoke matrix-race
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -40,7 +40,32 @@ matrix-smoke:
 	  --out /tmp/lift_mx_straight
 	LIFT_MATRIX_KILL_AFTER=3 target/release/lift matrix --toy \
 	  --methods lift,full --axis "interval=2,4;seed=1,2" --steps 8 \
-	  --ckpt-every 2 --out /tmp/lift_mx_resumed; test $$? -eq 41
+	  --ckpt-every 2 --runner-id local --out /tmp/lift_mx_resumed; test $$? -eq 41
 	target/release/lift matrix --toy --methods lift,full \
 	  --axis "interval=2,4;seed=1,2" --steps 8 --ckpt-every 2 \
-	  --out /tmp/lift_mx_resumed
+	  --runner-id local --out /tmp/lift_mx_resumed
+
+# the ISSUE-6 acceptance flow, locally: two concurrent runners shard ONE
+# campaign directory via cell leases (no coordinator), then the merged
+# ledger is diffed cell-for-cell against a single-runner run — equal
+# modulo the wall-clock seconds field, with every lease released.
+matrix-race:
+	cargo build --release
+	target/release/lift matrix --toy --methods lift,full \
+	  --axis "interval=2,4;seed=1,2" --steps 8 --ckpt-every 2 \
+	  --out /tmp/lift_mx_solo
+	target/release/lift matrix --toy --methods lift,full \
+	  --axis "interval=2,4;seed=1,2" --steps 8 --ckpt-every 2 \
+	  --out /tmp/lift_mx_race --runner-id racer_a & \
+	target/release/lift matrix --toy --methods lift,full \
+	  --axis "interval=2,4;seed=1,2" --steps 8 --ckpt-every 2 \
+	  --out /tmp/lift_mx_race --runner-id racer_b; \
+	rc_b=$$?; wait $$!; rc_a=$$?; test $$rc_a -eq 0 && test $$rc_b -eq 0
+	python3 -c 'import glob, json, os; \
+	solo = sorted(glob.glob("/tmp/lift_mx_solo/*.json")); \
+	assert len(solo) == 8, solo; \
+	pairs = [(json.load(open(p)), json.load(open(os.path.join("/tmp/lift_mx_race", os.path.basename(p))))) for p in solo]; \
+	[ (a.pop("seconds"), b.pop("seconds")) for a, b in pairs ]; \
+	assert all(a == b for a, b in pairs), "race ledger diverged from single-runner"; \
+	assert not glob.glob("/tmp/lift_mx_race/*.lease"), "leases left behind"; \
+	print("matrix race OK: merged ledger matches single-runner modulo seconds")'

@@ -43,6 +43,22 @@
 //!     # (`tgt`) and source-retention (`ret`) columns per rank.
 //!     # --toy runs artifact-free synthetic cells; --workers caps the
 //!     # cell fan-out (default: LIFT_WORKERS / available parallelism).
+//!
+//! lift matrix ... --out shared/campaign --runner-id host1   # on host 1
+//! lift matrix ... --out shared/campaign --runner-id host2   # on host 2
+//!     # multi-runner campaigns (exp::lease): N `lift matrix` processes
+//!     # pointed at ONE --out directory — same machine or hosts sharing
+//!     # a filesystem — shard the campaign with zero coordination
+//!     # service. Each cell is claimed by an atomic `<cell-id>.lease`
+//!     # file (create-new semantics; runner id + monotonic fencing
+//!     # token + TTL deadline): live leases defer the cell to its
+//!     # holder, a crashed runner's leases expire after --lease-ttl
+//!     # (default 600s — size it above the slowest cell) and are taken
+//!     # over at a higher token, and outcome commits are fenced so a
+//!     # stalled zombie can never overwrite its usurper's work. Reuse a
+//!     # stable --runner-id across restarts to reclaim your own leases
+//!     # immediately; --no-lease turns the protocol off for strictly
+//!     # single-process campaigns.
 //! ```
 
 use std::sync::Arc;

@@ -236,15 +236,24 @@ impl Snapshot {
 /// writer: temp file in the same directory, then rename — a crash
 /// mid-save never leaves a torn file at `path`.
 pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    write_atomic_as(path, &path.with_extension("tmp"), bytes)
+}
+
+/// [`write_atomic`] with an explicit temp path, for writers that must
+/// not share a temp name — the matrix ledger tags temps with the
+/// runner's identity so concurrent runners finishing the same cell
+/// never interleave bytes into one temp file. `tmp` must live on the
+/// same filesystem as `path` (same directory in practice) for the
+/// rename to stay atomic.
+pub fn write_atomic_as(path: &Path, tmp: &Path, bytes: &[u8]) -> Result<()> {
     if let Some(dir) = path.parent() {
         if !dir.as_os_str().is_empty() {
             std::fs::create_dir_all(dir)
                 .with_context(|| format!("creating snapshot dir {dir:?}"))?;
         }
     }
-    let tmp = path.with_extension("tmp");
-    std::fs::write(&tmp, bytes).with_context(|| format!("writing snapshot {tmp:?}"))?;
-    std::fs::rename(&tmp, path).with_context(|| format!("committing snapshot {path:?}"))?;
+    std::fs::write(tmp, bytes).with_context(|| format!("writing snapshot temp {tmp:?}"))?;
+    std::fs::rename(tmp, path).with_context(|| format!("committing snapshot {path:?}"))?;
     Ok(())
 }
 

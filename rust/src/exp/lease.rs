@@ -1,0 +1,539 @@
+//! Lease-based cell claiming for distributed matrix campaigns.
+//!
+//! N independent `lift matrix` processes — on one machine or on many
+//! hosts sharing a filesystem (NFS) — shard one campaign with **zero
+//! coordination service**: before computing a cell, a runner atomically
+//! claims it by creating `<out>/<cell-id>.lease` next to the outcome
+//! file, using create-new (`O_CREAT|O_EXCL`) semantics so exactly one
+//! creator wins. The lease records three things:
+//!
+//! * **runner id** — who holds the cell (`--runner-id`; default
+//!   `<hostname>-<pid>`);
+//! * **fencing token** — a monotonically increasing claim counter. A
+//!   fresh claim writes token 1; every takeover of an expired lease
+//!   writes `old + 1`. Commits are fenced on it (below);
+//! * **expiry deadline** — `now + TTL` in unix seconds (`--lease-ttl`).
+//!
+//! # Protocol
+//!
+//! * **Claim** ([`claim`]): create-new the lease file. If it already
+//!   exists, read it: a lease held by *our own* runner id is reclaimed
+//!   (same token, fresh deadline — a restarted runner picks its cells
+//!   back up immediately; reuse `--runner-id` across restarts to get
+//!   this); a **live** foreign lease defers the cell ([`Claim::Busy`] —
+//!   the holder is computing it); an **expired or unreadable** lease is
+//!   taken over by atomically renaming a higher-token lease over it and
+//!   reading back to confirm the takeover race was won.
+//! * **Renew** ([`LeaseGuard::renew`]): rewrite the same (runner, token)
+//!   with a fresh deadline; refuses if the lease was lost. `run_matrix`
+//!   renews once right before the cell computes — size the TTL to
+//!   comfortably exceed the slowest cell.
+//! * **Fenced commit** ([`LeaseGuard::still_held`]): `write_outcome`
+//!   commits only while the on-disk lease still carries exactly our
+//!   (runner id, token). A runner that stalled past its TTL and was
+//!   taken over reads the usurper's higher token and *refuses* to
+//!   commit — its cell is recomputed by the takeover runner instead of
+//!   two runners racing renames onto one outcome file.
+//! * **Release** ([`LeaseGuard::release`]): delete the lease after the
+//!   outcome lands (or after a failure, so the cell is reclaimable
+//!   immediately). Only a lease we still hold is deleted.
+//!
+//! A crashed runner never blocks a campaign forever: its leases expire
+//! by TTL and the cells are recovered by takeover. Checkpoint dirs are
+//! keyed by the claim's fencing token
+//! (`exp::matrix::cell_ckpt_dir_fenced`), so a takeover runner never
+//! shares a snapshot directory with the zombie it displaced.
+//!
+//! # Honest limits
+//!
+//! The deadline uses wall-clock unix seconds — the only clock hosts on a
+//! shared filesystem have in common — so the TTL must also absorb
+//! cross-host clock skew. And between the fencing check and the final
+//! rename there remains a syscall-wide window in which a takeover can
+//! land; cells are pure functions of their spec and outcome writes are
+//! atomic, so the loser of that window renames identical bytes, never a
+//! torn or wrong outcome. Both are the standard price of lease files
+//! without a coordination service; the fencing token bounds the damage
+//! to (at worst) one redundantly computed cell.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Campaign-wide lease knobs: this runner's identity and the TTL every
+/// claim/renewal stamps.
+#[derive(Clone, Debug)]
+pub struct LeaseCfg {
+    pub runner: String,
+    pub ttl_secs: u64,
+}
+
+impl LeaseCfg {
+    pub fn new(runner: &str, ttl_secs: u64) -> LeaseCfg {
+        LeaseCfg {
+            runner: sanitize(runner),
+            ttl_secs: ttl_secs.max(1),
+        }
+    }
+
+    /// `<hostname>-<pid>`: unique per process, so uncoordinated runners
+    /// never collide by default. A runner that should RECLAIM its cells
+    /// after a restart must pass an explicit stable `--runner-id`
+    /// instead (otherwise its old leases wait out the TTL).
+    pub fn default_runner_id() -> String {
+        let host = std::env::var("HOSTNAME").unwrap_or_else(|_| "host".to_string());
+        sanitize(&format!("{host}-{}", std::process::id()))
+    }
+}
+
+/// Runner ids become filename components (lease tmp names, outcome tmp
+/// names), so anything outside `[A-Za-z0-9._-]` maps to `-`.
+pub fn sanitize(s: &str) -> String {
+    let cleaned: String = s
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                c
+            } else {
+                '-'
+            }
+        })
+        .collect();
+    if cleaned.is_empty() {
+        "runner".to_string()
+    } else {
+        cleaned
+    }
+}
+
+/// Current wall clock in unix seconds — the shared-filesystem common
+/// denominator the expiry deadline lives in.
+pub fn now_unix() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+pub fn lease_path(out_dir: &Path, id: &str) -> PathBuf {
+    out_dir.join(format!("{id}.lease"))
+}
+
+/// The persisted lease record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Lease {
+    pub runner: String,
+    pub token: u64,
+    pub expires_unix: u64,
+}
+
+impl Lease {
+    pub fn is_expired(&self, now: u64) -> bool {
+        now >= self.expires_unix
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("runner", Json::str(&self.runner)),
+            ("token", Json::from(self.token as usize)),
+            ("expires_unix", Json::from(self.expires_unix as usize)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Lease> {
+        Some(Lease {
+            runner: j.get("runner")?.as_str()?.to_string(),
+            token: j.get("token")?.as_f64()? as u64,
+            expires_unix: j.get("expires_unix")?.as_f64()? as u64,
+        })
+    }
+}
+
+/// The lease currently on disk for a cell. `None` means no lease
+/// file OR an unreadable/corrupt one — both are claimable states (a
+/// corrupt lease is a half-written claim whose writer died; fencing on
+/// (runner, token) keeps a surviving writer from committing over a
+/// takeover).
+pub fn read_lease(out_dir: &Path, id: &str) -> Option<Lease> {
+    let s = std::fs::read_to_string(lease_path(out_dir, id)).ok()?;
+    Lease::from_json(&Json::parse(&s).ok()?)
+}
+
+/// Result of a claim attempt.
+pub enum Claim {
+    /// This runner holds the cell; compute it, commit through the
+    /// guard's fence, then release.
+    Held(LeaseGuard),
+    /// A live lease belongs to another runner — skip the cell (it will
+    /// be in the report's `deferred` column).
+    Busy { holder: String, expires_unix: u64 },
+}
+
+/// Proof of a claim: the (runner, token) pair every subsequent renew /
+/// fenced commit / release is checked against.
+pub struct LeaseGuard {
+    out_dir: PathBuf,
+    id: String,
+    runner: String,
+    token: u64,
+    ttl_secs: u64,
+}
+
+impl LeaseGuard {
+    pub fn token(&self) -> u64 {
+        self.token
+    }
+
+    pub fn runner(&self) -> &str {
+        &self.runner
+    }
+
+    /// Whether the on-disk lease still carries exactly our
+    /// (runner, token) — the fencing check a commit is gated on. A
+    /// missing or unreadable lease also reads as lost: we can no longer
+    /// prove ownership, so the commit is refused and the cell falls to
+    /// whoever holds (or next claims) it.
+    pub fn still_held(&self) -> bool {
+        matches!(
+            read_lease(&self.out_dir, &self.id),
+            Some(l) if l.runner == self.runner && l.token == self.token
+        )
+    }
+
+    fn body(&self) -> Lease {
+        Lease {
+            runner: self.runner.clone(),
+            token: self.token,
+            expires_unix: now_unix() + self.ttl_secs,
+        }
+    }
+
+    /// Extend the deadline by a fresh TTL (same runner, same token).
+    /// Fails if the lease was lost — the caller must not start (or keep)
+    /// computing a cell it no longer holds.
+    pub fn renew(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.still_held(),
+            "lease on cell {} was lost (taken over or released) — refusing to renew",
+            self.id
+        );
+        write_lease_atomic(&self.out_dir, &self.id, &self.runner, &self.body())
+            .with_context(|| format!("renewing lease on cell {}", self.id))
+    }
+
+    /// Delete the lease if (and only if) we still hold it; a lease lost
+    /// to a takeover is left alone — it is the usurper's to release.
+    pub fn release(self) -> Result<()> {
+        if !self.still_held() {
+            log::debug!(
+                "lease on cell {} no longer held by {} — leaving it in place",
+                self.id,
+                self.runner
+            );
+            return Ok(());
+        }
+        match std::fs::remove_file(lease_path(&self.out_dir, &self.id)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e).with_context(|| format!("releasing lease on cell {}", self.id)),
+        }
+    }
+}
+
+/// Atomically install a lease body: unique per-runner temp name (two
+/// runners racing a takeover never share a temp file), then rename.
+fn write_lease_atomic(out_dir: &Path, id: &str, runner: &str, lease: &Lease) -> Result<()> {
+    let tmp = out_dir.join(format!("{id}.lease.{runner}.tmp"));
+    std::fs::write(&tmp, lease.to_json().to_string())
+        .with_context(|| format!("writing lease temp {tmp:?}"))?;
+    std::fs::rename(&tmp, lease_path(out_dir, id))
+        .with_context(|| format!("installing lease for cell {id}"))?;
+    Ok(())
+}
+
+/// Try to claim cell `id` for `cfg.runner`. See the module doc for the
+/// full protocol; in short — create-new wins a fresh claim (token 1), a
+/// lease of our own runner id is reclaimed at its existing token, a live
+/// foreign lease is `Busy`, and an expired/corrupt lease is taken over
+/// at `token + 1` with a read-back to confirm the rename race was won.
+pub fn claim(out_dir: &Path, id: &str, cfg: &LeaseCfg) -> Result<Claim> {
+    let path = lease_path(out_dir, id);
+    let fresh = Lease {
+        runner: cfg.runner.clone(),
+        token: 1,
+        expires_unix: now_unix() + cfg.ttl_secs,
+    };
+    match std::fs::OpenOptions::new()
+        .write(true)
+        .create_new(true)
+        .open(&path)
+    {
+        Ok(mut f) => {
+            f.write_all(fresh.to_json().to_string().as_bytes())
+                .with_context(|| format!("writing fresh lease {path:?}"))?;
+            return Ok(Claim::Held(LeaseGuard {
+                out_dir: out_dir.to_path_buf(),
+                id: id.to_string(),
+                runner: cfg.runner.clone(),
+                token: 1,
+                ttl_secs: cfg.ttl_secs,
+            }));
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {}
+        Err(e) => {
+            return Err(e).with_context(|| format!("creating lease {path:?}"));
+        }
+    }
+    // someone claimed this cell before us — inspect the lease
+    let current = read_lease(out_dir, id);
+    if let Some(l) = &current {
+        if l.runner == cfg.runner {
+            // our own lease (this runner restarted, or a prior claim of
+            // this run): reclaim at the SAME token so snapshots written
+            // under it keep resuming, and push the deadline out
+            let guard = LeaseGuard {
+                out_dir: out_dir.to_path_buf(),
+                id: id.to_string(),
+                runner: cfg.runner.clone(),
+                token: l.token,
+                ttl_secs: cfg.ttl_secs,
+            };
+            write_lease_atomic(out_dir, id, &cfg.runner, &guard.body())
+                .with_context(|| format!("reclaiming lease on cell {id}"))?;
+            return Ok(Claim::Held(guard));
+        }
+        if !l.is_expired(now_unix()) {
+            return Ok(Claim::Busy {
+                holder: l.runner.clone(),
+                expires_unix: l.expires_unix,
+            });
+        }
+    }
+    // expired (or unreadable — a claim whose writer died mid-write):
+    // take over with a strictly higher fencing token, then read back to
+    // learn whether our rename won the takeover race
+    let takeover = Lease {
+        runner: cfg.runner.clone(),
+        token: current.as_ref().map(|l| l.token + 1).unwrap_or(1),
+        expires_unix: now_unix() + cfg.ttl_secs,
+    };
+    write_lease_atomic(out_dir, id, &cfg.runner, &takeover)
+        .with_context(|| format!("taking over expired lease on cell {id}"))?;
+    match read_lease(out_dir, id) {
+        Some(l) if l.runner == takeover.runner && l.token == takeover.token => {
+            log::info!(
+                "cell {id}: took over expired lease at fencing token {} (runner {})",
+                takeover.token,
+                cfg.runner
+            );
+            Ok(Claim::Held(LeaseGuard {
+                out_dir: out_dir.to_path_buf(),
+                id: id.to_string(),
+                runner: cfg.runner.clone(),
+                token: takeover.token,
+                ttl_secs: cfg.ttl_secs,
+            }))
+        }
+        Some(l) => Ok(Claim::Busy {
+            holder: l.runner,
+            expires_unix: l.expires_unix,
+        }),
+        // our just-renamed lease vanished: the winner already released
+        // (computed the cell faster than our read-back) — defer
+        None => Ok(Claim::Busy {
+            holder: "unknown (lease released mid-takeover)".to_string(),
+            expires_unix: 0,
+        }),
+    }
+}
+
+/// Garbage-collect the lease of a cell whose outcome already exists —
+/// the state a crash between outcome-commit and release leaves behind.
+/// Only a lease that is ours or expired is removed; a live foreign
+/// lease is left to its holder's own release.
+pub fn gc_finished(out_dir: &Path, id: &str, cfg: &LeaseCfg) {
+    let Some(l) = read_lease(out_dir, id) else {
+        return;
+    };
+    if l.runner == cfg.runner || l.is_expired(now_unix()) {
+        if std::fs::remove_file(lease_path(out_dir, id)).is_ok() {
+            log::debug!("cell {id}: removed leftover lease (outcome already committed)");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lift_lease_unit_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn put_lease(dir: &Path, id: &str, runner: &str, token: u64, expires_unix: u64) {
+        let l = Lease {
+            runner: runner.into(),
+            token,
+            expires_unix,
+        };
+        std::fs::write(lease_path(dir, id), l.to_json().to_string()).unwrap();
+    }
+
+    #[test]
+    fn sanitize_keeps_safe_chars_and_replaces_the_rest() {
+        assert_eq!(sanitize("host-1.example_A"), "host-1.example_A");
+        assert_eq!(sanitize("a/b c:d"), "a-b-c-d");
+        assert_eq!(sanitize(""), "runner");
+        // default ids are already filename-safe
+        let d = LeaseCfg::default_runner_id();
+        assert_eq!(d, sanitize(&d));
+    }
+
+    #[test]
+    fn lease_json_roundtrip() {
+        let l = Lease {
+            runner: "r1".into(),
+            token: 7,
+            expires_unix: 1_999_999_999,
+        };
+        let back = Lease::from_json(&Json::parse(&l.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, l);
+    }
+
+    #[test]
+    fn fresh_claim_wins_and_lands_token_one() {
+        let dir = tmpdir("fresh");
+        let cfg = LeaseCfg::new("r1", 60);
+        let Claim::Held(g) = claim(&dir, "cell", &cfg).unwrap() else {
+            panic!("fresh claim must be held");
+        };
+        assert_eq!(g.token(), 1);
+        assert!(g.still_held());
+        let on_disk = read_lease(&dir, "cell").unwrap();
+        assert_eq!(on_disk.runner, "r1");
+        assert_eq!(on_disk.token, 1);
+        assert!(on_disk.expires_unix >= now_unix());
+        g.release().unwrap();
+        assert!(read_lease(&dir, "cell").is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn live_foreign_lease_is_busy() {
+        let dir = tmpdir("busy");
+        put_lease(&dir, "cell", "other", 3, now_unix() + 600);
+        match claim(&dir, "cell", &LeaseCfg::new("me", 60)).unwrap() {
+            Claim::Busy { holder, .. } => assert_eq!(holder, "other"),
+            Claim::Held(_) => panic!("must defer to a live lease"),
+        }
+        // the live lease is untouched
+        assert_eq!(read_lease(&dir, "cell").unwrap().token, 3);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn expired_lease_is_taken_over_with_a_higher_token() {
+        let dir = tmpdir("takeover");
+        put_lease(&dir, "cell", "dead", 5, now_unix().saturating_sub(10));
+        let Claim::Held(g) = claim(&dir, "cell", &LeaseCfg::new("me", 60)).unwrap() else {
+            panic!("expired lease must be takeover-able");
+        };
+        assert_eq!(g.token(), 6, "takeover must fence with old token + 1");
+        let on_disk = read_lease(&dir, "cell").unwrap();
+        assert_eq!((on_disk.runner.as_str(), on_disk.token), ("me", 6));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_lease_is_takeover_able() {
+        let dir = tmpdir("corrupt");
+        std::fs::write(lease_path(&dir, "cell"), "{half a lea").unwrap();
+        let Claim::Held(g) = claim(&dir, "cell", &LeaseCfg::new("me", 60)).unwrap() else {
+            panic!("corrupt lease must be claimable");
+        };
+        assert_eq!(g.token(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn own_lease_is_reclaimed_at_the_same_token() {
+        let dir = tmpdir("reclaim");
+        // even an EXPIRED own lease reclaims (not takes over): same
+        // token means the restarted runner resumes its own fenced
+        // checkpoint dir
+        put_lease(&dir, "cell", "me", 4, now_unix().saturating_sub(10));
+        let Claim::Held(g) = claim(&dir, "cell", &LeaseCfg::new("me", 60)).unwrap() else {
+            panic!("own lease must reclaim");
+        };
+        assert_eq!(g.token(), 4);
+        let on_disk = read_lease(&dir, "cell").unwrap();
+        assert!(on_disk.expires_unix >= now_unix() + 50, "deadline must be pushed out");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stale_guard_fails_fencing_and_refuses_renew_and_release() {
+        let dir = tmpdir("stale");
+        let Claim::Held(g) = claim(&dir, "cell", &LeaseCfg::new("me", 60)).unwrap() else {
+            panic!();
+        };
+        // simulate a takeover landing while we compute
+        put_lease(&dir, "cell", "usurper", g.token() + 1, now_unix() + 600);
+        assert!(!g.still_held(), "fencing must see the higher token");
+        assert!(g.renew().is_err(), "renew of a lost lease must refuse");
+        g.release().unwrap();
+        let left = read_lease(&dir, "cell").unwrap();
+        assert_eq!(left.runner, "usurper", "release must not delete the usurper's lease");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn claim_race_has_exactly_one_winner() {
+        let dir = tmpdir("race");
+        fn cfg_for(i: usize) -> LeaseCfg {
+            LeaseCfg::new(&format!("racer{i}"), 300)
+        }
+        let wins: Vec<bool> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let dir = dir.clone();
+                    s.spawn(move || {
+                        matches!(claim(&dir, "cell", &cfg_for(i)).unwrap(), Claim::Held(_))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(
+            wins.iter().filter(|&&w| w).count(),
+            1,
+            "create-new must admit exactly one claimant: {wins:?}"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_finished_spares_live_foreign_leases() {
+        let dir = tmpdir("gc");
+        let me = LeaseCfg::new("me", 60);
+        // ours: collected
+        put_lease(&dir, "a", "me", 1, now_unix() + 600);
+        gc_finished(&dir, "a", &me);
+        assert!(read_lease(&dir, "a").is_none());
+        // expired foreign: collected
+        put_lease(&dir, "b", "dead", 2, now_unix().saturating_sub(5));
+        gc_finished(&dir, "b", &me);
+        assert!(read_lease(&dir, "b").is_none());
+        // live foreign: spared
+        put_lease(&dir, "c", "other", 3, now_unix() + 600);
+        gc_finished(&dir, "c", &me);
+        assert_eq!(read_lease(&dir, "c").unwrap().runner, "other");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -47,15 +47,49 @@
 //!   (and CI-tested, `rust/tests/{ckpt,grid}.rs`) without AOT artifacts;
 //! * [`run_real_cell`] — the full fine-tune + eval path, requiring
 //!   `make artifacts`.
+//!
+//! # Multi-runner campaigns (leases)
+//!
+//! [`run_matrix_with`] shards one campaign across N **uncoordinated**
+//! `lift matrix` processes pointed at the same `--out` directory — on
+//! one machine or many hosts over a shared filesystem. Before computing
+//! a cell, a runner atomically claims it through `exp::lease`
+//! (`<cell-id>.lease` created with `O_CREAT|O_EXCL` create-new
+//! semantics, carrying runner id + monotonic **fencing token** + TTL
+//! deadline):
+//!
+//! * a cell under a **live foreign lease** is *deferred* — reported in
+//!   [`MatrixReport::deferred`], never recomputed while its holder
+//!   lives;
+//! * an **expired** lease (crashed runner) is **taken over** at a
+//!   strictly higher fencing token; the takeover's checkpoint dir is
+//!   keyed by that token ([`cell_ckpt_dir_fenced`],
+//!   `<cell-id>.t<token>.ckpt`), so a displaced zombie's late snapshot
+//!   writes land in a dir nobody reads;
+//! * the outcome **commit is fenced**: [`write_outcome`] goes through a
+//!   per-(runner, token) temp name and only commits while the on-disk
+//!   lease still carries exactly this runner's winning token — a zombie
+//!   that stalls past its TTL refuses its own commit instead of racing
+//!   the usurper;
+//! * after the outcome lands the lease is released; a crash between
+//!   commit and release is garbage-collected on the next classify pass.
+//!
+//! Campaign-level merge correctness: cells are pure functions of their
+//! spec, so N runners' merged ledger is bit-identical (modulo the
+//! wall-clock `seconds` field) to a single-runner run — CI races two
+//! runners over one campaign and diffs exactly that
+//! (`make matrix-race`). Single-process use is unchanged:
+//! [`run_matrix`] runs lease-free (`--no-lease` at the CLI).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::ckpt;
 use crate::data::tasks::{suite_families, TaskMixSource, TaskSet};
 use crate::exp::grid::{Axis, Grid};
+use crate::exp::lease::{self, Claim, LeaseCfg, LeaseGuard};
 use crate::exp::retention::{self, RetentionCfg, SuiteScores};
 use crate::lift::engine::par_map;
 use crate::lift::LiftCfg;
@@ -317,6 +351,19 @@ pub fn cell_ckpt_dir(out_dir: &Path, id: &str) -> PathBuf {
     out_dir.join(format!("{id}.ckpt"))
 }
 
+/// The cell's checkpoint dir under a lease: keyed by the claim's fencing
+/// token (`<id>.t<token>.ckpt`), so a runner that takes over an expired
+/// lease (token + 1) NEVER shares a snapshot dir with the zombie it
+/// displaced — a stalled writer's late snapshots land in a dir nobody
+/// resumes from. Lease-free runs (`token = None`) keep the plain
+/// `<id>.ckpt`.
+pub fn cell_ckpt_dir_fenced(out_dir: &Path, id: &str, token: Option<u64>) -> PathBuf {
+    match token {
+        Some(t) => out_dir.join(format!("{id}.t{t}.ckpt")),
+        None => cell_ckpt_dir(out_dir, id),
+    }
+}
+
 /// What the ledger holds for one cell id.
 #[derive(Clone, Debug)]
 pub enum LedgerEntry {
@@ -325,6 +372,11 @@ pub enum LedgerEntry {
     V1,
     Future(u64),
     Corrupt(String),
+    /// The file exists but could not be READ (`EACCES`, `EIO`, an NFS
+    /// hiccup…). Distinct from `Corrupt` — bad bytes prove the cell
+    /// unfinished, a failed read proves nothing — so the campaign
+    /// aborts instead of recomputing over possibly-finished work.
+    Unreadable(String),
 }
 
 /// Classify a cell's outcome file without committing to a policy.
@@ -333,7 +385,7 @@ pub fn classify_outcome(out_dir: &Path, id: &str) -> LedgerEntry {
     let s = match std::fs::read_to_string(&path) {
         Ok(s) => s,
         Err(e) if e.kind() == std::io::ErrorKind::NotFound => return LedgerEntry::Missing,
-        Err(e) => return LedgerEntry::Corrupt(format!("unreadable: {e}")),
+        Err(e) => return LedgerEntry::Unreadable(format!("{} reading {}", e, path.display())),
     };
     let j = match Json::parse(&s) {
         Ok(j) => j,
@@ -377,6 +429,10 @@ pub fn read_outcome(out_dir: &Path, id: &str) -> Option<CellOutcome> {
             log::warn!("discarding corrupt outcome {id}: {why}");
             None
         }
+        LedgerEntry::Unreadable(why) => {
+            log::warn!("outcome {id} could not be read ({why}); treating as unfinished for rendering only");
+            None
+        }
     }
 }
 
@@ -386,12 +442,28 @@ fn read_v1(out_dir: &Path, id: &str) -> Option<CellOutcome> {
     v1_fields(&Json::parse(&s).ok()?)
 }
 
-fn write_outcome(out_dir: &Path, id: &str, out: &CellOutcome) -> Result<()> {
+/// Atomically commit a cell outcome through the hardened same-dir
+/// writer (`ckpt::write_atomic_as`): temp file next to the destination,
+/// then rename, with error context naming the cell. `tmp_tag`
+/// distinguishes concurrent writers — the lease path tags with
+/// `(runner id, fencing token)` so two runners finishing the same cell
+/// can never interleave bytes into one temp file and rename a torn
+/// outcome into place. The lease-free single-process tag is `"tmp"`,
+/// reproducing the historical `<id>.json.tmp` name.
+pub fn write_outcome_tagged(
+    out_dir: &Path,
+    id: &str,
+    out: &CellOutcome,
+    tmp_tag: &str,
+) -> Result<()> {
     let path = outcome_path(out_dir, id);
-    let tmp = path.with_extension("json.tmp");
-    std::fs::write(&tmp, out.to_json().to_string())?;
-    std::fs::rename(&tmp, &path)?;
-    Ok(())
+    let tmp = out_dir.join(format!("{id}.json.{tmp_tag}"));
+    ckpt::write_atomic_as(&path, &tmp, out.to_json().to_string().as_bytes())
+        .with_context(|| format!("committing outcome for cell {id}"))
+}
+
+pub fn write_outcome(out_dir: &Path, id: &str, out: &CellOutcome) -> Result<()> {
+    write_outcome_tagged(out_dir, id, out, "tmp")
 }
 
 /// Explicitly migrate a campaign directory's v1 ledger onto the given
@@ -478,18 +550,23 @@ pub struct MatrixReport {
     pub skipped: Vec<String>,
     /// (cell id, error) — the rest of the campaign still completes
     pub failed: Vec<(String, String)>,
+    /// (cell id, reason) — cells under another runner's live lease
+    /// (or finished by it mid-claim): not ours to compute, not a
+    /// failure. A co-runner lands them; rerun to pick up stragglers.
+    pub deferred: Vec<(String, String)>,
 }
 
-/// Run every unfinished cell of the grid, fanned over
-/// `lift::engine::par_map`. `run_cell` must be a pure function of the
-/// spec (cells execute on any worker in any order); it should route
-/// through the cell's checkpoint dir so an interrupted cell resumes
-/// instead of restarting.
-///
-/// Ledger policy (see the module doc): finished v2 cells are skipped,
-/// corrupt files are recomputed loudly, and the campaign **refuses to
-/// start** while v1 or future-version entries are present — finished
-/// work is never silently recomputed.
+/// How one todo cell resolved inside the worker pool.
+enum CellRun {
+    Ran,
+    Skipped(String),
+    Deferred(String),
+    Failed(String),
+}
+
+/// Lease-free [`run_matrix_with`]: the single-process entry point the
+/// in-repo suites use. `run_cell` gets only the spec and routes through
+/// the plain `<id>.ckpt` checkpoint dir.
 pub fn run_matrix<F>(
     out_dir: &Path,
     cells: &[CellSpec],
@@ -499,6 +576,35 @@ pub fn run_matrix<F>(
 where
     F: Fn(&CellSpec) -> Result<CellOutcome> + Sync,
 {
+    run_matrix_with(out_dir, cells, workers, None, |spec, _ckpt_dir| run_cell(spec))
+}
+
+/// Run every unfinished cell of the grid, fanned over
+/// `lift::engine::par_map`. `run_cell(spec, ckpt_dir)` must be a pure
+/// function of the spec (cells execute on any worker in any order, and
+/// under leases on any RUNNER) and must persist snapshots under the
+/// `ckpt_dir` it is handed — under a lease that dir is fenced by the
+/// claim's token ([`cell_ckpt_dir_fenced`]).
+///
+/// Ledger policy (see the module doc): finished v2 cells are skipped,
+/// corrupt files are recomputed loudly, an UNREADABLE outcome aborts
+/// the campaign (an IO error proves nothing about the cell — aborting
+/// beats destroying finished work), and the campaign **refuses to
+/// start** while v1 or future-version entries are present.
+///
+/// With `lease: Some(cfg)` the multi-runner protocol is active (module
+/// doc): claim → renew → compute → fenced commit → release, deferring
+/// cells other runners hold.
+pub fn run_matrix_with<F>(
+    out_dir: &Path,
+    cells: &[CellSpec],
+    workers: usize,
+    lease: Option<&LeaseCfg>,
+    run_cell: F,
+) -> Result<MatrixReport>
+where
+    F: Fn(&CellSpec, &Path) -> Result<CellOutcome> + Sync,
+{
     std::fs::create_dir_all(out_dir)?;
     let mut report = MatrixReport::default();
     let mut todo: Vec<&CellSpec> = Vec::new();
@@ -506,7 +612,15 @@ where
     for c in cells {
         let id = c.id();
         match classify_outcome(out_dir, &id) {
-            LedgerEntry::Done(_) => report.skipped.push(id),
+            LedgerEntry::Done(_) => {
+                // a crash between outcome-commit and lease-release
+                // leaves a lease on a finished cell; collect it (ours
+                // or expired only) so the id stops looking busy
+                if let Some(cfg) = lease {
+                    lease::gc_finished(out_dir, &id, cfg);
+                }
+                report.skipped.push(id);
+            }
             LedgerEntry::V1 => v1_pending.push(format!("{id} (v1 format at the v2 path)")),
             LedgerEntry::Future(v) => anyhow::bail!(
                 "outcome {id} under {out_dir:?} was written by ledger v{v}, newer than this \
@@ -517,6 +631,11 @@ where
                 log::warn!("outcome {id} is corrupt ({why}); recomputing the cell");
                 todo.push(c);
             }
+            LedgerEntry::Unreadable(why) => anyhow::bail!(
+                "outcome {id} under {out_dir:?} exists but could not be read: {why}\na read \
+                 error does not prove the cell unfinished — refusing to recompute over \
+                 possibly-finished work; fix the IO problem (permissions, NFS) and rerun"
+            ),
             LedgerEntry::Missing => {
                 let v1 = c.v1_id();
                 if read_v1(out_dir, &v1).is_some() {
@@ -547,44 +666,131 @@ where
         );
     }
     log::info!(
-        "matrix: {} cells, {} done, {} to run ({} workers)",
+        "matrix: {} cells, {} done, {} to run ({} workers{})",
         cells.len(),
         report.skipped.len(),
         todo.len(),
-        workers.max(1)
+        workers.max(1),
+        match lease {
+            Some(cfg) => format!(", runner {} ttl {}s", cfg.runner, cfg.ttl_secs),
+            None => String::new(),
+        }
     );
     // Test hook for the CI kill/resume smoke: LIFT_MATRIX_KILL_AFTER=N
     // hard-exits the process (code 41) once N cell outcomes have LANDED
-    // on disk this run — after write_outcome, so exactly N finished
-    // cells are skippable on resume while other workers die mid-cell
-    // (a faithful `kill -9` mid-campaign).
+    // on disk this run — after write_outcome but BEFORE lease release,
+    // so exactly N finished cells are skippable on resume while other
+    // workers die mid-cell (a faithful `kill -9` mid-campaign, leases
+    // and all — the killed runner's leases are reclaimed by runner id
+    // or recovered by TTL).
     let kill_after: Option<usize> = std::env::var("LIFT_MATRIX_KILL_AFTER")
         .ok()
         .and_then(|v| v.parse().ok());
     let landed = std::sync::atomic::AtomicUsize::new(0);
     let results = par_map(workers.max(1), todo, |_, spec| {
         let id = spec.id();
-        let res = run_cell(spec).and_then(|out| {
-            write_outcome(out_dir, &id, &out)?;
-            if let Some(n) = kill_after {
-                if landed.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1 >= n {
-                    eprintln!(
-                        "LIFT_MATRIX_KILL_AFTER={n}: killing the campaign after cell {id}"
-                    );
-                    std::process::exit(41);
-                }
-            }
-            Ok(out)
-        });
-        (id, res.map_err(|e| format!("{e:#}")))
+        (
+            id.clone(),
+            run_claimed_cell(out_dir, spec, &id, lease, &run_cell, kill_after, &landed),
+        )
     });
     for (id, res) in results {
         match res {
-            Ok(_) => report.ran.push(id),
-            Err(e) => report.failed.push((id, e)),
+            CellRun::Ran => report.ran.push(id),
+            CellRun::Skipped(_) => report.skipped.push(id),
+            CellRun::Deferred(why) => report.deferred.push((id, why)),
+            CellRun::Failed(e) => report.failed.push((id, e)),
         }
     }
     Ok(report)
+}
+
+/// One worker's handling of one todo cell: claim (when leases are on),
+/// recheck the ledger under the claim, compute into the fenced
+/// checkpoint dir, commit through the fence, release.
+fn run_claimed_cell<F>(
+    out_dir: &Path,
+    spec: &CellSpec,
+    id: &str,
+    lease: Option<&LeaseCfg>,
+    run_cell: &F,
+    kill_after: Option<usize>,
+    landed: &std::sync::atomic::AtomicUsize,
+) -> CellRun
+where
+    F: Fn(&CellSpec, &Path) -> Result<CellOutcome> + Sync,
+{
+    let guard: Option<LeaseGuard> = match lease {
+        None => None,
+        Some(cfg) => match lease::claim(out_dir, id, cfg) {
+            Ok(Claim::Held(g)) => Some(g),
+            Ok(Claim::Busy { holder, expires_unix }) => {
+                return CellRun::Deferred(format!(
+                    "held by runner {holder} (lease expires at unix {expires_unix})"
+                ));
+            }
+            Err(e) => return CellRun::Failed(format!("lease claim: {e:#}")),
+        },
+    };
+    if guard.is_some() {
+        // the ledger was classified before the claim; a co-runner may
+        // have finished this cell in between — recheck under the claim
+        // so a finished cell is never recomputed
+        if matches!(classify_outcome(out_dir, id), LedgerEntry::Done(_)) {
+            if let Err(e) = guard.expect("guard checked above").release() {
+                log::warn!("cell {id}: releasing lease on already-done cell: {e:#}");
+            }
+            return CellRun::Skipped("finished by another runner between classify and claim".into());
+        }
+        // one renewal right before compute: the TTL countdown starts at
+        // the work, not at however long the cell sat in the queue
+        if let Err(e) = guard.as_ref().expect("guard checked above").renew() {
+            return CellRun::Deferred(format!("lease lost before compute: {e:#}"));
+        }
+    }
+    let ckpt_dir = cell_ckpt_dir_fenced(out_dir, id, guard.as_ref().map(|g| g.token()));
+    let computed = run_cell(spec, &ckpt_dir);
+    let run = match computed {
+        Ok(out) => {
+            // fenced commit: only while the on-disk lease still carries
+            // exactly our (runner, token). Losing the fence is a defer,
+            // not a failure — the usurper recomputes and commits.
+            if let Some(g) = &guard {
+                if !g.still_held() {
+                    return CellRun::Deferred(
+                        "lease lost before commit (taken over after TTL expiry) — \
+                         refusing to write over the takeover runner's cell"
+                            .into(),
+                    );
+                }
+            }
+            let tag = match &guard {
+                Some(g) => format!("{}.t{}.tmp", g.runner(), g.token()),
+                None => "tmp".to_string(),
+            };
+            match write_outcome_tagged(out_dir, id, &out, &tag) {
+                Ok(()) => {
+                    if let Some(n) = kill_after {
+                        if landed.fetch_add(1, std::sync::atomic::Ordering::SeqCst) + 1 >= n {
+                            eprintln!(
+                                "LIFT_MATRIX_KILL_AFTER={n}: killing the campaign after cell {id}"
+                            );
+                            std::process::exit(41);
+                        }
+                    }
+                    CellRun::Ran
+                }
+                Err(e) => CellRun::Failed(format!("{e:#}")),
+            }
+        }
+        Err(e) => CellRun::Failed(format!("{e:#}")),
+    };
+    if let Some(g) = guard {
+        if let Err(e) = g.release() {
+            log::warn!("cell {id}: lease release failed: {e:#}");
+        }
+    }
+    run
 }
 
 // ---- campaign summary ---------------------------------------------------
@@ -784,11 +990,24 @@ pub fn run_toy_cell(
     ckpt_keep: usize,
     inner_workers: usize,
 ) -> Result<CellOutcome> {
+    run_toy_cell_in(spec, &cell_ckpt_dir(out_dir, &spec.id()), ckpt_every, ckpt_keep, inner_workers)
+}
+
+/// [`run_toy_cell`] with an explicit checkpoint dir — the form
+/// [`run_matrix_with`] calls, so a leased cell snapshots under its
+/// claim's token-fenced dir instead of the plain `<id>.ckpt`.
+pub fn run_toy_cell_in(
+    spec: &CellSpec,
+    ckpt_dir: &Path,
+    ckpt_every: usize,
+    ckpt_keep: usize,
+    inner_workers: usize,
+) -> Result<CellOutcome> {
     let mut ctx = toy_ctx(inner_workers, 0xC311 ^ spec.seed)?;
     let mut params = toy_params(0x1717 ^ spec.seed);
     // toy matrices are 16-wide: clamp the LRA rank, not the budget
     let mut method = spec.method_with_lra(spec.rank.clamp(1, 8))?;
-    let ckpt_dir = cell_ckpt_dir(out_dir, &spec.id());
+    let ckpt_dir = ckpt_dir.to_path_buf();
     let cfg = TrainCfg {
         steps: spec.steps,
         lr: 1e-3,
@@ -866,6 +1085,13 @@ pub struct RealCellCfg {
 /// held-out source-domain scores against the pretrained base
 /// (`exp::retention`).
 pub fn run_real_cell(spec: &CellSpec, out_dir: &Path, rc: &RealCellCfg) -> Result<CellOutcome> {
+    run_real_cell_in(spec, &cell_ckpt_dir(out_dir, &spec.id()), rc)
+}
+
+/// [`run_real_cell`] with an explicit checkpoint dir — the form
+/// [`run_matrix_with`] calls, so a leased cell snapshots under its
+/// claim's token-fenced dir instead of the plain `<id>.ckpt`.
+pub fn run_real_cell_in(spec: &CellSpec, ckpt_dir: &Path, rc: &RealCellCfg) -> Result<CellOutcome> {
     let rt = Runtime::from_default()?;
     let exec = ModelExec::load(&rt, &spec.preset)?;
     let pt_steps = rc
@@ -888,7 +1114,7 @@ pub fn run_real_cell(spec: &CellSpec, out_dir: &Path, rc: &RealCellCfg) -> Resul
     let mut ctx = pretrain::make_ctx(&rt, &exec, spec.seed ^ 0xabcd);
     ctx.workers = rc.inner_workers.max(1);
     let mut method = spec.method()?;
-    let ckpt_dir = cell_ckpt_dir(out_dir, &spec.id());
+    let ckpt_dir = ckpt_dir.to_path_buf();
     let cfg = TrainCfg {
         steps: spec.steps,
         lr: crate::exp::harness::default_lr(&spec.method),

@@ -8,6 +8,7 @@ pub mod ablations;
 pub mod figures;
 pub mod grid;
 pub mod harness;
+pub mod lease;
 pub mod matrix;
 pub mod memory_fig;
 pub mod perturb_fig;

@@ -83,19 +83,34 @@ pub struct MaskEngine {
 
 /// Worker count: `LIFT_WORKERS` if set (`LIFT_MASK_WORKERS` is honored
 /// as a back-compat alias), else the machine's available parallelism,
-/// else 1. CI runs the test suite under both `LIFT_WORKERS=1` and the
-/// default to catch any violation of the determinism contract.
+/// else 1. An unparseable value is rejected WITH a warning naming it —
+/// a typo'd `LIFT_WORKERS=all` must not silently fall through to full
+/// machine parallelism. CI runs the test suite under both
+/// `LIFT_WORKERS=1` and the default to catch any violation of the
+/// determinism contract.
 pub fn default_workers() -> usize {
+    env_workers(|key| std::env::var(key).ok()).unwrap_or_else(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// The env-derived worker count, if any. Takes the lookup as a closure
+/// so the parse/warn policy is unit-testable without racing on the
+/// process environment.
+fn env_workers(get: impl Fn(&str) -> Option<String>) -> Option<usize> {
     for key in ["LIFT_WORKERS", "LIFT_MASK_WORKERS"] {
-        if let Ok(v) = std::env::var(key) {
-            if let Ok(n) = v.parse::<usize>() {
-                return n.max(1);
+        if let Some(v) = get(key) {
+            match v.parse::<usize>() {
+                Ok(n) => return Some(n.max(1)),
+                Err(_) => log::warn!(
+                    "ignoring {key}={v:?}: not a worker count (expected a positive integer)"
+                ),
             }
         }
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
+    None
 }
 
 /// Deterministic parallel map: apply `f` to every job and return the
@@ -198,6 +213,14 @@ pub fn par_over_params<S: Send>(
     f: impl Fn(S, &mut crate::tensor::Tensor, &crate::tensor::Tensor) + Sync,
 ) {
     let n_states = states.len();
+    assert_eq!(
+        grads.len(),
+        params.len(),
+        "par_over_params: {} grads for {} params — gradient and parameter \
+         slices must be parallel",
+        grads.len(),
+        params.len()
+    );
     let mut by_param: std::collections::HashMap<usize, S> = states.into_iter().collect();
     assert_eq!(
         by_param.len(),
@@ -399,5 +422,36 @@ mod tests {
         let cfg = LiftCfg::default();
         let err = engine(4).select_all(Selector::GradMag, &cfg, &requests(&ws, 10), 1);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn env_workers_parses_warns_and_falls_through() {
+        // closure-injected environment: no racing on the real process env
+        let env = |pairs: &'static [(&'static str, &'static str)]| {
+            move |key: &str| {
+                pairs
+                    .iter()
+                    .find(|(k, _)| *k == key)
+                    .map(|(_, v)| v.to_string())
+            }
+        };
+        assert_eq!(env_workers(env(&[("LIFT_WORKERS", "3")])), Some(3));
+        // back-compat alias, and primary key wins over it
+        assert_eq!(env_workers(env(&[("LIFT_MASK_WORKERS", "5")])), Some(5));
+        assert_eq!(
+            env_workers(env(&[("LIFT_WORKERS", "2"), ("LIFT_MASK_WORKERS", "5")])),
+            Some(2)
+        );
+        // zero clamps to one worker, never a zero-width pool
+        assert_eq!(env_workers(env(&[("LIFT_WORKERS", "0")])), Some(1));
+        // the parse-failure path: a typo'd value is rejected (warned),
+        // not treated as unset-and-silently-full-parallelism...
+        assert_eq!(env_workers(env(&[("LIFT_WORKERS", "all")])), None);
+        // ...and falls through to the alias when that one parses
+        assert_eq!(
+            env_workers(env(&[("LIFT_WORKERS", "all"), ("LIFT_MASK_WORKERS", "4")])),
+            Some(4)
+        );
+        assert_eq!(env_workers(env(&[])), None);
     }
 }

@@ -9,6 +9,8 @@
 //!             --ranks 8,32 --seeds 1,2 --suites arith,nlu --intervals 50,100
 //!             --presets tiny,small [--axis "key=v1,v2;key2=..."] [--steps N]
 //!             [--out D] [--ckpt-every N] [--workers W] [--toy] [--migrate-v1]
+//!             [--runner-id R] [--lease-ttl SECS] [--no-lease]
+//!             (N runners sharing --out shard one campaign via leases)
 //!   eval      --preset <p> [--suite ...]   (pretrained model, no fine-tune)
 //!   exp       <id> [--fast] [--seeds N]    (regenerate a paper table/figure)
 //!   list-exp                                (show available experiment ids)
@@ -78,6 +80,21 @@ USAGE:
        [--migrate-v1]             migrate a pre-v2 outcome ledger in place
                                   (v1 entries otherwise refuse to run —
                                   they are never silently recomputed)
+       [--runner-id R]            stable runner identity for multi-runner
+                                  campaigns (default <hostname>-<pid>);
+                                  reuse it across restarts to reclaim your
+                                  own leases immediately
+       [--lease-ttl SECS]         lease expiry deadline (default 600) —
+                                  size it above the slowest cell; a
+                                  crashed runner's cells are recovered by
+                                  takeover after this long
+       [--no-lease]               disable cell leases (single-process
+                                  campaigns only). Leases are otherwise
+                                  ON: launch N `lift matrix` processes at
+                                  one --out (even on different hosts over
+                                  NFS) and they shard the campaign with no
+                                  coordinator — live leases defer, expired
+                                  ones are fenced-token taken over
   lift eval --preset tiny --suite arith
   lift exp table2 [--fast]        regenerate a paper table/figure
   lift list-exp                   list experiment ids
@@ -238,6 +255,14 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     let workers = args.usize("workers", lift::lift::engine::default_workers());
     let toy = args.bool("toy", false);
     let migrate = args.bool("migrate-v1", false);
+    // multi-runner leases default ON: a lone runner pays one tiny lease
+    // file per cell, and any co-runner pointed at the same --out then
+    // shards the campaign safely (exp::matrix module doc)
+    let no_lease = args.bool("no-lease", false);
+    let runner_id = args
+        .opt_str("runner-id")
+        .unwrap_or_else(lift::exp::lease::LeaseCfg::default_runner_id);
+    let lease_ttl = args.u64("lease-ttl", 600);
     // None = the per-preset default, so a multi-preset grid pretrains
     // each base for its own step count (the runs/ cache keys on it)
     let pt_steps: Option<usize> = args.opt_str("pretrain-steps").map(|v| {
@@ -280,9 +305,14 @@ fn cmd_matrix(args: &Args) -> Result<()> {
             println!("  migrated -> {id}");
         }
     }
+    let lease_cfg = if no_lease {
+        None
+    } else {
+        Some(lift::exp::lease::LeaseCfg::new(&runner_id, lease_ttl))
+    };
     let report = if toy {
-        matrix::run_matrix(&out, &cells, workers, |spec| {
-            matrix::run_toy_cell(spec, &out, ckpt_every, ckpt_keep, 1)
+        matrix::run_matrix_with(&out, &cells, workers, lease_cfg.as_ref(), |spec, ckpt_dir| {
+            matrix::run_toy_cell_in(spec, ckpt_dir, ckpt_every, ckpt_keep, 1)
         })?
     } else {
         // pre-warm each preset's pretrained base sequentially so
@@ -309,14 +339,15 @@ fn cmd_matrix(args: &Args) -> Result<()> {
             retention: rcfg,
             base_source,
         };
-        matrix::run_matrix(&out, &cells, workers, |spec| {
-            matrix::run_real_cell(spec, &out, &rc)
+        matrix::run_matrix_with(&out, &cells, workers, lease_cfg.as_ref(), |spec, ckpt_dir| {
+            matrix::run_real_cell_in(spec, ckpt_dir, &rc)
         })?
     };
     println!(
-        "matrix: {} ran, {} skipped, {} failed (out: {})",
+        "matrix: {} ran, {} skipped, {} deferred, {} failed (out: {})",
         report.ran.len(),
         report.skipped.len(),
+        report.deferred.len(),
         report.failed.len(),
         out.display()
     );
@@ -335,8 +366,17 @@ fn cmd_matrix(args: &Args) -> Result<()> {
             );
         }
     }
+    for (id, why) in &report.deferred {
+        println!("  DEFERRED {id}: {why}");
+    }
     for (id, err) in &report.failed {
         println!("  FAILED {id}: {err}");
+    }
+    if !report.deferred.is_empty() {
+        println!(
+            "{} cell(s) deferred to other runners — rerun after they finish to pick up stragglers",
+            report.deferred.len()
+        );
     }
     // the campaign's readable artifact: the paper-style target-vs-
     // retention table over every persisted outcome, saved as summary.txt

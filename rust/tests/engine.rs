@@ -633,3 +633,16 @@ fn refresh_migrates_moments_before_batched_step() {
         }
     }
 }
+
+#[test]
+#[should_panic(expected = "gradient and parameter slices must be parallel")]
+fn par_over_params_rejects_short_grads_with_its_own_message() {
+    // a grads slice shorter than params must die on the descriptive
+    // invariant assert, not on a bare index-out-of-bounds inside the
+    // job-building loop
+    let mut rng = Rng::new(11);
+    let mut params: Vec<Tensor> = (0..3).map(|_| Tensor::randn(&[4, 4], 1.0, &mut rng)).collect();
+    let grads: Vec<Tensor> = (0..2).map(|_| Tensor::randn(&[4, 4], 1.0, &mut rng)).collect();
+    let states: Vec<(usize, usize)> = vec![(2, 0)];
+    lift::lift::engine::par_over_params(states, &mut params, &grads, 1, |_, _, _| {});
+}

@@ -1,0 +1,368 @@
+//! Multi-runner lease protocol + ledger durability suite (ISSUE 6):
+//!
+//! * two uncoordinated runners racing one campaign on a shared
+//!   directory compute every cell EXACTLY once and produce a merged
+//!   ledger bit-identical (modulo the wall-clock `seconds` field) to a
+//!   single-runner run;
+//! * live foreign leases defer cells (reported, never recomputed);
+//!   expired leases are taken over at a strictly higher fencing token,
+//!   and the takeover's checkpoints land in the token-fenced dir;
+//! * a runner that loses its lease mid-compute REFUSES to commit its
+//!   outcome (stale-token write refusal) — the cell defers instead of
+//!   racing the usurper's rename;
+//! * ledger durability: the crash window between outcome-temp-write and
+//!   rename leaves the prior outcome readable and the cell recomputable;
+//! * an UNREADABLE outcome file (IO error, not bad bytes) aborts the
+//!   campaign instead of classifying as corrupt and destroying finished
+//!   work by recompute.
+//!
+//! Everything runs artifact-free on toy cells (`exp::matrix::synth_step`
+//! through the real trainer loop). The single-file claim/renew/fence
+//! state machine has its own unit suite in `rust/src/exp/lease.rs`.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use lift::exp::lease::{self, Claim, LeaseCfg};
+use lift::exp::matrix::{self, CellOutcome, CellSpec, LedgerEntry};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lift_lease_test_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn toy_cells() -> Vec<CellSpec> {
+    matrix::expand_grid(
+        "toy",
+        &["lift".to_string(), "full".to_string()],
+        &[],
+        &[2],
+        &[1, 2],
+        4,
+        2,
+    )
+}
+
+/// Hand-author a lease file (the tests' crashed/foreign-runner
+/// injector). Field layout matches `exp::lease::Lease::to_json`.
+fn put_lease(dir: &Path, id: &str, runner: &str, token: u64, expires_unix: u64) {
+    std::fs::write(
+        lease::lease_path(dir, id),
+        format!("{{\"runner\":\"{runner}\",\"token\":{token},\"expires_unix\":{expires_unix}}}"),
+    )
+    .unwrap();
+}
+
+/// Outcomes compared across runs must ignore the one wall-clock field.
+fn norm(mut o: CellOutcome) -> CellOutcome {
+    o.seconds = 0.0;
+    o
+}
+
+// ---- two runners, one campaign ------------------------------------------
+
+/// The tentpole's acceptance test, in-process: two runners race every
+/// cell of one campaign. Exactly-once compute, disjoint `ran` sets, a
+/// merged ledger equal to the single-runner baseline modulo seconds,
+/// token-fenced checkpoint dirs, and no leases left behind.
+#[test]
+fn two_runners_shard_a_campaign_exactly_once_and_match_single_runner() {
+    let cells = toy_cells();
+    // single-runner, lease-free baseline
+    let base_dir = tmpdir("race_baseline");
+    let report = matrix::run_matrix(&base_dir, &cells, 2, |s| {
+        matrix::run_toy_cell(s, &base_dir, 2, 0, 1)
+    })
+    .unwrap();
+    assert_eq!(report.ran.len(), cells.len());
+    assert!(report.failed.is_empty() && report.deferred.is_empty());
+
+    // two leased runners racing one shared directory
+    let race_dir = tmpdir("race_shared");
+    let computed = AtomicUsize::new(0);
+    let reports: Vec<matrix::MatrixReport> = std::thread::scope(|s| {
+        let handles: Vec<_> = ["runner_a", "runner_b"]
+            .iter()
+            .map(|name| {
+                let race_dir = race_dir.clone();
+                let cells = &cells;
+                let computed = &computed;
+                s.spawn(move || {
+                    let cfg = LeaseCfg::new(name, 300);
+                    matrix::run_matrix_with(&race_dir, cells, 2, Some(&cfg), |spec, ckpt_dir| {
+                        computed.fetch_add(1, Ordering::SeqCst);
+                        matrix::run_toy_cell_in(spec, ckpt_dir, 2, 0, 1)
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // zero double-computed cells under live leases
+    assert_eq!(
+        computed.load(Ordering::SeqCst),
+        cells.len(),
+        "every cell must be computed exactly once across both runners"
+    );
+    let ran_a: std::collections::HashSet<&String> = reports[0].ran.iter().collect();
+    let ran_b: std::collections::HashSet<&String> = reports[1].ran.iter().collect();
+    assert!(ran_a.is_disjoint(&ran_b), "a cell ran on both runners");
+    assert_eq!(ran_a.len() + ran_b.len(), cells.len());
+    for r in &reports {
+        assert!(r.failed.is_empty(), "{:?}", r.failed);
+        // deferred cells are fine (the other runner held them) but each
+        // must have landed via SOMEONE
+        for (id, _) in &r.deferred {
+            assert!(
+                matrix::read_outcome(&race_dir, id).is_some(),
+                "deferred cell {id} never landed"
+            );
+        }
+    }
+    for c in &cells {
+        let id = c.id();
+        // merged ledger == single-runner ledger, modulo wall-seconds
+        let raced = matrix::read_outcome(&race_dir, &id).expect("raced cell missing");
+        let baseline = matrix::read_outcome(&base_dir, &id).expect("baseline cell missing");
+        assert_eq!(norm(raced), norm(baseline), "cell {id} diverged from single-runner");
+        // all leases released after the campaign
+        assert!(
+            lease::read_lease(&race_dir, &id).is_none(),
+            "cell {id} left a lease behind"
+        );
+        // fresh claims fence their checkpoints at token 1
+        assert!(
+            matrix::cell_ckpt_dir_fenced(&race_dir, &id, Some(1)).is_dir(),
+            "cell {id} missing its token-fenced checkpoint dir"
+        );
+        assert!(
+            !matrix::cell_ckpt_dir(&race_dir, &id).exists(),
+            "cell {id} wrote to the unfenced checkpoint dir despite holding a lease"
+        );
+    }
+    std::fs::remove_dir_all(&base_dir).unwrap();
+    std::fs::remove_dir_all(&race_dir).unwrap();
+}
+
+// ---- takeover and deferral ----------------------------------------------
+
+#[test]
+fn live_foreign_lease_defers_the_cell_and_is_left_untouched() {
+    let dir = tmpdir("defer");
+    let cells = toy_cells();
+    let busy_id = cells[0].id();
+    let far = lease::now_unix() + 3600;
+    put_lease(&dir, &busy_id, "other_host", 2, far);
+    let computed = AtomicUsize::new(0);
+    let cfg = LeaseCfg::new("me", 300);
+    let report = matrix::run_matrix_with(&dir, &cells, 1, Some(&cfg), |spec, ckpt_dir| {
+        computed.fetch_add(1, Ordering::SeqCst);
+        matrix::run_toy_cell_in(spec, ckpt_dir, 0, 0, 1)
+    })
+    .unwrap();
+    assert_eq!(computed.load(Ordering::SeqCst), cells.len() - 1);
+    assert_eq!(report.deferred.len(), 1);
+    assert_eq!(report.deferred[0].0, busy_id);
+    assert!(report.deferred[0].1.contains("other_host"), "{:?}", report.deferred);
+    assert!(matrix::read_outcome(&dir, &busy_id).is_none(), "deferred cell must not run");
+    // the holder's lease is exactly as we planted it
+    let l = lease::read_lease(&dir, &busy_id).unwrap();
+    assert_eq!((l.runner.as_str(), l.token, l.expires_unix), ("other_host", 2, far));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn expired_lease_is_taken_over_and_checkpoints_under_the_new_token() {
+    let dir = tmpdir("takeover");
+    let cells = toy_cells();
+    let dead_id = cells[0].id();
+    put_lease(&dir, &dead_id, "crashed_host", 4, lease::now_unix().saturating_sub(30));
+    let cfg = LeaseCfg::new("me", 300);
+    let report = matrix::run_matrix_with(&dir, &cells, 1, Some(&cfg), |spec, ckpt_dir| {
+        matrix::run_toy_cell_in(spec, ckpt_dir, 2, 0, 1)
+    })
+    .unwrap();
+    assert_eq!(report.ran.len(), cells.len(), "takeover must recover the cell");
+    assert!(matrix::read_outcome(&dir, &dead_id).is_some());
+    assert!(lease::read_lease(&dir, &dead_id).is_none(), "takeover lease must be released");
+    // provable fencing: the takeover ran at token 5 = crashed holder's 4 + 1,
+    // so its snapshots are isolated from the zombie's dir
+    assert!(
+        matrix::cell_ckpt_dir_fenced(&dir, &dead_id, Some(5)).is_dir(),
+        "takeover checkpoints must land under the token-5 dir"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn reused_runner_id_reclaims_its_own_leases_at_the_same_token() {
+    // the kill/resume story: a restarted runner with a stable
+    // --runner-id picks its cells back up immediately — same token, so
+    // the SAME fenced checkpoint dir and its snapshots resume
+    let dir = tmpdir("reclaim");
+    let cells = toy_cells();
+    let mine = cells[1].id();
+    put_lease(&dir, &mine, "ci", 3, lease::now_unix() + 3600);
+    let cfg = LeaseCfg::new("ci", 300);
+    let report = matrix::run_matrix_with(&dir, &cells, 1, Some(&cfg), |spec, ckpt_dir| {
+        matrix::run_toy_cell_in(spec, ckpt_dir, 2, 0, 1)
+    })
+    .unwrap();
+    assert_eq!(report.ran.len(), cells.len(), "own live lease must not defer");
+    assert!(
+        matrix::cell_ckpt_dir_fenced(&dir, &mine, Some(3)).is_dir(),
+        "reclaim must keep the original token's checkpoint dir"
+    );
+    assert!(lease::read_lease(&dir, &mine).is_none());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn losing_the_lease_mid_compute_refuses_the_commit() {
+    let dir = tmpdir("stale_commit");
+    let cells = toy_cells();
+    let target = cells[0].id();
+    let cfg = LeaseCfg::new("me", 300);
+    let dir2 = dir.clone();
+    let target2 = target.clone();
+    let report = matrix::run_matrix_with(&dir, &cells, 1, Some(&cfg), move |spec, ckpt_dir| {
+        if spec.id() == target2 {
+            // a takeover lands while this cell computes (as if our TTL
+            // expired under a long stall)
+            put_lease(&dir2, &target2, "usurper", 99, lease::now_unix() + 3600);
+        }
+        matrix::run_toy_cell_in(spec, ckpt_dir, 0, 0, 1)
+    })
+    .unwrap();
+    // the displaced cell is deferred (not failed), its outcome is NOT
+    // written, and the usurper's lease survives
+    assert_eq!(report.deferred.len(), 1, "{:?}", report.deferred);
+    assert_eq!(report.deferred[0].0, target);
+    assert!(report.deferred[0].1.contains("lease lost"), "{:?}", report.deferred);
+    assert!(report.failed.is_empty());
+    assert_eq!(report.ran.len(), cells.len() - 1);
+    assert!(
+        matrix::read_outcome(&dir, &target).is_none(),
+        "stale-token runner must refuse its write"
+    );
+    assert_eq!(lease::read_lease(&dir, &target).unwrap().runner, "usurper");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn leftover_lease_on_a_finished_cell_is_garbage_collected() {
+    // crash window between outcome-commit and lease-release: the next
+    // classify pass must free the id (ours or expired only)
+    let dir = tmpdir("gc");
+    let cells = toy_cells();
+    let cfg = LeaseCfg::new("me", 300);
+    // finish every cell lease-free, then strand a lease on one
+    matrix::run_matrix(&dir, &cells, 1, |s| matrix::run_toy_cell(s, &dir, 0, 0, 1)).unwrap();
+    let stranded = cells[2].id();
+    put_lease(&dir, &stranded, "me", 1, lease::now_unix() + 3600);
+    let report = matrix::run_matrix_with(&dir, &cells, 1, Some(&cfg), |spec, ckpt_dir| {
+        matrix::run_toy_cell_in(spec, ckpt_dir, 0, 0, 1)
+    })
+    .unwrap();
+    assert_eq!(report.skipped.len(), cells.len(), "all cells were already done");
+    assert!(report.ran.is_empty());
+    assert!(lease::read_lease(&dir, &stranded).is_none(), "stranded lease must be collected");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---- outcome durability --------------------------------------------------
+
+#[test]
+fn torn_tmp_next_to_a_committed_outcome_leaves_it_readable() {
+    // the post-crash disk state of "died between tmp-write and rename"
+    // AFTER a previous successful commit: the prior outcome must stay
+    // the ledger's truth and the stale temp must be inert
+    let dir = tmpdir("torn_after_commit");
+    let cells = toy_cells();
+    let id = cells[0].id();
+    matrix::run_matrix(&dir, &cells, 1, |s| matrix::run_toy_cell(s, &dir, 0, 0, 1)).unwrap();
+    let committed = matrix::read_outcome(&dir, &id).expect("cell finished");
+    // torn temps from a lease-free writer AND from two fenced runners
+    std::fs::write(dir.join(format!("{id}.json.tmp")), b"{\"v\":2,\"label\":\"to").unwrap();
+    std::fs::write(dir.join(format!("{id}.json.r1.t1.tmp")), b"garbage").unwrap();
+    assert!(
+        matches!(matrix::classify_outcome(&dir, &id), LedgerEntry::Done(_)),
+        "stale temp files must not shadow the committed outcome"
+    );
+    assert_eq!(matrix::read_outcome(&dir, &id).unwrap(), committed);
+    // a rerun changes nothing: the cell is skipped, the outcome is
+    // byte-identical afterwards
+    let before = std::fs::read(matrix::outcome_path(&dir, &id)).unwrap();
+    let report =
+        matrix::run_matrix(&dir, &cells, 1, |s| matrix::run_toy_cell(s, &dir, 0, 0, 1)).unwrap();
+    assert!(report.skipped.contains(&id));
+    assert_eq!(std::fs::read(matrix::outcome_path(&dir, &id)).unwrap(), before);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn torn_tmp_with_no_outcome_leaves_the_cell_recomputable() {
+    // crash before the FIRST commit of a cell: a stale temp alone must
+    // read as not-done, and the recompute must land cleanly over it
+    let dir = tmpdir("torn_before_commit");
+    let cells = toy_cells();
+    let id = cells[0].id();
+    std::fs::write(dir.join(format!("{id}.json.tmp")), b"{\"v\":2,\"tr").unwrap();
+    assert!(matches!(matrix::classify_outcome(&dir, &id), LedgerEntry::Missing));
+    let report =
+        matrix::run_matrix(&dir, &cells, 1, |s| matrix::run_toy_cell(s, &dir, 0, 0, 1)).unwrap();
+    assert!(report.ran.contains(&id), "cell with only a torn temp must recompute");
+    assert!(matrix::read_outcome(&dir, &id).is_some());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn unreadable_outcome_aborts_instead_of_recomputing() {
+    // an IO-level read failure is NOT corruption: the file may hold
+    // finished work. A directory at the outcome path yields EISDIR on
+    // read — a non-NotFound error — standing in for EACCES/EIO (which
+    // a root-owned test process cannot provoke via permissions).
+    let dir = tmpdir("unreadable");
+    let cells = toy_cells();
+    let id = cells[0].id();
+    std::fs::create_dir_all(matrix::outcome_path(&dir, &id)).unwrap();
+    match matrix::classify_outcome(&dir, &id) {
+        LedgerEntry::Unreadable(why) => assert!(why.contains(&id), "{why}"),
+        other => panic!("expected Unreadable, got {other:?}"),
+    }
+    // rendering treats it as unfinished…
+    assert!(matrix::read_outcome(&dir, &id).is_none());
+    // …but the campaign refuses to run over it
+    let err = matrix::run_matrix(&dir, &cells, 1, |s| matrix::run_toy_cell(s, &dir, 0, 0, 1))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("could not be read"), "{err}");
+    assert!(err.contains(&id), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---- direct claim API over a campaign dir --------------------------------
+
+#[test]
+fn claim_tokens_escalate_across_successive_takeovers() {
+    // fencing tokens must be monotonic over the WHOLE cell history, not
+    // per-runner: crash chains r1 -> r2 -> r3 yield tokens 1, 2, 3
+    let dir = tmpdir("escalate");
+    let mut expect = 0u64;
+    for runner in ["r1", "r2", "r3"] {
+        let cfg = LeaseCfg::new(runner, 1);
+        let Claim::Held(g) = lease::claim(&dir, "cell", &cfg).unwrap() else {
+            panic!("{runner} should claim");
+        };
+        expect += 1;
+        assert_eq!(g.token(), expect, "{runner} got the wrong fencing token");
+        // expire the lease in place so the next runner takes over
+        // (TTL floor is 1s; rewrite the deadline instead of sleeping)
+        put_lease(&dir, "cell", runner, expect, lease::now_unix().saturating_sub(5));
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
