@@ -6,7 +6,7 @@
 # XlaBuilder toolkit (mask engine, property tests, quickstart selftest);
 # artifact-dependent integration tests skip themselves when absent.
 
-.PHONY: artifacts artifacts-e2e test bench bench-check clippy matrix-smoke matrix-race
+.PHONY: artifacts artifacts-e2e test test-nosimd bench bench-check clippy matrix-smoke matrix-race
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -16,6 +16,11 @@ artifacts-e2e:
 
 test:
 	cargo build --release && cargo test -q
+
+# the same suite with the AVX2 GEMM microkernels pinned off — proves the
+# portable scalar path stands on its own (CI runs this too)
+test-nosimd:
+	LIFT_NO_SIMD=1 cargo test -q
 
 bench:
 	cargo bench

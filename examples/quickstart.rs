@@ -10,8 +10,9 @@
 //! Without artifacts (no jax available, or the host-interpreter xla
 //! stub), it degrades to an artifact-free selftest of the layer-parallel
 //! mask engine: a determinism check plus the measured sequential-vs-
-//! parallel refresh row, and a versioned-snapshot round trip. CI uses
-//! that as the smoke invocation.
+//! parallel refresh row, a scalar-vs-SIMD GEMM dispatch row (~1.0x where
+//! AVX2 is absent or `LIFT_NO_SIMD=1`), and a versioned-snapshot round
+//! trip. CI uses that as the smoke invocation.
 //!
 //! Checkpoint/restore CLI (ISSUE 3 — see `rust/src/ckpt/` for the
 //! on-disk format):
@@ -65,7 +66,8 @@ use std::sync::Arc;
 
 use lift::data::tasks::{TaskFamily, TaskMixSource, TaskSet};
 use lift::exp::harness::{
-    mask_requests, measure_mask_refresh, measure_step_all, measure_warm_refresh, tiny_layer_shapes,
+    mask_requests, measure_gemm_simd, measure_mask_refresh, measure_step_all, measure_warm_refresh,
+    tiny_layer_shapes,
 };
 use lift::lift::engine::{default_workers, MaskEngine};
 use lift::lift::{LiftCfg, Selector};
@@ -201,6 +203,10 @@ fn selftest() -> anyhow::Result<()> {
     // warm-started exact refresh vs cold on a drifting steady state
     // (seq = cold, Nw column = warm — see measure_warm_refresh)
     let row = measure_warm_refresh(&shapes, 16, 2)?;
+    println!("{}", row.row());
+    // SIMD microkernel dispatch: scalar vs runtime-detected (reads ~1.0x
+    // on hosts without AVX2 or under LIFT_NO_SIMD=1 — that's expected)
+    let row = measure_gemm_simd(2);
     println!("{}", row.row());
     // versioned-snapshot round trip (the ISSUE-3 ckpt subsystem): train a
     // couple of toy steps, snapshot, reload, digest-compare

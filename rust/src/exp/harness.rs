@@ -518,6 +518,89 @@ pub fn measure_warm_refresh(
     })
 }
 
+/// Time one fixed-shape f64 GEMM with the SIMD microkernels pinned off
+/// vs the runtime-detected dispatch — the `[gemm-simd]` row. `seq_s`
+/// holds the scalar time and `par_s` the SIMD time, so `speedup` reads
+/// scalar/simd. The row is ALWAYS emitted: on a host without AVX2 (or
+/// under `LIFT_NO_SIMD=1`) both sides run the scalar kernel and the
+/// ratio sits near 1.0x — keeping the label in `BENCH_trajectory.json`
+/// so the `--check` gate's vanished-row detection never trips on
+/// heterogeneous runners. The absolute >=1.5x floor is applied by the
+/// bench only when `gemm::simd_enabled()` reports the SIMD path live.
+pub fn measure_gemm_simd(reps: usize) -> Speedup {
+    use crate::util::gemm;
+    let (m, k, n) = (256usize, 320usize, 256usize);
+    let mut rng = Rng::new(0x51_3d_ca11);
+    let a: Vec<f64> = (0..m * k).map(|_| rng.normal() as f64).collect();
+    let b: Vec<f64> = (0..k * n).map(|_| rng.normal() as f64).collect();
+    let mut c_scalar = vec![0.0f64; m * n];
+    let mut c_simd = vec![0.0f64; m * n];
+    let time = |use_simd: bool, c: &mut [f64]| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = std::time::Instant::now();
+            gemm::matmul_f64_with_simd(&a, &b, m, k, n, c, use_simd);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let scalar_s = time(false, &mut c_scalar);
+    // simd_enabled() (not raw `true`) so LIFT_NO_SIMD pins both sides
+    // scalar and the row honestly reads ~1.0x
+    let simd_s = time(gemm::simd_enabled(), &mut c_simd);
+    // the determinism contract, spot-checked where it is being timed
+    debug_assert!(
+        c_scalar.iter().zip(&c_simd).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "scalar and SIMD kernels diverged"
+    );
+    Speedup {
+        label: "gemm_simd",
+        workers: 1,
+        matrices: 1,
+        seq_s: scalar_s,
+        par_s: simd_s,
+        speedup: scalar_s / simd_s.max(1e-12),
+    }
+}
+
+/// Time one large f64 GEMM serial vs intra-matrix-parallel (output-row
+/// tiles over the engine pool) — the `[gemm-par]` row. The shape sits
+/// above the kernels' fan-out threshold so the parallel side actually
+/// tiles; like `[gemm-simd]`, the row is always emitted (a 1-worker
+/// host reads ~1.0x) so the trajectory label stays present everywhere.
+pub fn measure_gemm_par(workers: usize, reps: usize) -> Speedup {
+    use crate::util::gemm;
+    let nsz = 512usize; // 512^3 = 134M muladds, well past PAR_MIN_MULADDS
+    let mut rng = Rng::new(0x9a27_111e);
+    let a: Vec<f64> = (0..nsz * nsz).map(|_| rng.normal() as f64).collect();
+    let b: Vec<f64> = (0..nsz * nsz).map(|_| rng.normal() as f64).collect();
+    let mut c_seq = vec![0.0f64; nsz * nsz];
+    let mut c_par = vec![0.0f64; nsz * nsz];
+    let time = |w: usize, c: &mut [f64]| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = std::time::Instant::now();
+            gemm::matmul_f64_par(&a, &b, nsz, nsz, nsz, c, w);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let seq_s = time(1, &mut c_seq);
+    let par_s = time(workers.max(1), &mut c_par);
+    debug_assert!(
+        c_seq.iter().zip(&c_par).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "tiled GEMM diverged from serial"
+    );
+    Speedup {
+        label: "gemm_par",
+        workers: workers.max(1),
+        matrices: 1,
+        seq_s,
+        par_s,
+        speedup: seq_s / par_s.max(1e-12),
+    }
+}
+
 /// Evaluate a family suite on given params (e.g. source-domain retention).
 pub fn eval_suite(
     env: &mut ExpEnv,

@@ -49,6 +49,11 @@
 //! * **Independent updates**: `step_all` jobs touch disjoint
 //!   `(state, param, grad)` triples, so the fan-out is the sequential
 //!   loop reordered — bit-identical for any worker count.
+//! * **Intra-matrix tiles**: when the pool has more workers than
+//!   in-flight matrices, the exact path's GEMMs split one matrix's
+//!   output rows into disjoint tiles across the spare capacity
+//!   (`util::gemm::*_par`). Tile boundaries never cross a summation
+//!   chain, so any tiling — including none — produces the same bits.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -305,7 +310,15 @@ impl MaskEngine {
         );
         let jobs: Vec<(&MaskRequest, &mut Option<SubspaceWarm>)> =
             reqs.iter().zip(warms.iter_mut()).collect();
-        par_map_scratch(self.workers, jobs, EighScratch::new, |_, (req, warm), scratch| {
+        // leftover pool capacity fans INTO matrices: when there are more
+        // workers than requests, each worker's arena carries an
+        // intra-matrix budget and the exact path's GEMMs split their
+        // output-row tiles across it. Bit-identical for any split by the
+        // tile-ownership contract (util::gemm), so the 1w ≡ Nw promise
+        // below is untouched.
+        let intra = (self.workers / reqs.len().max(1)).max(1);
+        let mk_scratch = || EighScratch::with_par_workers(intra);
+        par_map_scratch(self.workers, jobs, mk_scratch, |_, (req, warm), scratch| {
             let mut rng = stream_rng(seed, req.tag);
             select_indices_warm(
                 sel, &self.la, req.w, req.grad, req.score, req.k, cfg, &mut rng, warm, scratch,

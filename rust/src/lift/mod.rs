@@ -12,7 +12,12 @@
 //! here too, behind the same `Selector` interface, so Fig. 2/3 and the
 //! ablations are one code path — including the layer-parallel batched
 //! path in [`engine`], which fans selection across worker threads with a
-//! bit-identical-to-sequential determinism contract.
+//! bit-identical-to-sequential determinism contract. On the exact path,
+//! spare pool capacity additionally fans *into* a matrix: the Gram /
+//! apply / Rayleigh–Ritz products split their output rows into disjoint
+//! tiles across idle workers (`util::gemm::*_par`, SIMD microkernels
+//! underneath), without disturbing that contract — tile ownership is
+//! deterministic and no summation chain crosses a tile.
 
 pub mod engine;
 

@@ -215,10 +215,14 @@ pub fn truncate_factors_with(
     let rank = rank.min(rp).min(n);
     let (ub, sb, vtb, _) =
         crate::util::eigh::svd_topr_warm(&b.data, rp, n, rank, None, scratch);
-    // q' = q @ ub[:, :rank] (m, rank); b' = diag(s) vtb [:rank] (rank, n)
+    // q' = q @ ub[:, :rank] (m, rank); b' = diag(s) vtb [:rank] (rank, n).
+    // The rotation inherits the arena's intra-matrix worker budget and
+    // row-accumulator scratch (serial + allocating only for the cold
+    // `truncate_factors` wrapper's fresh arena).
     let ub64: Vec<f64> = ub.iter().map(|&x| x as f64).collect();
     let mut qr = vec![0.0f32; m * rank];
-    crate::util::gemm::matmul_f32xf64(&q.data, &ub64, m, rp, rank, &mut qr);
+    let wk = scratch.par_workers();
+    crate::util::gemm::matmul_f32xf64_par(&q.data, &ub64, m, rp, rank, &mut qr, wk, &mut scratch.mm_acc);
     let mut br = vec![0.0f32; rank * n];
     for c in 0..rank {
         for j in 0..n {

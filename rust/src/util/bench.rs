@@ -42,6 +42,23 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Order statistics over raw samples. Sorts with `f64::total_cmp` — a
+/// NaN sample (clock step, derived-value callers) sorts last instead of
+/// panicking the run and losing the trajectory append; it then surfaces
+/// in the affected percentile where a reader can see it.
+fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let n = samples.len();
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: samples.iter().sum::<f64>() / n as f64,
+        p50_ns: samples[n / 2],
+        p95_ns: samples[(n as f64 * 0.95) as usize..][0],
+        min_ns: samples[0],
+    }
+}
+
 pub struct Bencher {
     pub min_iters: usize,
     pub max_iters: usize,
@@ -84,16 +101,7 @@ impl Bencher {
             f();
             samples.push(t.elapsed().as_nanos() as f64);
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let n = samples.len();
-        let res = BenchResult {
-            name: name.to_string(),
-            iters: n,
-            mean_ns: samples.iter().sum::<f64>() / n as f64,
-            p50_ns: samples[n / 2],
-            p95_ns: samples[(n as f64 * 0.95) as usize..][0],
-            min_ns: samples[0],
-        };
+        let res = summarize(name, samples);
         println!("{}", res.report());
         self.results.push(res);
         self.results.last().unwrap()
@@ -127,6 +135,16 @@ mod tests {
         let r = &b.results[0];
         assert!(r.iters >= 3);
         assert!(r.min_ns <= r.p50_ns && r.p50_ns <= r.p95_ns);
+    }
+
+    #[test]
+    fn summarize_survives_nan_samples() {
+        // regression (ISSUE 7): partial_cmp().unwrap() panicked here
+        let r = summarize("nan-proof", vec![2.0, f64::NAN, 1.0]);
+        assert_eq!(r.iters, 3);
+        assert_eq!(r.min_ns, 1.0); // total_cmp sorts NaN last
+        assert_eq!(r.p50_ns, 2.0);
+        assert!(r.p95_ns.is_nan());
     }
 
     #[test]

@@ -50,7 +50,14 @@
 //!   per job.
 //! * **blocked GEMM** — the Gram build and the projection matmuls go
 //!   through the cache-tiled, transpose-packed kernels in
-//!   [`crate::util::gemm`], shared with `runtime::linalg`.
+//!   [`crate::util::gemm`], shared with `runtime::linalg`. Those
+//!   kernels carry the raw-speed tier: AVX2 microkernels behind runtime
+//!   detection (bit-identical to the scalar fallback by a documented
+//!   summation order), and — when [`EighScratch::with_par_workers`]
+//!   grants a budget — intra-matrix parallel row tiles fanned over the
+//!   `lift::engine` pool, so one large matrix no longer serializes
+//!   behind a single worker (bit-identical to serial by the disjoint
+//!   tile-ownership contract; see the `gemm` module doc).
 //!
 //! All of it preserves the engine's determinism contract: every result
 //! is a pure function of `(a, m, n, r, warm)` — never of the worker
@@ -279,9 +286,12 @@ impl SubspaceWarm {
 /// Reusable scratch arena for the exact decomposition path: every O(n²)
 /// intermediate of [`svd_topr_warm`] / [`lowrank_approx_warm`] lives
 /// here, so a worker that processes many matrices allocates these
-/// buffers once. Buffers are resized (and re-zeroed where the algorithm
-/// assumes zeros) per call; reuse cannot leak state between jobs, so
-/// results are identical whether an arena is shared or fresh.
+/// buffers once. Buffers are resized (and re-zeroed only where the
+/// algorithm actually reads zeros) per call; reuse cannot leak state
+/// between jobs, so results are identical whether an arena is shared or
+/// fresh. The arena also carries the intra-matrix parallelism budget
+/// ([`EighScratch::with_par_workers`]) — a different budget changes
+/// only wall-clock, never bits (the gemm tile-ownership contract).
 #[derive(Default)]
 pub struct EighScratch {
     /// Gram matrix (n × n, f64).
@@ -301,17 +311,50 @@ pub struct EighScratch {
     zr: Vec<f64>,
     /// Transpose buffer for the wide (n > m) route, f32.
     at: Vec<f32>,
+    /// Row accumulator arena for the mixed-precision products
+    /// (`gemm::matmul_f32xf64_with` / `_par`) — also reused by
+    /// `runtime::linalg::truncate_factors_with`.
+    pub(crate) mm_acc: Vec<f64>,
+    /// Intra-matrix parallelism budget for the GEMM calls issued through
+    /// this arena (0 and 1 both mean serial). Set by the engine when
+    /// pool capacity exceeds the number of in-flight matrices.
+    par_workers: usize,
 }
 
 impl EighScratch {
     pub fn new() -> EighScratch {
         EighScratch::default()
     }
+
+    /// Arena whose GEMM calls may fan row tiles across up to `workers`
+    /// pool threads (bit-identical to serial for any count — the gemm
+    /// tile-ownership contract).
+    pub fn with_par_workers(workers: usize) -> EighScratch {
+        EighScratch {
+            par_workers: workers,
+            ..EighScratch::default()
+        }
+    }
+
+    /// The effective worker budget (>= 1) for GEMMs through this arena.
+    pub fn par_workers(&self) -> usize {
+        self.par_workers.max(1)
+    }
 }
 
-/// Clear-and-zero a scratch buffer to `len` (capacity is reused).
+/// Clear-and-zero a scratch buffer to `len` (capacity is reused). Only
+/// for buffers whose consumer actually reads zeros (e.g. the scaled
+/// basis, where vanishing singular values must leave zero columns).
 fn zeroed(buf: &mut Vec<f64>, len: usize) {
     buf.clear();
+    buf.resize(len, 0.0);
+}
+
+/// Size a scratch buffer to `len` without the redundant zero pass — for
+/// buffers whose every element is overwritten before being read. A
+/// shrinking call truncates in place; capacity is always reused
+/// (the arena contract, see `util::gemm`).
+fn sized(buf: &mut Vec<f64>, len: usize) {
     buf.resize(len, 0.0);
 }
 
@@ -373,9 +416,9 @@ pub fn svd_topr_warm(
         // transpose route: svd_topr(A^T) then swap factors. The `at`
         // buffer is taken out of the arena so the recursive call (which
         // runs the n <= m branch and never touches `at`) can borrow the
-        // rest of the scratch.
+        // rest of the scratch. No clear(): every element is written by
+        // the transpose loop, so a bare resize skips the zero pass.
         let mut at = std::mem::take(&mut scratch.at);
-        at.clear();
         at.resize(n * m, 0.0);
         for i in 0..m {
             for j in 0..n {
@@ -400,16 +443,18 @@ pub fn svd_topr_warm(
         return (u, s, vt, carrier);
     }
     // n <= m: iterate on G = A^T A (n x n, f64), built by the
-    // transpose-packed blocked kernel. Basis vectors are rows of xt
-    // (p x n) so Gram-Schmidt and the G-apply stay contiguous.
-    zeroed(&mut scratch.g, n * n);
-    gemm::gram_f64(a, m, n, &mut scratch.pack, &mut scratch.g);
+    // transpose-packed blocked kernel (fanned across the pool when the
+    // arena carries an intra-matrix budget). Basis vectors are rows of
+    // xt (p x n) so Gram-Schmidt and the G-apply stay contiguous.
+    let wk = scratch.par_workers();
+    sized(&mut scratch.g, n * n);
+    gemm::gram_f64_par(a, m, n, &mut scratch.pack, &mut scratch.g, wk);
     let g = &scratch.g;
 
     // start block: the carrier when it fits, else the fixed-seed cold
     // start (determinism is part of the contract either way)
-    zeroed(&mut scratch.xt, p * n);
-    zeroed(&mut scratch.yt, p * n);
+    sized(&mut scratch.xt, p * n);
+    sized(&mut scratch.yt, p * n);
     let warm_started = match warm {
         Some(w) if w.matches(p, n) => {
             scratch.xt.copy_from_slice(&w.xt);
@@ -422,7 +467,8 @@ pub fn svd_topr_warm(
     }
     orthonormalize_rows(&mut scratch.xt, p, n);
     let budget = if warm_started { TOPR_WARM_MAX_ITERS } else { TOPR_MAX_ITERS };
-    let (_, tr_first, tr_last) = iterate_block(g, &mut scratch.xt, &mut scratch.yt, p, n, budget);
+    let (_, tr_first, tr_last) =
+        iterate_block(g, &mut scratch.xt, &mut scratch.yt, p, n, budget, wk);
     let drifted = warm_started
         && (tr_last - tr_first).abs() > TOPR_WARM_DRIFT_TOL * tr_last.abs().max(1e-300);
     if drifted {
@@ -433,15 +479,15 @@ pub fn svd_topr_warm(
         // of the same matrix.
         cold_start_block(&mut scratch.xt);
         orthonormalize_rows(&mut scratch.xt, p, n);
-        iterate_block(g, &mut scratch.xt, &mut scratch.yt, p, n, TOPR_MAX_ITERS);
+        iterate_block(g, &mut scratch.xt, &mut scratch.yt, p, n, TOPR_MAX_ITERS, wk);
     }
     let xt = &scratch.xt;
 
     // Rayleigh-Ritz: rotate the converged block into singular order
     // (yt kept its p × n size through the iteration's ping-pong swaps)
-    gemm::matmul_f64(xt, g, p, n, n, &mut scratch.yt);
+    gemm::matmul_f64_par(xt, g, p, n, n, &mut scratch.yt, wk);
     let yt = &scratch.yt;
-    zeroed(&mut scratch.t, p * p);
+    sized(&mut scratch.t, p * p);
     for b in 0..p {
         for c in b..p {
             let xrow = &xt[b * n..(b + 1) * n];
@@ -456,14 +502,14 @@ pub fn svd_topr_warm(
     }
     let (w, z) = eigh64(&scratch.t, p);
     // V = Xt^T · Z[:, :r]  (n × r) via the shared transpose-product kernel
-    zeroed(&mut scratch.zr, p * r);
+    sized(&mut scratch.zr, p * r);
     for b in 0..p {
         for c in 0..r {
             scratch.zr[b * r + c] = z[b * p + c];
         }
     }
-    zeroed(&mut scratch.v, n * r);
-    gemm::matmul_tn_f64(xt, &scratch.zr, p, n, r, &mut scratch.v);
+    sized(&mut scratch.v, n * r);
+    gemm::matmul_tn_f64_par(xt, &scratch.zr, p, n, r, &mut scratch.v, wk);
     let mut s = vec![0.0f32; r];
     let mut vt = vec![0.0f32; r * n];
     for c in 0..r {
@@ -473,7 +519,8 @@ pub fn svd_topr_warm(
         }
     }
     // U = A · (V diag(1/s)) in one blocked mixed-precision product;
-    // columns with vanishing singular values stay zero (as before).
+    // columns with vanishing singular values stay zero (as before) —
+    // this buffer genuinely needs the zero fill, so `zeroed` stays.
     // yt is free again — reuse it for the scaled basis (n × r <= p × n).
     zeroed(&mut scratch.yt, n * r);
     for c in 0..r {
@@ -486,7 +533,7 @@ pub fn svd_topr_warm(
         }
     }
     let mut u = vec![0.0f32; m * r];
-    gemm::matmul_f32xf64(a, &scratch.yt, m, n, r, &mut u);
+    gemm::matmul_f32xf64_par(a, &scratch.yt, m, n, r, &mut u, wk, &mut scratch.mm_acc);
     let carrier = SubspaceWarm {
         p,
         n,
@@ -505,10 +552,11 @@ fn cold_start_block(xt: &mut [f64]) {
 }
 
 /// Run up to `max_iters` subspace-iteration passes of `xt` against `g`
-/// (both row-major; `yt` is the ping-pong buffer). Returns whether the
-/// trace-convergence test fired inside the budget, plus the first and
-/// last pass's Rayleigh traces — the warm path's drift guard reads
-/// their growth ([`TOPR_WARM_DRIFT_TOL`]).
+/// (both row-major; `yt` is the ping-pong buffer). The G-apply fans row
+/// tiles over up to `workers` pool threads (bit-identical to serial).
+/// Returns whether the trace-convergence test fired inside the budget,
+/// plus the first and last pass's Rayleigh traces — the warm path's
+/// drift guard reads their growth ([`TOPR_WARM_DRIFT_TOL`]).
 fn iterate_block(
     g: &[f64],
     xt: &mut Vec<f64>,
@@ -516,12 +564,13 @@ fn iterate_block(
     p: usize,
     n: usize,
     max_iters: usize,
+    workers: usize,
 ) -> (bool, f64, f64) {
     let mut prev_tr = f64::NEG_INFINITY;
     let mut tr_first = f64::NAN;
     let mut tr_last = f64::NAN;
     for it in 0..max_iters {
-        gemm::matmul_f64(xt, g, p, n, n, yt);
+        gemm::matmul_f64_par(xt, g, p, n, n, yt, workers);
         let mut tr = 0.0f64;
         for (x, y) in xt.iter().zip(yt.iter()) {
             tr += x * y;

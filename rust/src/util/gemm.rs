@@ -1,36 +1,270 @@
 //! Cache-tiled host GEMM kernels shared by the exact decomposition path
 //! (`util::eigh::svd_topr`) and the factor-rotation matmuls in
-//! `runtime::linalg::truncate_factors`.
+//! `runtime::linalg::truncate_factors`, with a SIMD microkernel tier and
+//! an intra-matrix parallel tile tier on top (the ISSUE-7 raw-speed
+//! layer).
 //!
 //! These are not a BLAS replacement: the matrices here top out around a
 //! couple thousand on a side, f32 in / f64 accumulate, and the callers
 //! need *deterministic* summation order (the engine's 1-worker ≡
-//! N-workers contract hashes results bit-for-bit). The two tricks that
+//! N-workers contract hashes results bit-for-bit). The tricks that
 //! matter at this scale:
 //!
 //! * **k-blocking** — the inner product dimension is walked in
 //!   [`KC`]-sized panels so the streamed rows of `b` stay in L1/L2
 //!   across the whole `a`-row sweep instead of being evicted between
 //!   rows;
-//! * **transpose packing** — Gram builds (`A^T A`) and `A^T B` products
-//!   read their left operand column-wise; packing the transpose once
-//!   into a contiguous scratch buffer turns every inner loop into a
-//!   unit-stride dot product the autovectorizer handles.
+//! * **transpose packing** — Gram builds (`A^T A`) read their operand
+//!   column-wise; packing the transpose once into a contiguous scratch
+//!   buffer turns every inner loop into a unit-stride dot product;
+//! * **SIMD microkernels** — the unit-stride inner loops dispatch to
+//!   AVX2 f64x4 kernels when the CPU has them (see below), with a
+//!   portable scalar fallback that computes bit-identical results;
+//! * **intra-matrix parallelism** — the `*_par` entry points split one
+//!   large product's output-row grid across the `lift::engine` pool
+//!   (see below), so a big matrix no longer serializes behind a single
+//!   worker while the rest of the pool idles.
 //!
-//! Summation order is fixed by the loop structure alone (no
-//! data-dependent skipping), so every kernel is a pure function of its
-//! inputs — results are bit-identical run-to-run and worker-to-worker.
+//! # SIMD determinism rules
+//!
+//! Runtime detection ([`simd_enabled`]) picks AVX2 when the CPU supports
+//! it; `LIFT_NO_SIMD=1` forces the scalar fallback (CI runs the suite
+//! both ways). Scalar and SIMD results are **bit-identical** by
+//! construction, under two rules the kernels must never violate:
+//!
+//! 1. **axpy kernels** (`c[j] += a * b[j]`, the matmul inner loop):
+//!    vectorizing across `j` keeps every output element's summation
+//!    chain exactly the scalar one — one multiply then one add per
+//!    `(l, j)`, each individually rounded. FMA (`_mm256_fmadd_pd`) is
+//!    FORBIDDEN here: its single rounding diverges from the scalar
+//!    chain at the last bit.
+//! 2. **dot kernels** (the Gram build): the summation order is the
+//!    documented quad-accumulator order — four partial sums `s_q`
+//!    accumulate elements `4t + q` over the 4-aligned prefix, combined
+//!    as `(s0 + s2) + (s1 + s3)` (exactly the AVX2 128-bit lane
+//!    reduction: low+high halves, then unpackhi + add), followed by a
+//!    sequential tail. The scalar fallback mirrors that order
+//!    element-for-element.
+//!
+//! # Parallel tile-ownership contract
+//!
+//! The `*_par` kernels split the output into contiguous, disjoint
+//! row-tiles; tile index → output rows is a pure function of the shape
+//! and worker count, and every tile's arithmetic is the serial kernel on
+//! its own rows. Since no partial sums ever cross a tile boundary, the
+//! result is bit-identical to the serial kernel for ANY worker count —
+//! the 1w ≡ Nw contract holds by construction, not by tolerance.
+//! Products below [`PAR_MIN_MULADDS`] multiply-adds run serially (the
+//! fan-out overhead would dominate).
+//!
+//! # Scratch-arena contract
+//!
+//! `pack` (Gram transpose pack) and `acc` (mixed-precision row
+//! accumulator) are caller-owned arenas: they are sized here *without* a
+//! redundant zero pass (every element is overwritten before being read),
+//! and a shrinking resize deliberately leaves the previous capacity
+//! untrimmed so a worker cycling through many shapes allocates once for
+//! the largest.
+
+use std::sync::OnceLock;
 
 /// Panel width of the inner-product dimension. 64 f64 columns = 512 B
 /// per `b`-row panel — comfortably L1-resident alongside the `c` row.
 const KC: usize = 64;
 
+/// Minimum multiply-adds before a `*_par` kernel fans its row tiles out
+/// across the pool (~4.2M — below this, thread handoff costs more than
+/// it saves on the matrices this module sees).
+const PAR_MIN_MULADDS: usize = 1 << 22;
+
+/// Raw CPU capability (ignores `LIFT_NO_SIMD`). The explicit
+/// `*_with_simd` entry points clamp against this, so a forced-on
+/// request on non-AVX2 hardware degrades to scalar instead of faulting.
+fn simd_supported() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    let yes = is_x86_feature_detected!("avx2");
+    #[cfg(not(target_arch = "x86_64"))]
+    let yes = false;
+    yes
+}
+
+/// Whether the kernels in this module dispatch to the AVX2 microkernels:
+/// runtime feature detection, overridden off by `LIFT_NO_SIMD` (any
+/// non-empty value other than `"0"`). Cached once per process — the
+/// bench gate reads this to decide whether the `[gemm-simd]` absolute
+/// speedup floor applies on this host.
+pub fn simd_enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        let forced_off = std::env::var("LIFT_NO_SIMD")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        !forced_off && simd_supported()
+    })
+}
+
+// ---------------------------------------------------------------------------
+// microkernels: axpy (matmul inner loop) and quad-order dot (Gram build)
+// ---------------------------------------------------------------------------
+
+/// `crow[j] += ail * brow[j]` — the scalar reference the SIMD kernel is
+/// bit-identical to (one multiply, one add, per element).
+#[inline(always)]
+fn axpy_scalar(ail: f64, brow: &[f64], crow: &mut [f64]) {
+    for j in 0..crow.len() {
+        crow[j] += ail * brow[j];
+    }
+}
+
+/// AVX2 axpy: 4-wide multiply then add (NEVER fmadd — see the module
+/// doc's determinism rule 1), scalar tail.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(ail: f64, brow: &[f64], crow: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let n = crow.len();
+    let m4 = n & !3;
+    let va = _mm256_set1_pd(ail);
+    let bp = brow.as_ptr();
+    let cp = crow.as_mut_ptr();
+    let mut j = 0;
+    while j < m4 {
+        let vb = _mm256_loadu_pd(bp.add(j));
+        let vc = _mm256_loadu_pd(cp.add(j));
+        // separate mul + add: each lane rounds exactly like the scalar
+        // statement `c += a * b`, keeping scalar ≡ SIMD bitwise
+        let vc = _mm256_add_pd(vc, _mm256_mul_pd(va, vb));
+        _mm256_storeu_pd(cp.add(j), vc);
+        j += 4;
+    }
+    while j < n {
+        crow[j] += ail * brow[j];
+        j += 1;
+    }
+}
+
+/// Dispatching axpy. `use_simd` must only be true when AVX2 was
+/// actually detected ([`simd_enabled`] / [`simd_supported`]).
+#[inline(always)]
+fn axpy(use_simd: bool, ail: f64, brow: &[f64], crow: &mut [f64]) {
+    debug_assert_eq!(brow.len(), crow.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if use_simd {
+            // SAFETY: callers pass use_simd = true only behind runtime
+            // AVX2 detection, so the target-feature fn is safe to call.
+            unsafe { axpy_avx2(ail, brow, crow) };
+            return;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = use_simd;
+    axpy_scalar(ail, brow, crow);
+}
+
+/// Dot product in the documented quad-accumulator order (module doc,
+/// determinism rule 2): partials `s_q` over elements `4t + q`, combined
+/// as `(s0 + s2) + (s1 + s3)`, then a sequential tail — exactly the
+/// order the AVX2 lane reduction produces.
+#[inline(always)]
+fn dot_quad_scalar(x: &[f64], y: &[f64]) -> f64 {
+    let len = x.len();
+    let m4 = len & !3;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut l = 0;
+    while l < m4 {
+        s0 += x[l] * y[l];
+        s1 += x[l + 1] * y[l + 1];
+        s2 += x[l + 2] * y[l + 2];
+        s3 += x[l + 3] * y[l + 3];
+        l += 4;
+    }
+    let mut acc = (s0 + s2) + (s1 + s3);
+    for l in m4..len {
+        acc += x[l] * y[l];
+    }
+    acc
+}
+
+/// AVX2 quad-order dot: one 4-lane accumulator (mul + add, no fmadd),
+/// reduced low+high then unpackhi+add — bit-identical to
+/// [`dot_quad_scalar`] by construction.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_quad_avx2(x: &[f64], y: &[f64]) -> f64 {
+    use std::arch::x86_64::*;
+    let len = x.len();
+    let m4 = len & !3;
+    let xp = x.as_ptr();
+    let yp = y.as_ptr();
+    let mut vs = _mm256_setzero_pd();
+    let mut l = 0;
+    while l < m4 {
+        let vx = _mm256_loadu_pd(xp.add(l));
+        let vy = _mm256_loadu_pd(yp.add(l));
+        vs = _mm256_add_pd(vs, _mm256_mul_pd(vx, vy));
+        l += 4;
+    }
+    // lane reduce: [s0,s1] + [s2,s3] = [s0+s2, s1+s3], then
+    // (s0+s2) + (s1+s3) — the order dot_quad_scalar mirrors
+    let lo = _mm256_castpd256_pd128(vs);
+    let hi = _mm256_extractf128_pd::<1>(vs);
+    let pair = _mm_add_pd(lo, hi);
+    let swapped = _mm_unpackhi_pd(pair, pair);
+    let mut acc = _mm_cvtsd_f64(_mm_add_sd(pair, swapped));
+    for l in m4..len {
+        acc += x[l] * y[l];
+    }
+    acc
+}
+
+/// Dispatching quad-order dot (same `use_simd` contract as [`axpy`]).
+#[inline(always)]
+fn dot_quad(use_simd: bool, x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if use_simd {
+            // SAFETY: use_simd is true only behind runtime AVX2 detection.
+            return unsafe { dot_quad_avx2(x, y) };
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = use_simd;
+    dot_quad_scalar(x, y)
+}
+
+// ---------------------------------------------------------------------------
+// serial kernels (row cores shared with the parallel tile tier)
+// ---------------------------------------------------------------------------
+
 /// C (m×n, f64) = A (m×k, f64) · B (k×n, f64), k-blocked. `c` is
 /// overwritten, not accumulated into.
 pub fn matmul_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64]) {
+    matmul_f64_with_simd(a, b, m, k, n, c, simd_enabled());
+}
+
+/// [`matmul_f64`] with the SIMD dispatch pinned by the caller — the
+/// bench harness times scalar-vs-SIMD through this. A forced-on request
+/// is clamped to the CPU's actual capability.
+pub(crate) fn matmul_f64_with_simd(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f64],
+    use_simd: bool,
+) {
     assert_eq!(a.len(), m * k, "gemm: a is not m×k");
     assert_eq!(b.len(), k * n, "gemm: b is not k×n");
     assert_eq!(c.len(), m * n, "gemm: c is not m×n");
+    matmul_f64_rows(a, b, m, k, n, c, use_simd && simd_supported());
+}
+
+/// Row core of [`matmul_f64`]: `a`/`c` hold `m` contiguous rows (a tile
+/// of the full problem or all of it).
+fn matmul_f64_rows(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64], use_simd: bool) {
     c.fill(0.0);
     let mut kk = 0;
     while kk < k {
@@ -39,11 +273,7 @@ pub fn matmul_f64(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f
             let arow = &a[i * k..(i + 1) * k];
             let crow = &mut c[i * n..(i + 1) * n];
             for l in kk..kend {
-                let ail = arow[l];
-                let brow = &b[l * n..(l + 1) * n];
-                for j in 0..n {
-                    crow[j] += ail * brow[j];
-                }
+                axpy(use_simd, arow[l], &b[l * n..(l + 1) * n], crow);
             }
         }
         kk = kend;
@@ -58,6 +288,25 @@ pub fn matmul_tn_f64(a: &[f64], b: &[f64], k: usize, m: usize, n: usize, c: &mut
     assert_eq!(a.len(), k * m, "gemm_tn: a is not k×m");
     assert_eq!(b.len(), k * n, "gemm_tn: b is not k×n");
     assert_eq!(c.len(), m * n, "gemm_tn: c is not m×n");
+    matmul_tn_rows(a, b, k, m, n, 0, m, c, simd_enabled());
+}
+
+/// Row core of [`matmul_tn_f64`]: computes output rows `i0..i0+rows`
+/// into `c` (rows×n). Output row `i` reads column `i0+i` of A, so a
+/// tile is NOT a contiguous slice of `a` — the full `a` is passed and
+/// the column window selected here.
+fn matmul_tn_rows(
+    a: &[f64],
+    b: &[f64],
+    k: usize,
+    m: usize,
+    n: usize,
+    i0: usize,
+    rows: usize,
+    c: &mut [f64],
+    use_simd: bool,
+) {
+    debug_assert_eq!(c.len(), rows * n);
     c.fill(0.0);
     let mut kk = 0;
     while kk < k {
@@ -65,11 +314,9 @@ pub fn matmul_tn_f64(a: &[f64], b: &[f64], k: usize, m: usize, n: usize, c: &mut
         for l in kk..kend {
             let arow = &a[l * m..(l + 1) * m];
             let brow = &b[l * n..(l + 1) * n];
-            for (i, &ail) in arow.iter().enumerate() {
+            for i in 0..rows {
                 let crow = &mut c[i * n..(i + 1) * n];
-                for j in 0..n {
-                    crow[j] += ail * brow[j];
-                }
+                axpy(use_simd, arow[i0 + i], brow, crow);
             }
         }
         kk = kend;
@@ -77,16 +324,51 @@ pub fn matmul_tn_f64(a: &[f64], b: &[f64], k: usize, m: usize, n: usize, c: &mut
 }
 
 /// C (m×n, f32) = A (m×k, f32) · B (k×n, f64), f64 accumulation —
-/// the `U = A V` projection and the `q @ ub` factor rotation. k-blocked
-/// like [`matmul_f64`]; the f64 accumulator matches the precision the
-/// previous per-element loops used, so tolerances are unchanged.
+/// the `U = A V` projection and the `q @ ub` factor rotation. Thin
+/// allocating wrapper over [`matmul_f32xf64_with`]; hot-loop callers
+/// thread a scratch accumulator through instead (the per-call
+/// `vec![0.0; n]` here was the ISSUE-7 allocation bug).
 pub fn matmul_f32xf64(a: &[f32], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    let mut acc = Vec::new();
+    matmul_f32xf64_with(a, b, m, k, n, c, &mut acc);
+}
+
+/// [`matmul_f32xf64`] with a caller-owned f64 row accumulator (`acc`
+/// is sized here; see the module doc's scratch-arena contract). The f64
+/// accumulator matches the precision the per-element loops used before
+/// blocking, so tolerances are unchanged.
+pub fn matmul_f32xf64_with(
+    a: &[f32],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    acc: &mut Vec<f64>,
+) {
     assert_eq!(a.len(), m * k, "gemm_32x64: a is not m×k");
     assert_eq!(b.len(), k * n, "gemm_32x64: b is not k×n");
     assert_eq!(c.len(), m * n, "gemm_32x64: c is not m×n");
-    // f64 row accumulator: KC-blocking alone would round each panel's
-    // partial sum through f32
-    let mut acc = vec![0.0f64; n];
+    // grow-or-truncate only: the accumulator is fill(0.0)-ed per row by
+    // the core, so no up-front zero pass over reused capacity
+    acc.resize(n, 0.0);
+    matmul_f32xf64_rows(a, b, m, k, n, c, &mut acc[..], simd_enabled());
+}
+
+/// Row core of the mixed-precision product: `acc` is one n-wide f64
+/// accumulator row, re-zeroed per output row. KC-blocking alone would
+/// round each panel's partial sum through f32 — hence the f64 row.
+fn matmul_f32xf64_rows(
+    a: &[f32],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    acc: &mut [f64],
+    use_simd: bool,
+) {
+    debug_assert_eq!(acc.len(), n);
     for i in 0..m {
         acc.fill(0.0);
         let arow = &a[i * k..(i + 1) * k];
@@ -94,11 +376,7 @@ pub fn matmul_f32xf64(a: &[f32], b: &[f64], m: usize, k: usize, n: usize, c: &mu
         while kk < k {
             let kend = (kk + KC).min(k);
             for l in kk..kend {
-                let ail = arow[l] as f64;
-                let brow = &b[l * n..(l + 1) * n];
-                for j in 0..n {
-                    acc[j] += ail * brow[j];
-                }
+                axpy(use_simd, arow[l] as f64, &b[l * n..(l + 1) * n], acc);
             }
             kk = kend;
         }
@@ -111,32 +389,258 @@ pub fn matmul_f32xf64(a: &[f32], b: &[f64], m: usize, k: usize, n: usize, c: &mu
 
 /// G (n×n, f64) = Aᵀ A for A m×n (f32), transpose-packed: A is packed
 /// column-major (as f64) into `pack` once, turning every Gram entry into
-/// a unit-stride dot product; only the upper triangle is computed and
-/// mirrored. `pack` is caller-owned scratch (resized here) so the
-/// per-refresh allocation disappears when an arena is threaded through.
+/// a unit-stride quad-order dot; only the upper triangle is computed,
+/// then mirrored (bitwise-symmetric by construction). `pack` is a
+/// caller-owned arena sized without a redundant zero pass (every element
+/// is written by the packing loop).
 pub fn gram_f64(a: &[f32], m: usize, n: usize, pack: &mut Vec<f64>, g: &mut [f64]) {
     assert_eq!(a.len(), m * n, "gram: a is not m×n");
     assert_eq!(g.len(), n * n, "gram: g is not n×n");
+    let use_simd = simd_enabled();
+    pack_transpose(a, m, n, pack);
+    gram_rows(pack, m, n, 0, n, g, use_simd);
+    mirror_lower(g, n);
+}
+
+/// Pack A (m×n, f32) column-major into `pack` (n×m, f64) with a single
+/// write per element: the previous `clear()` + `resize(n*m, 0.0)` paid
+/// a full zero pass over the largest buffer in the scan on every call,
+/// only to overwrite every element immediately (the ISSUE-7 double-write
+/// bug). A shrinking call keeps the arena's capacity (module doc).
+fn pack_transpose(a: &[f32], m: usize, n: usize, pack: &mut Vec<f64>) {
+    let len = n * m;
     pack.clear();
-    pack.resize(n * m, 0.0);
+    pack.reserve(len);
+    let spare = &mut pack.spare_capacity_mut()[..len];
     for i in 0..m {
         let arow = &a[i * n..(i + 1) * n];
         for (j, &x) in arow.iter().enumerate() {
-            pack[j * m + i] = x as f64;
+            spare[j * m + i].write(x as f64);
         }
     }
-    for i in 0..n {
-        let ci = &pack[i * m..(i + 1) * m];
-        for j in i..n {
+    // SAFETY: every index j*m + i with i < m, j < n is written exactly
+    // once above, so all `len` elements are initialized.
+    unsafe { pack.set_len(len) };
+}
+
+/// Upper-triangle rows `i0..i0+rows` of the Gram matrix into `g`
+/// (rows×n): entry (i, j) for j >= i only — the lower triangle of the
+/// tile is left untouched and filled by [`mirror_lower`] afterwards.
+fn gram_rows(pack: &[f64], m: usize, n: usize, i0: usize, rows: usize, g: &mut [f64], use_simd: bool) {
+    debug_assert_eq!(g.len(), rows * n);
+    for i in 0..rows {
+        let ci = &pack[(i0 + i) * m..(i0 + i + 1) * m];
+        for j in (i0 + i)..n {
             let cj = &pack[j * m..(j + 1) * m];
-            let mut acc = 0.0f64;
-            for l in 0..m {
-                acc += ci[l] * cj[l];
-            }
-            g[i * n + j] = acc;
-            g[j * n + i] = acc;
+            g[i * n + j] = dot_quad(use_simd, ci, cj);
         }
     }
+}
+
+/// Copy the computed upper triangle onto the lower one — a bit-exact
+/// copy, so `g[i,j].to_bits() == g[j,i].to_bits()` always holds.
+fn mirror_lower(g: &mut [f64], n: usize) {
+    for i in 1..n {
+        for j in 0..i {
+            g[i * n + j] = g[j * n + i];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// intra-matrix parallel tier: disjoint output-row tiles over the pool
+// ---------------------------------------------------------------------------
+
+/// [`matmul_f64`] with intra-matrix parallelism: output rows are split
+/// into `workers` contiguous disjoint tiles fanned over the
+/// `lift::engine` pool. Bit-identical to the serial kernel for any
+/// worker count (tile-ownership contract, module doc); products below
+/// [`PAR_MIN_MULADDS`] run serially.
+pub fn matmul_f64_par(a: &[f64], b: &[f64], m: usize, k: usize, n: usize, c: &mut [f64], workers: usize) {
+    matmul_f64_tiled(a, b, m, k, n, c, workers, PAR_MIN_MULADDS);
+}
+
+/// Tiling core with an explicit threshold so tests can force the
+/// parallel path on small matrices (`min_muladds = 0`).
+pub(crate) fn matmul_f64_tiled(
+    a: &[f64],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f64],
+    workers: usize,
+    min_muladds: usize,
+) {
+    if workers <= 1 || m < 2 || m * k * n < min_muladds {
+        matmul_f64(a, b, m, k, n, c);
+        return;
+    }
+    assert_eq!(a.len(), m * k, "gemm: a is not m×k");
+    assert_eq!(b.len(), k * n, "gemm: b is not k×n");
+    assert_eq!(c.len(), m * n, "gemm: c is not m×n");
+    let use_simd = simd_enabled();
+    let rows_per = m.div_ceil(workers.min(m));
+    let mut jobs = Vec::new();
+    let mut a_rest = a;
+    let mut c_rest = c;
+    let mut i0 = 0;
+    while i0 < m {
+        let rows = rows_per.min(m - i0);
+        let (a_t, ar) = a_rest.split_at(rows * k);
+        let (c_t, cr) = std::mem::take(&mut c_rest).split_at_mut(rows * n);
+        a_rest = ar;
+        c_rest = cr;
+        jobs.push((a_t, c_t, rows));
+        i0 += rows;
+    }
+    crate::lift::engine::par_map(workers, jobs, |_, (a_t, c_t, rows)| {
+        matmul_f64_rows(a_t, b, rows, k, n, c_t, use_simd);
+    });
+}
+
+/// [`matmul_tn_f64`] with intra-matrix parallelism (same contract as
+/// [`matmul_f64_par`]): each tile owns output rows `i0..i0+rows`, i.e.
+/// a disjoint column window of A.
+pub fn matmul_tn_f64_par(a: &[f64], b: &[f64], k: usize, m: usize, n: usize, c: &mut [f64], workers: usize) {
+    matmul_tn_f64_tiled(a, b, k, m, n, c, workers, PAR_MIN_MULADDS);
+}
+
+pub(crate) fn matmul_tn_f64_tiled(
+    a: &[f64],
+    b: &[f64],
+    k: usize,
+    m: usize,
+    n: usize,
+    c: &mut [f64],
+    workers: usize,
+    min_muladds: usize,
+) {
+    if workers <= 1 || m < 2 || k * m * n < min_muladds {
+        matmul_tn_f64(a, b, k, m, n, c);
+        return;
+    }
+    assert_eq!(a.len(), k * m, "gemm_tn: a is not k×m");
+    assert_eq!(b.len(), k * n, "gemm_tn: b is not k×n");
+    assert_eq!(c.len(), m * n, "gemm_tn: c is not m×n");
+    let use_simd = simd_enabled();
+    let rows_per = m.div_ceil(workers.min(m));
+    let mut jobs = Vec::new();
+    let mut c_rest = c;
+    let mut i0 = 0;
+    while i0 < m {
+        let rows = rows_per.min(m - i0);
+        let (c_t, cr) = std::mem::take(&mut c_rest).split_at_mut(rows * n);
+        c_rest = cr;
+        jobs.push((i0, c_t, rows));
+        i0 += rows;
+    }
+    crate::lift::engine::par_map(workers, jobs, |_, (i0, c_t, rows)| {
+        matmul_tn_rows(a, b, k, m, n, i0, rows, c_t, use_simd);
+    });
+}
+
+/// [`matmul_f32xf64_with`] with intra-matrix parallelism: `acc` is
+/// resized to one f64 row per tile, and each tile gets a disjoint
+/// accumulator slice alongside its disjoint output rows.
+pub fn matmul_f32xf64_par(
+    a: &[f32],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    workers: usize,
+    acc: &mut Vec<f64>,
+) {
+    matmul_f32xf64_tiled(a, b, m, k, n, c, workers, PAR_MIN_MULADDS, acc);
+}
+
+pub(crate) fn matmul_f32xf64_tiled(
+    a: &[f32],
+    b: &[f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    workers: usize,
+    min_muladds: usize,
+    acc: &mut Vec<f64>,
+) {
+    if workers <= 1 || m < 2 || m * k * n < min_muladds {
+        matmul_f32xf64_with(a, b, m, k, n, c, acc);
+        return;
+    }
+    assert_eq!(a.len(), m * k, "gemm_32x64: a is not m×k");
+    assert_eq!(b.len(), k * n, "gemm_32x64: b is not k×n");
+    assert_eq!(c.len(), m * n, "gemm_32x64: c is not m×n");
+    let use_simd = simd_enabled();
+    let rows_per = m.div_ceil(workers.min(m));
+    let n_tiles = m.div_ceil(rows_per);
+    acc.resize(n_tiles * n, 0.0);
+    let mut jobs = Vec::new();
+    let mut a_rest = a;
+    let mut c_rest = c;
+    let mut acc_rest = &mut acc[..];
+    let mut i0 = 0;
+    while i0 < m {
+        let rows = rows_per.min(m - i0);
+        let (a_t, ar) = a_rest.split_at(rows * k);
+        let (c_t, cr) = std::mem::take(&mut c_rest).split_at_mut(rows * n);
+        let (acc_t, accr) = std::mem::take(&mut acc_rest).split_at_mut(n);
+        a_rest = ar;
+        c_rest = cr;
+        acc_rest = accr;
+        jobs.push((a_t, c_t, acc_t, rows));
+        i0 += rows;
+    }
+    crate::lift::engine::par_map(workers, jobs, |_, (a_t, c_t, acc_t, rows)| {
+        matmul_f32xf64_rows(a_t, b, rows, k, n, c_t, acc_t, use_simd);
+    });
+}
+
+/// [`gram_f64`] with intra-matrix parallelism: the packing pass stays
+/// serial (it is a bandwidth-bound transpose), then the upper-triangle
+/// rows fan out in small tiles (~4 per worker — upper-triangle rows
+/// shrink with `i`, so finer tiles plus the pool's stealing cursor
+/// level the load), and the mirror pass runs serially after.
+pub fn gram_f64_par(a: &[f32], m: usize, n: usize, pack: &mut Vec<f64>, g: &mut [f64], workers: usize) {
+    gram_f64_tiled(a, m, n, pack, g, workers, PAR_MIN_MULADDS);
+}
+
+pub(crate) fn gram_f64_tiled(
+    a: &[f32],
+    m: usize,
+    n: usize,
+    pack: &mut Vec<f64>,
+    g: &mut [f64],
+    workers: usize,
+    min_muladds: usize,
+) {
+    if workers <= 1 || n < 2 || n * (n + 1) / 2 * m < min_muladds {
+        gram_f64(a, m, n, pack, g);
+        return;
+    }
+    assert_eq!(a.len(), m * n, "gram: a is not m×n");
+    assert_eq!(g.len(), n * n, "gram: g is not n×n");
+    let use_simd = simd_enabled();
+    pack_transpose(a, m, n, pack);
+    let pack_ro: &[f64] = pack;
+    let rows_per = n.div_ceil(4 * workers).max(1);
+    let mut jobs = Vec::new();
+    let mut g_rest = &mut g[..];
+    let mut i0 = 0;
+    while i0 < n {
+        let rows = rows_per.min(n - i0);
+        let (g_t, gr) = std::mem::take(&mut g_rest).split_at_mut(rows * n);
+        g_rest = gr;
+        jobs.push((i0, g_t, rows));
+        i0 += rows;
+    }
+    crate::lift::engine::par_map(workers, jobs, |_, (i0, g_t, rows)| {
+        gram_rows(pack_ro, m, n, i0, rows, g_t, use_simd);
+    });
+    mirror_lower(g, n);
 }
 
 #[cfg(test)]
@@ -156,6 +660,10 @@ mod tests {
             }
         }
         c
+    }
+
+    fn bits_eq(x: &[f64], y: &[f64]) -> bool {
+        x.len() == y.len() && x.iter().zip(y).all(|(a, b)| a.to_bits() == b.to_bits())
     }
 
     #[test]
@@ -227,12 +735,15 @@ mod tests {
                 assert_eq!(g[i * n + j].to_bits(), g[j * n + i].to_bits(), "not symmetric");
             }
         }
-        // pack scratch is reusable: second call over a different shape
+        // pack scratch is an arena: a second, smaller-shape call reuses
+        // it — and the shrinking resize keeps the larger capacity
         let (m2, n2) = (5usize, 4usize);
         let a2: Vec<f32> = (0..m2 * n2).map(|_| rng.normal()).collect();
         let mut g2 = vec![0.0f64; n2 * n2];
         gram_f64(&a2, m2, n2, &mut pack, &mut g2);
         assert!((g2[0] - (0..m2).map(|l| (a2[l * n2] as f64).powi(2)).sum::<f64>()).abs() < 1e-9);
+        assert_eq!(pack.len(), n2 * m2);
+        assert!(pack.capacity() >= m * n, "arena capacity must survive a shrinking call");
     }
 
     #[test]
@@ -245,6 +756,142 @@ mod tests {
         let mut c2 = vec![0.0f64; m * n];
         matmul_f64(&a, &b, m, k, n, &mut c1);
         matmul_f64(&a, &b, m, k, n, &mut c2);
-        assert!(c1.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(bits_eq(&c1, &c2));
+    }
+
+    /// Scalar and SIMD kernels must agree BITWISE across KC panel
+    /// boundaries and degenerate shapes (m=1 / n=1 / k < KC). On hosts
+    /// without AVX2 the SIMD side clamps to scalar and the test passes
+    /// vacuously; CI's x86-64 runners exercise the real comparison.
+    #[test]
+    fn simd_matches_scalar_bitwise() {
+        let simd = simd_supported();
+        let mut rng = Rng::new(13);
+        // axpy-family kernels: matmul, tn, mixed precision
+        for (m, k, n) in [
+            (7usize, 130usize, 9usize),
+            (1, 64, 5),
+            (5, 63, 1),
+            (3, 65, 4),
+            (4, 30, 17),
+            (2, 129, 8),
+        ] {
+            let a: Vec<f64> = (0..m * k).map(|_| rng.normal() as f64).collect();
+            let b: Vec<f64> = (0..k * n).map(|_| rng.normal() as f64).collect();
+            let mut cs = vec![0.0f64; m * n];
+            let mut cv = vec![1.0f64; m * n];
+            matmul_f64_rows(&a, &b, m, k, n, &mut cs, false);
+            matmul_f64_rows(&a, &b, m, k, n, &mut cv, simd);
+            assert!(bits_eq(&cs, &cv), "matmul parity broke at ({m},{k},{n})");
+
+            // reuse (m, k, n) as the tn shape (a is k×m there)
+            let at: Vec<f64> = (0..k * m).map(|_| rng.normal() as f64).collect();
+            let mut ts = vec![0.0f64; m * n];
+            let mut tv = vec![1.0f64; m * n];
+            matmul_tn_rows(&at, &b, k, m, n, 0, m, &mut ts, false);
+            matmul_tn_rows(&at, &b, k, m, n, 0, m, &mut tv, simd);
+            assert!(bits_eq(&ts, &tv), "tn parity broke at ({k},{m},{n})");
+
+            let a32: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let mut ms = vec![0.0f32; m * n];
+            let mut mv = vec![1.0f32; m * n];
+            let mut acc = vec![0.0f64; n];
+            matmul_f32xf64_rows(&a32, &b, m, k, n, &mut ms, &mut acc, false);
+            matmul_f32xf64_rows(&a32, &b, m, k, n, &mut mv, &mut acc, simd);
+            assert!(
+                ms.iter().zip(&mv).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "mixed-precision parity broke at ({m},{k},{n})"
+            );
+        }
+        // dot-family kernel (Gram): column length m hits every tail
+        // residue of the quad-accumulator order
+        for (m, n) in [(37usize, 12usize), (64, 3), (1, 7), (7, 1), (130, 9), (5, 4)] {
+            let a: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut pack = Vec::new();
+            pack_transpose(&a, m, n, &mut pack);
+            let mut gs = vec![0.0f64; n * n];
+            let mut gv = vec![1.0f64; n * n];
+            gram_rows(&pack, m, n, 0, n, &mut gs, false);
+            mirror_lower(&mut gs, n);
+            gram_rows(&pack, m, n, 0, n, &mut gv, simd);
+            mirror_lower(&mut gv, n);
+            assert!(bits_eq(&gs, &gv), "gram parity broke at ({m},{n})");
+        }
+    }
+
+    /// The parallel tile tier must be bit-identical to the serial kernel
+    /// for any worker count, including more workers than rows
+    /// (threshold forced to 0 so tiny shapes take the parallel path).
+    #[test]
+    fn tiled_matches_serial_bitwise_for_any_worker_count() {
+        let mut rng = Rng::new(17);
+        let (m, k, n) = (13usize, 70usize, 11usize);
+        let a: Vec<f64> = (0..m * k).map(|_| rng.normal() as f64).collect();
+        let b: Vec<f64> = (0..k * n).map(|_| rng.normal() as f64).collect();
+        let mut want = vec![0.0f64; m * n];
+        matmul_f64(&a, &b, m, k, n, &mut want);
+        for w in [1usize, 2, 3, 8, 32] {
+            let mut c = vec![1.0f64; m * n];
+            matmul_f64_tiled(&a, &b, m, k, n, &mut c, w, 0);
+            assert!(bits_eq(&c, &want), "matmul tiling diverged at {w} workers");
+        }
+
+        let (k2, m2, n2) = (66usize, 9usize, 8usize);
+        let a2: Vec<f64> = (0..k2 * m2).map(|_| rng.normal() as f64).collect();
+        let b2: Vec<f64> = (0..k2 * n2).map(|_| rng.normal() as f64).collect();
+        let mut want_tn = vec![0.0f64; m2 * n2];
+        matmul_tn_f64(&a2, &b2, k2, m2, n2, &mut want_tn);
+        for w in [2usize, 5, 16] {
+            let mut c = vec![1.0f64; m2 * n2];
+            matmul_tn_f64_tiled(&a2, &b2, k2, m2, n2, &mut c, w, 0);
+            assert!(bits_eq(&c, &want_tn), "tn tiling diverged at {w} workers");
+        }
+
+        let a32: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let mut want_mx = vec![0.0f32; m * n];
+        matmul_f32xf64(&a32, &b, m, k, n, &mut want_mx);
+        let mut acc = Vec::new(); // one arena reused across worker counts
+        for w in [2usize, 4, 9] {
+            let mut c = vec![1.0f32; m * n];
+            matmul_f32xf64_tiled(&a32, &b, m, k, n, &mut c, w, 0, &mut acc);
+            assert!(
+                c.iter().zip(&want_mx).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "mixed-precision tiling diverged at {w} workers"
+            );
+        }
+
+        let (gm, gn) = (41usize, 14usize);
+        let ga: Vec<f32> = (0..gm * gn).map(|_| rng.normal()).collect();
+        let mut pack = Vec::new();
+        let mut want_g = vec![0.0f64; gn * gn];
+        gram_f64(&ga, gm, gn, &mut pack, &mut want_g);
+        for w in [2usize, 3, 16] {
+            let mut g = vec![1.0f64; gn * gn];
+            gram_f64_tiled(&ga, gm, gn, &mut pack, &mut g, w, 0);
+            assert!(bits_eq(&g, &want_g), "gram tiling diverged at {w} workers");
+        }
+    }
+
+    /// Satellite-1 regression: the `_with` variant must match the
+    /// allocating wrapper bitwise while reusing one accumulator arena
+    /// across different shapes.
+    #[test]
+    fn with_scratch_matches_allocating_wrapper_across_shapes() {
+        let mut rng = Rng::new(19);
+        let mut acc = Vec::new();
+        for (m, k, n) in [(9usize, 129usize, 8usize), (3, 10, 5), (6, 64, 12), (1, 7, 1)] {
+            let a32: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..k * n).map(|_| rng.normal() as f64).collect();
+            let mut c1 = vec![0.0f32; m * n];
+            let mut c2 = vec![1.0f32; m * n];
+            matmul_f32xf64(&a32, &b, m, k, n, &mut c1);
+            matmul_f32xf64_with(&a32, &b, m, k, n, &mut c2, &mut acc);
+            assert!(
+                c1.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "scratch variant diverged at ({m},{k},{n})"
+            );
+            assert_eq!(acc.len(), n);
+        }
+        assert!(acc.capacity() >= 12, "accumulator arena must be retained");
     }
 }

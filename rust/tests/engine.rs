@@ -410,6 +410,61 @@ fn warm_refresh_masks_and_carriers_are_worker_count_invariant() {
     }
 }
 
+#[test]
+fn intra_matrix_parallel_gemm_keeps_masks_and_carriers_bit_identical() {
+    // ISSUE 7: when the pool has more workers than requests, each
+    // worker's scratch carries an intra-matrix budget and the exact
+    // path's Gram/apply/RR products split row tiles across it. The big
+    // matrix here pushes its Gram build past the gemm fan-out threshold
+    // (160·161/2·520 ≈ 6.7M muladds > 2^22), so the 8-worker run (3
+    // requests → intra budget 2) genuinely tiles while the 1-worker run
+    // stays serial — and masks AND warm carriers must still match
+    // bit-for-bit, carrier included because it is checkpointed state.
+    use lift::util::eigh::SubspaceWarm;
+    let mut rng = Rng::new(71);
+    let shapes = [(520usize, 160usize), (64, 80), (72, 72)];
+    let ws: Vec<Tensor> = shapes
+        .iter()
+        .map(|&(m, n)| Tensor::randn(&[m, n], 1.0, &mut rng))
+        .collect();
+    let cfg = LiftCfg {
+        rank: 4,
+        exact: true,
+        ..Default::default()
+    };
+    let la = linalg();
+    let run = |workers: usize| {
+        let eng = MaskEngine::with_workers(la.clone(), workers);
+        let reqs: Vec<MaskRequest> = ws
+            .iter()
+            .enumerate()
+            .map(|(i, w)| {
+                let (m, n) = w.dims2();
+                MaskRequest {
+                    tag: i as u64,
+                    w,
+                    grad: None,
+                    score: None,
+                    k: budget_for(m, n, 4),
+                }
+            })
+            .collect();
+        let mut warms: Vec<Option<SubspaceWarm>> = (0..reqs.len()).map(|_| None).collect();
+        let masks = eng
+            .select_all_warm(Selector::Lift, &cfg, &reqs, 0xF7, &mut warms)
+            .unwrap();
+        (masks, warms)
+    };
+    let (m1, c1) = run(1);
+    let (m8, c8) = run(8);
+    assert_eq!(m1, m8, "intra-matrix-parallel GEMM changed the masks");
+    assert_eq!(c1, c8, "intra-matrix-parallel GEMM changed the warm carriers");
+    assert!(
+        c1.iter().all(|c| c.is_some()),
+        "subspace path must emit carriers for every matrix"
+    );
+}
+
 // ---- cross-worker trainer determinism: every Method, K steps ----
 
 /// A 2-layer toy preset: enough matrices for real fan-out, plus an
