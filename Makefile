@@ -6,7 +6,7 @@
 # XlaBuilder toolkit (mask engine, property tests, quickstart selftest);
 # artifact-dependent integration tests skip themselves when absent.
 
-.PHONY: artifacts artifacts-e2e test test-nosimd bench bench-check clippy matrix-smoke matrix-race
+.PHONY: artifacts artifacts-e2e test test-nosimd bench bench-check clippy matrix-smoke matrix-race serve-smoke
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -49,6 +49,25 @@ matrix-smoke:
 	target/release/lift matrix --toy --methods lift,full \
 	  --axis "interval=2,4;seed=1,2" --steps 8 --ckpt-every 2 \
 	  --runner-id local --out /tmp/lift_mx_resumed
+
+# the ISSUE-8 acceptance flow, locally: register 3 tenants and replay ONE
+# seeded request mix twice — once under a budget small enough to churn
+# the LRU (evictions asserted) and once with a hold-everything budget —
+# then diff the dumped outputs byte-for-byte. The demo itself asserts
+# per-tenant divergence from the base, overlay ≡ full materialization,
+# hot-swap atomicity, and 1-worker ≡ N-worker bit-identity.
+serve-smoke:
+	cargo build --release
+	target/release/lift serve --tenants 3 --requests 48 --batch 8 \
+	  --budget-kb 16 --expect-resident 0 --swaps 1 --seed 5 \
+	  --dir /tmp/lift_serve_lru --dump /tmp/lift_serve_lru.dump \
+	  | tee /tmp/lift_serve_lru.log
+	grep -q "evictions=[1-9]" /tmp/lift_serve_lru.log
+	target/release/lift serve --tenants 3 --requests 48 --batch 8 \
+	  --budget-kb 4096 --expect-resident 3 --swaps 1 --seed 5 \
+	  --dir /tmp/lift_serve_nolru --dump /tmp/lift_serve_nolru.dump
+	cmp /tmp/lift_serve_lru.dump /tmp/lift_serve_nolru.dump
+	@echo "serve smoke OK: eviction-churn outputs byte-identical to no-LRU run"
 
 # the ISSUE-6 acceptance flow, locally: two concurrent runners shard ONE
 # campaign directory via cell leases (no coordinator), then the merged

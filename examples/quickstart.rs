@@ -11,8 +11,9 @@
 //! stub), it degrades to an artifact-free selftest of the layer-parallel
 //! mask engine: a determinism check plus the measured sequential-vs-
 //! parallel refresh row, a scalar-vs-SIMD GEMM dispatch row (~1.0x where
-//! AVX2 is absent or `LIFT_NO_SIMD=1`), and a versioned-snapshot round
-//! trip. CI uses that as the smoke invocation.
+//! AVX2 is absent or `LIFT_NO_SIMD=1`), a versioned-snapshot round trip,
+//! and a 3-tenant pass through the per-tenant delta server. CI uses that
+//! as the smoke invocation.
 //!
 //! Checkpoint/restore CLI (ISSUE 3 — see `rust/src/ckpt/` for the
 //! on-disk format):
@@ -60,6 +61,19 @@
 //!     # stable --runner-id across restarts to reclaim your own leases
 //!     # immediately; --no-lease turns the protocol off for strictly
 //!     # single-process campaigns.
+//!
+//! lift serve --tenants 120 --requests 256 --budget-kb 4096
+//!     # LIFT-as-a-service demo (rust/src/serve/): one resident toy base
+//!     # plus N per-tenant sparse deltas — the paper's top-5% principal
+//!     # weights as `{mask indices, values, base digest}` LIFTSNAP files
+//!     # — overlaid at request time through a byte-budgeted LRU of
+//!     # row-granular views. Requests are grouped by tenant and fanned
+//!     # over the engine pool; the demo asserts overlay-apply ≡ full
+//!     # tenant materialization bitwise, per-tenant divergence from the
+//!     # base, hot-swap atomicity on live updates, and 1-worker ≡
+//!     # N-worker outputs. `make serve-smoke` replays one request mix
+//!     # under an eviction-churning budget and a hold-everything budget
+//!     # and diffs the dumped outputs byte-for-byte.
 //! ```
 
 use std::sync::Arc;
@@ -250,6 +264,45 @@ fn selftest() -> anyhow::Result<()> {
         println!(
             "ckpt selftest OK: {} B snapshot at step {}, save -> load -> digest match",
             bytes, state.step
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    // serve selftest (ISSUE 8): three tenants through the per-tenant
+    // delta server — overlay ≡ dense materialization bitwise, and every
+    // tenant's answer diverges from the base's
+    {
+        use lift::exp::matrix::{toy_params, toy_preset};
+        use lift::serve::{base_digest, synth_delta, Request, Server};
+        let base = toy_params(7);
+        let digest = base_digest(&base);
+        let dir = std::env::temp_dir().join(format!("lift_quickstart_serve_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut server = Server::new(&base, &toy_preset(), &dir, 1 << 20, workers)?;
+        for i in 0..3usize {
+            server
+                .store()
+                .register(&synth_delta(&base, &format!("t{i}"), digest, 2, 70 + i as u64))?;
+        }
+        let reqs: Vec<Request> =
+            (0..3).map(|i| Request { tenant: format!("t{i}"), seed: 40 + i as u64 }).collect();
+        let outs = server.handle_batch(&reqs)?;
+        for (r, out) in reqs.iter().zip(&outs) {
+            anyhow::ensure!(
+                *out != server.base_forward(r.seed),
+                "serve selftest: tenant {} output identical to base",
+                r.tenant
+            );
+        }
+        let mut one = Server::new(&base, &toy_preset(), &dir, 1 << 20, 1)?;
+        let outs1 = one.handle_batch(&reqs)?;
+        anyhow::ensure!(
+            outs.iter().zip(&outs1).all(|(a, b)| a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())),
+            "serve selftest: {workers}-worker outputs != 1-worker outputs"
+        );
+        println!(
+            "serve selftest OK: 3 tenants overlaid on one base ({} B resident), \
+             outputs diverge from base, 1w == {workers}w",
+            server.lru().resident_bytes()
         );
         let _ = std::fs::remove_dir_all(&dir);
     }

@@ -190,8 +190,19 @@ impl<'a> Dec<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// `usize` travels as u64 on the wire; on a 32-bit target a corrupt
+    /// (or genuinely huge) value above `usize::MAX` must error, not
+    /// truncate — `as usize` would silently fold e.g. `0x1_0000_0001`
+    /// down to 1 and misparse everything after it.
     pub fn usize(&mut self) -> Result<usize> {
-        Ok(self.u64()? as usize)
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| {
+            anyhow::anyhow!(
+                "snapshot length {v} (0x{v:x}) does not fit this target's \
+                 {}-bit usize — corrupt payload or a container from a larger host",
+                usize::BITS
+            )
+        })
     }
 
     pub fn f32(&mut self) -> Result<f32> {
@@ -409,6 +420,30 @@ mod tests {
         assert_eq!(dn2.t, dn.t);
         assert_eq!(dn2.cfg.weight_decay, 0.1);
         d.finish().unwrap();
+    }
+
+    #[test]
+    fn usize_above_u32_max_never_silently_truncates() {
+        // the regression: `self.u64()? as usize` on a 32-bit target
+        // folded 0x1_0000_0001 down to 1 — a corrupt >4 GiB length
+        // parsed as a tiny one and everything after it misparsed.
+        let v: u64 = u32::MAX as u64 + 1; // just above u32::MAX
+        let mut e = Enc::new();
+        e.u64(v);
+        let bytes = e.into_bytes();
+        let got = Dec::new(&bytes).usize();
+        #[cfg(target_pointer_width = "64")]
+        {
+            // on a 64-bit host the value FITS and must decode exactly —
+            // any truncation would surface here as a small number
+            assert_eq!(got.unwrap(), 0x1_0000_0000usize);
+        }
+        #[cfg(target_pointer_width = "32")]
+        {
+            let err = got.unwrap_err().to_string();
+            assert!(err.contains("4294967296"), "error must name the length: {err}");
+            assert!(err.contains("32-bit"), "{err}");
+        }
     }
 
     #[test]

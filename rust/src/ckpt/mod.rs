@@ -147,7 +147,16 @@ impl Snapshot {
         Snapshot::default()
     }
 
+    /// Append a section. Section names are the container's only lookup
+    /// key ([`Snapshot::get`] finds the FIRST match), so a duplicate
+    /// would silently shadow its later payload — that is a writer bug,
+    /// and it panics here rather than round-tripping into a file every
+    /// reader then misreads.
     pub fn add(&mut self, name: &str, payload: Vec<u8>) {
+        assert!(
+            !self.sections.iter().any(|(n, _)| n == name),
+            "snapshot section '{name}' added twice — later payload would be shadowed"
+        );
         self.sections.push((name.to_string(), payload));
     }
 
@@ -208,6 +217,14 @@ impl Snapshot {
                 got == stored,
                 "snapshot section '{name}' failed its CRC32 check (stored {stored:08x}, \
                  computed {got:08x}) — the file is corrupted"
+            );
+            // a duplicate name means a foreign/corrupt writer: `get`
+            // would silently shadow the later payload, so refuse the
+            // whole container instead of misreading half of it
+            anyhow::ensure!(
+                !sections.iter().any(|(n, _): &(String, Vec<u8>)| n == &name),
+                "snapshot contains duplicate section '{name}' — refusing a container \
+                 whose later payload would be silently shadowed"
             );
             sections.push((name, payload));
         }
@@ -522,6 +539,45 @@ mod tests {
         let mut bad = good;
         bad[0] = b'X';
         assert!(Snapshot::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "added twice")]
+    fn add_panics_on_duplicate_section_name() {
+        let mut snap = Snapshot::new();
+        snap.add("meta", vec![1]);
+        snap.add("meta", vec![2]);
+    }
+
+    #[test]
+    fn parse_rejects_duplicate_sections_in_hand_built_bytes() {
+        // hand-build a container that `to_bytes` can no longer produce:
+        // two sections named "meta" with DIFFERENT payloads, both CRCs
+        // valid — the old parser accepted it and `get` served the first
+        // payload while the second silently vanished.
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes()); // section count
+        for payload in [&[1u8, 2, 3][..], &[9u8, 9][..]] {
+            b.extend_from_slice(&4u32.to_le_bytes()); // name length
+            b.extend_from_slice(b"meta");
+            b.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            b.extend_from_slice(&crc32(payload).to_le_bytes());
+            b.extend_from_slice(payload);
+        }
+        let err = Snapshot::from_bytes(&b).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("duplicate section 'meta'"), "{msg}");
+        // same bytes with the second section renamed parse fine — the
+        // rejection is specifically about the duplicate name
+        let pos = b.len() - (4 + 8 + 4 + 2); // start of second header
+        b[pos..pos + 4].copy_from_slice(&4u32.to_le_bytes());
+        let name_at = pos + 4;
+        b[name_at..name_at + 4].copy_from_slice(b"mate");
+        let ok = Snapshot::from_bytes(&b).unwrap();
+        assert_eq!(ok.get("meta").unwrap(), &[1, 2, 3]);
+        assert_eq!(ok.get("mate").unwrap(), &[9, 9]);
     }
 
     #[test]

@@ -601,6 +601,75 @@ pub fn measure_gemm_par(workers: usize, reps: usize) -> Speedup {
     }
 }
 
+/// Time per-tenant overlay-apply (row-granular `serve::TenantView`
+/// materialization) vs full tenant materialization (dense base clone +
+/// scatter) — the `[serve]` acceptance row. `seq_s` holds the full-copy
+/// time and `par_s` the overlay time, so `speedup` reads full/overlay.
+/// The ratio is an algorithmic invariant (row-clustered deltas touch a
+/// small fraction of base rows, and the view copies only those), not a
+/// host feature, so like `[gemm-simd]` the row is ALWAYS emitted and the
+/// trajectory label stays present on every runner. Also returns
+/// `(view_bytes, dense_bytes)` per tenant so callers can report
+/// tenants/GB honestly from the same measurement.
+pub fn measure_serve_overlay(reps: usize) -> Result<(Speedup, usize, usize)> {
+    use crate::serve::{base_digest, synth_delta, TenantView};
+    let mut rng = Rng::new(0x7e4a_9001);
+    // two tiny-preset layers' worth of matrices — the same shapes every
+    // other bench row uses, so rows are comparable across sections
+    let base: Vec<Tensor> = tiny_layer_shapes()
+        .iter()
+        .chain(tiny_layer_shapes().iter())
+        .map(|&(m, n)| Tensor::randn(&[m, n], 0.05, &mut rng))
+        .collect();
+    let delta = synth_delta(&base, "bench", base_digest(&base), 8, 0xbe7c);
+    // correctness before timing: the view must agree with the dense copy
+    // on every touched row and fall through to base elsewhere
+    let view = TenantView::materialize(&base, &delta)?;
+    let dense = TenantView::full_materialize(&base, &delta)?;
+    for (pi, t) in base.iter().enumerate() {
+        let ncols = *t.shape.last().unwrap_or(&1);
+        for r in 0..t.len() / ncols {
+            let expect = &dense[pi].data[r * ncols..(r + 1) * ncols];
+            match view.row(pi, r) {
+                Some(row) => anyhow::ensure!(row == expect, "overlay row {pi}/{r} diverged"),
+                None => anyhow::ensure!(
+                    &t.data[r * ncols..(r + 1) * ncols] == expect,
+                    "untouched row {pi}/{r} modified by full materialization"
+                ),
+            }
+        }
+    }
+    let view_bytes = view.bytes();
+    let dense_bytes = base.iter().map(|t| t.len() * 4).sum::<usize>();
+    let time = |full: bool| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = std::time::Instant::now();
+            if full {
+                let _ = std::hint::black_box(TenantView::full_materialize(&base, &delta));
+            } else {
+                let _ = std::hint::black_box(TenantView::materialize(&base, &delta));
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let full_s = time(true);
+    let overlay_s = time(false);
+    Ok((
+        Speedup {
+            label: "serve_overlay",
+            workers: 1,
+            matrices: base.len(),
+            seq_s: full_s,
+            par_s: overlay_s,
+            speedup: full_s / overlay_s.max(1e-12),
+        },
+        view_bytes,
+        dense_bytes,
+    ))
+}
+
 /// Evaluate a family suite on given params (e.g. source-domain retention).
 pub fn eval_suite(
     env: &mut ExpEnv,

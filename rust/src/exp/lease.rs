@@ -111,11 +111,30 @@ pub fn sanitize(s: &str) -> String {
 
 /// Current wall clock in unix seconds — the shared-filesystem common
 /// denominator the expiry deadline lives in.
-pub fn now_unix() -> u64 {
-    std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
+///
+/// A pre-epoch (or otherwise broken) clock is a **campaign-aborting
+/// error**, not a value: a runner that silently saw `now = 0` would
+/// treat every foreign lease as unexpired forever while stamping its
+/// own deadlines as `0 + ttl` — which healthy peers read as expired
+/// decades ago and instantly usurp, so the broken-clock runner's live
+/// work is stolen out from under it. Better to refuse to participate.
+pub fn now_unix() -> Result<u64> {
+    now_unix_from(std::time::SystemTime::now())
+}
+
+/// Testable seam behind [`now_unix`]: convert an injected clock reading
+/// to unix seconds, refusing pre-epoch times loudly.
+pub fn now_unix_from(t: std::time::SystemTime) -> Result<u64> {
+    t.duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs())
-        .unwrap_or(0)
+        .map_err(|e| {
+            anyhow::anyhow!(
+                "system clock reads {:.1}s BEFORE the unix epoch — lease deadlines \
+                 would be nonsense (own leases instantly usurpable, foreign leases \
+                 never expired); fix the clock and restart the campaign",
+                e.duration().as_secs_f64()
+            )
+        })
 }
 
 pub fn lease_path(out_dir: &Path, id: &str) -> PathBuf {
@@ -203,12 +222,12 @@ impl LeaseGuard {
         )
     }
 
-    fn body(&self) -> Lease {
-        Lease {
+    fn body(&self) -> Result<Lease> {
+        Ok(Lease {
             runner: self.runner.clone(),
             token: self.token,
-            expires_unix: now_unix() + self.ttl_secs,
-        }
+            expires_unix: now_unix()? + self.ttl_secs,
+        })
     }
 
     /// Extend the deadline by a fresh TTL (same runner, same token).
@@ -220,7 +239,7 @@ impl LeaseGuard {
             "lease on cell {} was lost (taken over or released) — refusing to renew",
             self.id
         );
-        write_lease_atomic(&self.out_dir, &self.id, &self.runner, &self.body())
+        write_lease_atomic(&self.out_dir, &self.id, &self.runner, &self.body()?)
             .with_context(|| format!("renewing lease on cell {}", self.id))
     }
 
@@ -264,7 +283,7 @@ pub fn claim(out_dir: &Path, id: &str, cfg: &LeaseCfg) -> Result<Claim> {
     let fresh = Lease {
         runner: cfg.runner.clone(),
         token: 1,
-        expires_unix: now_unix() + cfg.ttl_secs,
+        expires_unix: now_unix()? + cfg.ttl_secs,
     };
     match std::fs::OpenOptions::new()
         .write(true)
@@ -301,11 +320,11 @@ pub fn claim(out_dir: &Path, id: &str, cfg: &LeaseCfg) -> Result<Claim> {
                 token: l.token,
                 ttl_secs: cfg.ttl_secs,
             };
-            write_lease_atomic(out_dir, id, &cfg.runner, &guard.body())
+            write_lease_atomic(out_dir, id, &cfg.runner, &guard.body()?)
                 .with_context(|| format!("reclaiming lease on cell {id}"))?;
             return Ok(Claim::Held(guard));
         }
-        if !l.is_expired(now_unix()) {
+        if !l.is_expired(now_unix()?) {
             return Ok(Claim::Busy {
                 holder: l.runner.clone(),
                 expires_unix: l.expires_unix,
@@ -318,7 +337,7 @@ pub fn claim(out_dir: &Path, id: &str, cfg: &LeaseCfg) -> Result<Claim> {
     let takeover = Lease {
         runner: cfg.runner.clone(),
         token: current.as_ref().map(|l| l.token + 1).unwrap_or(1),
-        expires_unix: now_unix() + cfg.ttl_secs,
+        expires_unix: now_unix()? + cfg.ttl_secs,
     };
     write_lease_atomic(out_dir, id, &cfg.runner, &takeover)
         .with_context(|| format!("taking over expired lease on cell {id}"))?;
@@ -353,21 +372,29 @@ pub fn claim(out_dir: &Path, id: &str, cfg: &LeaseCfg) -> Result<Claim> {
 /// Garbage-collect the lease of a cell whose outcome already exists —
 /// the state a crash between outcome-commit and release leaves behind.
 /// Only a lease that is ours or expired is removed; a live foreign
-/// lease is left to its holder's own release.
-pub fn gc_finished(out_dir: &Path, id: &str, cfg: &LeaseCfg) {
+/// lease is left to its holder's own release. Errors only on a broken
+/// clock (see [`now_unix`]) — expiry cannot be judged without one.
+pub fn gc_finished(out_dir: &Path, id: &str, cfg: &LeaseCfg) -> Result<()> {
     let Some(l) = read_lease(out_dir, id) else {
-        return;
+        return Ok(());
     };
-    if l.runner == cfg.runner || l.is_expired(now_unix()) {
+    if l.runner == cfg.runner || l.is_expired(now_unix()?) {
         if std::fs::remove_file(lease_path(out_dir, id)).is_ok() {
             log::debug!("cell {id}: removed leftover lease (outcome already committed)");
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The tests run on a healthy host clock; a failure here IS the
+    /// broken-clock condition `now_unix` exists to refuse.
+    fn now() -> u64 {
+        now_unix().unwrap()
+    }
 
     fn tmpdir(tag: &str) -> PathBuf {
         let d = std::env::temp_dir().join(format!("lift_lease_unit_{}_{tag}", std::process::id()));
@@ -418,7 +445,7 @@ mod tests {
         let on_disk = read_lease(&dir, "cell").unwrap();
         assert_eq!(on_disk.runner, "r1");
         assert_eq!(on_disk.token, 1);
-        assert!(on_disk.expires_unix >= now_unix());
+        assert!(on_disk.expires_unix >= now());
         g.release().unwrap();
         assert!(read_lease(&dir, "cell").is_none());
         std::fs::remove_dir_all(&dir).unwrap();
@@ -427,7 +454,7 @@ mod tests {
     #[test]
     fn live_foreign_lease_is_busy() {
         let dir = tmpdir("busy");
-        put_lease(&dir, "cell", "other", 3, now_unix() + 600);
+        put_lease(&dir, "cell", "other", 3, now() + 600);
         match claim(&dir, "cell", &LeaseCfg::new("me", 60)).unwrap() {
             Claim::Busy { holder, .. } => assert_eq!(holder, "other"),
             Claim::Held(_) => panic!("must defer to a live lease"),
@@ -440,7 +467,7 @@ mod tests {
     #[test]
     fn expired_lease_is_taken_over_with_a_higher_token() {
         let dir = tmpdir("takeover");
-        put_lease(&dir, "cell", "dead", 5, now_unix().saturating_sub(10));
+        put_lease(&dir, "cell", "dead", 5, now().saturating_sub(10));
         let Claim::Held(g) = claim(&dir, "cell", &LeaseCfg::new("me", 60)).unwrap() else {
             panic!("expired lease must be takeover-able");
         };
@@ -467,13 +494,13 @@ mod tests {
         // even an EXPIRED own lease reclaims (not takes over): same
         // token means the restarted runner resumes its own fenced
         // checkpoint dir
-        put_lease(&dir, "cell", "me", 4, now_unix().saturating_sub(10));
+        put_lease(&dir, "cell", "me", 4, now().saturating_sub(10));
         let Claim::Held(g) = claim(&dir, "cell", &LeaseCfg::new("me", 60)).unwrap() else {
             panic!("own lease must reclaim");
         };
         assert_eq!(g.token(), 4);
         let on_disk = read_lease(&dir, "cell").unwrap();
-        assert!(on_disk.expires_unix >= now_unix() + 50, "deadline must be pushed out");
+        assert!(on_disk.expires_unix >= now() + 50, "deadline must be pushed out");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -484,13 +511,29 @@ mod tests {
             panic!();
         };
         // simulate a takeover landing while we compute
-        put_lease(&dir, "cell", "usurper", g.token() + 1, now_unix() + 600);
+        put_lease(&dir, "cell", "usurper", g.token() + 1, now() + 600);
         assert!(!g.still_held(), "fencing must see the higher token");
         assert!(g.renew().is_err(), "renew of a lost lease must refuse");
         g.release().unwrap();
         let left = read_lease(&dir, "cell").unwrap();
         assert_eq!(left.runner, "usurper", "release must not delete the usurper's lease");
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pre_epoch_clock_is_a_loud_error_not_zero() {
+        use std::time::{Duration, UNIX_EPOCH};
+        // injected clock: 5 s before the epoch. The old code mapped this
+        // to 0, which poisoned every deadline in the campaign.
+        let broken = UNIX_EPOCH - Duration::from_secs(5);
+        let err = now_unix_from(broken).unwrap_err().to_string();
+        assert!(err.contains("BEFORE the unix epoch"), "{err}");
+        assert!(err.contains("fix the clock"), "{err}");
+        // a healthy clock still converts
+        let ok = now_unix_from(UNIX_EPOCH + Duration::from_secs(1_700_000_000)).unwrap();
+        assert_eq!(ok, 1_700_000_000);
+        // exactly-epoch is fine (duration 0), not an error
+        assert_eq!(now_unix_from(UNIX_EPOCH).unwrap(), 0);
     }
 
     #[test]
@@ -523,16 +566,16 @@ mod tests {
         let dir = tmpdir("gc");
         let me = LeaseCfg::new("me", 60);
         // ours: collected
-        put_lease(&dir, "a", "me", 1, now_unix() + 600);
-        gc_finished(&dir, "a", &me);
+        put_lease(&dir, "a", "me", 1, now() + 600);
+        gc_finished(&dir, "a", &me).unwrap();
         assert!(read_lease(&dir, "a").is_none());
         // expired foreign: collected
-        put_lease(&dir, "b", "dead", 2, now_unix().saturating_sub(5));
-        gc_finished(&dir, "b", &me);
+        put_lease(&dir, "b", "dead", 2, now().saturating_sub(5));
+        gc_finished(&dir, "b", &me).unwrap();
         assert!(read_lease(&dir, "b").is_none());
         // live foreign: spared
-        put_lease(&dir, "c", "other", 3, now_unix() + 600);
-        gc_finished(&dir, "c", &me);
+        put_lease(&dir, "c", "other", 3, now() + 600);
+        gc_finished(&dir, "c", &me).unwrap();
         assert_eq!(read_lease(&dir, "c").unwrap().runner, "other");
         std::fs::remove_dir_all(&dir).unwrap();
     }

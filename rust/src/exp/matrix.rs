@@ -617,7 +617,7 @@ where
                 // leaves a lease on a finished cell; collect it (ours
                 // or expired only) so the id stops looking busy
                 if let Some(cfg) = lease {
-                    lease::gc_finished(out_dir, &id, cfg);
+                    lease::gc_finished(out_dir, &id, cfg)?;
                 }
                 report.skipped.push(id);
             }

@@ -11,5 +11,6 @@ pub mod methods;
 pub mod optim;
 pub mod train;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

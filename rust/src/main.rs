@@ -11,6 +11,10 @@
 //!             [--out D] [--ckpt-every N] [--workers W] [--toy] [--migrate-v1]
 //!             [--runner-id R] [--lease-ttl SECS] [--no-lease]
 //!             (N runners sharing --out shard one campaign via leases)
+//!   serve     per-tenant sparse-delta serving demo over the toy base:
+//!             [--tenants N] [--requests N] [--batch N] [--budget-kb KB]
+//!             [--rank R] [--seed S] [--workers W] [--dir D]
+//!             [--expect-resident N] [--swaps N] [--dump PATH]
 //!   eval      --preset <p> [--suite ...]   (pretrained model, no fine-tune)
 //!   exp       <id> [--fast] [--seeds N]    (regenerate a paper table/figure)
 //!   list-exp                                (show available experiment ids)
@@ -34,6 +38,7 @@ fn main() -> Result<()> {
         "pretrain" => cmd_pretrain(&args),
         "train" => cmd_train(&args),
         "matrix" => cmd_matrix(&args),
+        "serve" => cmd_serve(&args),
         "eval" => cmd_eval(&args),
         "exp" => exp::run(&args),
         "list-exp" => {
@@ -95,6 +100,20 @@ USAGE:
                                   NFS) and they shard the campaign with no
                                   coordinator — live leases defer, expired
                                   ones are fenced-token taken over
+  lift serve [--tenants 120] [--requests 256] [--budget-kb 4096]
+                                  LIFT-as-a-service demo: one resident toy
+                                  base, N per-tenant sparse deltas overlaid
+                                  at request time through a byte-budgeted
+                                  LRU; asserts overlay ≡ full-materialization
+                                  bit-identity, per-tenant divergence from
+                                  the base, hot-swap atomicity, and 1-worker
+                                  ≡ N-worker outputs
+       [--batch 32 --rank 2 --seed 7 --workers W --dir results/serve_demo]
+       [--expect-resident N]      fail unless ≥ N tenants stay resident
+                                  (default min(tenants, 100); 0 disables)
+       [--swaps 2]                hot-swap this many tenants mid-stream
+       [--dump PATH]              write served outputs as hex lines (byte-
+                                  for-byte comparable across budgets/workers)
   lift eval --preset tiny --suite arith
   lift exp table2 [--fast]        regenerate a paper table/figure
   lift list-exp                   list experiment ids
@@ -384,6 +403,198 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     println!("\n{table}");
     println!("summary written to {}", summary_path.display());
     anyhow::ensure!(report.failed.is_empty(), "{} matrix cells failed", report.failed.len());
+    Ok(())
+}
+
+/// LIFT-as-a-service demo (`rust/src/serve/`): one resident toy base,
+/// N per-tenant sparse deltas registered on disk and overlaid at request
+/// time through a byte-budgeted LRU of row-granular views. The demo is
+/// also the acceptance harness — it asserts overlay-apply ≡ full tenant
+/// materialization bitwise, per-tenant divergence from the base, LRU
+/// residency, hot-swap atomicity (unrelated tenants stay resident, fresh
+/// reads see exactly the new version), and 1-worker ≡ N-worker output
+/// bit-identity. `--dump` writes every served output as a hex line so two
+/// runs (e.g. eviction-churn vs no-LRU in `make serve-smoke`) can be
+/// compared byte-for-byte.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use lift::exp::matrix::{toy_params, toy_preset};
+    use lift::serve::{base_digest, forward_one, synth_delta, BaseModel, Request, Server, TenantView};
+    use lift::util::rng::Rng;
+    use std::time::Instant;
+
+    let tenants = args.usize("tenants", 120);
+    let requests = args.usize("requests", 256);
+    let batch = args.usize("batch", 32);
+    let budget_kb = args.usize("budget-kb", 4096);
+    let rank = args.usize("rank", 2);
+    let seed = args.u64("seed", 7);
+    let workers = args.usize("workers", lift::lift::engine::default_workers());
+    let dir = PathBuf::from(args.str("dir", "results/serve_demo"));
+    let expect_resident = args.usize("expect-resident", tenants.min(100));
+    let swaps = args.usize("swaps", 2.min(tenants));
+    let dump = args.opt_str("dump").map(PathBuf::from);
+    args.finish()?;
+    anyhow::ensure!(tenants > 0 && requests > 0 && batch > 0, "--tenants/--requests/--batch must be > 0");
+
+    let base = toy_params(seed);
+    let preset = toy_preset();
+    let digest = base_digest(&base);
+    let budget = budget_kb * 1024;
+    let tenant_name = |i: usize| format!("t{i:04}");
+
+    let mut server = Server::new(&base, &preset, &dir, budget, workers)?;
+    // clear deltas from previous runs (a different --seed means a
+    // different base digest, which stale files would loudly refuse)
+    for old in server.store().list()? {
+        server.store().delete(&old)?;
+    }
+    let t0 = Instant::now();
+    for i in 0..tenants {
+        let delta = synth_delta(&base, &tenant_name(i), digest, rank, seed.wrapping_add(i as u64));
+        server.store().register(&delta)?;
+    }
+    println!(
+        "serve: registered {tenants} tenant deltas under {} in {:.2}s (base digest {digest:016x})",
+        dir.display(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- request stream: warm sweep (one request per tenant, so every
+    // tenant is exercised) then a seeded random mix -----------------------
+    let mut stream: Vec<Request> = (0..tenants)
+        .map(|i| Request { tenant: tenant_name(i), seed: seed ^ (0xABCD + i as u64) })
+        .collect();
+    let mut rng = Rng::new(seed ^ 0xbead);
+    stream.extend((0..requests).map(|_| Request {
+        tenant: tenant_name(rng.below(tenants)),
+        seed: rng.next_u64(),
+    }));
+
+    let mut outs: Vec<Vec<f32>> = Vec::with_capacity(stream.len());
+    let mut batch_secs: Vec<f64> = Vec::new();
+    for chunk in stream.chunks(batch) {
+        let tb = Instant::now();
+        outs.extend(server.handle_batch(chunk)?);
+        batch_secs.push(tb.elapsed().as_secs_f64());
+    }
+    batch_secs.sort_by(|a, b| a.total_cmp(b));
+    let p95 = batch_secs[((batch_secs.len() as f64 * 0.95) as usize).min(batch_secs.len() - 1)];
+
+    // every tenant's sweep output must differ from the base's answer
+    for (i, out) in outs.iter().take(tenants).enumerate() {
+        anyhow::ensure!(
+            *out != server.base_forward(stream[i].seed),
+            "tenant {} output identical to base — delta not applied",
+            stream[i].tenant
+        );
+    }
+
+    // ---- overlay-apply ≡ full tenant materialization (bitwise) ----------
+    for i in (0..tenants).step_by((tenants / 8).max(1)) {
+        let delta = server.store().load(&tenant_name(i))?;
+        let view = TenantView::materialize(&base, &delta)?;
+        let dense = TenantView::full_materialize(&base, &delta)?;
+        for probe in [1u64, seed ^ i as u64] {
+            let over = forward_one(
+                &lift::serve::OverlayModel { base: &base, view: &view },
+                server.plan(),
+                probe,
+            );
+            let full = forward_one(&BaseModel { base: &dense }, server.plan(), probe);
+            anyhow::ensure!(
+                over == full,
+                "tenant {}: overlay-apply != full materialization (seed {probe})",
+                tenant_name(i)
+            );
+        }
+    }
+
+    // ---- determinism: 1-worker fresh server replays the stream bitwise --
+    let mut server1 = Server::new(&base, &preset, &dir, budget, 1)?;
+    let mut outs1: Vec<Vec<f32>> = Vec::with_capacity(stream.len());
+    for chunk in stream.chunks(batch) {
+        outs1.extend(server1.handle_batch(chunk)?);
+    }
+    anyhow::ensure!(
+        outs.iter().zip(&outs1).all(|(a, b)| a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()))
+            && outs.len() == outs1.len(),
+        "{workers}-worker and 1-worker outputs differ — determinism contract broken"
+    );
+
+    // ---- hot-swap atomicity --------------------------------------------
+    let mut swap_outs: Vec<(Request, Vec<f32>)> = Vec::new();
+    for i in 0..swaps {
+        let name = tenant_name(i);
+        let probe = Request { tenant: name.clone(), seed: 0x5eed ^ i as u64 };
+        let v1_out = server.handle_batch(std::slice::from_ref(&probe))?.remove(0);
+        let before = server.lru().resident_tenants();
+        let v2 = synth_delta(&base, &name, digest, rank, seed.wrapping_add(0xD00D + i as u64));
+        server.hot_swap(&v2)?;
+        anyhow::ensure!(
+            server.lru().resident_tenants() == before,
+            "hot-swap of {name} changed the resident set"
+        );
+        let v2_out = server.handle_batch(std::slice::from_ref(&probe))?.remove(0);
+        anyhow::ensure!(v2_out != v1_out, "hot-swap of {name} did not change its output");
+        // a fresh server over the same store must agree bitwise with the
+        // post-swap answer (the swap really serves v2, not a torn mix)
+        let mut fresh = Server::new(&base, &preset, &dir, budget, workers)?;
+        let fresh_out = fresh.handle_batch(std::slice::from_ref(&probe))?.remove(0);
+        anyhow::ensure!(
+            fresh_out.iter().zip(&v2_out).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "hot-swapped {name} view disagrees with a fresh materialization"
+        );
+        swap_outs.push((probe.clone(), v1_out));
+        swap_outs.push((probe, v2_out));
+    }
+
+    // ---- residency + summary -------------------------------------------
+    let s = server.lru().stats;
+    let resident = server.lru().resident();
+    let resident_bytes = server.lru().resident_bytes();
+    println!(
+        "serve: lru resident={resident}/{tenants} bytes={resident_bytes}/{budget} \
+         evictions={} hits={} misses={} swaps={} uncacheable={}",
+        s.evictions, s.hits, s.misses, s.swaps, s.uncacheable
+    );
+    if resident > 0 {
+        let per_tenant = resident_bytes as f64 / resident as f64;
+        println!(
+            "serve: {:.0} B/tenant resident -> {:.0} tenants/GB (vs {:.0} as dense copies)",
+            per_tenant,
+            1e9 / per_tenant,
+            1e9 / (base.iter().map(|t| t.len() * 4).sum::<usize>() as f64)
+        );
+    }
+    println!(
+        "serve: {} requests in {} batches, p95 batch latency {:.3}ms ({workers} workers)",
+        stream.len(),
+        batch_secs.len(),
+        p95 * 1e3
+    );
+    if expect_resident > 0 {
+        anyhow::ensure!(
+            resident >= expect_resident,
+            "only {resident} tenants resident, expected >= {expect_resident} \
+             (budget {budget} B too small?)"
+        );
+    }
+
+    if let Some(path) = dump {
+        let hex = |out: &[f32]| {
+            out.iter().map(|x| format!("{:08x}", x.to_bits())).collect::<Vec<_>>().join("")
+        };
+        let mut text = String::new();
+        for (r, out) in stream.iter().zip(&outs) {
+            text.push_str(&format!("req {} {} {}\n", r.tenant, r.seed, hex(out)));
+        }
+        for (r, out) in &swap_outs {
+            text.push_str(&format!("swap {} {} {}\n", r.tenant, r.seed, hex(out)));
+        }
+        std::fs::write(&path, text)?;
+        println!("serve: dumped {} output lines to {}", stream.len() + swap_outs.len(), path.display());
+    }
+    println!("serve demo OK: overlay ≡ full materialization, hot-swap atomic, 1w ≡ {workers}w");
     Ok(())
 }
 

@@ -1,0 +1,325 @@
+//! Batched multi-tenant inference over the shared base + overlay views.
+//!
+//! Requests are grouped by tenant so one overlay resolution amortizes
+//! across the group, then fanned over `lift::engine::par_map` with the
+//! PR-7 intra-matrix budget (`intra = (workers / n_groups).max(1)` chunks
+//! per group). The forward pass is a pure function of `(model rows,
+//! seed)`, evaluated per request with no cross-request state, so any
+//! chunking of the batch — 1 worker or N — produces bit-identical outputs.
+//!
+//! The forward itself is the repo's synthetic serving workload: a
+//! residual tanh-MLP walk over the preset's transformer matrices (wq →
+//! wk → wv → wo, then wup/wdown, then final_norm). It touches every row
+//! the deltas can touch — which is what the overlay bit-identity
+//! acceptance needs — without pretending to be the trainer's full model.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::lift::engine::par_map;
+use crate::runtime::manifest::PresetInfo;
+use crate::tensor::Tensor;
+
+use super::delta::{DeltaStore, TenantDelta};
+use super::lru::{TenantLru, TenantView};
+
+/// Row access over a (possibly overlaid) parameter set. `row` returns the
+/// `row`-th length-`ncols` slice of parameter `param`; 1-D tensors are a
+/// single row 0.
+pub trait ModelRows: Sync {
+    fn row(&self, param: usize, row: usize) -> &[f32];
+}
+
+/// The frozen base, no overlay.
+pub struct BaseModel<'a> {
+    pub base: &'a [Tensor],
+}
+
+impl ModelRows for BaseModel<'_> {
+    fn row(&self, param: usize, row: usize) -> &[f32] {
+        let t = &self.base[param];
+        let ncols = *t.shape.last().unwrap_or(&1);
+        &t.data[row * ncols..(row + 1) * ncols]
+    }
+}
+
+/// Base + one tenant's row-granular overlay: touched rows come from the
+/// view, everything else falls through to the base.
+pub struct OverlayModel<'a> {
+    pub base: &'a [Tensor],
+    pub view: &'a TenantView,
+}
+
+impl ModelRows for OverlayModel<'_> {
+    fn row(&self, param: usize, row: usize) -> &[f32] {
+        self.view
+            .row(param, row)
+            .unwrap_or_else(|| BaseModel { base: self.base }.row(param, row))
+    }
+}
+
+/// Parameter indices for the forward walk, resolved once from a preset's
+/// `ParamInfo` names ("embed", "l{l}.{kind}", "final_norm").
+pub struct ForwardPlan {
+    pub embed: usize,
+    /// Per layer: `[wq, wk, wv, wo, wup, wdown]` parameter indices.
+    pub layers: Vec<[usize; 6]>,
+    pub final_norm: Option<usize>,
+    pub d: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+}
+
+impl ForwardPlan {
+    pub fn from_preset(preset: &PresetInfo) -> Result<ForwardPlan> {
+        let by_name: BTreeMap<&str, usize> =
+            preset.params.iter().enumerate().map(|(i, p)| (p.name.as_str(), i)).collect();
+        let embed = *by_name
+            .get("embed")
+            .with_context(|| format!("preset '{}' has no 'embed' parameter", preset.name))?;
+        anyhow::ensure!(
+            preset.params[embed].shape.len() == 2,
+            "preset '{}': embed must be 2-D",
+            preset.name
+        );
+        let (vocab, d) = (preset.params[embed].shape[0], preset.params[embed].shape[1]);
+        let mut layers = Vec::new();
+        let mut ffn = preset.ffn;
+        for l in 0.. {
+            if !by_name.contains_key(format!("l{l}.wq").as_str()) {
+                break;
+            }
+            let mut ids = [0usize; 6];
+            for (slot, kind) in ["wq", "wk", "wv", "wo", "wup", "wdown"].iter().enumerate() {
+                let name = format!("l{l}.{kind}");
+                ids[slot] = *by_name.get(name.as_str()).with_context(|| {
+                    format!("preset '{}': layer {l} has wq but no '{name}'", preset.name)
+                })?;
+            }
+            let up_shape = &preset.params[ids[4]].shape;
+            anyhow::ensure!(
+                up_shape.len() == 2 && up_shape[0] == d,
+                "preset '{}': l{l}.wup shape {:?} does not start at d={d}",
+                preset.name,
+                up_shape
+            );
+            ffn = up_shape[1];
+            layers.push(ids);
+        }
+        anyhow::ensure!(
+            !layers.is_empty(),
+            "preset '{}' has no 'l0.wq' — nothing to serve",
+            preset.name
+        );
+        let final_norm = by_name.get("final_norm").copied();
+        Ok(ForwardPlan { embed, layers, final_norm, d, ffn, vocab })
+    }
+}
+
+/// One request's pure forward: embed the seed-chosen token, walk every
+/// layer's matrices with residual tanh mixes, scale by final_norm.
+/// Deterministic per `(model, seed)`; allocation-light (two scratch
+/// buffers).
+pub fn forward_one<M: ModelRows + ?Sized>(model: &M, plan: &ForwardPlan, seed: u64) -> Vec<f32> {
+    let token = (seed % plan.vocab as u64) as usize;
+    let mut h: Vec<f32> = model.row(plan.embed, token).to_vec();
+    let mut y = vec![0.0f32; plan.d];
+    let mut u = vec![0.0f32; plan.ffn];
+    for ids in &plan.layers {
+        for &w in &ids[..4] {
+            y.iter_mut().for_each(|v| *v = 0.0);
+            for (i, &hi) in h.iter().enumerate() {
+                let r = model.row(w, i);
+                for j in 0..plan.d {
+                    y[j] += hi * r[j];
+                }
+            }
+            for j in 0..plan.d {
+                h[j] += y[j].tanh();
+            }
+        }
+        u.iter_mut().for_each(|v| *v = 0.0);
+        for (i, &hi) in h.iter().enumerate() {
+            let r = model.row(ids[4], i);
+            for j in 0..plan.ffn {
+                u[j] += hi * r[j];
+            }
+        }
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for (i, &ui) in u.iter().enumerate() {
+            let r = model.row(ids[5], i);
+            let ut = ui.tanh();
+            for j in 0..plan.d {
+                y[j] += ut * r[j];
+            }
+        }
+        for j in 0..plan.d {
+            h[j] += y[j];
+        }
+    }
+    if let Some(fnorm) = plan.final_norm {
+        let r = model.row(fnorm, 0);
+        for j in 0..plan.d {
+            h[j] *= r[j];
+        }
+    }
+    h
+}
+
+/// One synthetic inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub tenant: String,
+    pub seed: u64,
+}
+
+/// The serving daemon's core: one resident base, a delta store, a
+/// byte-budgeted LRU of materialized tenants, and a worker pool.
+pub struct Server<'a> {
+    base: &'a [Tensor],
+    plan: ForwardPlan,
+    store: DeltaStore,
+    lru: TenantLru,
+    workers: usize,
+}
+
+impl<'a> Server<'a> {
+    /// Open (or create) the delta store at `dir`, pinned to this base's
+    /// digest, with `budget_bytes` of overlay cache.
+    pub fn new(
+        base: &'a [Tensor],
+        preset: &PresetInfo,
+        dir: &Path,
+        budget_bytes: usize,
+        workers: usize,
+    ) -> Result<Server<'a>> {
+        let plan = ForwardPlan::from_preset(preset)?;
+        let store = DeltaStore::open(dir, super::base_digest(base))?;
+        Ok(Server {
+            base,
+            plan,
+            store,
+            lru: TenantLru::new(budget_bytes),
+            workers: workers.max(1),
+        })
+    }
+
+    pub fn store(&self) -> &DeltaStore {
+        &self.store
+    }
+
+    pub fn lru(&self) -> &TenantLru {
+        &self.lru
+    }
+
+    pub fn plan(&self) -> &ForwardPlan {
+        &self.plan
+    }
+
+    /// The base's answer for a seed — what a tenant's output must differ
+    /// from once its delta overlays anything the forward touches.
+    pub fn base_forward(&self, seed: u64) -> Vec<f32> {
+        forward_one(&BaseModel { base: self.base }, &self.plan, seed)
+    }
+
+    /// Resolve a tenant's view: LRU hit, else load-materialize-admit.
+    fn view_for(&mut self, tenant: &str) -> Result<Arc<TenantView>> {
+        if let Some(v) = self.lru.get(tenant) {
+            return Ok(v);
+        }
+        let delta = self.store.load(tenant)?;
+        let view = TenantView::materialize(self.base, &delta)?;
+        Ok(self.lru.admit(view))
+    }
+
+    /// Serve a batch: group by tenant, resolve each group's overlay once
+    /// (sequentially in sorted tenant order, so LRU mutation is a pure
+    /// function of the batch), then fan request chunks over the pool.
+    /// Outputs come back in request order, bit-identical at any worker
+    /// count.
+    pub fn handle_batch(&mut self, reqs: &[Request]) -> Result<Vec<Vec<f32>>> {
+        let mut groups: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+        for (i, r) in reqs.iter().enumerate() {
+            groups.entry(r.tenant.as_str()).or_default().push(i);
+        }
+        let n_groups = groups.len().max(1);
+        let intra = (self.workers / n_groups).max(1);
+        let mut jobs: Vec<(Arc<TenantView>, Vec<usize>)> = Vec::new();
+        for (tenant, idxs) in groups {
+            let view = self.view_for(tenant)?;
+            let per = idxs.len().div_ceil(intra);
+            for chunk in idxs.chunks(per.max(1)) {
+                jobs.push((Arc::clone(&view), chunk.to_vec()));
+            }
+        }
+        let base = self.base;
+        let plan = &self.plan;
+        let done = par_map(self.workers, jobs, |_, (view, idxs)| {
+            let model = OverlayModel { base, view: &view };
+            idxs.iter()
+                .map(|&i| (i, forward_one(&model, plan, reqs[i].seed)))
+                .collect::<Vec<_>>()
+        });
+        let mut out = vec![Vec::new(); reqs.len()];
+        for pair in done.into_iter().flatten() {
+            out[pair.0] = pair.1;
+        }
+        Ok(out)
+    }
+
+    /// Register-or-update a tenant and, if it is resident, hot-swap its
+    /// view: durable write first, new view fully built BEFORE the LRU
+    /// `Arc` is replaced. In-flight batches keep the old `Arc`; unrelated
+    /// tenants stay resident.
+    pub fn hot_swap(&mut self, delta: &TenantDelta) -> Result<()> {
+        self.store.register(delta)?;
+        if self.lru.contains(&delta.tenant) {
+            let view = TenantView::materialize(self.base, delta)?;
+            self.lru.swap(view);
+        }
+        Ok(())
+    }
+
+    /// Drop a tenant entirely: delta file and any resident view.
+    pub fn delete_tenant(&mut self, tenant: &str) -> Result<bool> {
+        let existed = self.store.delete(tenant)?;
+        self.lru.evict(tenant);
+        Ok(existed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::matrix::{toy_params, toy_preset};
+    use crate::serve::base_digest;
+    use crate::serve::delta::synth_delta;
+
+    #[test]
+    fn plan_resolves_toy_preset() {
+        let plan = ForwardPlan::from_preset(&toy_preset()).unwrap();
+        assert_eq!(plan.layers.len(), 2);
+        assert_eq!((plan.d, plan.ffn, plan.vocab), (16, 24, 32));
+        assert!(plan.final_norm.is_some());
+    }
+
+    #[test]
+    fn overlay_forward_differs_from_base_and_matches_dense() {
+        let base = toy_params(9);
+        let plan = ForwardPlan::from_preset(&toy_preset()).unwrap();
+        let dg = base_digest(&base);
+        let delta = synth_delta(&base, "t", dg, 2, 21);
+        let view = TenantView::materialize(&base, &delta).unwrap();
+        let dense = TenantView::full_materialize(&base, &delta).unwrap();
+        for seed in [0u64, 7, 31] {
+            let over = forward_one(&OverlayModel { base: &base, view: &view }, &plan, seed);
+            let full = forward_one(&BaseModel { base: &dense }, &plan, seed);
+            let plain = forward_one(&BaseModel { base: &base }, &plan, seed);
+            assert_eq!(over, full, "overlay ≡ dense materialization, seed {seed}");
+            assert_ne!(over, plain, "delta must change the output, seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,370 @@
+//! Tenant delta format + on-disk store.
+//!
+//! A [`TenantDelta`] is the unit a fine-tune hands to the server: per
+//! parameter, the sorted flat indices its method masked plus the trained
+//! replacement values, pinned to the exact base it was trained against by
+//! [`super::base_digest`]. The [`DeltaStore`] persists one LIFTSNAP
+//! container per tenant under a directory (`<dir>/<tenant>.delta`), written
+//! with the checkpoint suite's atomic tmp+rename, and refuses loudly on
+//! digest mismatch at both register and load.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::ckpt::codec::{Dec, Enc};
+use crate::ckpt::{self, Snapshot};
+use crate::lift::budget_for;
+use crate::lift::engine::stream_rng;
+use crate::tensor::Tensor;
+
+/// Snapshot section holding `{tenant, base_digest, entry count}`.
+pub const SEC_TENANT_META: &str = "tenant_meta";
+/// Snapshot section holding the per-parameter index/value arrays.
+pub const SEC_TENANT_ENTRIES: &str = "tenant_entries";
+
+/// One parameter's sparse update: `idx` are flat (row-major) positions,
+/// strictly increasing; `vals[i]` replaces the base value at `idx[i]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamDelta {
+    pub param: usize,
+    pub idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+/// A tenant's full sparse fine-tune over one specific base.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantDelta {
+    pub tenant: String,
+    pub base_digest: u64,
+    /// Sorted by `param`, strictly increasing.
+    pub entries: Vec<ParamDelta>,
+}
+
+impl TenantDelta {
+    /// Total number of overridden weights.
+    pub fn nnz(&self) -> usize {
+        self.entries.iter().map(|e| e.idx.len()).sum()
+    }
+
+    /// Serialize as a LIFTSNAP container (magic, version, per-section CRC).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut meta = Enc::new();
+        meta.str(&self.tenant);
+        meta.u64(self.base_digest);
+        meta.usize(self.entries.len());
+        let mut body = Enc::new();
+        for e in &self.entries {
+            body.usize(e.param);
+            body.u32s(&e.idx);
+            body.f32s(&e.vals);
+        }
+        let mut snap = Snapshot::new();
+        snap.add(SEC_TENANT_META, meta.into_bytes());
+        snap.add(SEC_TENANT_ENTRIES, body.into_bytes());
+        snap.to_bytes()
+    }
+
+    /// Parse and validate canonical form. The digest check runs BEFORE the
+    /// entry arrays are trusted: a delta built against a different base is
+    /// refused with both digests named (LIFTSNAP version-refusal policy —
+    /// overlaying it would silently personalize with garbage).
+    pub fn from_bytes(b: &[u8], expect_digest: u64) -> Result<TenantDelta> {
+        let snap = Snapshot::from_bytes(b)?;
+        let mut meta = Dec::new(snap.get(SEC_TENANT_META)?);
+        let tenant = meta.str()?;
+        let base_digest = meta.u64()?;
+        let n_entries = meta.usize()?;
+        meta.finish()?;
+        anyhow::ensure!(
+            base_digest == expect_digest,
+            "tenant '{tenant}' delta was trained against base {base_digest:016x} but this \
+             server runs base {expect_digest:016x} — refusing to overlay a mismatched \
+             spec (re-fine-tune the tenant against the resident base)"
+        );
+        let mut body = Dec::new(snap.get(SEC_TENANT_ENTRIES)?);
+        let mut entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let param = body.usize()?;
+            let idx = body.u32s()?;
+            let vals = body.f32s()?;
+            anyhow::ensure!(
+                idx.len() == vals.len(),
+                "tenant '{tenant}' param {param}: {} indices but {} values",
+                idx.len(),
+                vals.len()
+            );
+            anyhow::ensure!(
+                idx.windows(2).all(|w| w[0] < w[1]),
+                "tenant '{tenant}' param {param}: mask indices not strictly increasing"
+            );
+            entries.push(ParamDelta { param, idx, vals });
+        }
+        body.finish()?;
+        anyhow::ensure!(
+            entries.windows(2).all(|w| w[0].param < w[1].param),
+            "tenant '{tenant}': entries not sorted by parameter index"
+        );
+        Ok(TenantDelta { tenant, base_digest, entries })
+    }
+
+    /// Bounds-check every entry against a concrete base parameter set.
+    pub fn validate_against(&self, base: &[Tensor]) -> Result<()> {
+        for e in &self.entries {
+            anyhow::ensure!(
+                e.param < base.len(),
+                "tenant '{}': delta names param {} but the base has only {}",
+                self.tenant,
+                e.param,
+                base.len()
+            );
+            let numel = base[e.param].len();
+            if let Some(&last) = e.idx.last() {
+                anyhow::ensure!(
+                    (last as usize) < numel,
+                    "tenant '{}' param {}: mask index {} out of bounds ({} elements)",
+                    self.tenant,
+                    e.param,
+                    last,
+                    numel
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Tenant names become file stems; keep them shell- and NFS-safe.
+pub fn check_tenant_name(name: &str) -> Result<()> {
+    anyhow::ensure!(
+        !name.is_empty() && name.len() <= 64,
+        "tenant name must be 1..=64 chars, got {} ('{name}')",
+        name.len()
+    );
+    anyhow::ensure!(
+        !name.starts_with('.')
+            && name.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')),
+        "tenant name '{name}' has characters outside [A-Za-z0-9._-] (or a leading dot)"
+    );
+    Ok(())
+}
+
+/// On-disk registry of tenant deltas, pinned to one base digest.
+pub struct DeltaStore {
+    dir: PathBuf,
+    base_digest: u64,
+}
+
+impl DeltaStore {
+    /// Open (creating the directory); every later register/load checks
+    /// against `base_digest`.
+    pub fn open(dir: &Path, base_digest: u64) -> Result<DeltaStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating delta store dir {}", dir.display()))?;
+        Ok(DeltaStore { dir: dir.to_path_buf(), base_digest })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn base_digest(&self) -> u64 {
+        self.base_digest
+    }
+
+    pub fn delta_path(&self, tenant: &str) -> Result<PathBuf> {
+        check_tenant_name(tenant)?;
+        Ok(self.dir.join(format!("{tenant}.delta")))
+    }
+
+    /// Register a new tenant or update an existing one (same call — the
+    /// atomic rename makes the update an all-or-nothing replacement).
+    pub fn register(&self, delta: &TenantDelta) -> Result<()> {
+        anyhow::ensure!(
+            delta.base_digest == self.base_digest,
+            "tenant '{}' delta targets base {:016x} but this store is pinned to {:016x} — \
+             refusing to register a delta no resident base can serve",
+            delta.tenant,
+            delta.base_digest,
+            self.base_digest
+        );
+        let path = self.delta_path(&delta.tenant)?;
+        ckpt::write_atomic(&path, &delta.to_bytes())
+            .with_context(|| format!("registering tenant '{}'", delta.tenant))
+    }
+
+    pub fn load(&self, tenant: &str) -> Result<TenantDelta> {
+        let path = self.delta_path(tenant)?;
+        let bytes = std::fs::read(&path).with_context(|| {
+            format!("no delta registered for tenant '{tenant}' ({})", path.display())
+        })?;
+        let delta = TenantDelta::from_bytes(&bytes, self.base_digest)
+            .with_context(|| format!("loading {}", path.display()))?;
+        anyhow::ensure!(
+            delta.tenant == tenant,
+            "{} holds a delta for tenant '{}' — file renamed after registration?",
+            path.display(),
+            delta.tenant
+        );
+        Ok(delta)
+    }
+
+    /// Remove a tenant's delta; `Ok(false)` if it was never registered.
+    pub fn delete(&self, tenant: &str) -> Result<bool> {
+        let path = self.delta_path(tenant)?;
+        match std::fs::remove_file(&path) {
+            Ok(()) => Ok(true),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
+            Err(e) => Err(e).with_context(|| format!("deleting {}", path.display())),
+        }
+    }
+
+    /// Registered tenant names, sorted.
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)
+            .with_context(|| format!("listing {}", self.dir.display()))?
+        {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("delta") {
+                if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
+                    out.push(stem.to_string());
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+/// Seeded synthetic fine-tune for demos/benches: a row-clustered sparse
+/// delta over every 2-D base parameter (1-D norms are skipped — real LIFT
+/// masks matrices).
+///
+/// Indices are ROW-CLUSTERED, not uniform: LIFT's principal-weight masks
+/// and the row-structured sparse-FT baselines concentrate updates in few
+/// rows, and row clustering is what makes the row-granular [`super::lru::
+/// TenantView`] copy a small fraction of the base instead of every row.
+/// Budget per matrix is the repo-standard `budget_for(m, n, rank_equiv)`,
+/// spread over ~2x the minimum rows that could hold it.
+pub fn synth_delta(
+    base: &[Tensor],
+    tenant: &str,
+    base_digest: u64,
+    rank_equiv: usize,
+    seed: u64,
+) -> TenantDelta {
+    let mut entries = Vec::new();
+    for (pi, t) in base.iter().enumerate() {
+        if t.shape.len() != 2 {
+            continue;
+        }
+        let (m, n) = t.dims2();
+        let k = budget_for(m, n, rank_equiv);
+        let mut rng = stream_rng(seed, 0x5e77e ^ pi as u64);
+        let rows_min = k.div_ceil(n).max(1);
+        let rows = (rows_min * 2).min(m);
+        let mut row_ids = rng.sample_indices(m, rows);
+        row_ids.sort_unstable();
+        let per_row = k.div_ceil(rows).min(n);
+        let mut idx = Vec::with_capacity(k);
+        let mut remaining = k;
+        for &r in &row_ids {
+            let take = per_row.min(remaining);
+            if take == 0 {
+                break;
+            }
+            let mut cols = rng.sample_indices(n, take);
+            cols.sort_unstable();
+            idx.extend(cols.iter().map(|&c| (r * n + c) as u32));
+            remaining -= take;
+        }
+        let vals = idx
+            .iter()
+            .map(|&i| t.data[i as usize] + 0.05 * rng.normal())
+            .collect();
+        entries.push(ParamDelta { param: pi, idx, vals });
+    }
+    TenantDelta { tenant: tenant.to_string(), base_digest, entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::matrix::toy_params;
+    use crate::serve::base_digest;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lift_delta_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn synth_delta_is_canonical_and_seeded() {
+        let base = toy_params(3);
+        let dg = base_digest(&base);
+        let a = synth_delta(&base, "t0", dg, 2, 11);
+        let b = synth_delta(&base, "t0", dg, 2, 11);
+        assert_eq!(a, b, "same seed, same delta");
+        let c = synth_delta(&base, "t0", dg, 2, 12);
+        assert_ne!(a, c, "different seed, different delta");
+        assert!(a.nnz() > 0);
+        a.validate_against(&base).unwrap();
+        for e in &a.entries {
+            assert!(e.idx.windows(2).all(|w| w[0] < w[1]), "param {} unsorted", e.param);
+            assert_eq!(e.idx.len(), e.vals.len());
+        }
+        assert!(a.entries.windows(2).all(|w| w[0].param < w[1].param));
+    }
+
+    #[test]
+    fn roundtrip_and_digest_refusal() {
+        let base = toy_params(3);
+        let dg = base_digest(&base);
+        let d = synth_delta(&base, "alice", dg, 2, 5);
+        let bytes = d.to_bytes();
+        let back = TenantDelta::from_bytes(&bytes, dg).unwrap();
+        assert_eq!(d, back);
+        let err = TenantDelta::from_bytes(&bytes, dg ^ 1).unwrap_err().to_string();
+        assert!(err.contains("refusing to overlay"), "got: {err}");
+        assert!(err.contains("alice"), "names the tenant: {err}");
+    }
+
+    #[test]
+    fn store_register_load_update_delete_list() {
+        let base = toy_params(3);
+        let dg = base_digest(&base);
+        let dir = tmpdir("store");
+        let store = DeltaStore::open(&dir, dg).unwrap();
+        let a = synth_delta(&base, "a", dg, 2, 1);
+        let b = synth_delta(&base, "b", dg, 2, 2);
+        store.register(&a).unwrap();
+        store.register(&b).unwrap();
+        assert_eq!(store.list().unwrap(), vec!["a", "b"]);
+        assert_eq!(store.load("a").unwrap(), a);
+        // register is also update
+        let a2 = synth_delta(&base, "a", dg, 2, 99);
+        store.register(&a2).unwrap();
+        assert_eq!(store.load("a").unwrap(), a2);
+        // wrong-digest register refused
+        let alien = synth_delta(&base, "evil", dg ^ 7, 2, 1);
+        assert!(store.register(&alien).unwrap_err().to_string().contains("pinned"));
+        assert!(store.delete("a").unwrap());
+        assert!(!store.delete("a").unwrap());
+        assert_eq!(store.list().unwrap(), vec!["b"]);
+        let missing = store.load("a").unwrap_err().to_string();
+        assert!(missing.contains("no delta registered"), "got: {missing}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tenant_names_are_validated() {
+        for bad in ["", "../up", "a b", ".hidden", &"x".repeat(65)] {
+            assert!(check_tenant_name(bad).is_err(), "accepted '{bad}'");
+        }
+        for good in ["t0001", "alice-v2", "A.B_c"] {
+            check_tenant_name(good).unwrap();
+        }
+    }
+}

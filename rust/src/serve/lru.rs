@@ -1,0 +1,379 @@
+//! Materialized tenant views + the byte-budgeted LRU that caches them.
+//!
+//! A [`TenantView`] is the copy-on-materialize overlay: for every base row
+//! a delta touches, one copied row with the delta values scattered in.
+//! The base itself is immutable and shared, so eviction is a scatter-undo
+//! by construction — dropping the view releases exactly the touched-row
+//! copies (see the module doc in [`super`]). [`TenantLru`] keys recency on
+//! a logical tick, not wall time, so admit/evict order is a pure function
+//! of the request stream and identical at any worker count.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+use super::delta::TenantDelta;
+
+/// Accounting overhead charged per copied row (Vec header + row key).
+pub const ROW_OVERHEAD_BYTES: usize = 32;
+/// Accounting overhead charged per touched parameter.
+pub const PARAM_OVERHEAD_BYTES: usize = 48;
+/// Accounting overhead charged per view (tenant string, vec headers).
+pub const VIEW_OVERHEAD_BYTES: usize = 96;
+
+/// Row-granular overlay for one tenant: per touched parameter (ascending),
+/// the touched rows (ascending) as full copied rows with delta values
+/// scattered in. Lookup is two binary searches; untouched rows fall
+/// through to the base.
+pub struct TenantView {
+    tenant: String,
+    /// `(param index, [(row index, copied row)])`, both levels sorted.
+    params: Vec<(usize, Vec<(usize, Vec<f32>)>)>,
+    bytes: usize,
+}
+
+impl TenantView {
+    /// Build the overlay from a delta: group each parameter's flat indices
+    /// by row (`ncols` = last dim; 1-D tensors are one row), copy each
+    /// touched base row once, scatter the values in.
+    pub fn materialize(base: &[Tensor], delta: &TenantDelta) -> Result<TenantView> {
+        delta.validate_against(base)?;
+        let mut params = Vec::with_capacity(delta.entries.len());
+        let mut bytes = VIEW_OVERHEAD_BYTES + delta.tenant.len();
+        for e in &delta.entries {
+            let t = &base[e.param];
+            let ncols = *t.shape.last().unwrap_or(&1);
+            let mut rows: Vec<(usize, Vec<f32>)> = Vec::new();
+            for (&i, &v) in e.idx.iter().zip(&e.vals) {
+                let (r, c) = (i as usize / ncols, i as usize % ncols);
+                // idx is sorted, so a row's indices arrive contiguously
+                match rows.last_mut() {
+                    Some((last_r, row)) if *last_r == r => row[c] = v,
+                    _ => {
+                        let mut row = t.data[r * ncols..(r + 1) * ncols].to_vec();
+                        row[c] = v;
+                        rows.push((r, row));
+                    }
+                }
+            }
+            bytes += PARAM_OVERHEAD_BYTES + rows.len() * (ncols * 4 + ROW_OVERHEAD_BYTES);
+            params.push((e.param, rows));
+        }
+        Ok(TenantView { tenant: delta.tenant.clone(), params, bytes })
+    }
+
+    /// The slow path the view replaces: a full dense copy of the base with
+    /// the delta scattered in. Used by the bit-identity tests and the
+    /// `[serve]` bench as the comparison baseline.
+    pub fn full_materialize(base: &[Tensor], delta: &TenantDelta) -> Result<Vec<Tensor>> {
+        delta.validate_against(base)?;
+        let mut dense: Vec<Tensor> = base.to_vec();
+        for e in &delta.entries {
+            let data = &mut dense[e.param].data;
+            for (&i, &v) in e.idx.iter().zip(&e.vals) {
+                data[i as usize] = v;
+            }
+        }
+        Ok(dense)
+    }
+
+    /// The overlaid row, if this view touches `(param, row)`.
+    pub fn row(&self, param: usize, row: usize) -> Option<&[f32]> {
+        let p = self.params.binary_search_by_key(&param, |e| e.0).ok()?;
+        let rows = &self.params[p].1;
+        let r = rows.binary_search_by_key(&row, |e| e.0).ok()?;
+        Some(&rows[r].1)
+    }
+
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Accounted resident size (row copies + bookkeeping overhead).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Number of base rows this view copies.
+    pub fn touched_rows(&self) -> usize {
+        self.params.iter().map(|(_, rows)| rows.len()).sum()
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LruStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub swaps: u64,
+    /// Views larger than the whole budget: served, never cached.
+    pub uncacheable: u64,
+}
+
+/// Byte-budgeted LRU of materialized tenants. Recency is a logical tick
+/// bumped on every get/admit/swap — strictly increasing, so the eviction
+/// victim (min last-used) is always unique and deterministic.
+pub struct TenantLru {
+    budget: usize,
+    tick: u64,
+    /// `(tenant, view, last_used_tick)` — unordered; linear scans are fine
+    /// at the tenant counts a byte budget admits.
+    entries: Vec<(String, Arc<TenantView>, u64)>,
+    pub stats: LruStats,
+}
+
+impl TenantLru {
+    pub fn new(budget_bytes: usize) -> TenantLru {
+        TenantLru { budget: budget_bytes, tick: 0, entries: Vec::new(), stats: LruStats::default() }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    fn bump(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Cached view for `tenant`, bumping its recency. Records hit/miss.
+    pub fn get(&mut self, tenant: &str) -> Option<Arc<TenantView>> {
+        let tick = self.bump();
+        match self.entries.iter_mut().find(|(t, _, _)| t == tenant) {
+            Some((_, view, last)) => {
+                *last = tick;
+                self.stats.hits += 1;
+                Some(Arc::clone(view))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// `true` without bumping recency (inspection only).
+    pub fn contains(&self, tenant: &str) -> bool {
+        self.entries.iter().any(|(t, _, _)| t == tenant)
+    }
+
+    /// Evict least-recently-used entries (never `keep`) until `extra` more
+    /// bytes fit under the budget.
+    fn evict_until_fits(&mut self, extra: usize, keep: Option<&str>) {
+        while self.resident_bytes() + extra > self.budget {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, (t, _, _))| Some(t.as_str()) != keep)
+                .min_by_key(|(_, (_, _, last))| *last)
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    self.entries.remove(i);
+                    self.stats.evictions += 1;
+                }
+                None => break, // nothing evictable left
+            }
+        }
+    }
+
+    /// Cache a freshly materialized view, evicting LRU entries to fit. A
+    /// view bigger than the entire budget is returned WITHOUT caching
+    /// (`stats.uncacheable`) — the server still serves it, it just pays
+    /// materialization per batch. If the tenant is already resident this
+    /// degenerates to [`TenantLru::swap`].
+    pub fn admit(&mut self, view: TenantView) -> Arc<TenantView> {
+        if self.contains(view.tenant()) {
+            return self.swap(view);
+        }
+        if view.bytes() > self.budget {
+            self.stats.uncacheable += 1;
+            return Arc::new(view);
+        }
+        self.evict_until_fits(view.bytes(), None);
+        let tick = self.bump();
+        let arc = Arc::new(view);
+        self.entries.push((arc.tenant().to_string(), Arc::clone(&arc), tick));
+        arc
+    }
+
+    /// Hot-swap: replace a resident tenant's view in place. The new view
+    /// is already fully built (build-then-swap), in-flight holders of the
+    /// old `Arc` keep a complete old version, and unrelated tenants are
+    /// evicted only if the replacement is larger and the budget demands
+    /// it. Absent or over-budget tenants fall back to [`TenantLru::admit`]
+    /// semantics.
+    pub fn swap(&mut self, view: TenantView) -> Arc<TenantView> {
+        let Some(pos) = self.entries.iter().position(|(t, _, _)| t == view.tenant()) else {
+            return self.admit(view);
+        };
+        if view.bytes() > self.budget {
+            self.entries.remove(pos);
+            self.stats.uncacheable += 1;
+            return Arc::new(view);
+        }
+        let old_bytes = self.entries[pos].1.bytes();
+        if view.bytes() > old_bytes {
+            let keep = view.tenant().to_string();
+            self.evict_until_fits(view.bytes() - old_bytes, Some(&keep));
+        }
+        let tick = self.bump();
+        let arc = Arc::new(view);
+        // position may have shifted if eviction removed earlier entries
+        if let Some((_, slot_view, slot_tick)) =
+            self.entries.iter_mut().find(|(t, _, _)| t == arc.tenant())
+        {
+            *slot_view = Arc::clone(&arc);
+            *slot_tick = tick;
+        }
+        self.stats.swaps += 1;
+        arc
+    }
+
+    /// Drop one tenant's view; `true` if it was resident.
+    pub fn evict(&mut self, tenant: &str) -> bool {
+        let before = self.entries.len();
+        self.entries.retain(|(t, _, _)| t != tenant);
+        before != self.entries.len()
+    }
+
+    pub fn resident(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.iter().map(|(_, v, _)| v.bytes()).sum()
+    }
+
+    /// Resident tenant names, sorted (inspection only, no recency bump).
+    pub fn resident_tenants(&self) -> Vec<String> {
+        let mut out: Vec<String> = self.entries.iter().map(|(t, _, _)| t.clone()).collect();
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exp::matrix::toy_params;
+    use crate::serve::delta::synth_delta;
+    use crate::serve::base_digest;
+
+    fn view(base: &[Tensor], name: &str, seed: u64) -> TenantView {
+        let dg = base_digest(base);
+        TenantView::materialize(base, &synth_delta(base, name, dg, 2, seed)).unwrap()
+    }
+
+    #[test]
+    fn view_matches_full_materialization_row_for_row() {
+        let base = toy_params(5);
+        let dg = base_digest(&base);
+        let delta = synth_delta(&base, "t", dg, 2, 42);
+        let v = TenantView::materialize(&base, &delta).unwrap();
+        let dense = TenantView::full_materialize(&base, &delta).unwrap();
+        for (pi, t) in base.iter().enumerate() {
+            let ncols = *t.shape.last().unwrap_or(&1);
+            let nrows = t.len() / ncols;
+            for r in 0..nrows {
+                let expect = &dense[pi].data[r * ncols..(r + 1) * ncols];
+                match v.row(pi, r) {
+                    Some(row) => assert_eq!(row, expect, "param {pi} row {r}"),
+                    None => assert_eq!(
+                        &t.data[r * ncols..(r + 1) * ncols],
+                        expect,
+                        "untouched param {pi} row {r} must equal base"
+                    ),
+                }
+            }
+        }
+        // row-clustered deltas must not touch every row (the tenants/GB claim)
+        let total_rows: usize = base
+            .iter()
+            .map(|t| t.len() / *t.shape.last().unwrap_or(&1))
+            .sum();
+        assert!(
+            v.touched_rows() < total_rows,
+            "view copies {} of {} rows — no byte savings",
+            v.touched_rows(),
+            total_rows
+        );
+        assert!(v.bytes() > 0);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_deterministically() {
+        let base = toy_params(5);
+        let a = view(&base, "a", 1);
+        let one = a.bytes();
+        // budget fits exactly two toy views
+        let mut lru = TenantLru::new(2 * one + 2);
+        lru.admit(view(&base, "a", 1));
+        lru.admit(view(&base, "b", 2));
+        assert_eq!(lru.resident_tenants(), vec!["a", "b"]);
+        // touch a, then admit c → b is the LRU victim
+        assert!(lru.get("a").is_some());
+        lru.admit(view(&base, "c", 3));
+        assert_eq!(lru.resident_tenants(), vec!["a", "c"]);
+        assert_eq!(lru.stats.evictions, 1);
+        assert!(lru.get("b").is_none());
+        assert_eq!(lru.stats.hits, 1);
+        assert_eq!(lru.stats.misses, 1);
+        // readmit b → a (older tick than c) goes
+        lru.admit(view(&base, "b", 2));
+        assert_eq!(lru.resident_tenants(), vec!["b", "c"]);
+    }
+
+    #[test]
+    fn oversized_view_is_served_uncached() {
+        let base = toy_params(5);
+        let mut lru = TenantLru::new(8); // smaller than any view
+        let arc = lru.admit(view(&base, "big", 1));
+        assert_eq!(arc.tenant(), "big");
+        assert_eq!(lru.resident(), 0);
+        assert_eq!(lru.stats.uncacheable, 1);
+    }
+
+    #[test]
+    fn hot_swap_replaces_in_place_without_evicting_others() {
+        let base = toy_params(5);
+        let one = view(&base, "a", 1).bytes();
+        let mut lru = TenantLru::new(3 * one + 3);
+        lru.admit(view(&base, "a", 1));
+        let held = lru.get("a").unwrap(); // in-flight request holds v1
+        lru.admit(view(&base, "b", 2));
+        lru.admit(view(&base, "c", 3));
+        let v1_probe = held.row(1, 0).map(<[f32]>::to_vec);
+        lru.swap(view(&base, "a", 99));
+        assert_eq!(lru.resident_tenants(), vec!["a", "b", "c"], "no unrelated eviction");
+        assert_eq!(lru.stats.swaps, 1);
+        assert_eq!(lru.stats.evictions, 0);
+        // the held Arc still reads the complete old version
+        assert_eq!(held.row(1, 0).map(<[f32]>::to_vec), v1_probe);
+        // a fresh get sees the new version
+        let fresh = lru.get("a").unwrap();
+        let new_direct = view(&base, "a", 99);
+        for pi in 0..base.len() {
+            let ncols = *base[pi].shape.last().unwrap_or(&1);
+            for r in 0..base[pi].len() / ncols {
+                assert_eq!(
+                    fresh.row(pi, r).map(<[f32]>::to_vec),
+                    new_direct.row(pi, r).map(<[f32]>::to_vec)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_evict() {
+        let base = toy_params(5);
+        let mut lru = TenantLru::new(usize::MAX);
+        lru.admit(view(&base, "a", 1));
+        assert!(lru.evict("a"));
+        assert!(!lru.evict("a"));
+        assert_eq!(lru.resident(), 0);
+    }
+}

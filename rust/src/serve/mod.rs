@@ -1,0 +1,94 @@
+//! LIFT-as-a-service: per-tenant sparse-delta serving over one shared base.
+//!
+//! The paper's economic argument is that a LIFT fine-tune is a *tiny sparse
+//! delta* — the top-5% principal weights — over a frozen base model, so a
+//! server can keep ONE base resident and overlay per-tenant deltas at
+//! request time instead of holding thousands of model copies. This module
+//! is that serving layer, generalized over any sparse-FT method that emits
+//! `(mask indices, values)` pairs (LIFT, weight_mag, SIFT, ...).
+//!
+//! # Delta format ([`delta`])
+//!
+//! A [`TenantDelta`] is `{ tenant, base_digest, entries }` where each entry
+//! holds one parameter's sorted flat mask indices (`u32`) and replacement
+//! values (`f32`). On disk it is a LIFTSNAP container (`ckpt::Snapshot`,
+//! magic + version + per-section CRC32) with two sections, serialized via
+//! the existing `ckpt::codec` Enc/Dec — so deltas inherit the snapshot
+//! suite's corruption detection and atomic tmp+rename writes. `base_digest`
+//! is an FNV-1a digest of the base parameters ([`base_digest`]); a delta
+//! whose digest does not match the resident base is refused LOUDLY at load,
+//! the same policy as the LIFTSNAP format-version refusal — serving a delta
+//! against the wrong base silently personalizes with garbage.
+//!
+//! # LRU / eviction contract ([`lru`])
+//!
+//! The base is immutable and shared; overlay-apply never writes into it.
+//! Materializing a tenant builds a [`TenantView`]: a row-granular
+//! copy-on-materialize overlay holding ONLY the base rows the delta
+//! touches, with the delta values scattered in. Eviction is therefore a
+//! scatter-undo by construction — dropping the view releases exactly the
+//! touched-row copies and the base needs no restoration, O(touched rows)
+//! rather than a full base copy. [`TenantLru`] bounds total view bytes by a
+//! budget and evicts least-recently-used tenants (logical-tick recency, so
+//! eviction order is a pure function of the request stream — deterministic
+//! at any worker count).
+//!
+//! # Hot-swap atomicity
+//!
+//! Updating a live tenant is build-then-swap: the new view is fully
+//! materialized *before* the LRU entry's `Arc` is replaced, and unrelated
+//! tenants are untouched (no eviction sweep unless the replacement is
+//! larger and the budget demands it). In-flight requests hold the old
+//! `Arc` and keep reading the complete old version; a torn half-old
+//! half-new delta is unrepresentable.
+//!
+//! # Batched multi-tenant inference ([`batch`])
+//!
+//! [`Server::handle_batch`] groups requests by tenant so one overlay
+//! resolution amortizes across the tenant's whole group, then fans the
+//! groups over `lift::engine::par_map` with the PR-7 intra-matrix budget
+//! (`intra = (workers / n_groups).max(1)` chunks per group). Each request
+//! is a pure function of `(base, delta, seed)`, so 1-worker and N-worker
+//! runs are bit-identical per the repo's standing determinism contract.
+
+pub mod batch;
+pub mod delta;
+pub mod lru;
+
+pub use batch::{forward_one, BaseModel, ForwardPlan, ModelRows, OverlayModel, Request, Server};
+pub use delta::{synth_delta, DeltaStore, ParamDelta, TenantDelta};
+pub use lru::{TenantLru, TenantView};
+
+use crate::tensor::Tensor;
+
+/// Digest of a base parameter set: shapes and exact f32 bit patterns, via
+/// the same FNV-1a word digest the method-state checkpoints use. Two bases
+/// agree on this iff every parameter is bitwise identical — the spec key a
+/// [`TenantDelta`] is pinned to.
+pub fn base_digest(params: &[Tensor]) -> u64 {
+    crate::methods::digest_words(
+        std::iter::once(params.len() as u64).chain(params.iter().flat_map(|t| {
+            std::iter::once(t.shape.len() as u64)
+                .chain(t.shape.iter().map(|&d| d as u64))
+                .chain(t.data.iter().map(|x| x.to_bits() as u64))
+        })),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_digest_is_stable_and_bit_sensitive() {
+        let a = crate::exp::matrix::toy_params(7);
+        let b = crate::exp::matrix::toy_params(7);
+        assert_eq!(base_digest(&a), base_digest(&b), "same seed, same digest");
+        let c = crate::exp::matrix::toy_params(8);
+        assert_ne!(base_digest(&a), base_digest(&c), "different base, different digest");
+        // a single-ULP flip changes the digest
+        let mut d = crate::exp::matrix::toy_params(7);
+        d[0].data[0] = f32::from_bits(d[0].data[0].to_bits() ^ 1);
+        assert_ne!(base_digest(&a), base_digest(&d));
+    }
+}

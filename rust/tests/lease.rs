@@ -155,7 +155,7 @@ fn live_foreign_lease_defers_the_cell_and_is_left_untouched() {
     let dir = tmpdir("defer");
     let cells = toy_cells();
     let busy_id = cells[0].id();
-    let far = lease::now_unix() + 3600;
+    let far = lease::now_unix().unwrap() + 3600;
     put_lease(&dir, &busy_id, "other_host", 2, far);
     let computed = AtomicUsize::new(0);
     let cfg = LeaseCfg::new("me", 300);
@@ -180,7 +180,7 @@ fn expired_lease_is_taken_over_and_checkpoints_under_the_new_token() {
     let dir = tmpdir("takeover");
     let cells = toy_cells();
     let dead_id = cells[0].id();
-    put_lease(&dir, &dead_id, "crashed_host", 4, lease::now_unix().saturating_sub(30));
+    put_lease(&dir, &dead_id, "crashed_host", 4, lease::now_unix().unwrap().saturating_sub(30));
     let cfg = LeaseCfg::new("me", 300);
     let report = matrix::run_matrix_with(&dir, &cells, 1, Some(&cfg), |spec, ckpt_dir| {
         matrix::run_toy_cell_in(spec, ckpt_dir, 2, 0, 1)
@@ -206,7 +206,7 @@ fn reused_runner_id_reclaims_its_own_leases_at_the_same_token() {
     let dir = tmpdir("reclaim");
     let cells = toy_cells();
     let mine = cells[1].id();
-    put_lease(&dir, &mine, "ci", 3, lease::now_unix() + 3600);
+    put_lease(&dir, &mine, "ci", 3, lease::now_unix().unwrap() + 3600);
     let cfg = LeaseCfg::new("ci", 300);
     let report = matrix::run_matrix_with(&dir, &cells, 1, Some(&cfg), |spec, ckpt_dir| {
         matrix::run_toy_cell_in(spec, ckpt_dir, 2, 0, 1)
@@ -233,7 +233,7 @@ fn losing_the_lease_mid_compute_refuses_the_commit() {
         if spec.id() == target2 {
             // a takeover lands while this cell computes (as if our TTL
             // expired under a long stall)
-            put_lease(&dir2, &target2, "usurper", 99, lease::now_unix() + 3600);
+            put_lease(&dir2, &target2, "usurper", 99, lease::now_unix().unwrap() + 3600);
         }
         matrix::run_toy_cell_in(spec, ckpt_dir, 0, 0, 1)
     })
@@ -263,7 +263,7 @@ fn leftover_lease_on_a_finished_cell_is_garbage_collected() {
     // finish every cell lease-free, then strand a lease on one
     matrix::run_matrix(&dir, &cells, 1, |s| matrix::run_toy_cell(s, &dir, 0, 0, 1)).unwrap();
     let stranded = cells[2].id();
-    put_lease(&dir, &stranded, "me", 1, lease::now_unix() + 3600);
+    put_lease(&dir, &stranded, "me", 1, lease::now_unix().unwrap() + 3600);
     let report = matrix::run_matrix_with(&dir, &cells, 1, Some(&cfg), |spec, ckpt_dir| {
         matrix::run_toy_cell_in(spec, ckpt_dir, 0, 0, 1)
     })
@@ -362,7 +362,7 @@ fn claim_tokens_escalate_across_successive_takeovers() {
         assert_eq!(g.token(), expect, "{runner} got the wrong fencing token");
         // expire the lease in place so the next runner takes over
         // (TTL floor is 1s; rewrite the deadline instead of sleeping)
-        put_lease(&dir, "cell", runner, expect, lease::now_unix().saturating_sub(5));
+        put_lease(&dir, "cell", runner, expect, lease::now_unix().unwrap().saturating_sub(5));
     }
     std::fs::remove_dir_all(&dir).unwrap();
 }

@@ -1,0 +1,211 @@
+//! Serve-layer acceptance suite (ISSUE 8): overlay-apply ≡ full tenant
+//! materialization bitwise, LRU evict/readmit determinism at 1 and N
+//! workers, hot-swap never serving a torn delta mid-request-stream, and
+//! loud spec-digest refusal.
+
+use std::path::PathBuf;
+
+use lift::exp::matrix::{toy_params, toy_preset};
+use lift::serve::{
+    base_digest, forward_one, synth_delta, BaseModel, DeltaStore, ForwardPlan, OverlayModel,
+    Request, Server, TenantDelta, TenantView,
+};
+use lift::tensor::Tensor;
+use lift::util::rng::Rng;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lift_serve_test_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn toy_view_bytes(base: &[Tensor]) -> usize {
+    let dg = base_digest(base);
+    TenantView::materialize(base, &synth_delta(base, "probe", dg, 2, 1))
+        .unwrap()
+        .bytes()
+}
+
+/// Overlay-apply must equal scattering the delta into a dense base copy,
+/// bit for bit, for every tenant/seed probed — the core serving claim.
+#[test]
+fn overlay_apply_equals_full_materialization_bitwise() {
+    let base = toy_params(11);
+    let plan = ForwardPlan::from_preset(&toy_preset()).unwrap();
+    let dg = base_digest(&base);
+    for tseed in [1u64, 2, 3, 99] {
+        let delta = synth_delta(&base, &format!("t{tseed}"), dg, 2, tseed);
+        let view = TenantView::materialize(&base, &delta).unwrap();
+        let dense = TenantView::full_materialize(&base, &delta).unwrap();
+        for probe in [0u64, 5, 17, 31] {
+            let over = forward_one(&OverlayModel { base: &base, view: &view }, &plan, probe);
+            let full = forward_one(&BaseModel { base: &dense }, &plan, probe);
+            assert!(
+                over.iter().zip(&full).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "tenant seed {tseed}, probe {probe}: overlay != dense"
+            );
+            let plain = forward_one(&BaseModel { base: &base }, &plan, probe);
+            assert_ne!(over, plain, "delta changed nothing (tseed {tseed}, probe {probe})");
+        }
+    }
+}
+
+/// The same request stream through a churning tiny-budget LRU, a
+/// hold-everything budget, and 1 vs N workers must produce bit-identical
+/// outputs — caching and parallelism are invisible to results.
+#[test]
+fn lru_evict_readmit_is_deterministic_at_any_worker_count() {
+    let base = toy_params(12);
+    let preset = toy_preset();
+    let dg = base_digest(&base);
+    let dir = tmpdir("lru_det");
+    let n_tenants = 6usize;
+    {
+        let store = DeltaStore::open(&dir, dg).unwrap();
+        for i in 0..n_tenants {
+            store.register(&synth_delta(&base, &format!("t{i}"), dg, 2, 100 + i as u64)).unwrap();
+        }
+    }
+    // a stream that revisits evicted tenants (readmit on miss)
+    let mut rng = Rng::new(0xfeed);
+    let stream: Vec<Request> = (0..60)
+        .map(|_| Request { tenant: format!("t{}", rng.below(n_tenants)), seed: rng.next_u64() })
+        .collect();
+    let one_view = toy_view_bytes(&base);
+    let run = |budget: usize, workers: usize| -> (Vec<Vec<f32>>, u64) {
+        let mut server = Server::new(&base, &preset, &dir, budget, workers).unwrap();
+        let mut outs = Vec::new();
+        for chunk in stream.chunks(8) {
+            outs.extend(server.handle_batch(chunk).unwrap());
+        }
+        (outs, server.lru().stats.evictions)
+    };
+    let (tiny_1w, ev_tiny_1w) = run(2 * one_view + 2, 1);
+    let (tiny_4w, ev_tiny_4w) = run(2 * one_view + 2, 4);
+    let (big_1w, ev_big) = run(usize::MAX, 1);
+    let (big_4w, _) = run(usize::MAX, 4);
+    assert!(ev_tiny_1w > 0, "tiny budget never evicted — test fixture too roomy");
+    assert_eq!(ev_tiny_1w, ev_tiny_4w, "eviction count must not depend on workers");
+    assert_eq!(ev_big, 0, "hold-everything budget must not evict");
+    let bits = |outs: &[Vec<f32>]| -> Vec<Vec<u32>> {
+        outs.iter().map(|o| o.iter().map(|x| x.to_bits()).collect()).collect()
+    };
+    assert_eq!(bits(&tiny_1w), bits(&tiny_4w), "tiny budget: 1w != 4w");
+    assert_eq!(bits(&tiny_1w), bits(&big_1w), "LRU churn changed outputs");
+    assert_eq!(bits(&big_1w), bits(&big_4w), "big budget: 1w != 4w");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Hot-swap mid-stream: a view Arc held across the swap (an in-flight
+/// request) keeps reading the complete OLD version, fresh requests read
+/// exactly the NEW version (bitwise equal to a fresh server), and
+/// unrelated tenants stay resident.
+#[test]
+fn hot_swap_never_serves_a_torn_delta() {
+    let base = toy_params(13);
+    let preset = toy_preset();
+    let plan = ForwardPlan::from_preset(&preset).unwrap();
+    let dg = base_digest(&base);
+    let dir = tmpdir("hot_swap");
+    let mut server = Server::new(&base, &preset, &dir, usize::MAX, 2).unwrap();
+    for i in 0..4 {
+        server
+            .store()
+            .register(&synth_delta(&base, &format!("t{i}"), dg, 2, 200 + i as u64))
+            .unwrap();
+    }
+    let warm: Vec<Request> =
+        (0..4).map(|i| Request { tenant: format!("t{i}"), seed: i as u64 }).collect();
+    server.handle_batch(&warm).unwrap();
+    assert_eq!(server.lru().resident(), 4);
+
+    // "in-flight request": materialize t0's current (v1) view directly
+    let v1_delta = server.store().load("t0").unwrap();
+    let held = TenantView::materialize(&base, &v1_delta).unwrap();
+    let probe = 0x5eedu64;
+    let v1_out = forward_one(&OverlayModel { base: &base, view: &held }, &plan, probe);
+
+    let v2_delta = synth_delta(&base, "t0", dg, 2, 999);
+    server.hot_swap(&v2_delta).unwrap();
+
+    // unrelated tenants untouched
+    assert_eq!(server.lru().resident_tenants(), vec!["t0", "t1", "t2", "t3"]);
+    assert_eq!(server.lru().stats.evictions, 0);
+    // the held (old) view still answers exactly v1 — no tearing
+    let held_out = forward_one(&OverlayModel { base: &base, view: &held }, &plan, probe);
+    assert_eq!(
+        v1_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        held_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+    );
+    // a fresh request sees exactly v2: bitwise equal to a fresh server
+    // over the same store, and different from v1
+    let req = Request { tenant: "t0".into(), seed: probe };
+    let served = server.handle_batch(std::slice::from_ref(&req)).unwrap().remove(0);
+    assert_ne!(served, v1_out, "swap did not change t0's output");
+    let mut fresh = Server::new(&base, &preset, &dir, usize::MAX, 1).unwrap();
+    let fresh_out = fresh.handle_batch(std::slice::from_ref(&req)).unwrap().remove(0);
+    assert_eq!(
+        served.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        fresh_out.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "swapped view is not the pure v2 materialization"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A delta trained against a different base is refused loudly at load,
+/// at register, and at raw parse — never overlaid quietly.
+#[test]
+fn spec_digest_mismatch_is_refused() {
+    let base = toy_params(14);
+    let other = toy_params(15);
+    let dg = base_digest(&base);
+    let dg_other = base_digest(&other);
+    assert_ne!(dg, dg_other);
+    let dir = tmpdir("digest");
+    // registered against `other`, loaded by a store pinned to `base`
+    {
+        let store_other = DeltaStore::open(&dir, dg_other).unwrap();
+        store_other.register(&synth_delta(&other, "alice", dg_other, 2, 7)).unwrap();
+    }
+    let store = DeltaStore::open(&dir, dg).unwrap();
+    let err = store.load("alice").unwrap_err().to_string();
+    assert!(err.contains("refusing to overlay"), "load error was: {err}");
+    // raw parse path says both digests
+    let bytes = synth_delta(&other, "alice", dg_other, 2, 7).to_bytes();
+    let err = TenantDelta::from_bytes(&bytes, dg).unwrap_err().to_string();
+    assert!(err.contains(&format!("{dg_other:016x}")), "missing delta digest: {err}");
+    assert!(err.contains(&format!("{dg:016x}")), "missing server digest: {err}");
+    // register on the mismatched store is refused before touching disk
+    let err = store.register(&synth_delta(&other, "bob", dg_other, 2, 8)).unwrap_err().to_string();
+    assert!(err.contains("pinned"), "register error was: {err}");
+    assert!(store.load("bob").is_err(), "refused register must not leave a file");
+    // the server surfaces the refusal on a request for the bad tenant
+    let mut server = Server::new(&base, &toy_preset(), &dir, usize::MAX, 1).unwrap();
+    let req = Request { tenant: "alice".into(), seed: 1 };
+    assert!(server.handle_batch(std::slice::from_ref(&req)).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Register-as-update: re-registering a tenant replaces its delta
+/// atomically, and delete_tenant removes both file and resident view.
+#[test]
+fn register_update_delete_lifecycle() {
+    let base = toy_params(16);
+    let preset = toy_preset();
+    let dg = base_digest(&base);
+    let dir = tmpdir("lifecycle");
+    let mut server = Server::new(&base, &preset, &dir, usize::MAX, 1).unwrap();
+    server.store().register(&synth_delta(&base, "a", dg, 2, 1)).unwrap();
+    let req = Request { tenant: "a".into(), seed: 3 };
+    let out1 = server.handle_batch(std::slice::from_ref(&req)).unwrap().remove(0);
+    // update through hot_swap (store write + resident view swap)
+    server.hot_swap(&synth_delta(&base, "a", dg, 2, 2)).unwrap();
+    let out2 = server.handle_batch(std::slice::from_ref(&req)).unwrap().remove(0);
+    assert_ne!(out1, out2);
+    assert_eq!(server.store().list().unwrap(), vec!["a"]);
+    assert!(server.delete_tenant("a").unwrap());
+    assert!(!server.delete_tenant("a").unwrap());
+    assert_eq!(server.lru().resident(), 0);
+    assert!(server.handle_batch(std::slice::from_ref(&req)).is_err(), "deleted tenant still serves");
+    let _ = std::fs::remove_dir_all(&dir);
+}
