@@ -6,7 +6,7 @@
 # XlaBuilder toolkit (mask engine, property tests, quickstart selftest);
 # artifact-dependent integration tests skip themselves when absent.
 
-.PHONY: artifacts artifacts-e2e test test-nosimd bench bench-check clippy matrix-smoke matrix-race serve-smoke
+.PHONY: artifacts artifacts-e2e test test-nosimd bench bench-check clippy matrix-smoke matrix-race serve-smoke torture-smoke
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -68,6 +68,22 @@ serve-smoke:
 	  --dir /tmp/lift_serve_nolru --dump /tmp/lift_serve_nolru.dump
 	cmp /tmp/lift_serve_lru.dump /tmp/lift_serve_nolru.dump
 	@echo "serve smoke OK: eviction-churn outputs byte-identical to no-LRU run"
+
+# the ISSUE-9 acceptance flow, locally: replay seeded fault schedules
+# (util::fault) against train-resume, a 2-runner lease campaign, and a
+# serve register/swap/evict mix. The command itself asserts every
+# schedule recovered bit-identically (or failed loudly by name) and
+# sweeps torn artifacts; running it twice and byte-comparing the reports
+# proves the whole harness — injection sites, retries, recovery — is
+# deterministic. LIFT_NO_FSYNC only skips real fsyncs, never injection.
+torture-smoke:
+	cargo build --release
+	LIFT_NO_FSYNC=1 target/release/lift torture --schedules 8 --seed 7 \
+	  --out /tmp/lift_torture_a
+	LIFT_NO_FSYNC=1 target/release/lift torture --schedules 8 --seed 7 \
+	  --out /tmp/lift_torture_b
+	cmp /tmp/lift_torture_a/torture_report.txt /tmp/lift_torture_b/torture_report.txt
+	@echo "torture smoke OK: all schedules recovered, same-seed reports byte-identical"
 
 # the ISSUE-6 acceptance flow, locally: two concurrent runners shard ONE
 # campaign directory via cell leases (no coordinator), then the merged

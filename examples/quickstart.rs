@@ -75,6 +75,35 @@
 //!     # under an eviction-churning budget and a hold-everything budget
 //!     # and diffs the dumped outputs byte-for-byte.
 //! ```
+//!
+//! # Durability contract (ISSUE 9)
+//!
+//! Every durable artifact above — snapshots, the curve sidecar, outcome
+//! ledgers, lease files, tenant deltas — is committed by one idiom:
+//! write to a `.tmp` sibling, fsync it, rename over the destination,
+//! fsync the parent directory (`ckpt::write_atomic`; `LIFT_NO_FSYNC=1`
+//! skips the fsyncs for throwaway runs). A crash at any instant
+//! therefore leaves either the old complete copy or the new complete
+//! copy, never a torn one; orphaned `.tmp` files are inert debris that
+//! readers skip with a warning and the next commit consumes. Transient
+//! IO errors (EINTR/EAGAIN) are retried with bounded backoff inside the
+//! commit; permanent ones (ENOSPC, EIO, EACCES) surface loudly — and an
+//! *unreadable* artifact is never treated as a *missing* or *corrupt*
+//! one (an unreadable lease defers its cell; an unreadable ledger entry
+//! aborts the campaign instead of silently recomputing).
+//!
+//! ```text
+//! lift torture --schedules 32 --seed 7 --out results/torture
+//!     # deterministic crash/fault torture harness (exp::torture): replays
+//!     # seeded fault schedules (ENOSPC, EIO, EACCES, short writes,
+//!     # crash-before/after-rename — util::fault) against train-resume, a
+//!     # 2-runner lease campaign, and a serve register/swap/evict mix,
+//!     # asserting recovery ≡ straight run bit-identical, zero torn
+//!     # artifacts, and every injected fault either retried or surfaced
+//!     # by name. Same seed => byte-identical report. `make torture-smoke`
+//!     # runs it twice and diffs the reports. LIFT_FAULT_SCHEDULE /
+//!     # LIFT_FAULT_SEED arm the same injection layer on any `lift` run.
+//! ```
 
 use std::sync::Arc;
 

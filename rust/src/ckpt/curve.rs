@@ -92,7 +92,7 @@ impl CurveWriter {
 /// its sidecar are a pair; one without the other is corruption).
 pub fn read_curve(dir: &Path, steps: usize) -> Result<(Vec<f32>, Vec<f64>)> {
     let path = curve_path(dir);
-    let bytes = std::fs::read(&path).with_context(|| {
+    let bytes = crate::util::fault::read(&path).with_context(|| {
         format!(
             "reading curve sidecar {path:?} (snapshots store only O(model) state; \
              the loss curve lives in the sidecar next to them)"

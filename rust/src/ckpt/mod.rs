@@ -84,6 +84,35 @@
 //! to `curve.sidecar` at 12 bytes/step, snapshots stay flat in step
 //! count (asserted by `rust/tests/ckpt.rs`), and keep-last-N retention
 //! bounds the directory over million-step campaigns.
+//!
+//! # Durability contract
+//!
+//! What this layer promises, by failure mode:
+//!
+//! * **`kill -9` / process crash**: writes are temp-file + rename in
+//!   the same directory, so at every instant `path` holds either the
+//!   previous complete snapshot or the new complete snapshot — never a
+//!   torn one. A leftover `*.tmp` is inert debris: readers never open
+//!   it, the next write of the same path reuses (and commits or
+//!   replaces) it.
+//! * **Power loss**: [`write_atomic`] additionally fsyncs the temp file
+//!   *before* the rename (so the bytes the rename publishes are on
+//!   stable storage, not just in page cache) and fsyncs the parent
+//!   directory *after* it (so the rename itself survives). Set
+//!   `LIFT_NO_FSYNC=1` to trade this (and only this) away for speed in
+//!   tests and tmpfs smoke runs.
+//! * **Transient IO errors** (EINTR/EAGAIN-class): retried in place
+//!   with bounded backoff by the `util::fault` seam every filesystem
+//!   call here routes through.
+//! * **Permanent IO errors** (ENOSPC, EIO, EACCES, short writes): fail
+//!   loudly with the path and operation named — never folded into
+//!   "missing". Bad *bytes* (CRC mismatch, truncation) are a separate,
+//!   equally loud refusal at parse time; an unreadable file proves
+//!   nothing about its content ("Unreadable ≠ Corrupt").
+//!
+//! Every one of these paths is replayed under seeded fault schedules by
+//! `lift torture` / `rust/tests/torture.rs`, which assert that recovery
+//! reproduces an uninterrupted run bit-identically.
 
 pub mod codec;
 pub mod curve;
@@ -99,6 +128,7 @@ use anyhow::{Context, Result};
 use crate::methods::Method;
 use crate::tensor::Tensor;
 use crate::train::{TrainCfg, TrainLog};
+use crate::util::fault;
 use crate::util::rng::Rng;
 use codec::{Dec, Enc};
 
@@ -244,7 +274,7 @@ impl Snapshot {
 
     pub fn read_from(path: &Path) -> Result<Snapshot> {
         let bytes =
-            std::fs::read(path).with_context(|| format!("reading snapshot {path:?}"))?;
+            fault::read(path).with_context(|| format!("reading snapshot {path:?}"))?;
         Snapshot::from_bytes(&bytes).with_context(|| format!("parsing snapshot {path:?}"))
     }
 }
@@ -262,15 +292,27 @@ pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
 /// never interleave bytes into one temp file. `tmp` must live on the
 /// same filesystem as `path` (same directory in practice) for the
 /// rename to stay atomic.
+///
+/// Durability: the temp file is fsynced before the rename and the
+/// parent directory after it (see the module doc's durability
+/// contract; `LIFT_NO_FSYNC=1` disables both syncs). All IO goes
+/// through the `util::fault` seam, so transient errors are retried in
+/// place and the torture harness can inject faults at every stage.
 pub fn write_atomic_as(path: &Path, tmp: &Path, bytes: &[u8]) -> Result<()> {
-    if let Some(dir) = path.parent() {
-        if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)
-                .with_context(|| format!("creating snapshot dir {dir:?}"))?;
-        }
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    if let Some(dir) = dir {
+        fault::create_dir_all(dir).with_context(|| format!("creating snapshot dir {dir:?}"))?;
     }
-    std::fs::write(tmp, bytes).with_context(|| format!("writing snapshot temp {tmp:?}"))?;
-    std::fs::rename(tmp, path).with_context(|| format!("committing snapshot {path:?}"))?;
+    fault::write(tmp, bytes).with_context(|| format!("writing snapshot temp {tmp:?}"))?;
+    // the rename publishes whatever is on stable storage at crash time;
+    // sync the payload first so that is the full file, not a torn one
+    fault::sync_file_at(tmp).with_context(|| format!("fsyncing snapshot temp {tmp:?}"))?;
+    fault::rename(tmp, path).with_context(|| format!("committing snapshot {path:?}"))?;
+    if let Some(dir) = dir {
+        // the rename lives in the directory's metadata; without this a
+        // power cut can resurrect the pre-rename directory state
+        fault::sync_dir(dir).with_context(|| format!("fsyncing snapshot dir {dir:?}"))?;
+    }
     Ok(())
 }
 
@@ -291,7 +333,7 @@ pub fn prune_snapshots(dir: &Path, keep: usize) -> Result<()> {
     }
     snaps.sort_by_key(|(step, _)| std::cmp::Reverse(*step));
     for (_, path) in snaps.into_iter().skip(keep) {
-        std::fs::remove_file(&path)
+        fault::remove_file(&path)
             .with_context(|| format!("pruning old snapshot {path:?}"))?;
     }
     Ok(())

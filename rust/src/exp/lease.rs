@@ -21,9 +21,16 @@
 //!   (same token, fresh deadline — a restarted runner picks its cells
 //!   back up immediately; reuse `--runner-id` across restarts to get
 //!   this); a **live** foreign lease defers the cell ([`Claim::Busy`] —
-//!   the holder is computing it); an **expired or unreadable** lease is
+//!   the holder is computing it); an **expired or corrupt** lease is
 //!   taken over by atomically renaming a higher-token lease over it and
-//!   reading back to confirm the takeover race was won.
+//!   reading back to confirm the takeover race was won. An
+//!   **unreadable** lease — an IO failure, NOT bad bytes — defers the
+//!   cell loudly instead ([`Claim::Unreadable`]): corrupt bytes prove a
+//!   claim died mid-write (claimable), but a failed read proves nothing
+//!   about who holds the cell, and claiming over a live holder we
+//!   merely could not see would compute the cell twice
+//!   ("Unreadable ≠ Corrupt", as in the outcome ledger's
+//!   `LedgerEntry::Unreadable`).
 //! * **Renew** ([`LeaseGuard::renew`]): rewrite the same (runner, token)
 //!   with a fresh deadline; refuses if the lease was lost. `run_matrix`
 //!   renews once right before the cell computes — size the TTL to
@@ -55,12 +62,34 @@
 //! torn or wrong outcome. Both are the standard price of lease files
 //! without a coordination service; the fencing token bounds the damage
 //! to (at worst) one redundantly computed cell.
+//!
+//! # Durability contract
+//!
+//! Leases are *coordination* state, not *result* state — they are
+//! written atomically (unique-per-runner temp + rename) but never
+//! fsynced: losing a lease file to power loss only costs a TTL wait or
+//! an immediate reclaim, never computed work. By failure mode:
+//!
+//! * **`kill -9` mid-claim**: either the lease landed (the crashed
+//!   holder's cells are recovered by TTL takeover, or reclaimed
+//!   immediately under the same `--runner-id`) or only a torn temp /
+//!   half-written lease exists (corrupt → claimable at the next token).
+//! * **Transient IO errors**: retried in place by the `util::fault`
+//!   seam all lease IO routes through.
+//! * **Permanent read errors** (EACCES/EIO): the cell is *deferred
+//!   loudly* ([`Claim::Unreadable`]), commits are refused
+//!   ([`LeaseGuard::still_held`] treats unprovable as lost), and GC
+//!   leaves the file alone — an IO error must never be mistaken for
+//!   "no one holds this cell".
+//!
+//! `lift torture` replays seeded fault schedules over a 2-runner
+//! campaign to hold this contract (see `exp::torture`).
 
-use std::io::Write;
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::util::fault;
 use crate::util::json::Json;
 
 /// Campaign-wide lease knobs: this runner's identity and the TTL every
@@ -171,17 +200,39 @@ impl Lease {
     }
 }
 
-/// The lease currently on disk for a cell. `None` means no lease
-/// file OR an unreadable/corrupt one — both are claimable states (a
-/// corrupt lease is a half-written claim whose writer died; fencing on
-/// (runner, token) keeps a surviving writer from committing over a
-/// takeover).
+/// The lease currently on disk for a cell, with missing and unreadable
+/// kept apart:
+///
+/// * `Ok(None)` — no lease file, or one holding unparseable bytes. Both
+///   are CLAIMABLE: a corrupt lease is a half-written claim whose
+///   writer died, and fencing on (runner, token) keeps a surviving
+///   writer from committing over a takeover.
+/// * `Err(_)` — the file exists but could not be READ (EACCES, EIO,
+///   ...). This proves nothing about who holds the cell; callers must
+///   defer or refuse, never claim over it.
+pub fn read_lease_checked(out_dir: &Path, id: &str) -> Result<Option<Lease>> {
+    let path = lease_path(out_dir, id);
+    let s = match fault::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => {
+            return Err(e).with_context(|| format!("reading lease {}", path.display()));
+        }
+    };
+    Ok(Json::parse(&s).ok().and_then(|j| Lease::from_json(&j)))
+}
+
+/// Permissive view of [`read_lease_checked`] for display/tests: `None`
+/// for missing, corrupt, AND unreadable. Decision-making paths (claim,
+/// GC) use the checked variant — folding an unreadable lease into "no
+/// lease" is exactly the bug that let a second runner claim a live
+/// cell.
 pub fn read_lease(out_dir: &Path, id: &str) -> Option<Lease> {
-    let s = std::fs::read_to_string(lease_path(out_dir, id)).ok()?;
-    Lease::from_json(&Json::parse(&s).ok()?)
+    read_lease_checked(out_dir, id).ok().flatten()
 }
 
 /// Result of a claim attempt.
+#[derive(Debug)]
 pub enum Claim {
     /// This runner holds the cell; compute it, commit through the
     /// guard's fence, then release.
@@ -189,10 +240,15 @@ pub enum Claim {
     /// A live lease belongs to another runner — skip the cell (it will
     /// be in the report's `deferred` column).
     Busy { holder: String, expires_unix: u64 },
+    /// The lease file exists but could not be read (EACCES/EIO-class
+    /// failure — NOT corrupt bytes). The holder may be live, so the
+    /// cell is deferred loudly instead of claimed or taken over.
+    Unreadable { why: String },
 }
 
 /// Proof of a claim: the (runner, token) pair every subsequent renew /
 /// fenced commit / release is checked against.
+#[derive(Debug)]
 pub struct LeaseGuard {
     out_dir: PathBuf,
     id: String,
@@ -213,8 +269,11 @@ impl LeaseGuard {
     /// Whether the on-disk lease still carries exactly our
     /// (runner, token) — the fencing check a commit is gated on. A
     /// missing or unreadable lease also reads as lost: we can no longer
-    /// prove ownership, so the commit is refused and the cell falls to
-    /// whoever holds (or next claims) it.
+    /// PROVE ownership, so the commit is refused and the cell falls to
+    /// whoever holds (or next claims) it. For unreadable this is the
+    /// safe direction — refusing a commit we were entitled to costs one
+    /// recompute; committing over a takeover we could not see corrupts
+    /// the ledger.
     pub fn still_held(&self) -> bool {
         matches!(
             read_lease(&self.out_dir, &self.id),
@@ -254,7 +313,7 @@ impl LeaseGuard {
             );
             return Ok(());
         }
-        match std::fs::remove_file(lease_path(&self.out_dir, &self.id)) {
+        match fault::remove_file(&lease_path(&self.out_dir, &self.id)) {
             Ok(()) => Ok(()),
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
             Err(e) => Err(e).with_context(|| format!("releasing lease on cell {}", self.id)),
@@ -266,9 +325,9 @@ impl LeaseGuard {
 /// runners racing a takeover never share a temp file), then rename.
 fn write_lease_atomic(out_dir: &Path, id: &str, runner: &str, lease: &Lease) -> Result<()> {
     let tmp = out_dir.join(format!("{id}.lease.{runner}.tmp"));
-    std::fs::write(&tmp, lease.to_json().to_string())
+    fault::write(&tmp, lease.to_json().to_string().as_bytes())
         .with_context(|| format!("writing lease temp {tmp:?}"))?;
-    std::fs::rename(&tmp, lease_path(out_dir, id))
+    fault::rename(&tmp, &lease_path(out_dir, id))
         .with_context(|| format!("installing lease for cell {id}"))?;
     Ok(())
 }
@@ -276,8 +335,9 @@ fn write_lease_atomic(out_dir: &Path, id: &str, runner: &str, lease: &Lease) -> 
 /// Try to claim cell `id` for `cfg.runner`. See the module doc for the
 /// full protocol; in short — create-new wins a fresh claim (token 1), a
 /// lease of our own runner id is reclaimed at its existing token, a live
-/// foreign lease is `Busy`, and an expired/corrupt lease is taken over
-/// at `token + 1` with a read-back to confirm the rename race was won.
+/// foreign lease is `Busy`, an unreadable lease defers loudly
+/// (`Unreadable`), and an expired/corrupt lease is taken over at
+/// `token + 1` with a read-back to confirm the rename race was won.
 pub fn claim(out_dir: &Path, id: &str, cfg: &LeaseCfg) -> Result<Claim> {
     let path = lease_path(out_dir, id);
     let fresh = Lease {
@@ -285,14 +345,8 @@ pub fn claim(out_dir: &Path, id: &str, cfg: &LeaseCfg) -> Result<Claim> {
         token: 1,
         expires_unix: now_unix()? + cfg.ttl_secs,
     };
-    match std::fs::OpenOptions::new()
-        .write(true)
-        .create_new(true)
-        .open(&path)
-    {
-        Ok(mut f) => {
-            f.write_all(fresh.to_json().to_string().as_bytes())
-                .with_context(|| format!("writing fresh lease {path:?}"))?;
+    match fault::create_new(&path, fresh.to_json().to_string().as_bytes()) {
+        Ok(()) => {
             return Ok(Claim::Held(LeaseGuard {
                 out_dir: out_dir.to_path_buf(),
                 id: id.to_string(),
@@ -306,8 +360,17 @@ pub fn claim(out_dir: &Path, id: &str, cfg: &LeaseCfg) -> Result<Claim> {
             return Err(e).with_context(|| format!("creating lease {path:?}"));
         }
     }
-    // someone claimed this cell before us — inspect the lease
-    let current = read_lease(out_dir, id);
+    // someone claimed this cell before us — inspect the lease. An
+    // UNREADABLE one (IO failure, not bad bytes) defers: the holder may
+    // be live and mid-compute, and claiming blind would run the cell
+    // twice — the exact bug the old `.ok()?` fold had.
+    let current = match read_lease_checked(out_dir, id) {
+        Ok(c) => c,
+        Err(e) => {
+            log::warn!("cell {id}: lease exists but cannot be read — deferring ({e:#})");
+            return Ok(Claim::Unreadable { why: format!("{e:#}") });
+        }
+    };
     if let Some(l) = &current {
         if l.runner == cfg.runner {
             // our own lease (this runner restarted, or a prior claim of
@@ -372,14 +435,21 @@ pub fn claim(out_dir: &Path, id: &str, cfg: &LeaseCfg) -> Result<Claim> {
 /// Garbage-collect the lease of a cell whose outcome already exists —
 /// the state a crash between outcome-commit and release leaves behind.
 /// Only a lease that is ours or expired is removed; a live foreign
-/// lease is left to its holder's own release. Errors only on a broken
-/// clock (see [`now_unix`]) — expiry cannot be judged without one.
+/// lease is left to its holder's own release, and an UNREADABLE one is
+/// left in place with a loud warning (ownership and expiry cannot be
+/// judged from an IO error). Errors only on a broken clock (see
+/// [`now_unix`]) — expiry cannot be judged without one either.
 pub fn gc_finished(out_dir: &Path, id: &str, cfg: &LeaseCfg) -> Result<()> {
-    let Some(l) = read_lease(out_dir, id) else {
-        return Ok(());
+    let l = match read_lease_checked(out_dir, id) {
+        Ok(Some(l)) => l,
+        Ok(None) => return Ok(()),
+        Err(e) => {
+            log::warn!("cell {id}: leftover lease cannot be read — leaving it in place ({e:#})");
+            return Ok(());
+        }
     };
     if l.runner == cfg.runner || l.is_expired(now_unix()?) {
-        if std::fs::remove_file(lease_path(out_dir, id)).is_ok() {
+        if fault::remove_file(&lease_path(out_dir, id)).is_ok() {
             log::debug!("cell {id}: removed leftover lease (outcome already committed)");
         }
     }
@@ -458,6 +528,7 @@ mod tests {
         match claim(&dir, "cell", &LeaseCfg::new("me", 60)).unwrap() {
             Claim::Busy { holder, .. } => assert_eq!(holder, "other"),
             Claim::Held(_) => panic!("must defer to a live lease"),
+            Claim::Unreadable { why } => panic!("readable lease classified unreadable: {why}"),
         }
         // the live lease is untouched
         assert_eq!(read_lease(&dir, "cell").unwrap().token, 3);
@@ -481,10 +552,34 @@ mod tests {
     fn corrupt_lease_is_takeover_able() {
         let dir = tmpdir("corrupt");
         std::fs::write(lease_path(&dir, "cell"), "{half a lea").unwrap();
+        // corrupt is NOT unreadable: the bytes came back fine, they just
+        // don't parse — a half-written claim whose writer died
+        assert!(matches!(read_lease_checked(&dir, "cell"), Ok(None)));
         let Claim::Held(g) = claim(&dir, "cell", &LeaseCfg::new("me", 60)).unwrap() else {
             panic!("corrupt lease must be claimable");
         };
         assert_eq!(g.token(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unreadable_lease_defers_instead_of_claiming() {
+        // a DIRECTORY at the lease path makes reads fail with EISDIR —
+        // a non-NotFound IO error standing in for EACCES/EIO (which a
+        // root test process cannot provoke via permissions). The old
+        // `.ok()?` fold read this as "no lease" and claimed the cell.
+        let dir = tmpdir("unreadable");
+        std::fs::create_dir_all(lease_path(&dir, "cell")).unwrap();
+        assert!(read_lease_checked(&dir, "cell").is_err(), "checked read must surface the IO error");
+        assert!(read_lease(&dir, "cell").is_none(), "permissive view folds to None");
+        match claim(&dir, "cell", &LeaseCfg::new("me", 60)).unwrap() {
+            Claim::Unreadable { why } => assert!(why.contains("cell"), "{why}"),
+            Claim::Held(_) => panic!("claimed over an unreadable lease — live holder races"),
+            Claim::Busy { .. } => panic!("unreadable must be distinguished from busy"),
+        }
+        // GC must leave it in place too: ownership cannot be judged
+        gc_finished(&dir, "cell", &LeaseCfg::new("me", 60)).unwrap();
+        assert!(lease_path(&dir, "cell").exists(), "gc removed a lease it could not read");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

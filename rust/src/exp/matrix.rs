@@ -382,7 +382,7 @@ pub enum LedgerEntry {
 /// Classify a cell's outcome file without committing to a policy.
 pub fn classify_outcome(out_dir: &Path, id: &str) -> LedgerEntry {
     let path = outcome_path(out_dir, id);
-    let s = match std::fs::read_to_string(&path) {
+    let s = match crate::util::fault::read_to_string(&path) {
         Ok(s) => s,
         Err(e) if e.kind() == std::io::ErrorKind::NotFound => return LedgerEntry::Missing,
         Err(e) => return LedgerEntry::Unreadable(format!("{} reading {}", e, path.display())),
@@ -705,6 +705,59 @@ where
     Ok(report)
 }
 
+/// [`run_matrix_with`] plus a bounded re-poll over `Deferred` cells:
+/// after the main pass, cells another runner held (or whose lease was
+/// unreadable) are retried up to `defer_retries` times, restricted to
+/// the still-deferred subset each round. The first re-poll is immediate
+/// (the common case — a co-runner released between classify and
+/// re-poll); later rounds sleep half the lease TTL, clamped to 1..=10
+/// seconds so a long TTL cannot stall a CI smoke. Deferrals that
+/// survive every round stay in `report.deferred` — the report never
+/// hides them.
+pub fn run_matrix_retry<F>(
+    out_dir: &Path,
+    cells: &[CellSpec],
+    workers: usize,
+    lease: Option<&LeaseCfg>,
+    defer_retries: usize,
+    run_cell: F,
+) -> Result<MatrixReport>
+where
+    F: Fn(&CellSpec, &Path) -> Result<CellOutcome> + Sync,
+{
+    let mut report = run_matrix_with(out_dir, cells, workers, lease, &run_cell)?;
+    for round in 0..defer_retries {
+        if report.deferred.is_empty() {
+            break;
+        }
+        if round > 0 {
+            let ttl = lease.map(|c| c.ttl_secs).unwrap_or(0);
+            let secs = ((ttl + 1) / 2).clamp(1, 10);
+            log::info!(
+                "matrix: {} deferral(s) after re-poll {round}; sleeping {secs}s before the next",
+                report.deferred.len()
+            );
+            std::thread::sleep(std::time::Duration::from_secs(secs));
+        }
+        let pending: Vec<CellSpec> = {
+            let ids: std::collections::BTreeSet<&str> =
+                report.deferred.iter().map(|(id, _)| id.as_str()).collect();
+            cells.iter().filter(|c| ids.contains(c.id().as_str())).cloned().collect()
+        };
+        log::info!(
+            "matrix: re-polling {} deferred cell(s) (round {}/{defer_retries})",
+            pending.len(),
+            round + 1
+        );
+        let sub = run_matrix_with(out_dir, &pending, workers, lease, &run_cell)?;
+        report.deferred = sub.deferred;
+        report.ran.extend(sub.ran);
+        report.skipped.extend(sub.skipped);
+        report.failed.extend(sub.failed);
+    }
+    Ok(report)
+}
+
 /// One worker's handling of one todo cell: claim (when leases are on),
 /// recheck the ledger under the claim, compute into the fenced
 /// checkpoint dir, commit through the fence, release.
@@ -728,6 +781,13 @@ where
                 return CellRun::Deferred(format!(
                     "held by runner {holder} (lease expires at unix {expires_unix})"
                 ));
+            }
+            // Unreadable ≠ corrupt ≠ missing: the lease file exists but
+            // its bytes never came back, so a live holder cannot be
+            // ruled out. Defer (retryable) instead of claiming over a
+            // possibly-live runner or failing the whole campaign.
+            Ok(Claim::Unreadable { why }) => {
+                return CellRun::Deferred(format!("lease unreadable: {why}"));
             }
             Err(e) => return CellRun::Failed(format!("lease claim: {e:#}")),
         },

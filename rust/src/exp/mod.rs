@@ -14,6 +14,7 @@ pub mod memory_fig;
 pub mod perturb_fig;
 pub mod retention;
 pub mod tables;
+pub mod torture;
 pub mod toy;
 
 use anyhow::Result;

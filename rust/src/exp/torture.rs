@@ -1,0 +1,456 @@
+//! Crash/fault torture harness: replay seeded fault schedules across
+//! the durable-state surfaces and prove recovery.
+//!
+//! Each schedule drives three scenarios against the `util::fault` seam,
+//! every one with a disarmed *straight* baseline to compare against:
+//!
+//! 1. **train-resume** — a toy fine-tune cell with checkpointing every
+//!    2 steps. Under faults the run either completes (transients were
+//!    retried) or fails loudly; a disarmed rerun over the same
+//!    checkpoint dir must then resume and land the exact outcome the
+//!    straight run produced.
+//! 2. **2-runner lease campaign** — two sequential leased
+//!    `run_matrix_with` passes over a 2-cell toy grid under faults,
+//!    then a disarmed recovery sweep per runner. Every cell must end
+//!    `Done` with the straight (lease-free) outcome, and no `.lease`
+//!    file may survive.
+//! 3. **serve register/swap/evict mix** — register three tenants, warm
+//!    the LRU, hot-swap one, delete one, probe. The disarmed recovery
+//!    drive over the crashed store must produce bit-identical outputs
+//!    to the straight store, with the orphaned `.tmp` droppings of
+//!    crashed registrations skipped (warned) rather than fatal.
+//!
+//! After recovery the schedule's directory is scanned: every committed
+//! artifact must parse (`.snap`/`.delta` LIFTSNAP containers, `.json`
+//! ledger entries, `curve.sidecar` magic), `.tmp` debris is swept and
+//! counted, and leftover `.lease` files are failures. Any failure under
+//! faults whose message does not name its injected fault
+//! ([`fault::INJECTED_MARK`]) fails the schedule by name — fault
+//! injection must never manifest as a quiet wrong answer.
+//!
+//! The report is counts-only (no wall-clock, no timestamps), so two
+//! same-seed invocations are byte-identical — the `torture-smoke`
+//! Makefile target diffs exactly that.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::ckpt::{curve, Snapshot};
+use crate::exp::lease::LeaseCfg;
+use crate::exp::matrix::{
+    expand_grid, read_outcome, run_matrix_with, run_toy_cell_in, toy_params, toy_preset,
+    CellOutcome, CellSpec,
+};
+use crate::runtime::manifest::PresetInfo;
+use crate::serve::{base_digest, synth_delta, Request, Server, TenantDelta};
+use crate::tensor::Tensor;
+use crate::util::fault::{self, FaultPlan, FaultStats};
+use crate::util::json::Json;
+
+/// Knobs for one torture run (`lift torture`).
+#[derive(Clone, Debug)]
+pub struct TortureCfg {
+    /// Independent seeded schedules to replay.
+    pub schedules: usize,
+    /// Master seed; schedule `s` derives its three scenario plans from it.
+    pub seed: u64,
+    /// Scratch directory — wiped at the start of every run.
+    pub out: PathBuf,
+    /// Faults drawn per scenario plan.
+    pub faults: usize,
+    /// Per-class call horizon the fault sites are drawn from.
+    pub horizon: u64,
+}
+
+/// What a torture run found, plus the deterministic report text.
+#[derive(Clone, Debug)]
+pub struct TortureReport {
+    /// The full report, also written to `<out>/torture_report.txt`.
+    pub text: String,
+    /// Schedules that did not recover cleanly (empty = success).
+    pub failed: Vec<String>,
+    /// Total faults that actually fired across all schedules.
+    pub injected: usize,
+    /// Total transient faults absorbed by the retry loop.
+    pub retried: usize,
+    /// `.tmp` debris files swept after recovery.
+    pub debris: usize,
+}
+
+/// Replay `cfg.schedules` seeded fault schedules. Completes every
+/// schedule before reporting; per-schedule failures land in
+/// `TortureReport::failed`, not in an early `Err` (a harness `Err`
+/// means the straight baseline or the disarmed recovery plumbing broke,
+/// which is a bug in the repo, not a torture finding).
+pub fn run_torture(cfg: &TortureCfg) -> Result<TortureReport> {
+    anyhow::ensure!(
+        !fault::is_armed(),
+        "torture cannot start while a fault plan is already armed (LIFT_FAULT_SCHEDULE?)"
+    );
+    anyhow::ensure!(cfg.schedules > 0, "need at least one schedule");
+    if cfg.out.exists() {
+        std::fs::remove_dir_all(&cfg.out)
+            .with_context(|| format!("wiping torture dir {:?}", cfg.out))?;
+    }
+    std::fs::create_dir_all(&cfg.out)?;
+    let mut lines = vec![format!(
+        "lift torture: {} schedule(s), seed {}, {} fault(s)/scenario, horizon {}",
+        cfg.schedules, cfg.seed, cfg.faults, cfg.horizon
+    )];
+    let mut failed = Vec::new();
+    let (mut injected, mut retried, mut debris_total) = (0usize, 0usize, 0usize);
+    for s in 0..cfg.schedules {
+        let sdir = cfg.out.join(format!("s{s:03}"));
+        let sseed = cfg.seed ^ (s as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut notes: Vec<String> = Vec::new();
+        let mut stats = FaultStats::default();
+        for (scenario, tag) in [
+            (scenario_train as ScenarioFn, 0x0721u64),
+            (scenario_lease, 0x1ea5e),
+            (scenario_serve, 0x5e17e),
+        ] {
+            let plan = FaultPlan::seeded(sseed ^ tag, cfg.faults, cfg.horizon);
+            let st = scenario(&sdir, sseed, plan, &mut notes)?;
+            stats.injected += st.injected;
+            stats.retried += st.retried;
+        }
+        let mut debris = 0usize;
+        scan_artifacts(&sdir, &mut notes, &mut debris)?;
+        injected += stats.injected;
+        retried += stats.retried;
+        debris_total += debris;
+        let status = if notes.is_empty() { "recovered" } else { "FAILED" };
+        lines.push(format!(
+            "schedule {s:03} [{status}] injected {} retried {} debris {}",
+            stats.injected, stats.retried, debris
+        ));
+        for n in &notes {
+            lines.push(format!("  - {n}"));
+        }
+        if !notes.is_empty() {
+            failed.push(format!("s{s:03}"));
+        }
+    }
+    lines.push(format!(
+        "total: {} schedule(s), {} recovered, {} failed; {injected} fault(s) injected, \
+         {retried} retried, {debris_total} temp file(s) swept",
+        cfg.schedules,
+        cfg.schedules - failed.len(),
+        failed.len()
+    ));
+    let text = lines.join("\n") + "\n";
+    std::fs::write(cfg.out.join("torture_report.txt"), &text)
+        .with_context(|| format!("writing torture report under {:?}", cfg.out))?;
+    Ok(TortureReport { text, failed, injected, retried, debris: debris_total })
+}
+
+type ScenarioFn = fn(&Path, u64, FaultPlan, &mut Vec<String>) -> Result<FaultStats>;
+
+/// Strip the one field that legitimately differs between two runs of
+/// the same cell (wall-clock seconds) before comparing outcomes.
+fn norm(mut o: CellOutcome) -> CellOutcome {
+    o.seconds = 0.0;
+    o
+}
+
+/// A failure under an armed plan must name its injection — anything
+/// else is the seam leaking a quiet wrong answer.
+fn check_loud(notes: &mut Vec<String>, what: &str, e: &anyhow::Error) {
+    let msg = format!("{e:#}");
+    if !msg.contains(fault::INJECTED_MARK) {
+        notes.push(format!("{what}: failure under faults does not name its injection: {msg}"));
+    }
+}
+
+fn toy_cells(seeds: &[u64], steps: usize) -> Vec<CellSpec> {
+    expand_grid("toy", &["lift".to_string()], &[], &[2], seeds, steps, 2)
+}
+
+// ---- scenario 1: train-resume ------------------------------------------
+
+fn scenario_train(
+    dir: &Path,
+    seed: u64,
+    plan: FaultPlan,
+    notes: &mut Vec<String>,
+) -> Result<FaultStats> {
+    let dir = dir.join("train");
+    let spec = toy_cells(&[seed % 5 + 1], 6).remove(0);
+    let straight = norm(
+        run_toy_cell_in(&spec, &dir.join("straight"), 2, 2, 1)
+            .context("train scenario: straight baseline")?,
+    );
+    let fdir = dir.join("faulted");
+    fault::arm(plan);
+    let attempt = run_toy_cell_in(&spec, &fdir, 2, 2, 1);
+    let stats = fault::disarm();
+    let recovered = match attempt {
+        Ok(o) => o,
+        Err(e) => {
+            check_loud(notes, "train", &e);
+            // disarmed rerun over the same dir: resume from whatever
+            // committed snapshots survived the faults
+            match run_toy_cell_in(&spec, &fdir, 2, 2, 1) {
+                Ok(o) => o,
+                Err(e2) => {
+                    notes.push(format!("train: disarmed recovery rerun failed: {e2:#}"));
+                    return Ok(stats);
+                }
+            }
+        }
+    };
+    if norm(recovered) != straight {
+        notes.push("train: recovered outcome differs from the straight run".into());
+    }
+    Ok(stats)
+}
+
+// ---- scenario 2: 2-runner lease campaign -------------------------------
+
+fn scenario_lease(
+    dir: &Path,
+    seed: u64,
+    plan: FaultPlan,
+    notes: &mut Vec<String>,
+) -> Result<FaultStats> {
+    let dir = dir.join("lease");
+    let cells = toy_cells(&[seed % 5 + 1, seed % 5 + 2], 4);
+    let run = |spec: &CellSpec, ckpt_dir: &Path| run_toy_cell_in(spec, ckpt_dir, 2, 2, 1);
+    let sdir = dir.join("straight");
+    let rep = run_matrix_with(&sdir, &cells, 1, None, run)
+        .context("lease scenario: straight baseline")?;
+    anyhow::ensure!(rep.failed.is_empty(), "lease straight baseline failed: {:?}", rep.failed);
+    let mut baseline = Vec::new();
+    for c in &cells {
+        let id = c.id();
+        match read_outcome(&sdir, &id) {
+            Some(o) => baseline.push(norm(o)),
+            None => anyhow::bail!("lease scenario: straight outcome for {id} missing"),
+        }
+    }
+    let fdir = dir.join("faulted");
+    fault::arm(plan);
+    for runner in ["tort-a", "tort-b"] {
+        let cfg = LeaseCfg::new(runner, 60);
+        match run_matrix_with(&fdir, &cells, 1, Some(&cfg), run) {
+            Ok(rep) => {
+                for (id, why) in &rep.failed {
+                    if !why.contains(fault::INJECTED_MARK) {
+                        notes.push(format!("lease: cell {id} failed quietly under faults: {why}"));
+                    }
+                }
+            }
+            Err(e) => check_loud(notes, "lease", &e),
+        }
+    }
+    let stats = fault::disarm();
+    // recovery: each runner sweeps once; a cell deferred to the other
+    // runner's still-live crashed lease is reclaimed by that runner's
+    // own pass (same runner id -> reclaim, no TTL wait)
+    for runner in ["tort-a", "tort-b"] {
+        let cfg = LeaseCfg::new(runner, 60);
+        let rep = run_matrix_with(&fdir, &cells, 1, Some(&cfg), run)
+            .context("lease scenario: disarmed recovery pass")?;
+        if !rep.failed.is_empty() {
+            notes.push(format!("lease: recovery pass failed cells: {:?}", rep.failed));
+        }
+    }
+    for (c, want) in cells.iter().zip(&baseline) {
+        let id = c.id();
+        match read_outcome(&fdir, &id) {
+            Some(got) if &norm(got) == want => {}
+            Some(_) => notes.push(format!("lease: cell {id} recovered with a different outcome")),
+            None => notes.push(format!("lease: cell {id} never completed after recovery")),
+        }
+    }
+    for entry in std::fs::read_dir(&fdir)? {
+        let p = entry?.path();
+        if p.extension().and_then(|e| e.to_str()) == Some("lease") {
+            notes.push(format!("lease: leftover lease file {}", p.display()));
+        }
+    }
+    Ok(stats)
+}
+
+// ---- scenario 3: serve register/swap/evict mix -------------------------
+
+fn scenario_serve(
+    dir: &Path,
+    seed: u64,
+    plan: FaultPlan,
+    notes: &mut Vec<String>,
+) -> Result<FaultStats> {
+    let dir = dir.join("serve");
+    let base = toy_params(0xBA5E ^ seed);
+    let preset = toy_preset();
+    let dg = base_digest(&base);
+    let deltas: Vec<TenantDelta> = (0..3u64)
+        .map(|i| synth_delta(&base, &format!("t{i}"), dg, 2, seed.wrapping_add(10 + i)))
+        .collect();
+    let swap1 = synth_delta(&base, "t1", dg, 2, seed.wrapping_add(21));
+    let straight = drive_serve(&base, &preset, &dir.join("straight"), &deltas, &swap1, false, notes)
+        .context("serve scenario: straight drive")?
+        .expect("a disarmed serve drive always returns outputs");
+    let fdir = dir.join("faulted");
+    fault::arm(plan);
+    let armed = drive_serve(&base, &preset, &fdir, &deltas, &swap1, true, notes);
+    let stats = fault::disarm();
+    let _ = armed?; // armed drives swallow op errors; a real Err is harness plumbing
+    let recovered = drive_serve(&base, &preset, &fdir, &deltas, &swap1, false, notes)
+        .context("serve scenario: disarmed recovery drive")?
+        .expect("a disarmed serve drive always returns outputs");
+    if bits(&recovered.0) != bits(&straight.0) {
+        notes.push("serve: recovered probe outputs differ from the straight store".into());
+    }
+    if recovered.1 != straight.1 {
+        notes.push(format!(
+            "serve: recovered listing {:?} != straight {:?}",
+            recovered.1, straight.1
+        ));
+    }
+    Ok(stats)
+}
+
+fn bits(outs: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    outs.iter().map(|row| row.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+/// One deterministic pass over a serve store: register t0..t2, warm the
+/// LRU, hot-swap t1, delete t2, probe the survivors, list. When `armed`,
+/// per-op failures are expected — each is loudness-checked and the op
+/// stream continues (tenants whose registration failed are dropped from
+/// later batches so their absence is not mistaken for a quiet fault).
+/// Returns `None` only from an armed drive that could not finish.
+#[allow(clippy::type_complexity)]
+fn drive_serve(
+    base: &[Tensor],
+    preset: &PresetInfo,
+    store_dir: &Path,
+    deltas: &[TenantDelta],
+    swap1: &TenantDelta,
+    armed: bool,
+    notes: &mut Vec<String>,
+) -> Result<Option<(Vec<Vec<f32>>, Vec<String>)>> {
+    let mut server = match Server::new(base, preset, store_dir, 1 << 20, 1) {
+        Ok(s) => s,
+        Err(e) if armed => {
+            check_loud(notes, "serve open", &e);
+            return Ok(None);
+        }
+        Err(e) => return Err(e.context("opening serve store")),
+    };
+    let mut live: BTreeSet<String> = BTreeSet::new();
+    for d in deltas {
+        match server.hot_swap(d) {
+            Ok(()) => {
+                live.insert(d.tenant.clone());
+            }
+            Err(e) if armed => check_loud(notes, "serve register", &e),
+            Err(e) => return Err(e.context(format!("registering tenant '{}'", d.tenant))),
+        }
+    }
+    let warm: Vec<Request> = live
+        .iter()
+        .enumerate()
+        .map(|(i, t)| Request { tenant: t.clone(), seed: 1 + i as u64 })
+        .collect();
+    if !warm.is_empty() {
+        match server.handle_batch(&warm) {
+            Ok(_) => {}
+            Err(e) if armed => check_loud(notes, "serve warm batch", &e),
+            Err(e) => return Err(e.context("serve warm batch")),
+        }
+    }
+    match server.hot_swap(swap1) {
+        Ok(()) => {
+            live.insert(swap1.tenant.clone());
+        }
+        Err(e) if armed => check_loud(notes, "serve hot-swap", &e),
+        Err(e) => return Err(e.context("hot-swapping tenant 't1'")),
+    }
+    match server.delete_tenant("t2") {
+        Ok(_) => {
+            live.remove("t2");
+        }
+        Err(e) if armed => check_loud(notes, "serve delete", &e),
+        Err(e) => return Err(e.context("deleting tenant 't2'")),
+    }
+    let probe: Vec<Request> = live
+        .iter()
+        .enumerate()
+        .map(|(i, t)| Request { tenant: t.clone(), seed: 4 + i as u64 })
+        .collect();
+    let outs = match server.handle_batch(&probe) {
+        Ok(o) => o,
+        Err(e) if armed => {
+            check_loud(notes, "serve probe batch", &e);
+            return Ok(None);
+        }
+        Err(e) => return Err(e.context("serve probe batch")),
+    };
+    let listing = match server.store().list() {
+        Ok(l) => l,
+        Err(e) if armed => {
+            check_loud(notes, "serve list", &e);
+            return Ok(None);
+        }
+        Err(e) => return Err(e.context("listing the serve store")),
+    };
+    Ok(Some((outs, listing)))
+}
+
+// ---- post-recovery artifact scan ---------------------------------------
+
+/// Walk a schedule's directory after recovery: committed artifacts must
+/// parse, `.tmp` debris is swept (counted, then removed — the atomic
+/// writers guarantee temps are never load-bearing), and a surviving
+/// `.lease` is a failure.
+fn scan_artifacts(dir: &Path, notes: &mut Vec<String>, debris: &mut usize) -> Result<()> {
+    let mut entries: Vec<PathBuf> = Vec::new();
+    for entry in
+        std::fs::read_dir(dir).with_context(|| format!("scanning torture dir {dir:?}"))?
+    {
+        entries.push(entry?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            scan_artifacts(&p, notes, debris)?;
+            continue;
+        }
+        let name = p.file_name().map(|n| n.to_string_lossy().into_owned()).unwrap_or_default();
+        match p.extension().and_then(|e| e.to_str()).unwrap_or("") {
+            "tmp" => {
+                std::fs::remove_file(&p)
+                    .with_context(|| format!("sweeping temp debris {}", p.display()))?;
+                *debris += 1;
+            }
+            "lease" => notes.push(format!("torn: lease survived recovery: {}", p.display())),
+            "snap" | "delta" => {
+                if let Err(e) = Snapshot::read_from(&p) {
+                    notes.push(format!("torn: {} does not parse: {e:#}", p.display()));
+                }
+            }
+            "json" => match std::fs::read_to_string(&p) {
+                Ok(s) => {
+                    if Json::parse(&s).is_err() {
+                        notes.push(format!("torn: {} is not valid JSON", p.display()));
+                    }
+                }
+                Err(e) => notes.push(format!("torn: {} unreadable: {e}", p.display())),
+            },
+            _ if name == curve::CURVE_FILE => match std::fs::read(&p) {
+                Ok(b) => {
+                    if b.len() < 8 || &b[..8] != b"LIFTCRV1" {
+                        notes.push(format!("torn: {} lost its magic", p.display()));
+                    }
+                }
+                Err(e) => notes.push(format!("torn: {} unreadable: {e}", p.display())),
+            },
+            _ => {}
+        }
+    }
+    Ok(())
+}

@@ -15,10 +15,16 @@
 //!             [--tenants N] [--requests N] [--batch N] [--budget-kb KB]
 //!             [--rank R] [--seed S] [--workers W] [--dir D]
 //!             [--expect-resident N] [--swaps N] [--dump PATH]
+//!   torture   seeded crash/fault torture over ckpt + lease + serve:
+//!             [--schedules N] [--seed S] [--out D] [--faults N] [--horizon N]
 //!   eval      --preset <p> [--suite ...]   (pretrained model, no fine-tune)
 //!   exp       <id> [--fast] [--seeds N]    (regenerate a paper table/figure)
 //!   list-exp                                (show available experiment ids)
 //!   inspect                                 (manifest summary)
+//!
+//! Env: LIFT_FAULT_SCHEDULE / LIFT_FAULT_SEED arm the deterministic fault
+//! seam (`util::fault`) for any subcommand; LIFT_NO_FSYNC=1 disables the
+//! durability fsyncs around atomic writes (tests/smoke only).
 
 use std::path::PathBuf;
 
@@ -33,12 +39,16 @@ use lift::util::cli::Args;
 
 fn main() -> Result<()> {
     lift::util::logging::init();
+    // LIFT_FAULT_SCHEDULE (+ LIFT_FAULT_SEED) arms the deterministic
+    // fault-injection seam for ANY subcommand — a no-op when unset
+    lift::util::fault::arm_from_env()?;
     let args = Args::from_env();
     match args.cmd.as_str() {
         "pretrain" => cmd_pretrain(&args),
         "train" => cmd_train(&args),
         "matrix" => cmd_matrix(&args),
         "serve" => cmd_serve(&args),
+        "torture" => cmd_torture(&args),
         "eval" => cmd_eval(&args),
         "exp" => exp::run(&args),
         "list-exp" => {
@@ -100,6 +110,10 @@ USAGE:
                                   NFS) and they shard the campaign with no
                                   coordinator — live leases defer, expired
                                   ones are fenced-token taken over
+       [--defer-retries N]        re-poll deferred cells up to N times
+                                  (default 2) before reporting them; the
+                                  first re-poll is immediate, later ones
+                                  sleep half the lease TTL (≤10s)
   lift serve [--tenants 120] [--requests 256] [--budget-kb 4096]
                                   LIFT-as-a-service demo: one resident toy
                                   base, N per-tenant sparse deltas overlaid
@@ -114,6 +128,18 @@ USAGE:
        [--swaps 2]                hot-swap this many tenants mid-stream
        [--dump PATH]              write served outputs as hex lines (byte-
                                   for-byte comparable across budgets/workers)
+  lift torture [--schedules 8] [--seed 7] [--out results/torture]
+                                  replay seeded fault schedules (ENOSPC, EIO,
+                                  EACCES, short writes, crash-around-rename)
+                                  across train-resume, a 2-runner lease
+                                  campaign, and a serve register/swap/evict
+                                  mix; every schedule must recover to the
+                                  straight run bit-identically or fail
+                                  loudly by fault name, with zero torn
+                                  artifacts left behind. Same seed => byte-
+                                  identical report (torture_report.txt)
+       [--faults 3]               faults drawn per scenario schedule
+       [--horizon 40]             per-class call horizon faults land in
   lift eval --preset tiny --suite arith
   lift exp table2 [--fast]        regenerate a paper table/figure
   lift list-exp                   list experiment ids
@@ -282,6 +308,7 @@ fn cmd_matrix(args: &Args) -> Result<()> {
         .opt_str("runner-id")
         .unwrap_or_else(lift::exp::lease::LeaseCfg::default_runner_id);
     let lease_ttl = args.u64("lease-ttl", 600);
+    let defer_retries = args.usize("defer-retries", 2);
     // None = the per-preset default, so a multi-preset grid pretrains
     // each base for its own step count (the runs/ cache keys on it)
     let pt_steps: Option<usize> = args.opt_str("pretrain-steps").map(|v| {
@@ -330,9 +357,14 @@ fn cmd_matrix(args: &Args) -> Result<()> {
         Some(lift::exp::lease::LeaseCfg::new(&runner_id, lease_ttl))
     };
     let report = if toy {
-        matrix::run_matrix_with(&out, &cells, workers, lease_cfg.as_ref(), |spec, ckpt_dir| {
-            matrix::run_toy_cell_in(spec, ckpt_dir, ckpt_every, ckpt_keep, 1)
-        })?
+        matrix::run_matrix_retry(
+            &out,
+            &cells,
+            workers,
+            lease_cfg.as_ref(),
+            defer_retries,
+            |spec, ckpt_dir| matrix::run_toy_cell_in(spec, ckpt_dir, ckpt_every, ckpt_keep, 1),
+        )?
     } else {
         // pre-warm each preset's pretrained base sequentially so
         // parallel cells hit the runs/ checkpoint cache read-only, and
@@ -358,9 +390,14 @@ fn cmd_matrix(args: &Args) -> Result<()> {
             retention: rcfg,
             base_source,
         };
-        matrix::run_matrix_with(&out, &cells, workers, lease_cfg.as_ref(), |spec, ckpt_dir| {
-            matrix::run_real_cell_in(spec, ckpt_dir, &rc)
-        })?
+        matrix::run_matrix_retry(
+            &out,
+            &cells,
+            workers,
+            lease_cfg.as_ref(),
+            defer_retries,
+            |spec, ckpt_dir| matrix::run_real_cell_in(spec, ckpt_dir, &rc),
+        )?
     };
     println!(
         "matrix: {} ran, {} skipped, {} deferred, {} failed (out: {})",
@@ -403,6 +440,34 @@ fn cmd_matrix(args: &Args) -> Result<()> {
     println!("\n{table}");
     println!("summary written to {}", summary_path.display());
     anyhow::ensure!(report.failed.is_empty(), "{} matrix cells failed", report.failed.len());
+    Ok(())
+}
+
+/// Seeded crash/fault torture harness (`exp::torture`): replay N fault
+/// schedules across train-resume, a 2-runner lease campaign, and a
+/// serve register/swap/evict mix, asserting per schedule that recovery
+/// reproduces the straight run bit-identically, that every injected
+/// fault was retried/recovered or surfaced loudly by name, and that no
+/// torn artifact survives. The report is deterministic: two runs with
+/// the same `--seed` produce byte-identical `torture_report.txt`.
+fn cmd_torture(args: &Args) -> Result<()> {
+    use lift::exp::torture::{run_torture, TortureCfg};
+    let cfg = TortureCfg {
+        schedules: args.usize("schedules", 8),
+        seed: args.u64("seed", 7),
+        out: PathBuf::from(args.str("out", "results/torture")),
+        faults: args.usize("faults", 3),
+        horizon: args.u64("horizon", 40),
+    };
+    args.finish()?;
+    let report = run_torture(&cfg)?;
+    print!("{}", report.text);
+    anyhow::ensure!(
+        report.failed.is_empty(),
+        "{} torture schedule(s) failed: {}",
+        report.failed.len(),
+        report.failed.join(", ")
+    );
     Ok(())
 }
 

@@ -159,7 +159,7 @@ impl DeltaStore {
     /// Open (creating the directory); every later register/load checks
     /// against `base_digest`.
     pub fn open(dir: &Path, base_digest: u64) -> Result<DeltaStore> {
-        std::fs::create_dir_all(dir)
+        crate::util::fault::create_dir_all(dir)
             .with_context(|| format!("creating delta store dir {}", dir.display()))?;
         Ok(DeltaStore { dir: dir.to_path_buf(), base_digest })
     }
@@ -195,7 +195,7 @@ impl DeltaStore {
 
     pub fn load(&self, tenant: &str) -> Result<TenantDelta> {
         let path = self.delta_path(tenant)?;
-        let bytes = std::fs::read(&path).with_context(|| {
+        let bytes = crate::util::fault::read(&path).with_context(|| {
             format!("no delta registered for tenant '{tenant}' ({})", path.display())
         })?;
         let delta = TenantDelta::from_bytes(&bytes, self.base_digest)
@@ -212,24 +212,42 @@ impl DeltaStore {
     /// Remove a tenant's delta; `Ok(false)` if it was never registered.
     pub fn delete(&self, tenant: &str) -> Result<bool> {
         let path = self.delta_path(tenant)?;
-        match std::fs::remove_file(&path) {
+        match crate::util::fault::remove_file(&path) {
             Ok(()) => Ok(true),
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(false),
             Err(e) => Err(e).with_context(|| format!("deleting {}", path.display())),
         }
     }
 
-    /// Registered tenant names, sorted.
+    /// Registered tenant names, sorted. Non-`.delta` droppings — most
+    /// importantly the orphaned `<tenant>.tmp` a crash mid-`register`
+    /// leaves behind (the rename never happened, so the committed delta
+    /// is whatever was there before) — are skipped WITH a warning
+    /// naming the file, never silently and never fatally: one crashed
+    /// registration must not take the store down.
     pub fn list(&self) -> Result<Vec<String>> {
         let mut out = Vec::new();
         for entry in std::fs::read_dir(&self.dir)
             .with_context(|| format!("listing {}", self.dir.display()))?
         {
             let path = entry?.path();
-            if path.extension().and_then(|e| e.to_str()) == Some("delta") {
+            if path.is_dir() {
+                log::warn!("delta store: ignoring subdirectory {}", path.display());
+                continue;
+            }
+            let ext = path.extension().and_then(|e| e.to_str());
+            if ext == Some("delta") {
                 if let Some(stem) = path.file_stem().and_then(|s| s.to_str()) {
                     out.push(stem.to_string());
                 }
+            } else if ext == Some("tmp") {
+                log::warn!(
+                    "delta store: ignoring orphaned temp file {} (crashed register; the \
+                     committed delta, if any, is unaffected — delete the .tmp to silence this)",
+                    path.display()
+                );
+            } else {
+                log::warn!("delta store: ignoring non-delta file {}", path.display());
             }
         }
         out.sort();

@@ -50,6 +50,29 @@
 //! (`intra = (workers / n_groups).max(1)` chunks per group). Each request
 //! is a pure function of `(base, delta, seed)`, so 1-worker and N-worker
 //! runs are bit-identical per the repo's standing determinism contract.
+//!
+//! # Durability contract
+//!
+//! The [`DeltaStore`] inherits the checkpoint suite's atomic-write path
+//! (`ckpt::write_atomic`: temp + fsync + rename + dir fsync — see the
+//! `ckpt` module doc), so per tenant the store only ever holds either the
+//! previous complete delta or the new complete delta:
+//!
+//! - A crash mid-`register` leaves an orphaned `<tenant>.tmp` next to the
+//!   (untouched) committed delta. [`DeltaStore::list`] skips such
+//!   droppings with a warning naming the file; `load` of the tenant still
+//!   returns the pre-crash version. The store never needs repair to stay
+//!   usable.
+//! - Transient read/write errors (`EINTR`/`EAGAIN`) are retried with
+//!   bounded backoff by the `util::fault` IO seam; permanent errors
+//!   (`ENOSPC`, `EIO`, `EACCES`) surface loudly with the tenant and path
+//!   named — a delta that cannot be read is an error, never treated as
+//!   "not registered" unless the file is genuinely absent.
+//! - Corrupt bytes (CRC/magic/digest failures) are refused at load with
+//!   the reason named; the file is left in place for inspection.
+//!
+//! `lift torture` replays seeded fault schedules over exactly this
+//! register/swap/evict mix to keep the contract honest.
 
 pub mod batch;
 pub mod delta;

@@ -1,0 +1,627 @@
+//! Deterministic, seeded fault injection over every durable-state IO
+//! call site — the failpoint seam the crash/fault torture harness
+//! (`exp::torture`, `lift torture`) replays schedules through.
+//!
+//! Every module that persists state the system must survive losing —
+//! snapshots (`ckpt::write_atomic` / `prune_snapshots` /
+//! `Snapshot::read_from`, and the `AsyncSnapshotWriter` thread on top),
+//! the curve sidecar prefix-rewrite (`ckpt::curve`), the tenant delta
+//! store (`serve::DeltaStore`), cell leases (`exp::lease`) and the
+//! outcome ledger (`exp::matrix`) — routes its filesystem calls through
+//! the free functions here ([`write`], [`create_new`], [`rename`],
+//! [`read`], [`read_to_string`], [`remove_file`], [`create_dir_all`],
+//! [`sync_file_at`], [`sync_dir`]) instead of `std::fs` directly.
+//!
+//! # Passthrough by default
+//!
+//! Nothing is injected unless a [`FaultPlan`] is [`arm`]ed: the seam's
+//! fast path is one relaxed atomic load and then the verbatim `std::fs`
+//! call, so release hot paths pay nothing measurable. Arming is
+//! process-global (the `AsyncSnapshotWriter` thread and pool workers
+//! must see the same schedule), so armed phases belong in dedicated,
+//! serialized test binaries — never in concurrent unit tests.
+//!
+//! # Schedules
+//!
+//! A plan maps `(op class, per-class call index)` to a [`FaultKind`]:
+//! the Nth call of a class fails with the planned fault, all other
+//! calls pass through. Plans come from [`FaultPlan::seeded`] (a seeded
+//! RNG draw — same seed, same schedule, forever) or [`FaultPlan::parse`]
+//! (`"write:enospc@3,rename:crash-before@0"` or `"auto:N[:horizon]"`,
+//! the `LIFT_FAULT_SCHEDULE` syntax; [`arm_from_env`] wires it to the
+//! CLI together with `LIFT_FAULT_SEED`).
+//!
+//! # Error classification — transient vs permanent
+//!
+//! Injected (and real) errors of kind `Interrupted`/`WouldBlock` are
+//! EINTR/EAGAIN-style *transient*: the seam retries them in place with
+//! bounded backoff ([`MAX_RETRIES`], 2/4/8/16 ms) and counts the
+//! retries. Everything else — ENOSPC, EIO, EACCES, short writes, crash
+//! faults — is *permanent* and propagates to the caller untouched, per
+//! the repo's "Unreadable ≠ Corrupt" doctrine: an IO failure proves
+//! nothing about the bytes, so the caller must surface it loudly, never
+//! fold it into "missing" or "claimable". Every injected error's
+//! message carries the [`INJECTED_MARK`] marker plus the fault's name,
+//! class, index, and path, so torture assertions can tell a planned
+//! fault from an environmental one.
+//!
+//! # Crash faults
+//!
+//! `crash-before` / `crash-after` (rename class only) simulate dying in
+//! the atomic-commit window *in process*: `crash-before` skips the
+//! rename (the temp file is left behind, the destination untouched) and
+//! `crash-after` performs the rename and THEN reports failure (the
+//! commit landed but the caller believes it did not — recovery must be
+//! idempotent). Both then surface as permanent errors; a real `kill -9`
+//! differs only in that no error unwinds, which the torture harness's
+//! recovery-rerun covers the same way.
+//!
+//! # Fsync gate
+//!
+//! [`sync_file_at`]/[`sync_dir`] implement the durability half of
+//! `ckpt::write_atomic` (fsync file + parent dir around the rename).
+//! `LIFT_NO_FSYNC=1` turns both into no-ops for tests and tmpfs smoke
+//! runs; the default is fsync ON.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+/// Marker every injected error message carries (the torture harness's
+/// loud-failure assertion greps observed errors for it).
+pub const INJECTED_MARK: &str = "injected fault";
+
+/// Bounded-backoff retry cap for transient (EINTR/EAGAIN-class) errors.
+pub const MAX_RETRIES: u32 = 4;
+
+/// The seam's operation classes; a plan addresses faults per class by
+/// the class's own call counter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OpClass {
+    /// `write` / `create_new` payload writes.
+    Write,
+    /// `rename` commits (the atomic-write rename).
+    Rename,
+    /// `read` / `read_to_string`.
+    Read,
+    /// `remove_file` (retention pruning, lease release, delta delete).
+    Remove,
+    /// `sync_file_at` / `sync_dir` fsyncs.
+    Sync,
+    /// `create_dir_all`.
+    Dir,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 6] = [
+        OpClass::Write,
+        OpClass::Rename,
+        OpClass::Read,
+        OpClass::Remove,
+        OpClass::Sync,
+        OpClass::Dir,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Write => "write",
+            OpClass::Rename => "rename",
+            OpClass::Read => "read",
+            OpClass::Remove => "remove",
+            OpClass::Sync => "sync",
+            OpClass::Dir => "dir",
+        }
+    }
+
+    fn parse(s: &str) -> Option<OpClass> {
+        OpClass::ALL.iter().copied().find(|c| c.name() == s)
+    }
+
+    /// Fault kinds that can physically occur on this class (a seeded
+    /// plan only draws compatible kinds; `parse` rejects the rest).
+    pub fn kinds(self) -> &'static [FaultKind] {
+        use FaultKind::*;
+        match self {
+            OpClass::Write => &[Enospc, Eio, Eacces, Eintr, ShortWrite],
+            OpClass::Rename => &[Eio, Eacces, Eintr, CrashBeforeRename, CrashAfterRename],
+            OpClass::Read => &[Eio, Eacces, Eintr, Eagain],
+            OpClass::Remove => &[Eio, Eacces, Eintr],
+            OpClass::Sync => &[Enospc, Eio, Eintr],
+            OpClass::Dir => &[Enospc, Eacces, Eintr],
+        }
+    }
+}
+
+/// What an armed call site fails with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Permanent: disk full.
+    Enospc,
+    /// Permanent: device-level IO error.
+    Eio,
+    /// Permanent: permission denied.
+    Eacces,
+    /// Transient: interrupted syscall — the seam retries it.
+    Eintr,
+    /// Transient: would-block — the seam retries it.
+    Eagain,
+    /// Permanent: half the payload reaches the file, then failure (a
+    /// torn temp is left on disk).
+    ShortWrite,
+    /// Permanent, rename only: die before the rename — temp left
+    /// behind, destination untouched.
+    CrashBeforeRename,
+    /// Permanent, rename only: the rename LANDS, then failure is
+    /// reported — recovery must tolerate "it committed after all".
+    CrashAfterRename,
+}
+
+impl FaultKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Enospc => "enospc",
+            FaultKind::Eio => "eio",
+            FaultKind::Eacces => "eacces",
+            FaultKind::Eintr => "eintr",
+            FaultKind::Eagain => "eagain",
+            FaultKind::ShortWrite => "short",
+            FaultKind::CrashBeforeRename => "crash-before",
+            FaultKind::CrashAfterRename => "crash-after",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultKind> {
+        use FaultKind::*;
+        [Enospc, Eio, Eacces, Eintr, Eagain, ShortWrite, CrashBeforeRename, CrashAfterRename]
+            .into_iter()
+            .find(|k| k.name() == s)
+    }
+
+    /// EINTR/EAGAIN-class faults are retried in place; everything else
+    /// propagates loudly.
+    pub fn is_transient(self) -> bool {
+        matches!(self, FaultKind::Eintr | FaultKind::Eagain)
+    }
+
+    fn io_kind(self) -> io::ErrorKind {
+        match self {
+            // stable-ErrorKind stand-ins: ENOSPC/EIO/short/crash map to
+            // Other (the message names the precise fault)
+            FaultKind::Enospc
+            | FaultKind::Eio
+            | FaultKind::ShortWrite
+            | FaultKind::CrashBeforeRename
+            | FaultKind::CrashAfterRename => io::ErrorKind::Other,
+            FaultKind::Eacces => io::ErrorKind::PermissionDenied,
+            FaultKind::Eintr => io::ErrorKind::Interrupted,
+            FaultKind::Eagain => io::ErrorKind::WouldBlock,
+        }
+    }
+}
+
+/// A deterministic fault schedule: the `(class, index)`-th call of each
+/// op class fails with the mapped kind.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: BTreeMap<(OpClass, u64), FaultKind>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Draw `n` distinct `(class, idx < horizon)` sites with
+    /// class-compatible kinds from a seeded RNG. Same `(seed, n,
+    /// horizon)` → byte-identical plan, forever — the torture
+    /// determinism contract starts here.
+    pub fn seeded(seed: u64, n: usize, horizon: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA_0175EED);
+        let mut faults = BTreeMap::new();
+        let mut attempts = 0usize;
+        while faults.len() < n && attempts < n * 32 + 64 {
+            attempts += 1;
+            let class = OpClass::ALL[rng.below(OpClass::ALL.len())];
+            let idx = rng.below(horizon.max(1) as usize) as u64;
+            let kinds = class.kinds();
+            let kind = kinds[rng.below(kinds.len())];
+            faults.entry((class, idx)).or_insert(kind);
+        }
+        FaultPlan { faults }
+    }
+
+    /// Parse the `LIFT_FAULT_SCHEDULE` syntax: either a comma list of
+    /// `class:kind@idx` entries (`"write:enospc@3,rename:crash-before@0"`)
+    /// or `"auto:N[:horizon]"` — N seeded faults over the first
+    /// `horizon` (default 64) calls per class, drawn from `seed`.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let spec = spec.trim();
+        if let Some(rest) = spec.strip_prefix("auto:") {
+            let mut parts = rest.splitn(2, ':');
+            let n: usize = parts
+                .next()
+                .unwrap_or("")
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad fault schedule '{spec}': auto:N expects a count"))?;
+            let horizon: u64 = match parts.next() {
+                Some(h) => h
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad fault schedule '{spec}': horizon must be an integer"))?,
+                None => 64,
+            };
+            return Ok(FaultPlan::seeded(seed, n, horizon));
+        }
+        let mut faults = BTreeMap::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (class_kind, idx) = entry.split_once('@').ok_or_else(|| {
+                anyhow::anyhow!("bad fault entry '{entry}': expected class:kind@idx")
+            })?;
+            let (class_s, kind_s) = class_kind.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("bad fault entry '{entry}': expected class:kind@idx")
+            })?;
+            let class = OpClass::parse(class_s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "bad fault entry '{entry}': unknown class '{class_s}' (one of write, \
+                     rename, read, remove, sync, dir)"
+                )
+            })?;
+            let kind = FaultKind::parse(kind_s)
+                .ok_or_else(|| anyhow::anyhow!("bad fault entry '{entry}': unknown kind '{kind_s}'"))?;
+            anyhow::ensure!(
+                class.kinds().contains(&kind),
+                "bad fault entry '{entry}': kind '{kind_s}' cannot occur on class '{class_s}'"
+            );
+            let idx: u64 = idx
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad fault entry '{entry}': index must be an integer"))?;
+            faults.insert((class, idx), kind);
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Render the plan back in `parse` syntax (sorted — deterministic),
+    /// for reports and logs.
+    pub fn spec(&self) -> String {
+        self.faults
+            .iter()
+            .map(|(&(class, idx), kind)| format!("{}:{}@{idx}", class.name(), kind.name()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// What an armed phase did, returned by [`disarm`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Planned faults that actually fired (a plan site past the op
+    /// stream's end never fires).
+    pub injected: usize,
+    /// Transient errors absorbed by the bounded-backoff retry loop.
+    pub retried: usize,
+}
+
+struct Armed {
+    plan: FaultPlan,
+    counters: BTreeMap<OpClass, u64>,
+    stats: FaultStats,
+}
+
+// Fast-path gate: a single relaxed load keeps the disarmed seam at
+// passthrough cost; the mutex is only touched while a plan is armed.
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static STATE: Mutex<Option<Armed>> = Mutex::new(None);
+
+fn state_lock() -> std::sync::MutexGuard<'static, Option<Armed>> {
+    STATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm a fault plan process-wide; call counters and stats start at
+/// zero. Arming replaces any previously armed plan.
+pub fn arm(plan: FaultPlan) {
+    let mut st = state_lock();
+    *st = Some(Armed {
+        plan,
+        counters: BTreeMap::new(),
+        stats: FaultStats::default(),
+    });
+    ACTIVE.store(true, Ordering::SeqCst);
+}
+
+/// Disarm and return what the armed phase injected/retried; a no-op
+/// (default stats) when nothing was armed.
+pub fn disarm() -> FaultStats {
+    let mut st = state_lock();
+    ACTIVE.store(false, Ordering::SeqCst);
+    st.take().map(|a| a.stats).unwrap_or_default()
+}
+
+pub fn is_armed() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+/// Arm from `LIFT_FAULT_SCHEDULE` (+ `LIFT_FAULT_SEED`, default 0) if
+/// set; returns whether a plan was armed. The CLI calls this once at
+/// startup so any subcommand can run under an injected schedule.
+pub fn arm_from_env() -> Result<bool> {
+    let Ok(spec) = std::env::var("LIFT_FAULT_SCHEDULE") else {
+        return Ok(false);
+    };
+    if spec.trim().is_empty() {
+        return Ok(false);
+    }
+    let seed = std::env::var("LIFT_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let plan = FaultPlan::parse(&spec, seed)?;
+    log::info!("fault injection armed from env: {}", plan.spec());
+    arm(plan);
+    Ok(true)
+}
+
+/// Whether the durability fsyncs are live (`LIFT_NO_FSYNC=1` disables
+/// them for tests/smoke runs; read once per process).
+pub fn fsync_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| std::env::var("LIFT_NO_FSYNC").map(|v| v != "1").unwrap_or(true))
+}
+
+/// Consume this class's next call slot; `Some(kind)` if the plan
+/// scheduled a fault there. Each retry attempt consumes its own slot,
+/// so a schedule can hit a retry too — still deterministically.
+fn take_fault(class: OpClass) -> Option<FaultKind> {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut st = state_lock();
+    let armed = st.as_mut()?;
+    let ctr = armed.counters.entry(class).or_insert(0);
+    let idx = *ctr;
+    *ctr += 1;
+    let hit = armed.plan.faults.get(&(class, idx)).copied();
+    if hit.is_some() {
+        armed.stats.injected += 1;
+    }
+    hit
+}
+
+fn note_retry() {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(armed) = state_lock().as_mut() {
+        armed.stats.retried += 1;
+    }
+}
+
+fn injected(kind: FaultKind, class: OpClass, path: &Path) -> io::Error {
+    io::Error::new(
+        kind.io_kind(),
+        format!(
+            "{INJECTED_MARK}: {} during {} on {}",
+            kind.name(),
+            class.name(),
+            path.display()
+        ),
+    )
+}
+
+fn is_transient_err(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::Interrupted | io::ErrorKind::WouldBlock)
+}
+
+/// The retry loop every seam op runs inside: consult the plan, run the
+/// op, absorb transient errors with bounded backoff, propagate the
+/// rest.
+fn run_op<T>(class: OpClass, mut op: impl FnMut(Option<FaultKind>) -> io::Result<T>) -> io::Result<T> {
+    let mut attempt: u32 = 0;
+    loop {
+        match op(take_fault(class)) {
+            Ok(v) => return Ok(v),
+            Err(e) if is_transient_err(&e) && attempt < MAX_RETRIES => {
+                note_retry();
+                std::thread::sleep(std::time::Duration::from_millis(2u64 << attempt));
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// `std::fs::write` through the seam ([`OpClass::Write`]). A planned
+/// `short` fault writes half the payload, then fails — the torn temp
+/// the atomic-commit pattern must make harmless.
+pub fn write(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    run_op(OpClass::Write, |fault| match fault {
+        None => std::fs::write(path, bytes),
+        Some(FaultKind::ShortWrite) => {
+            let _ = std::fs::write(path, &bytes[..bytes.len() / 2]);
+            Err(injected(FaultKind::ShortWrite, OpClass::Write, path))
+        }
+        Some(k) => Err(injected(k, OpClass::Write, path)),
+    })
+}
+
+/// `O_CREAT|O_EXCL` create + full payload write ([`OpClass::Write`]) —
+/// the lease claim's winner-picking primitive. A `short` fault creates
+/// the file but tears the payload.
+pub fn create_new(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    run_op(OpClass::Write, |fault| {
+        let short = match fault {
+            None => false,
+            Some(FaultKind::ShortWrite) => true,
+            Some(k) => return Err(injected(k, OpClass::Write, path)),
+        };
+        let mut f = std::fs::OpenOptions::new().write(true).create_new(true).open(path)?;
+        use std::io::Write as _;
+        if short {
+            let _ = f.write_all(&bytes[..bytes.len() / 2]);
+            return Err(injected(FaultKind::ShortWrite, OpClass::Write, path));
+        }
+        f.write_all(bytes)
+    })
+}
+
+/// `std::fs::rename` through the seam ([`OpClass::Rename`]); the only
+/// class where the crash faults live (see the module doc).
+pub fn rename(from: &Path, to: &Path) -> io::Result<()> {
+    run_op(OpClass::Rename, |fault| match fault {
+        None => std::fs::rename(from, to),
+        Some(FaultKind::CrashBeforeRename) => {
+            Err(injected(FaultKind::CrashBeforeRename, OpClass::Rename, to))
+        }
+        Some(FaultKind::CrashAfterRename) => {
+            std::fs::rename(from, to)?;
+            Err(injected(FaultKind::CrashAfterRename, OpClass::Rename, to))
+        }
+        Some(k) => Err(injected(k, OpClass::Rename, to)),
+    })
+}
+
+/// `std::fs::read` through the seam ([`OpClass::Read`]).
+pub fn read(path: &Path) -> io::Result<Vec<u8>> {
+    run_op(OpClass::Read, |fault| match fault {
+        None => std::fs::read(path),
+        Some(k) => Err(injected(k, OpClass::Read, path)),
+    })
+}
+
+/// `std::fs::read_to_string` through the seam ([`OpClass::Read`]).
+pub fn read_to_string(path: &Path) -> io::Result<String> {
+    run_op(OpClass::Read, |fault| match fault {
+        None => std::fs::read_to_string(path),
+        Some(k) => Err(injected(k, OpClass::Read, path)),
+    })
+}
+
+/// `std::fs::remove_file` through the seam ([`OpClass::Remove`]).
+pub fn remove_file(path: &Path) -> io::Result<()> {
+    run_op(OpClass::Remove, |fault| match fault {
+        None => std::fs::remove_file(path),
+        Some(k) => Err(injected(k, OpClass::Remove, path)),
+    })
+}
+
+/// `std::fs::create_dir_all` through the seam ([`OpClass::Dir`]).
+pub fn create_dir_all(path: &Path) -> io::Result<()> {
+    run_op(OpClass::Dir, |fault| match fault {
+        None => std::fs::create_dir_all(path),
+        Some(k) => Err(injected(k, OpClass::Dir, path)),
+    })
+}
+
+/// Reopen `path` and fsync its data + metadata ([`OpClass::Sync`]);
+/// no-op under `LIFT_NO_FSYNC=1`.
+pub fn sync_file_at(path: &Path) -> io::Result<()> {
+    if !fsync_enabled() {
+        return Ok(());
+    }
+    run_op(OpClass::Sync, |fault| match fault {
+        None => std::fs::File::open(path)?.sync_all(),
+        Some(k) => Err(injected(k, OpClass::Sync, path)),
+    })
+}
+
+/// Fsync a directory so a just-renamed entry survives power loss
+/// ([`OpClass::Sync`]); no-op under `LIFT_NO_FSYNC=1` and on platforms
+/// where directories cannot be opened for sync.
+pub fn sync_dir(dir: &Path) -> io::Result<()> {
+    if !fsync_enabled() {
+        return Ok(());
+    }
+    run_op(OpClass::Sync, |fault| {
+        if let Some(k) = fault {
+            return Err(injected(k, OpClass::Sync, dir));
+        }
+        if cfg!(unix) {
+            std::fs::File::open(dir)?.sync_all()
+        } else {
+            Ok(())
+        }
+    })
+}
+
+// NOTE: unit tests here stay PURE (plan construction only). Arming is
+// process-global, and the lib test binary runs ckpt/lease/serve unit
+// tests concurrently — an armed plan would inject into them. Armed
+// coverage lives in the dedicated, serialized `rust/tests/torture.rs`.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_class_compatible() {
+        let a = FaultPlan::seeded(7, 5, 40);
+        let b = FaultPlan::seeded(7, 5, 40);
+        assert_eq!(a, b, "same seed must give the same plan");
+        assert_eq!(a.faults.len(), 5);
+        for (&(class, idx), kind) in &a.faults {
+            assert!(idx < 40);
+            assert!(class.kinds().contains(kind), "{}: {}", class.name(), kind.name());
+        }
+        let c = FaultPlan::seeded(8, 5, 40);
+        assert_ne!(a, c, "different seed, different plan");
+        // render/parse closes the loop
+        let back = FaultPlan::parse(&a.spec(), 0).unwrap();
+        assert_eq!(a, back, "spec() must round-trip through parse()");
+    }
+
+    #[test]
+    fn parse_accepts_lists_and_auto_and_rejects_nonsense() {
+        let p = FaultPlan::parse("write:enospc@3, rename:crash-before@0", 0).unwrap();
+        assert_eq!(p.faults.len(), 2);
+        assert_eq!(p.faults[&(OpClass::Write, 3)], FaultKind::Enospc);
+        assert_eq!(p.faults[&(OpClass::Rename, 0)], FaultKind::CrashBeforeRename);
+        let auto = FaultPlan::parse("auto:4:32", 9).unwrap();
+        assert_eq!(auto, FaultPlan::seeded(9, 4, 32));
+        for bad in [
+            "write:enospc",        // no index
+            "warp:eio@1",          // unknown class
+            "write:frobnicate@1",  // unknown kind
+            "read:crash-before@1", // kind incompatible with class
+            "auto:x",              // bad count
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "accepted '{bad}'");
+        }
+        assert!(FaultPlan::parse("", 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn transience_classification_matches_the_doctrine() {
+        assert!(FaultKind::Eintr.is_transient());
+        assert!(FaultKind::Eagain.is_transient());
+        for k in [
+            FaultKind::Enospc,
+            FaultKind::Eio,
+            FaultKind::Eacces,
+            FaultKind::ShortWrite,
+            FaultKind::CrashBeforeRename,
+            FaultKind::CrashAfterRename,
+        ] {
+            assert!(!k.is_transient(), "{} must be permanent", k.name());
+        }
+        // the io kinds the retry loop keys on
+        assert!(is_transient_err(&injected(FaultKind::Eintr, OpClass::Read, Path::new("x"))));
+        assert!(!is_transient_err(&injected(FaultKind::Eio, OpClass::Read, Path::new("x"))));
+    }
+
+    #[test]
+    fn injected_errors_are_loudly_named() {
+        let e = injected(FaultKind::Enospc, OpClass::Write, Path::new("/tmp/x.snap"));
+        let msg = e.to_string();
+        assert!(msg.contains(INJECTED_MARK), "{msg}");
+        assert!(msg.contains("enospc"), "{msg}");
+        assert!(msg.contains("write"), "{msg}");
+        assert!(msg.contains("/tmp/x.snap"), "{msg}");
+        assert_eq!(
+            injected(FaultKind::Eacces, OpClass::Read, Path::new("y")).kind(),
+            io::ErrorKind::PermissionDenied
+        );
+    }
+}

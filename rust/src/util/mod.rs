@@ -10,6 +10,7 @@ pub mod bench;
 pub mod cli;
 pub mod csv;
 pub mod eigh;
+pub mod fault;
 pub mod gemm;
 pub mod json;
 pub mod logging;

@@ -345,6 +345,45 @@ fn unreadable_outcome_aborts_instead_of_recomputing() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+#[test]
+fn unreadable_lease_defers_the_cell_instead_of_claiming_over_it() {
+    // the lease-side twin of unreadable_outcome_aborts: a lease file
+    // whose BYTES cannot be read (EISDIR via a directory at the path,
+    // standing in for EACCES/EIO) proves nothing about the holder. The
+    // old `.ok()?` fold read it as "no lease" and claimed the cell —
+    // racing a possibly-live runner. It must defer loudly instead.
+    let dir = tmpdir("unreadable_lease");
+    let cells = toy_cells();
+    let blocked = cells[0].id();
+    std::fs::create_dir_all(lease::lease_path(&dir, &blocked)).unwrap();
+    // the direct claim API names the distinct state
+    match lease::claim(&dir, &blocked, &LeaseCfg::new("me", 300)).unwrap() {
+        Claim::Unreadable { why } => assert!(why.contains(&blocked), "{why}"),
+        other => panic!("expected Claim::Unreadable, got {other:?}"),
+    }
+    // checked read errors; the permissive view folds to None for renderers
+    assert!(lease::read_lease_checked(&dir, &blocked).is_err());
+    assert!(lease::read_lease(&dir, &blocked).is_none());
+    // a campaign defers the blocked cell and still lands all the others
+    let computed = AtomicUsize::new(0);
+    let cfg = LeaseCfg::new("me", 300);
+    let report = matrix::run_matrix_with(&dir, &cells, 1, Some(&cfg), |spec, ckpt_dir| {
+        computed.fetch_add(1, Ordering::SeqCst);
+        matrix::run_toy_cell_in(spec, ckpt_dir, 0, 0, 1)
+    })
+    .unwrap();
+    assert_eq!(computed.load(Ordering::SeqCst), cells.len() - 1);
+    assert_eq!(report.deferred.len(), 1, "{:?}", report.deferred);
+    assert_eq!(report.deferred[0].0, blocked);
+    assert!(report.deferred[0].1.contains("lease unreadable"), "{:?}", report.deferred);
+    assert!(report.failed.is_empty(), "{:?}", report.failed);
+    assert!(
+        matrix::read_outcome(&dir, &blocked).is_none(),
+        "the blocked cell must not have been computed over an unreadable lease"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 // ---- direct claim API over a campaign dir --------------------------------
 
 #[test]

@@ -186,6 +186,54 @@ fn spec_digest_mismatch_is_refused() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// A register that crashed between temp-write and rename leaves an
+/// orphaned `.tmp` in the store dir. The store must keep working: list()
+/// skips the orphan (and any other non-delta droppings) with a warning
+/// instead of erroring, committed tenants still load, and a fresh
+/// register over the same tenant consumes the orphan (satellite 2).
+#[test]
+fn crashed_register_leaves_the_store_usable() {
+    let base = toy_params(17);
+    let preset = toy_preset();
+    let dg = base_digest(&base);
+    let dir = tmpdir("crashed_register");
+    {
+        let store = DeltaStore::open(&dir, dg).unwrap();
+        store.register(&synth_delta(&base, "alice", dg, 2, 1)).unwrap();
+        store.register(&synth_delta(&base, "bob", dg, 2, 2)).unwrap();
+    }
+    // simulate the debris a crash mid-register leaves behind: a torn temp
+    // for a brand-new tenant, a stray non-delta file, and a subdirectory
+    std::fs::write(dir.join("carol.tmp"), b"torn half-written delta").unwrap();
+    std::fs::write(dir.join("notes.txt"), b"not a delta").unwrap();
+    std::fs::create_dir_all(dir.join("subdir")).unwrap();
+
+    let store = DeltaStore::open(&dir, dg).unwrap();
+    assert_eq!(
+        store.list().unwrap(),
+        vec!["alice", "bob"],
+        "droppings must be skipped, committed tenants listed"
+    );
+    // committed deltas are untouched and load cleanly
+    assert_eq!(store.load("alice").unwrap().tenant, "alice");
+    assert_eq!(store.load("bob").unwrap().tenant, "bob");
+    // the crashed tenant never committed: loading it is a plain miss
+    assert!(store.load("carol").is_err(), "a torn temp must not serve");
+    // a retried register lands and replaces the orphan as a side effect
+    store.register(&synth_delta(&base, "carol", dg, 2, 3)).unwrap();
+    assert!(!dir.join("carol.tmp").exists(), "retried register consumes the orphan");
+    assert_eq!(store.list().unwrap(), vec!["alice", "bob", "carol"]);
+    // a server over the littered dir comes up and serves normally
+    let mut server = Server::new(&base, &preset, &dir, usize::MAX, 1).unwrap();
+    let reqs: Vec<Request> = ["alice", "bob", "carol"]
+        .iter()
+        .map(|t| Request { tenant: (*t).into(), seed: 5 })
+        .collect();
+    let outs = server.handle_batch(&reqs).unwrap();
+    assert_eq!(outs.len(), 3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Register-as-update: re-registering a tenant replaces its delta
 /// atomically, and delete_tenant removes both file and resident view.
 #[test]

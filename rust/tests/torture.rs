@@ -1,0 +1,245 @@
+//! Armed fault-injection tests: the only place in the test suite that
+//! arms `util::fault` plans. Arming is process-global, so every test
+//! here holds a static mutex — they run serialized even under the
+//! default parallel test runner, and a panicking test cannot leak its
+//! plan into the next one (the gate disarms on entry).
+
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+use lift::ckpt::{self, curve, writer::AsyncSnapshotWriter, Snapshot};
+use lift::exp::torture::{run_torture, TortureCfg};
+use lift::util::fault::{self, FaultPlan};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn armed_test() -> MutexGuard<'static, ()> {
+    let g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    fault::disarm(); // a prior panicking test must not leak its plan
+    g
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lift_torture_test_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn snap_bytes(fill: u8) -> Vec<u8> {
+    let mut s = Snapshot::new();
+    s.add("meta", vec![fill; 32]);
+    s.to_bytes()
+}
+
+// ---- curve sidecar prefix-rewrite under faults (satellite 4) -----------
+
+#[test]
+fn curve_prefix_rewrite_crash_preserves_the_old_copy() {
+    let _g = armed_test();
+    let dir = tmpdir("curve_crash");
+    let mut w = curve::CurveWriter::open(&dir, &[]).unwrap();
+    for i in 0..4 {
+        w.append(i as f32, 0.5).unwrap();
+    }
+    w.flush().unwrap();
+    drop(w);
+    let before = std::fs::read(curve::curve_path(&dir)).unwrap();
+    // the resume-install of a shorter prefix crashes just before its
+    // rename: the only copy of the curve must survive byte-identically
+    fault::arm(FaultPlan::parse("rename:crash-before@0", 0).unwrap());
+    let err = curve::CurveWriter::open(&dir, &[(0.0, 0.5), (1.0, 0.5)]).unwrap_err();
+    let stats = fault::disarm();
+    assert_eq!(stats.injected, 1, "the planned crash must fire");
+    assert!(
+        format!("{err:#}").contains(fault::INJECTED_MARK),
+        "crash must surface loudly: {err:#}"
+    );
+    assert_eq!(
+        std::fs::read(curve::curve_path(&dir)).unwrap(),
+        before,
+        "pre-existing sidecar bytes must survive a crashed rewrite"
+    );
+    // disarmed retry lands the rewrite the crash interrupted
+    let mut w = curve::CurveWriter::open(&dir, &[(0.0, 0.5), (1.0, 0.5)]).unwrap();
+    w.flush().unwrap();
+    drop(w);
+    let (ls, _) = curve::read_curve(&dir, 2).unwrap();
+    assert_eq!(ls, vec![0.0, 1.0]);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn curve_prefix_rewrite_short_write_preserves_the_old_copy() {
+    let _g = armed_test();
+    let dir = tmpdir("curve_short");
+    let mut w = curve::CurveWriter::open(&dir, &[]).unwrap();
+    for i in 0..3 {
+        w.append(i as f32, 0.1).unwrap();
+    }
+    w.flush().unwrap();
+    drop(w);
+    let before = std::fs::read(curve::curve_path(&dir)).unwrap();
+    // ENOSPC-style torn write into the temp: the committed sidecar must
+    // be untouched, and only the temp may be torn
+    fault::arm(FaultPlan::parse("write:short@0", 0).unwrap());
+    let err = curve::CurveWriter::open(&dir, &[(0.0, 0.1)]).unwrap_err();
+    let stats = fault::disarm();
+    assert_eq!(stats.injected, 1);
+    assert!(format!("{err:#}").contains(fault::INJECTED_MARK), "loud: {err:#}");
+    assert_eq!(
+        std::fs::read(curve::curve_path(&dir)).unwrap(),
+        before,
+        "short write must tear only the temp"
+    );
+    let tmp = curve::curve_path(&dir).with_extension("tmp");
+    assert!(tmp.exists(), "the torn temp is the expected debris");
+    // the disarmed retry rewrites the temp in full and commits over it
+    let mut w = curve::CurveWriter::open(&dir, &[(0.0, 0.1)]).unwrap();
+    w.flush().unwrap();
+    drop(w);
+    assert!(!tmp.exists(), "commit consumes the temp");
+    let (ls, _) = curve::read_curve(&dir, 1).unwrap();
+    assert_eq!(ls, vec![0.0]);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---- async snapshot writer under faults (satellite 4) ------------------
+
+#[test]
+fn async_writer_crash_before_rename_keeps_the_prior_snapshot() {
+    let _g = armed_test();
+    let dir = tmpdir("writer_crash");
+    std::fs::create_dir_all(&dir).unwrap();
+    ckpt::write_atomic(&ckpt::snapshot_path(&dir, 1), &snap_bytes(1)).unwrap();
+    let before = std::fs::read(ckpt::snapshot_path(&dir, 1)).unwrap();
+    fault::arm(FaultPlan::parse("rename:crash-before@0", 0).unwrap());
+    {
+        let mut w = AsyncSnapshotWriter::new();
+        // drop without finish(): the drain-on-drop path must absorb the
+        // failed write without panicking (the trainer's error unwind)
+        let _ = w.submit(ckpt::snapshot_path(&dir, 2), snap_bytes(2), 2);
+    }
+    let stats = fault::disarm();
+    assert_eq!(stats.injected, 1, "the planned crash must fire");
+    assert_eq!(
+        std::fs::read(ckpt::snapshot_path(&dir, 1)).unwrap(),
+        before,
+        "prior snapshot must survive byte-identically"
+    );
+    assert!(
+        !ckpt::snapshot_path(&dir, 2).exists(),
+        "a crash before the rename must not commit the new snapshot"
+    );
+    assert_eq!(
+        ckpt::latest_snapshot(&dir).unwrap().unwrap(),
+        ckpt::snapshot_path(&dir, 1),
+        "resume must still find the prior snapshot"
+    );
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn async_writer_enospc_surfaces_loudly_and_prior_survives() {
+    let _g = armed_test();
+    let dir = tmpdir("writer_enospc");
+    std::fs::create_dir_all(&dir).unwrap();
+    ckpt::write_atomic(&ckpt::snapshot_path(&dir, 1), &snap_bytes(1)).unwrap();
+    let before = std::fs::read(ckpt::snapshot_path(&dir, 1)).unwrap();
+    fault::arm(FaultPlan::parse("write:enospc@0", 0).unwrap());
+    let mut w = AsyncSnapshotWriter::new();
+    let submitted = w.submit(ckpt::snapshot_path(&dir, 2), snap_bytes(2), 2);
+    let finished = submitted.and_then(|_| w.finish().map(|_| ()));
+    let stats = fault::disarm();
+    assert_eq!(stats.injected, 1);
+    let msg = format!("{:#}", finished.unwrap_err());
+    assert!(
+        msg.contains(fault::INJECTED_MARK) && msg.contains("enospc"),
+        "ENOSPC must surface loudly by name: {msg}"
+    );
+    assert_eq!(std::fs::read(ckpt::snapshot_path(&dir, 1)).unwrap(), before);
+    assert!(!ckpt::snapshot_path(&dir, 2).exists());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn transient_faults_are_retried_to_success() {
+    let _g = armed_test();
+    let dir = tmpdir("transient");
+    std::fs::create_dir_all(&dir).unwrap();
+    // EINTR on the temp write AND on the rename: both are transient, so
+    // the op-level retry loop must land the commit with no caller-visible
+    // error at all
+    fault::arm(FaultPlan::parse("write:eintr@0,rename:eintr@0", 0).unwrap());
+    ckpt::write_atomic(&ckpt::snapshot_path(&dir, 1), &snap_bytes(9)).unwrap();
+    let stats = fault::disarm();
+    assert_eq!(stats.injected, 2);
+    assert_eq!(stats.retried, 2, "both EINTRs must be absorbed by retries");
+    let snap = Snapshot::read_from(&ckpt::snapshot_path(&dir, 1)).unwrap();
+    assert_eq!(snap.get("meta").unwrap()[0], 9, "committed bytes intact after retries");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---- end-to-end torture runs -------------------------------------------
+
+fn assert_no_tmp_debris(dir: &Path) {
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let p = entry.unwrap().path();
+        if p.is_dir() {
+            assert_no_tmp_debris(&p);
+        } else {
+            assert_ne!(
+                p.extension().and_then(|x| x.to_str()),
+                Some("tmp"),
+                "torn temp survived the sweep: {}",
+                p.display()
+            );
+        }
+    }
+}
+
+#[test]
+fn torture_schedules_recover_and_reports_are_deterministic() {
+    let _g = armed_test();
+    let out_a = tmpdir("e2e_a");
+    let cfg = TortureCfg {
+        schedules: 2,
+        seed: 7,
+        out: out_a.clone(),
+        faults: 2,
+        horizon: 24,
+    };
+    let r1 = run_torture(&cfg).unwrap();
+    assert!(r1.failed.is_empty(), "schedules must recover:\n{}", r1.text);
+    assert_no_tmp_debris(&out_a);
+    assert_eq!(
+        std::fs::read_to_string(out_a.join("torture_report.txt")).unwrap(),
+        r1.text,
+        "the persisted report is the returned report"
+    );
+    let out_b = tmpdir("e2e_b");
+    let r2 = run_torture(&TortureCfg { out: out_b.clone(), ..cfg }).unwrap();
+    assert_eq!(r1.text, r2.text, "same seed must produce a byte-identical report");
+    let _ = std::fs::remove_dir_all(&out_a);
+    let _ = std::fs::remove_dir_all(&out_b);
+}
+
+#[test]
+fn torture_refuses_to_start_over_an_armed_plan() {
+    let _g = armed_test();
+    let out = tmpdir("armed_refusal");
+    fault::arm(FaultPlan::parse("read:eio@0", 0).unwrap());
+    let err = run_torture(&TortureCfg {
+        schedules: 1,
+        seed: 1,
+        out: out.clone(),
+        faults: 1,
+        horizon: 8,
+    })
+    .unwrap_err();
+    fault::disarm();
+    assert!(
+        format!("{err:#}").contains("already armed"),
+        "must refuse, not silently disarm: {err:#}"
+    );
+    let _ = std::fs::remove_dir_all(&out);
+}
