@@ -6,7 +6,7 @@
 # XlaBuilder toolkit (mask engine, property tests, quickstart selftest);
 # artifact-dependent integration tests skip themselves when absent.
 
-.PHONY: artifacts artifacts-e2e test test-nosimd bench bench-check clippy matrix-smoke matrix-race serve-smoke torture-smoke
+.PHONY: artifacts artifacts-e2e test test-nosimd test-qscan bench bench-check clippy matrix-smoke matrix-race serve-smoke torture-smoke
 
 artifacts:
 	cd python && python -m compile.aot --outdir ../artifacts
@@ -21,6 +21,13 @@ test:
 # portable scalar path stands on its own (CI runs this too)
 test-nosimd:
 	LIFT_NO_SIMD=1 cargo test -q
+
+# the same suite with every rank-reduce scan forced through the int8
+# blockwise quantized tier (ISSUE 10) — selection must stay within the
+# LIFT_QSCAN_TOL mask-overlap contract while all training math stays
+# f64 (CI runs this too)
+test-qscan:
+	LIFT_QSCAN=1 cargo test -q
 
 bench:
 	cargo bench

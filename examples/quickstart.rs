@@ -76,6 +76,31 @@
 //!     # and diffs the dumped outputs byte-for-byte.
 //! ```
 //!
+//! # Quantized scan tier (ISSUE 10)
+//!
+//! `lift train ... --qscan` (or `qscan=1` as a matrix axis, or
+//! `LIFT_QSCAN=1` to force it process-wide) routes the rank-reduce
+//! *scan* — the Gram build and subspace-iteration passes that find the
+//! principal subspace — through blockwise int8 kernels
+//! (`util::gemm::gram_q8` / `matmul_q8`: per-64-column absmax scales,
+//! i32 accumulation, f32 scale-out in fixed block order, so scalar and
+//! AVX2 dispatch stay bit-identical). Everything that *changes weights*
+//! stays full precision: the Rayleigh–Ritz solve, the final principal
+//! apply, and all training math run in f64/f32 exactly as before.
+//!
+//! That split is why quantization is safe here: LIFT only uses the
+//! low-rank approximation to *rank* weights and keep the top-k — a
+//! selection, not a value — so small perturbations of the subspace can
+//! only flip entries right at the threshold. The documented contract is
+//! `util::eigh::LIFT_QSCAN_TOL`: the quantized scan's mask must overlap
+//! the f64 scan's by at least that fraction (property-tested across
+//! shapes and spectra; a final f64 polish pass inside the quantized
+//! iteration keeps the margin robust rather than marginal). The same
+//! reasoning does NOT extend to training updates, which accumulate —
+//! that is why only the scan is quantized. `make test-qscan` runs the
+//! whole suite with the tier forced on; `[gemm-q]` in `cargo bench`
+//! measures the f64-vs-int8 Gram build.
+//!
 //! # Durability contract (ISSUE 9)
 //!
 //! Every durable artifact above — snapshots, the curve sidecar, outcome
@@ -234,6 +259,28 @@ fn selftest() -> anyhow::Result<()> {
         shapes.len(),
         100.0 * selected as f64 / total as f64
     );
+    // quantized scan tier (ISSUE 10): the int8 scan's selection must
+    // overlap the f64 scan's within the documented contract, and stay
+    // worker-count deterministic like every other path
+    {
+        let qcfg = LiftCfg { rank: 32, qscan: true, ..Default::default() };
+        let q1 = MaskEngine::with_workers(la.clone(), 1)
+            .select_all(Selector::Lift, &qcfg, &reqs, 7)?;
+        let qn = MaskEngine::with_workers(la.clone(), workers)
+            .select_all(Selector::Lift, &qcfg, &reqs, 7)?;
+        anyhow::ensure!(q1 == qn, "selftest: qscan masks diverged across worker counts");
+        let tol = lift::util::eigh::LIFT_QSCAN_TOL;
+        for (i, (qm, fm)) in q1.iter().zip(&seq).enumerate() {
+            let f: std::collections::HashSet<u32> = fm.iter().copied().collect();
+            let inter = qm.iter().filter(|x| f.contains(x)).count();
+            let overlap = inter as f64 / fm.len().max(1) as f64;
+            anyhow::ensure!(
+                overlap >= tol,
+                "selftest: qscan mask {i} overlaps f64 by {overlap:.4} < contract {tol}"
+            );
+        }
+        println!("qscan selftest OK: int8 scan masks within the {tol} overlap contract, 1w == {workers}w");
+    }
     let row = measure_mask_refresh(&la, &shapes, 32, 32, workers, 3)?;
     println!("{}", row.row());
     // and the batched optimizer step (several layers' worth of matrices)

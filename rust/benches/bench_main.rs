@@ -22,6 +22,9 @@
 //!                  (ISSUE-7 acceptance row; >=1.5x floor on AVX2 hosts)
 //!   [gemm-par]     serial vs intra-matrix-parallel tiled GEMM over the
 //!                  engine pool (ISSUE-7 acceptance row)
+//!   [gemm-q]       f64 vs int8 blockwise quantized Gram build — the
+//!                  qscan scan tier (ISSUE-10 acceptance row; >=1.1x
+//!                  absolute floor on hosts with the SIMD path live)
 //!   [serve]        per-tenant sparse-delta serving: overlay-apply vs
 //!                  full tenant materialization (tenants/GB), plus p95
 //!                  of a batched multi-tenant request mix (ISSUE-8
@@ -53,8 +56,8 @@ use std::sync::Arc;
 use lift::data::tasks::{TaskFamily, TaskMixSource, TaskSet};
 use lift::data::BatchSource;
 use lift::exp::harness::{
-    measure_exact_refresh, measure_gemm_par, measure_gemm_simd, measure_mask_refresh,
-    measure_serve_overlay, measure_step_all, measure_warm_refresh, Speedup,
+    measure_exact_refresh, measure_gemm_par, measure_gemm_q, measure_gemm_simd,
+    measure_mask_refresh, measure_serve_overlay, measure_step_all, measure_warm_refresh, Speedup,
 };
 use lift::lift::engine::default_workers;
 use lift::lift::{budget_for, principal_indices, LiftCfg};
@@ -236,6 +239,14 @@ fn main() -> anyhow::Result<()> {
     {
         let reps = if fast { 2 } else { 4 };
         let row = measure_gemm_par(default_workers(), reps);
+        println!("{}", row.row());
+        speedups.push(row);
+    }
+
+    println!("\n-- [gemm-q] f64 vs int8 blockwise quantized Gram (qscan tier) --");
+    {
+        let reps = if fast { 3 } else { 6 };
+        let row = measure_gemm_q(reps);
         println!("{}", row.row());
         speedups.push(row);
     }
@@ -568,6 +579,12 @@ fn main() -> anyhow::Result<()> {
         let mut floors: Vec<(&str, f64)> = vec![("warm_refresh", 1.1), ("serve_overlay", 1.1)];
         if lift::util::gemm::simd_enabled() {
             floors.push(("gemm_simd", 1.5));
+            // the int8 tier's floor also applies only where the wide
+            // integer kernels are live: 32 i8 lanes per AVX2 op against
+            // the f64 tier's 4 make >=1.1x conservative there, while a
+            // scalar-only host leaves both tiers to the autovectorizer
+            // and the ratio is an honest toss-up
+            floors.push(("gemm_q", 1.1));
         }
         check_regression(&traj, fast, &floors)?;
     }

@@ -14,7 +14,7 @@
 //! never of how the grid was described:
 //!
 //! * axes are normalized into one **canonical order** (preset → method →
-//!   suite → rank → interval → seed) before expansion, so building the
+//!   suite → rank → interval → seed → qscan) before expansion, so building the
 //!   same grid with axes added in any order yields the identical cell
 //!   vector (golden-file-locked by `rust/tests/grid.rs`);
 //! * values within an axis are deduplicated preserving first occurrence,
@@ -31,7 +31,7 @@ use anyhow::Result;
 
 use super::matrix::CellSpec;
 
-/// The six sweepable dimensions, in canonical expansion order.
+/// The seven sweepable dimensions, in canonical expansion order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum AxisKind {
     Preset,
@@ -40,15 +40,19 @@ pub enum AxisKind {
     Rank,
     Interval,
     Seed,
+    /// Quantized rank-reduce scan on/off (ISSUE 10) — measures the int8
+    /// tier's retention cost per method via the selector-zoo summary.
+    Qscan,
 }
 
-pub const AXIS_KINDS: [AxisKind; 6] = [
+pub const AXIS_KINDS: [AxisKind; 7] = [
     AxisKind::Preset,
     AxisKind::Method,
     AxisKind::Suite,
     AxisKind::Rank,
     AxisKind::Interval,
     AxisKind::Seed,
+    AxisKind::Qscan,
 ];
 
 impl AxisKind {
@@ -60,6 +64,7 @@ impl AxisKind {
             AxisKind::Rank => "rank",
             AxisKind::Interval => "interval",
             AxisKind::Seed => "seed",
+            AxisKind::Qscan => "qscan",
         }
     }
 }
@@ -78,6 +83,8 @@ pub enum Axis {
     /// Mask refresh interval handed to `make_method`.
     Interval(Vec<usize>),
     Seed(Vec<u64>),
+    /// Quantized rank-reduce scan on/off (`LiftCfg.qscan`).
+    Qscan(Vec<bool>),
 }
 
 impl Axis {
@@ -89,6 +96,7 @@ impl Axis {
             Axis::Rank(_) => AxisKind::Rank,
             Axis::Interval(_) => AxisKind::Interval,
             Axis::Seed(_) => AxisKind::Seed,
+            Axis::Qscan(_) => AxisKind::Qscan,
         }
     }
 
@@ -101,6 +109,7 @@ impl Axis {
             Axis::Preset(v) | Axis::Method(v) | Axis::Suite(v) => v.len(),
             Axis::Rank(v) | Axis::Interval(v) => v.len(),
             Axis::Seed(v) => v.len(),
+            Axis::Qscan(v) => v.len(),
         }
     }
 
@@ -117,6 +126,8 @@ impl Axis {
             AxisKind::Rank => Axis::Rank(vec![32]),
             AxisKind::Interval => Axis::Interval(vec![100]),
             AxisKind::Seed => Axis::Seed(vec![1]),
+            // defaults off: existing campaigns keep their golden cell ids
+            AxisKind::Qscan => Axis::Qscan(vec![false]),
         }
     }
 
@@ -150,8 +161,19 @@ impl Axis {
                     })
                     .collect::<Result<Vec<u64>>>()?,
             ),
+            "qscan" => Axis::Qscan(
+                vals.iter()
+                    .map(|v| match *v {
+                        "0" | "false" | "off" => Ok(false),
+                        "1" | "true" | "on" => Ok(true),
+                        _ => Err(anyhow::anyhow!(
+                            "axis 'qscan' expects 0/1/true/false/on/off, got '{v}'"
+                        )),
+                    })
+                    .collect::<Result<Vec<bool>>>()?,
+            ),
             other => anyhow::bail!(
-                "unknown axis '{other}' (known: preset, method, suite, rank, interval, seed)"
+                "unknown axis '{other}' (known: preset, method, suite, rank, interval, seed, qscan)"
             ),
         })
     }
@@ -173,6 +195,7 @@ impl Axis {
             (Axis::Rank(a), Axis::Rank(b)) => extend_dedup(a, b),
             (Axis::Interval(a), Axis::Interval(b)) => extend_dedup(a, b),
             (Axis::Seed(a), Axis::Seed(b)) => extend_dedup(a, b),
+            (Axis::Qscan(a), Axis::Qscan(b)) => extend_dedup(a, b),
             (a, b) => unreachable!("merge of mismatched axes {:?} / {:?}", a.kind(), b.kind()),
         }
     }
@@ -192,6 +215,7 @@ impl Axis {
             Axis::Preset(v) | Axis::Method(v) | Axis::Suite(v) => dd(v),
             Axis::Rank(v) | Axis::Interval(v) => dd(v),
             Axis::Seed(v) => dd(v),
+            Axis::Qscan(v) => dd(v),
         }
     }
 }
@@ -268,8 +292,8 @@ impl Grid {
     }
 
     /// Expand into the full cell list. Axes are walked in canonical
-    /// order (preset → method → suite → rank → interval → seed) no
-    /// matter the order they were added, so both the expansion order
+    /// order (preset → method → suite → rank → interval → seed → qscan)
+    /// no matter the order they were added, so both the expansion order
     /// and every cell id are stable under axis reordering.
     pub fn expand(&self) -> Vec<CellSpec> {
         let presets = match self.axis(AxisKind::Preset) {
@@ -296,6 +320,10 @@ impl Grid {
             Axis::Seed(v) => v,
             _ => unreachable!(),
         };
+        let qscans = match self.axis(AxisKind::Qscan) {
+            Axis::Qscan(v) => v,
+            _ => unreachable!(),
+        };
         let mut cells =
             Vec::with_capacity(presets.len() * methods.len() * suites.len() * ranks.len());
         for preset in &presets {
@@ -304,15 +332,18 @@ impl Grid {
                     for &rank in &ranks {
                         for &interval in &intervals {
                             for &seed in &seeds {
-                                cells.push(CellSpec {
-                                    preset: preset.clone(),
-                                    method: method.clone(),
-                                    suite: suite.clone(),
-                                    rank,
-                                    seed,
-                                    steps: self.steps,
-                                    interval,
-                                });
+                                for &qscan in &qscans {
+                                    cells.push(CellSpec {
+                                        preset: preset.clone(),
+                                        method: method.clone(),
+                                        suite: suite.clone(),
+                                        rank,
+                                        seed,
+                                        steps: self.steps,
+                                        interval,
+                                        qscan,
+                                    });
+                                }
                             }
                         }
                     }
@@ -361,6 +392,25 @@ mod tests {
             .with_axis(Axis::Preset(vec!["tiny".into(), "small".into()]))
             .set_axis(Axis::Preset(vec!["toy".into()]));
         assert!(g.expand().iter().all(|c| c.preset == "toy"));
+    }
+
+    #[test]
+    fn qscan_axis_parses_and_expands() {
+        let axes = parse_axes("qscan=0,1").unwrap();
+        assert_eq!(axes, vec![Axis::Qscan(vec![false, true])]);
+        assert_eq!(
+            parse_axes("qscan=off,on").unwrap(),
+            vec![Axis::Qscan(vec![false, true])]
+        );
+        assert!(parse_axes("qscan=maybe").is_err());
+        let cells = Grid::new(5)
+            .with_axis(Axis::Qscan(vec![false, true]))
+            .expand();
+        assert_eq!(cells.len(), 2);
+        assert!(!cells[0].qscan && cells[1].qscan);
+        assert_ne!(cells[0].id(), cells[1].id());
+        // absent axis defaults off
+        assert!(Grid::new(5).expand().iter().all(|c| !c.qscan));
     }
 
     #[test]

@@ -601,6 +601,63 @@ pub fn measure_gemm_par(workers: usize, reps: usize) -> Speedup {
     }
 }
 
+/// Time one fixed-shape Gram build in f64 vs the int8 blockwise
+/// quantized tier (`gram_q8`) — the `[gemm-q]` row backing the qscan
+/// feature (ISSUE 10). `seq_s` holds the f64 time and `par_s` the
+/// quantized time, so `speedup` reads f64/q8. Like `[gemm-simd]`, the
+/// row is ALWAYS emitted so the trajectory label stays present on every
+/// runner (under LIFT_NO_SIMD both tiers run their scalar kernels and
+/// the ratio is whatever the autovectorizer makes of 8x narrower
+/// operands); the bench applies the absolute `--check` floor only where
+/// the SIMD path is live. Before timing, the quantized Gram is checked
+/// against
+/// the f64 Gram entrywise (the LIFT_QSCAN_TOL overlap contract's
+/// numerical root), so the bench cannot report a speedup from a kernel
+/// that drifted.
+pub fn measure_gemm_q(reps: usize) -> Speedup {
+    use crate::util::gemm;
+    let (m, n) = (320usize, 256usize);
+    let mut rng = Rng::new(0x9c_a11_0b5);
+    let a: Vec<f32> = (0..m * n).map(|_| rng.normal() * 0.05).collect();
+    let mut pack: Vec<f64> = Vec::new();
+    let mut qpack = gemm::QuantMat::default();
+    let mut g_f64 = vec![0.0f64; n * n];
+    let mut g_q8 = vec![0.0f64; n * n];
+    gemm::gram_f64(&a, m, n, &mut pack, &mut g_f64);
+    gemm::gram_q8(&a, m, n, &mut pack, &mut qpack, &mut g_q8);
+    // blockwise int8 keeps every Gram entry within a small relative
+    // error of f64 — catch kernel drift where it is being timed
+    let scale = g_f64.iter().fold(0.0f64, |s, x| s.max(x.abs())).max(1e-30);
+    let worst = g_f64
+        .iter()
+        .zip(&g_q8)
+        .fold(0.0f64, |w, (x, y)| w.max((x - y).abs() / scale));
+    debug_assert!(worst < 0.05, "quantized Gram drifted: rel err {worst:.4}");
+    let time = |quant: bool| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t0 = std::time::Instant::now();
+            if quant {
+                gemm::gram_q8(&a, m, n, &mut pack, &mut qpack, &mut g_q8);
+            } else {
+                gemm::gram_f64(&a, m, n, &mut pack, &mut g_f64);
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        best
+    };
+    let f64_s = time(false);
+    let q8_s = time(true);
+    Speedup {
+        label: "gemm_q",
+        workers: 1,
+        matrices: 1,
+        seq_s: f64_s,
+        par_s: q8_s,
+        speedup: f64_s / q8_s.max(1e-12),
+    }
+}
+
 /// Time per-tenant overlay-apply (row-granular `serve::TenantView`
 /// materialization) vs full tenant materialization (dense base clone +
 /// scatter) — the `[serve]` acceptance row. `seq_s` holds the full-copy

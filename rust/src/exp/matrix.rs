@@ -120,6 +120,8 @@ pub struct CellSpec {
     pub steps: usize,
     /// mask refresh interval handed to `make_method`
     pub interval: usize,
+    /// quantized rank-reduce scan (`LiftCfg.qscan`, ISSUE 10)
+    pub qscan: bool,
 }
 
 impl CellSpec {
@@ -130,9 +132,13 @@ impl CellSpec {
     /// spelling, etc. cannot move a cell (golden-locked by
     /// `rust/tests/grid.rs`).
     pub fn id(&self) -> String {
+        // qscan=false must stay byte-identical to the pre-qscan id so
+        // every existing ledger outcome and checkpoint dir still keys
+        // correctly; only the opt-in variant gains a marker.
+        let q = if self.qscan { "_q1" } else { "" };
         format!(
-            "{}_{}_{}_r{}_s{}_t{}_i{}",
-            self.preset, self.method, self.suite, self.rank, self.seed, self.steps, self.interval
+            "{}_{}_{}_r{}_s{}_t{}_i{}{}",
+            self.preset, self.method, self.suite, self.rank, self.seed, self.steps, self.interval, q
         )
     }
 
@@ -154,6 +160,7 @@ impl CellSpec {
             self.rank,
             LiftCfg {
                 rank: lra_rank,
+                qscan: self.qscan,
                 ..Default::default()
             },
             self.interval,
@@ -1256,11 +1263,17 @@ mod tests {
             seed: 1,
             steps: 10,
             interval: 5,
+            qscan: false,
         };
         let b = CellSpec { interval: 7, ..a.clone() };
         assert_ne!(a.id(), b.id());
         let c = CellSpec { suite: "nlu".into(), ..a.clone() };
         assert_ne!(a.id(), c.id());
+        // qscan=false keeps the legacy id byte-for-byte; qscan=true is
+        // a distinct cell with an explicit marker
+        assert_eq!(a.id(), "toy_lift_arith_r4_s1_t10_i5");
+        let q = CellSpec { qscan: true, ..a.clone() };
+        assert_eq!(q.id(), "toy_lift_arith_r4_s1_t10_i5_q1");
         // and the v1 id is the pre-suite form
         assert_eq!(a.v1_id(), "toy_lift_r4_s1_t10_i5");
     }

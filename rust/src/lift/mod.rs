@@ -68,6 +68,11 @@ pub struct LiftCfg {
     pub exact: bool,
     /// structured selection in bxb blocks (Table 17: b = 4)
     pub block: usize,
+    /// route the rank-reduce scan through the int8 quantized kernel
+    /// tier (ISSUE 10; `LIFT_QSCAN=1` forces it on for a whole run).
+    /// Lossy, under the `eigh::LIFT_QSCAN_TOL` mask-overlap contract —
+    /// selection-only, training never reads quantized values.
+    pub qscan: bool,
 }
 
 impl Default for LiftCfg {
@@ -79,9 +84,33 @@ impl Default for LiftCfg {
             strategy: RankStrategy::Largest,
             exact: false,
             block: 1,
+            qscan: false,
         }
     }
 }
+
+/// Whether `LIFT_QSCAN` in the environment forces the quantized scan on
+/// for every selection in the process (any non-empty value other than
+/// `"0"` — same convention as `LIFT_NO_SIMD`). Cached once per process;
+/// CI runs the whole suite once under `LIFT_QSCAN=1`.
+pub fn qscan_forced() -> bool {
+    static FORCED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FORCED.get_or_init(|| {
+        std::env::var("LIFT_QSCAN")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+    })
+}
+
+/// Process-wide count of NaN-poisoned-matrix warnings fired by
+/// [`topk_indices`] — monotonic, so tests assert on deltas (e.g. the
+/// engine's NaN-torture test proves the warning fires exactly once per
+/// poisoned matrix per refresh, at any worker count).
+pub fn nan_warning_count() -> u64 {
+    NAN_WARNINGS.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+static NAN_WARNINGS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
 
 /// Trainable-parameter budget for one (m, n) matrix at LoRA-rank
 /// equivalence: k = r (m + n), capped at half the matrix (small presets).
@@ -90,26 +119,58 @@ pub fn budget_for(m: usize, n: usize, rank_equiv: usize) -> usize {
 }
 
 /// Exact top-k flat indices of |values| (ties trimmed deterministically).
+///
+/// NaN policy (ISSUE 10): NaN entries rank *below every finite
+/// magnitude* — a NaN-poisoned matrix logs one loud warning (counted in
+/// [`nan_warning_count`]) and still returns exactly `k` indices, filled
+/// from the finite entries first; NaN positions are appended (in index
+/// order) only when fewer than `k` finite entries exist. The silent
+/// `>= thr` under-selection the old filter allowed is gone.
 pub fn topk_indices(values: &[f32], k: usize) -> Vec<u32> {
     let k = k.min(values.len());
     if k == 0 {
         return vec![];
     }
-    let thr = topk_abs_threshold(values, k);
-    let mut idx: Vec<u32> = (0..values.len() as u32)
-        .filter(|&i| values[i as usize].abs() >= thr)
-        .collect();
-    if idx.len() > k {
-        // trim ties at the threshold, keeping the largest magnitudes
-        idx.sort_by(|&a, &b| {
-            values[b as usize]
-                .abs()
-                .partial_cmp(&values[a as usize].abs())
-                .unwrap()
-        });
-        idx.truncate(k);
-        idx.sort_unstable();
+    let n_nan = values.iter().filter(|v| v.is_nan()).count();
+    if n_nan == 0 {
+        let thr = topk_abs_threshold(values, k);
+        let mut idx: Vec<u32> = (0..values.len() as u32)
+            .filter(|&i| values[i as usize].abs() >= thr)
+            .collect();
+        if idx.len() > k {
+            // trim ties at the threshold, keeping the largest magnitudes
+            // (|v| of a finite value is finite, so total_cmp == numeric order)
+            idx.sort_by(|&a, &b| {
+                values[b as usize]
+                    .abs()
+                    .total_cmp(&values[a as usize].abs())
+            });
+            idx.truncate(k);
+            idx.sort_unstable();
+        }
+        debug_assert_eq!(idx.len(), k);
+        return idx;
     }
+    NAN_WARNINGS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    log::warn!(
+        "topk_indices: matrix is NaN-poisoned ({n_nan} NaN of {} entries, k = {k}); \
+         NaN entries rank last — selection quality is degraded",
+        values.len(),
+    );
+    let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+    // descending |v| with NaN (any sign) pinned last; ties and NaN runs
+    // break by index, so the order is fully deterministic
+    idx.sort_by(|&a, &b| {
+        let (x, y) = (values[a as usize].abs(), values[b as usize].abs());
+        match (x.is_nan(), y.is_nan()) {
+            (true, true) => a.cmp(&b),
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            (false, false) => y.total_cmp(&x).then(a.cmp(&b)),
+        }
+    });
+    idx.truncate(k);
+    idx.sort_unstable();
     idx
 }
 
@@ -141,6 +202,11 @@ pub fn rank_reduce_warm(
     let (m, n) = w.dims2();
     let minmn = m.min(n);
     let rank = cfg.rank.min(minmn);
+    // Quantized scan tier: selection-only, so the flag lives on the
+    // scratch arena and every svd_topr_warm this call reaches (exact
+    // Largest here, or the randomized route's factor rotation inside
+    // `Linalg::lowrank_approx_with`) sees the same setting.
+    scratch.set_qscan(cfg.qscan || qscan_forced());
     if cfg.exact || cfg.strategy != RankStrategy::Largest {
         if cfg.strategy == RankStrategy::Largest {
             // the exact oracle only needs the leading subspace — top-r
@@ -356,6 +422,69 @@ mod tests {
         assert_eq!(idx.len(), 3);
         // the two 2.0-magnitude entries must be in
         assert!(idx.contains(&4) && idx.contains(&5));
+    }
+
+    #[test]
+    fn topk_nan_policy_ranks_nan_last_and_warns_once() {
+        // regression (ISSUE 10): the old `>= thr` filter silently
+        // dropped NaN entries, returning fewer than k indices
+        let vals = vec![1.0f32, f32::NAN, 3.0, -2.0, f32::NAN, 0.5];
+        let before = nan_warning_count();
+        let idx = topk_indices(&vals, 3);
+        assert_eq!(nan_warning_count(), before + 1, "one warning per call");
+        // 4 finite entries exist, so exactly k come back, all finite
+        assert_eq!(idx, vec![0, 2, 3]);
+        // asking for more than the finite count still yields k indices:
+        // NaN positions fill the tail in index order
+        let idx = topk_indices(&vals, 5);
+        assert_eq!(idx, vec![0, 1, 2, 3, 5]);
+        // -NaN ranks last too, and a clean matrix fires no warning
+        let clean_before = nan_warning_count();
+        let neg = vec![2.0f32, -f32::NAN, 1.0];
+        assert_eq!(topk_indices(&neg, 2), vec![0, 2]);
+        assert_eq!(nan_warning_count(), clean_before + 1);
+        let fin = vec![2.0f32, -1.0, 1.0];
+        assert_eq!(topk_indices(&fin, 2), vec![0, 1]);
+        assert_eq!(nan_warning_count(), clean_before + 1);
+    }
+
+    #[test]
+    fn topk_nan_order_is_deterministic() {
+        // the NaN path sorts the whole matrix — pin that two runs (and
+        // an all-NaN matrix) produce identical, index-ordered output
+        let vals = vec![f32::NAN; 6];
+        assert_eq!(topk_indices(&vals, 4), vec![0, 1, 2, 3]);
+        let mixed = vec![1.0f32, f32::NAN, 1.0, f32::NAN];
+        assert_eq!(topk_indices(&mixed, 3), topk_indices(&mixed, 3));
+        assert_eq!(topk_indices(&mixed, 3), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn qscan_selection_overlaps_f64_scan() {
+        // LIFT_QSCAN_TOL contract at the selection level: the int8
+        // scan's mask matches the f64 scan's on a low-rank fixture
+        let la = linalg();
+        let mut rng = Rng::new(29);
+        let (m, n, r) = (48, 40, 4);
+        let u = Tensor::randn(&[m, r], 1.0, &mut rng);
+        let v = Tensor::randn(&[r, n], 1.0, &mut rng);
+        let mut w = u.matmul(&v);
+        w.add_scaled(&Tensor::randn(&[m, n], 1.0, &mut rng), 0.05);
+        let k = budget_for(m, n, 4);
+        let cfg = LiftCfg {
+            rank: r,
+            exact: true,
+            ..Default::default()
+        };
+        let f64_mask = principal_indices(&la, &w, k, &cfg, &mut rng).unwrap();
+        let qcfg = LiftCfg { qscan: true, ..cfg };
+        let q_mask = principal_indices(&la, &w, k, &qcfg, &mut rng).unwrap();
+        assert_eq!(q_mask.len(), k);
+        let ov = mask_overlap(&f64_mask, &q_mask);
+        assert!(
+            ov >= crate::util::eigh::LIFT_QSCAN_TOL,
+            "quantized-vs-f64 mask overlap {ov} below contract"
+        );
     }
 
     #[test]

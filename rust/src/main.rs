@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   pretrain  --preset <p> [--steps N] [--seed S]
 //!   train     --preset <p> --method <m> [--rank R] [--suite arith|commonsense|nlu]
-//!             [--steps N] [--lr F] [--interval N] [--seed S]
+//!             [--steps N] [--lr F] [--interval N] [--seed S] [--qscan]
 //!             [--ckpt-every N --ckpt-dir D] [--resume latest|<path>]
 //!   matrix    resumable N-axis scenario grid: --methods a,b --selectors c,d
 //!             --ranks 8,32 --seeds 1,2 --suites arith,nlu --intervals 50,100
@@ -78,6 +78,10 @@ USAGE:
        [--ckpt-keep 3]            keep-last-N snapshot retention (0 = all)
        [--ckpt-dir runs/ckpt --resume latest]   continue the newest snapshot
        [--resume path/to/step_00000050.snap]    continue a specific snapshot
+       [--qscan]                  int8 blockwise quantized rank-reduce scan
+                                  (selection only; the training update stays
+                                  f32/f64 — see util::eigh::LIFT_QSCAN_TOL
+                                  for the mask-overlap contract)
   lift matrix --methods lift,full --selectors weight_mag,random \\
        --ranks 8,32 --seeds 1,2 --steps 200 --out results/matrix
                                   resumable scenario grid: finished cells are
@@ -87,9 +91,9 @@ USAGE:
                                   target-vs-retention summary (summary.txt);
                                   [--ckpt-keep N] prunes per-cell snapshots
        [--suites arith,nlu --intervals 50,100 --presets tiny,small]
-       [--axis \"interval=50,100;seed=1,2,3\"]  any subset of the six axes
+       [--axis \"interval=50,100;seed=1,2,3\"]  any subset of the seven axes
                                   (preset, method, suite, rank, interval,
-                                  seed) as one spec string; merges with
+                                  seed, qscan) as one spec string; merges with
                                   explicitly passed flags, and dimensions
                                   nobody swept take single-value defaults
        [--migrate-v1]             migrate a pre-v2 outcome ledger in place
@@ -183,6 +187,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let ckpt_dir = args.opt_str("ckpt-dir").map(PathBuf::from);
     let ckpt_keep = args.usize("ckpt-keep", 0);
     let resume_arg = args.opt_str("resume");
+    let qscan = args.bool("qscan", false);
+    // consumed BEFORE finish(): the typo guard treats any flag read
+    // after it as unknown (this read used to sit below and made
+    // --lra-rank unusable)
+    let lra_rank = args.usize("lra-rank", rank);
     args.finish()?;
 
     let mut params = pretrain::ensure_pretrained(&rt, &exec, pt_steps, 1)?;
@@ -199,7 +208,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let mut ctx = pretrain::make_ctx(&rt, &exec, seed);
     let lift_cfg = LiftCfg {
-        rank: args.usize("lra-rank", rank),
+        rank: lra_rank,
+        qscan,
         ..Default::default()
     };
     let mut method = make_method(&method_name, rank, lift_cfg, interval, Scope::default())?;

@@ -56,12 +56,10 @@ impl Spiel {
             let k = st.k();
             let n_churn = ((k as f32 * self.churn) as usize).max(1).min(k - 1);
             // drop: smallest |w_now - w_at_selection| (least useful)
-            let mut order: Vec<usize> = (0..k).collect();
-            order.sort_by(|&a, &b| {
-                let da = (w.data[st.idx[a] as usize] - snapshot[a]).abs();
-                let db = (w.data[st.idx[b] as usize] - snapshot[b]).abs();
-                da.partial_cmp(&db).unwrap()
-            });
+            let deltas: Vec<f32> = (0..k)
+                .map(|j| (w.data[st.idx[j] as usize] - snapshot[j]).abs())
+                .collect();
+            let order = drop_order(&deltas);
             let keep: std::collections::HashSet<u32> = order[n_churn..]
                 .iter()
                 .map(|&j| st.idx[j])
@@ -86,6 +84,36 @@ impl Spiel {
             st.refresh(new_idx);
             *snapshot = st.idx.iter().map(|&i| w.data[i as usize]).collect();
         }
+    }
+}
+
+/// Ascending drop order over accumulated-update magnitudes. A NaN delta
+/// means the entry diverged since selection — the least trustworthy
+/// update of all — so NaN sorts *first* (dropped before any finite
+/// delta); ties break by position, keeping the cycle deterministic.
+fn drop_order(deltas: &[f32]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..deltas.len()).collect();
+    order.sort_by(|&a, &b| match (deltas[a].is_nan(), deltas[b].is_nan()) {
+        (true, true) => a.cmp(&b),
+        (true, false) => std::cmp::Ordering::Less,
+        (false, true) => std::cmp::Ordering::Greater,
+        (false, false) => deltas[a].total_cmp(&deltas[b]).then(a.cmp(&b)),
+    });
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::drop_order;
+
+    #[test]
+    fn drop_order_is_nan_first_then_ascending() {
+        // regression (ISSUE 10): the old comparator panicked on a
+        // diverged (NaN) accumulated update mid-churn
+        let deltas = [0.5f32, f32::NAN, 0.1, f32::NAN, 2.0];
+        assert_eq!(drop_order(&deltas), vec![1, 3, 2, 0, 4]);
+        // finite-only ordering unchanged, ties deterministic
+        assert_eq!(drop_order(&[1.0, 0.0, 1.0]), vec![1, 0, 2]);
     }
 }
 

@@ -169,12 +169,7 @@ pub fn sample_answer(
         let pos = prompt.len() + j - 1;
         let probs = exec.probe(rt, params, &toks, pos)?;
         let tok = if temperature <= 0.0 {
-            probs
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i as i32)
-                .unwrap_or(0)
+            greedy_argmax(&probs)
         } else {
             sample_from(&probs, temperature, rng)
         };
@@ -182,6 +177,22 @@ pub fn sample_answer(
         out.push(tok);
     }
     Ok(out)
+}
+
+/// Greedy argmax over a probability row. NaN entries never win — a
+/// diverged model degrades to a deterministic token (the last maximal
+/// index, matching `max_by` on clean input) instead of panicking the
+/// sampler. An all-NaN row yields token 0.
+pub fn greedy_argmax(probs: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut best_p = f32::NEG_INFINITY;
+    for (i, &p) in probs.iter().enumerate() {
+        if p >= best_p {
+            best = i;
+            best_p = p;
+        }
+    }
+    best as i32
 }
 
 fn sample_from(probs: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
@@ -267,5 +278,17 @@ mod tests {
             counts[sample_from(&probs, 0.2, &mut rng) as usize] += 1;
         }
         assert!(counts[1] > 195, "{counts:?}");
+    }
+
+    #[test]
+    fn greedy_argmax_ignores_nan() {
+        // regression (ISSUE 10): the old comparator panicked on a
+        // NaN logit from a diverged model
+        assert_eq!(greedy_argmax(&[0.1, f32::NAN, 0.7, 0.2]), 2);
+        // all-NaN row degrades to token 0 rather than panicking
+        assert_eq!(greedy_argmax(&[f32::NAN, f32::NAN]), 0);
+        // clean rows keep max_by's last-maximal-index tie behavior
+        assert_eq!(greedy_argmax(&[0.5, 0.5, 0.1]), 1);
+        assert_eq!(greedy_argmax(&[]), 0);
     }
 }

@@ -139,7 +139,7 @@ mod tests {
 
     #[test]
     fn summarize_survives_nan_samples() {
-        // regression (ISSUE 7): partial_cmp().unwrap() panicked here
+        // regression (ISSUE 7): the NaN-panicking comparator lived here
         let r = summarize("nan-proof", vec![2.0, f64::NAN, 1.0]);
         assert_eq!(r.iters, 3);
         assert_eq!(r.min_ns, 1.0); // total_cmp sorts NaN last

@@ -58,12 +58,39 @@
 //!   `lift::engine` pool, so one large matrix no longer serializes
 //!   behind a single worker (bit-identical to serial by the disjoint
 //!   tile-ownership contract; see the `gemm` module doc).
+//! * **quantized scan** (`LiftCfg.qscan` / `LIFT_QSCAN=1`) — when the
+//!   arena's [`EighScratch::qscan`] toggle is on, the Gram build and
+//!   the subspace iteration's G-applies route through the int8
+//!   blockwise kernels (`gemm::gram_q8_par` / `gemm::matmul_q8_par`),
+//!   moving ~8x less memory per pass. Rayleigh–Ritz, the small
+//!   eigensolve, the V/U projections, and the small-problem Jacobi
+//!   fallback all stay f64 — only the iteration operand is lossy.
+//!   Selection tolerates this because it consumes the *ordering* of
+//!   |W'| magnitudes, not the values; the contract is the
+//!   [`LIFT_QSCAN_TOL`] mask-overlap gate instead of bit-identity.
+//!   Training deltas never flow through this tier (the trainers apply
+//!   updates to the f32 weights directly), which is why quantization is
+//!   safe here and would not be there.
 //!
 //! All of it preserves the engine's determinism contract: every result
-//! is a pure function of `(a, m, n, r, warm)` — never of the worker
-//! count, scheduling order, or allocation reuse.
+//! is a pure function of `(a, m, n, r, warm)` — plus the qscan toggle —
+//! never of the worker count, scheduling order, or allocation reuse.
 
 use crate::util::gemm;
+
+/// Descending float order with NaN pinned *last*, regardless of NaN
+/// sign. A NaN eigenvalue carries no ordering information — pinning it
+/// after every finite value keeps a diverged matrix's leading
+/// components the meaningful ones (and keeps the sort total, where
+/// `partial_cmp` would have panicked).
+fn nan_last_desc(a: f64, b: f64) -> std::cmp::Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => b.total_cmp(&a),
+    }
+}
 
 /// Jacobi eigendecomposition of a symmetric matrix (row-major, n x n).
 /// Returns (eigenvalues desc, eigenvectors as columns, row-major n x n).
@@ -131,10 +158,11 @@ pub fn eigh64(a: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
             }
         }
     }
-    // sort by eigenvalue descending
+    // sort by eigenvalue descending; a NaN diagonal (diverged input)
+    // must order deterministically instead of panicking (ISSUE 10)
     let mut order: Vec<usize> = (0..n).collect();
     let evals: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
-    order.sort_by(|&i, &j| evals[j].partial_cmp(&evals[i]).unwrap());
+    order.sort_by(|&i, &j| nan_last_desc(evals[i], evals[j]));
     let mut w = Vec::with_capacity(n);
     let mut vecs = vec![0.0f64; n * n];
     for (new, &old) in order.iter().enumerate() {
@@ -169,7 +197,11 @@ pub fn svd(a: &[f32], m: usize, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
         let mut u = vec![0.0f32; m * r];
         let mut vt = vec![0.0f32; r * n];
         for c in 0..r {
-            let sc = w[c].max(0.0).sqrt();
+            // NaN Ritz values (diverged input) must stay NaN: max(0.0)
+            // would flush them to a silent zero singular value and the
+            // caller would reconstruct an innocent-looking zero matrix
+            // instead of a loud NaN one (ISSUE 10)
+            let sc = if w[c].is_nan() { f64::NAN } else { w[c].max(0.0).sqrt() };
             s[c] = sc as f32;
             for k in 0..n {
                 vt[c * n + k] = vfull[k * n + c] as f32;
@@ -259,6 +291,24 @@ pub const TOPR_WARM_DRIFT_TOL: f64 = 0.05;
 /// Early exit when trace(X^T G X) is relatively stable between passes.
 const TOPR_TRACE_TOL: f64 = 1e-12;
 
+/// Selection-tolerance contract of the quantized scan (ISSUE 10, in the
+/// spirit of [`TOPR_SV_TOL`]): on the standard selection fixtures
+/// (low-rank-plus-noise and plain Gaussian matrices across shapes and
+/// spectra), the mask selected from a quantized rank reduction overlaps
+/// the f32-scan mask by at least this fraction (property-tested in
+/// `rust/tests/properties.rs`; `LIFT_QSCAN_TOL` in the environment
+/// overrides the floor there for exploratory runs).
+///
+/// Why a mask-overlap gate and not a value tolerance: the quantized
+/// tier perturbs every Gram entry by up to ~2 quantization steps
+/// (`util::gemm` blockwise bound), which perturbs |W'| magnitudes by
+/// O(0.5%) — enough to swap entries *at the top-k boundary*, where
+/// magnitudes are near-tied and either choice is equally principled,
+/// but not enough to move the selected set materially. Selection
+/// consumes only the ordering; training (which would integrate the
+/// error step after step) never touches this path.
+pub const LIFT_QSCAN_TOL: f64 = 0.99;
+
 /// Warm-start carrier: the converged subspace-iteration block of a
 /// previous [`svd_topr_warm`] call on (a drifted version of) the same
 /// matrix. `xt` is the row-major `p × n` orthonormal basis of the
@@ -319,6 +369,16 @@ pub struct EighScratch {
     /// this arena (0 and 1 both mean serial). Set by the engine when
     /// pool capacity exceeds the number of in-flight matrices.
     par_workers: usize,
+    /// Quantized-scan toggle: when set, the Gram build and the subspace
+    /// iteration's G-applies run on the int8 tier (module doc). Set by
+    /// `lift::rank_reduce_warm` from `LiftCfg.qscan` / `LIFT_QSCAN`.
+    qscan: bool,
+    /// Quantized transpose pack for the q8 Gram build.
+    qpack: gemm::QuantMat,
+    /// Quantized Gram operand (rows of G), built once per refresh.
+    qg: gemm::QuantMat,
+    /// Quantized iteration block, rebuilt each pass.
+    qx: gemm::QuantMat,
 }
 
 impl EighScratch {
@@ -339,6 +399,19 @@ impl EighScratch {
     /// The effective worker budget (>= 1) for GEMMs through this arena.
     pub fn par_workers(&self) -> usize {
         self.par_workers.max(1)
+    }
+
+    /// Toggle the quantized scan for subsequent calls through this
+    /// arena. Changing it changes which documented contract applies
+    /// (bit-exactness of the f64 tier vs the [`LIFT_QSCAN_TOL`]
+    /// overlap gate) — never worker-count or scratch-reuse behavior.
+    pub fn set_qscan(&mut self, on: bool) {
+        self.qscan = on;
+    }
+
+    /// Whether this arena routes the scan through the quantized tier.
+    pub fn qscan(&self) -> bool {
+        self.qscan
     }
 }
 
@@ -447,9 +520,18 @@ pub fn svd_topr_warm(
     // arena carries an intra-matrix budget). Basis vectors are rows of
     // xt (p x n) so Gram-Schmidt and the G-apply stay contiguous.
     let wk = scratch.par_workers();
+    let qscan = scratch.qscan;
     sized(&mut scratch.g, n * n);
-    gemm::gram_f64_par(a, m, n, &mut scratch.pack, &mut scratch.g, wk);
+    if qscan {
+        // int8 Gram + a quantized copy of G for the iteration's
+        // G-applies; RR and the projections below still read the f64 `g`
+        gemm::gram_q8_par(a, m, n, &mut scratch.pack, &mut scratch.qpack, &mut scratch.g, wk);
+        gemm::quantize_rows(&scratch.g, n, n, &mut scratch.qg);
+    } else {
+        gemm::gram_f64_par(a, m, n, &mut scratch.pack, &mut scratch.g, wk);
+    }
     let g = &scratch.g;
+    let qg = if qscan { Some(&scratch.qg) } else { None };
 
     // start block: the carrier when it fits, else the fixed-seed cold
     // start (determinism is part of the contract either way)
@@ -467,8 +549,17 @@ pub fn svd_topr_warm(
     }
     orthonormalize_rows(&mut scratch.xt, p, n);
     let budget = if warm_started { TOPR_WARM_MAX_ITERS } else { TOPR_MAX_ITERS };
-    let (_, tr_first, tr_last) =
-        iterate_block(g, &mut scratch.xt, &mut scratch.yt, p, n, budget, wk);
+    let (_, tr_first, tr_last) = iterate_block(
+        g,
+        qg,
+        &mut scratch.qx,
+        &mut scratch.xt,
+        &mut scratch.yt,
+        p,
+        n,
+        budget,
+        wk,
+    );
     let drifted = warm_started
         && (tr_last - tr_first).abs() > TOPR_WARM_DRIFT_TOL * tr_last.abs().max(1e-300);
     if drifted {
@@ -479,7 +570,27 @@ pub fn svd_topr_warm(
         // of the same matrix.
         cold_start_block(&mut scratch.xt);
         orthonormalize_rows(&mut scratch.xt, p, n);
-        iterate_block(g, &mut scratch.xt, &mut scratch.yt, p, n, TOPR_MAX_ITERS, wk);
+        iterate_block(
+            g,
+            qg,
+            &mut scratch.qx,
+            &mut scratch.xt,
+            &mut scratch.yt,
+            p,
+            n,
+            TOPR_MAX_ITERS,
+            wk,
+        );
+    }
+    if qscan {
+        // one f64 polish pass: the int8 passes steer the block cheaply,
+        // then a single full-precision apply collapses the residual
+        // quantization angle before Rayleigh-Ritz reads the block —
+        // this is what keeps the LIFT_QSCAN_TOL overlap contract robust
+        // across spectra instead of marginal
+        gemm::matmul_f64_par(&scratch.xt, g, p, n, n, &mut scratch.yt, wk);
+        std::mem::swap(&mut scratch.xt, &mut scratch.yt);
+        orthonormalize_rows(&mut scratch.xt, p, n);
     }
     let xt = &scratch.xt;
 
@@ -513,7 +624,9 @@ pub fn svd_topr_warm(
     let mut s = vec![0.0f32; r];
     let mut vt = vec![0.0f32; r * n];
     for c in 0..r {
-        s[c] = w[c].max(0.0).sqrt() as f32;
+        // NaN Ritz values propagate (see `svd`): a diverged matrix must
+        // reduce to a loud NaN reconstruction, not a silent zero one
+        s[c] = if w[c].is_nan() { f32::NAN } else { w[c].max(0.0).sqrt() as f32 };
         for j in 0..n {
             vt[c * n + j] = scratch.v[j * r + c] as f32;
         }
@@ -554,11 +667,18 @@ fn cold_start_block(xt: &mut [f64]) {
 /// Run up to `max_iters` subspace-iteration passes of `xt` against `g`
 /// (both row-major; `yt` is the ping-pong buffer). The G-apply fans row
 /// tiles over up to `workers` pool threads (bit-identical to serial).
-/// Returns whether the trace-convergence test fired inside the budget,
-/// plus the first and last pass's Rayleigh traces — the warm path's
-/// drift guard reads their growth ([`TOPR_WARM_DRIFT_TOL`]).
+/// When `qg` carries the quantized Gram operand, each pass quantizes
+/// the block into `qx` and applies `Y = X·G` on the int8 tier (G is
+/// symmetric, so its quantized rows serve as its columns); the trace
+/// test and orthonormalization stay f64 either way. Returns whether the
+/// trace-convergence test fired inside the budget, plus the first and
+/// last pass's Rayleigh traces — the warm path's drift guard reads
+/// their growth ([`TOPR_WARM_DRIFT_TOL`]).
+#[allow(clippy::too_many_arguments)]
 fn iterate_block(
     g: &[f64],
+    qg: Option<&gemm::QuantMat>,
+    qx: &mut gemm::QuantMat,
     xt: &mut Vec<f64>,
     yt: &mut Vec<f64>,
     p: usize,
@@ -570,7 +690,13 @@ fn iterate_block(
     let mut tr_first = f64::NAN;
     let mut tr_last = f64::NAN;
     for it in 0..max_iters {
-        gemm::matmul_f64_par(xt, g, p, n, n, yt, workers);
+        match qg {
+            Some(qg) => {
+                gemm::quantize_rows(xt, p, n, qx);
+                gemm::matmul_q8_par(qx, qg, yt, workers);
+            }
+            None => gemm::matmul_f64_par(xt, g, p, n, n, yt, workers),
+        }
         let mut tr = 0.0f64;
         for (x, y) in xt.iter().zip(yt.iter()) {
             tr += x * y;
@@ -1029,5 +1155,72 @@ mod tests {
         let v = rng.normal_vec(r * n, 1.0);
         let a = matmul(&u, &v, m, r, n);
         assert_eq!(rank_above(&a, m, n, 10.0), r);
+    }
+
+    /// ISSUE-10 regression: a NaN on the diagonal (diverged input) used
+    /// to panic the descending eigenvalue sort via `partial_cmp`. The
+    /// pinned order now puts NaN last, keeping the leading components
+    /// the meaningful ones.
+    #[test]
+    fn eigh_orders_nan_eigenvalues_last() {
+        let n = 3;
+        let mut a = vec![0.0f64; n * n];
+        a[0] = 1.0;
+        a[1 * n + 1] = f64::NAN;
+        a[2 * n + 2] = 3.0;
+        let (w, _) = eigh64(&a, n);
+        assert_eq!(w[0], 3.0);
+        assert_eq!(w[1], 1.0);
+        assert!(w[2].is_nan(), "NaN eigenvalue must sort last: {w:?}");
+        // and the pinned order is sign-agnostic for NaN
+        use std::cmp::Ordering::*;
+        assert_eq!(nan_last_desc(f64::NAN, f64::NEG_INFINITY), Greater);
+        assert_eq!(nan_last_desc(-f64::NAN, f64::NEG_INFINITY), Greater);
+        assert_eq!(nan_last_desc(2.0, f64::NAN), Less);
+        assert_eq!(nan_last_desc(f64::NAN, f64::NAN), Equal);
+        assert_eq!(nan_last_desc(1.0, 2.0), Greater);
+    }
+
+    /// The quantized scan stays inside a loose value tolerance of the
+    /// f64 scan (the *selection* contract — LIFT_QSCAN_TOL mask overlap
+    /// — is property-tested in rust/tests/properties.rs), is
+    /// deterministic, and is worker-count invariant bitwise.
+    #[test]
+    fn qscan_subspace_tracks_f64_and_is_worker_invariant() {
+        let mut rng = Rng::new(43);
+        let (m, n, r) = (64usize, 48usize, 4usize);
+        let u = rng.normal_vec(m * r, 1.0);
+        let v = rng.normal_vec(r * n, 1.0);
+        let mut a = matmul(&u, &v, m, r, n);
+        for x in a.iter_mut() {
+            *x += rng.normal() * 0.05;
+        }
+        let (_, s64, _) = svd_topr(&a, m, n, r);
+        let run = |workers: usize| {
+            let mut scratch = EighScratch::with_par_workers(workers);
+            scratch.set_qscan(true);
+            svd_topr_warm(&a, m, n, r, None, &mut scratch)
+        };
+        let (uq, sq, vq, cq) = run(1);
+        for c in 0..r {
+            assert!(
+                (sq[c] - s64[c]).abs() <= 0.05 * s64[0],
+                "qscan s[{c}] drifted: {} vs {}",
+                sq[c],
+                s64[c]
+            );
+        }
+        let (uq4, sq4, vq4, cq4) = run(4);
+        assert_eq!(uq, uq4, "qscan U diverged across worker counts");
+        assert_eq!(sq, sq4, "qscan s diverged across worker counts");
+        assert_eq!(vq, vq4, "qscan V diverged across worker counts");
+        assert_eq!(cq, cq4, "qscan carrier diverged across worker counts");
+        // warm restart through the same quantized arena stays in contract
+        let mut scratch = EighScratch::new();
+        scratch.set_qscan(true);
+        let (_, sw, _, _) = svd_topr_warm(&a, m, n, r, cq.as_ref(), &mut scratch);
+        for c in 0..r {
+            assert!((sw[c] - s64[c]).abs() <= 0.05 * s64[0]);
+        }
     }
 }

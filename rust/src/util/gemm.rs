@@ -64,7 +64,35 @@
 //! redundant zero pass (every element is overwritten before being read),
 //! and a shrinking resize deliberately leaves the previous capacity
 //! untrimmed so a worker cycling through many shapes allocates once for
-//! the largest.
+//! the largest. [`QuantMat`] buffers follow the same rule.
+//!
+//! # Quantized scan tier (int8 blockwise, f32 scale-out)
+//!
+//! The `*_q8` kernels are the ISSUE-10 quantized selection path
+//! (ROADMAP kernel-tier (c)): the operand is quantized **along its
+//! reduction dimension** into per-row, per-[`QBLOCK`]-element int8
+//! blocks with an f32 absmax scale each (`q = round(x / s)`, `s =
+//! absmax / 127`), so a dot product decomposes into exact int8×int8→i32
+//! block dots scaled out in f32. This moves ~8x less memory per operand
+//! than the f64 tier — and selection only needs the *ordering* of
+//! |W'| magnitudes to survive, not the values, so the loss is gated by
+//! a documented tolerance contract instead of bit-identity
+//! (`util::eigh::LIFT_QSCAN_TOL`: quantized-vs-f32 mask overlap).
+//!
+//! Determinism still holds *within* the tier, by construction:
+//!
+//! * a block dot never exceeds `64 · 127 · 127 < 2^23`, so the i32
+//!   accumulation is exact and the AVX2 `madd_epi16` path is equal to
+//!   the scalar loop as integers, not just to rounding;
+//! * the f32 scale-out walks blocks in index order with one f32
+//!   accumulator (`acc += (dot as f32 * s_a) * s_b`), shared verbatim
+//!   by the scalar and SIMD dispatch — so `LIFT_NO_SIMD` flips cost,
+//!   never results;
+//! * non-finite inputs (NaN/±inf) quantize to 0: a NaN weight cannot
+//!   poison a whole Gram row here (the selection-level NaN policy in
+//!   `lift::topk_indices` still warns about it);
+//! * the `*_par` variants reuse the tile-ownership contract above —
+//!   1w ≡ Nw bitwise for any worker count.
 
 use std::sync::OnceLock;
 
@@ -643,6 +671,312 @@ pub(crate) fn gram_f64_tiled(
     mirror_lower(g, n);
 }
 
+// ---------------------------------------------------------------------------
+// quantized scan tier: int8 blockwise operands, i32 dots, f32 scale-out
+// ---------------------------------------------------------------------------
+
+/// Quantization block width along the reduction dimension. Matches [`KC`]
+/// so a quantized panel and an f64 panel cover the same cache footprint
+/// shape; 64 int8 values = one cache line.
+pub const QBLOCK: usize = 64;
+
+/// A row-major matrix quantized blockwise to int8: row `i`'s elements
+/// `[b·QBLOCK, (b+1)·QBLOCK)` share one f32 absmax scale `s` with
+/// `x ≈ q · s`, `q ∈ [-127, 127]`. Buffers follow the scratch-arena
+/// contract (grow-only capacity across requantizations).
+#[derive(Default)]
+pub struct QuantMat {
+    rows: usize,
+    cols: usize,
+    q: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl QuantMat {
+    pub fn new() -> QuantMat {
+        QuantMat::default()
+    }
+
+    /// Blocks per row (0 for an empty matrix).
+    fn nblocks(&self) -> usize {
+        self.cols.div_ceil(QBLOCK)
+    }
+
+    fn row_q(&self, i: usize) -> &[i8] {
+        &self.q[i * self.cols..(i + 1) * self.cols]
+    }
+
+    fn row_scales(&self, i: usize) -> &[f32] {
+        let nb = self.nblocks();
+        &self.scales[i * nb..(i + 1) * nb]
+    }
+}
+
+/// Quantize `src` (rows×cols, f64, row major) into `out`. Per block:
+/// scale = absmax / 127 (0 for an all-zero block), `q = round(x / s)`
+/// clamped to ±127. Non-finite blocks — any block whose absmax is not
+/// finite — quantize entirely to zero: NaN cannot be ordered and ±inf
+/// would turn the scale-out into NaN, so both degrade to "no signal"
+/// deterministically instead of poisoning the product.
+pub fn quantize_rows(src: &[f64], rows: usize, cols: usize, out: &mut QuantMat) {
+    assert_eq!(src.len(), rows * cols, "quantize: src is not rows×cols");
+    out.rows = rows;
+    out.cols = cols;
+    let nb = cols.div_ceil(QBLOCK);
+    out.q.resize(rows * cols, 0);
+    out.scales.resize(rows * nb, 0.0);
+    for i in 0..rows {
+        let srow = &src[i * cols..(i + 1) * cols];
+        let qrow = &mut out.q[i * cols..(i + 1) * cols];
+        let sc = &mut out.scales[i * nb..(i + 1) * nb];
+        for b in 0..nb {
+            let lo = b * QBLOCK;
+            let hi = (lo + QBLOCK).min(cols);
+            // f64::max drops a NaN operand, so NaN entries are ignored
+            // here (they still quantize to 0 below, via the saturating
+            // float→int cast)
+            let amax = srow[lo..hi].iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+            if amax == 0.0 || !amax.is_finite() {
+                sc[b] = 0.0;
+                qrow[lo..hi].fill(0);
+                continue;
+            }
+            let scale = (amax / 127.0) as f32;
+            sc[b] = scale;
+            let inv = 127.0 / amax;
+            for l in lo..hi {
+                // `as i32` saturates and maps NaN to 0 — both are the
+                // deterministic behavior the contract wants
+                qrow[l] = (srow[l] * inv).round() as i32 as i8;
+            }
+        }
+    }
+}
+
+/// Scalar int8 block dot — exact in i32 (max |block dot| is
+/// 64·127·127 = 1 032 256).
+#[inline(always)]
+fn q8_block_dot_scalar(x: &[i8], y: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for l in 0..x.len() {
+        acc += x[l] as i32 * y[l] as i32;
+    }
+    acc
+}
+
+/// AVX2 int8 block dot: 16 i8 lanes widened to i16, `madd_epi16` pairs
+/// into i32, lane-reduced at the end. Integer addition is associative,
+/// so this equals [`q8_block_dot_scalar`] exactly — no rounding-order
+/// rule needed in this tier.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn q8_block_dot_avx2(x: &[i8], y: &[i8]) -> i32 {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let m16 = n & !15;
+    let xp = x.as_ptr();
+    let yp = y.as_ptr();
+    let mut vs = _mm256_setzero_si256();
+    let mut l = 0;
+    while l < m16 {
+        let vx = _mm256_cvtepi8_epi16(_mm_loadu_si128(xp.add(l) as *const __m128i));
+        let vy = _mm256_cvtepi8_epi16(_mm_loadu_si128(yp.add(l) as *const __m128i));
+        // i16×i16 products of adjacent lanes summed into 8 i32 lanes;
+        // ≤ 2·127² per madd and ≤ 4 madds per block — far from overflow
+        vs = _mm256_add_epi32(vs, _mm256_madd_epi16(vx, vy));
+        l += 16;
+    }
+    let lo = _mm256_castsi256_si128(vs);
+    let hi = _mm256_extracti128_si256::<1>(vs);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b0100_1110>(s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0b1011_0001>(s));
+    let mut acc = _mm_cvtsi128_si32(s);
+    while l < n {
+        acc += x[l] as i32 * y[l] as i32;
+        l += 1;
+    }
+    acc
+}
+
+/// Dispatching int8 block dot (same `use_simd` contract as [`axpy`]).
+#[inline(always)]
+fn q8_block_dot(use_simd: bool, x: &[i8], y: &[i8]) -> i32 {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if use_simd {
+            // SAFETY: use_simd is true only behind runtime AVX2 detection.
+            return unsafe { q8_block_dot_avx2(x, y) };
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = use_simd;
+    q8_block_dot_scalar(x, y)
+}
+
+/// Dot of row `i` of `qa` with row `j` of `qb`: exact i32 block dots,
+/// scaled out in f32 in fixed block order — `acc += (dot · s_a) · s_b`
+/// — shared by the scalar and SIMD dispatch, so the two are
+/// bit-identical by construction.
+fn q8_dot_rows(qa: &QuantMat, i: usize, qb: &QuantMat, j: usize, use_simd: bool) -> f64 {
+    debug_assert_eq!(qa.cols, qb.cols, "q8 dot: reduction dims differ");
+    let nb = qa.nblocks();
+    let xa = qa.row_q(i);
+    let xb = qb.row_q(j);
+    let sa = qa.row_scales(i);
+    let sb = qb.row_scales(j);
+    let mut acc = 0.0f32;
+    for b in 0..nb {
+        let lo = b * QBLOCK;
+        let hi = (lo + QBLOCK).min(qa.cols);
+        let d = q8_block_dot(use_simd, &xa[lo..hi], &xb[lo..hi]);
+        acc += (d as f32 * sa[b]) * sb[b];
+    }
+    acc as f64
+}
+
+/// Quantized Gram: G (n×n, f64) ≈ Aᵀ A for A m×n (f32). The transpose
+/// pack is reused from the f64 tier, then quantized per-row (reduction
+/// dimension m), and every Gram entry becomes a quantized row dot —
+/// upper triangle only, mirrored after. `pack`/`qpack` are caller-owned
+/// arenas.
+pub fn gram_q8(
+    a: &[f32],
+    m: usize,
+    n: usize,
+    pack: &mut Vec<f64>,
+    qpack: &mut QuantMat,
+    g: &mut [f64],
+) {
+    gram_q8_tiled(a, m, n, pack, qpack, g, 1, usize::MAX);
+}
+
+/// [`gram_q8`] with intra-matrix parallelism (same tile contract as
+/// [`gram_f64_par`]: packing + quantization serial, upper-triangle row
+/// tiles fanned out, mirror after).
+pub fn gram_q8_par(
+    a: &[f32],
+    m: usize,
+    n: usize,
+    pack: &mut Vec<f64>,
+    qpack: &mut QuantMat,
+    g: &mut [f64],
+    workers: usize,
+) {
+    gram_q8_tiled(a, m, n, pack, qpack, g, workers, PAR_MIN_MULADDS);
+}
+
+pub(crate) fn gram_q8_tiled(
+    a: &[f32],
+    m: usize,
+    n: usize,
+    pack: &mut Vec<f64>,
+    qpack: &mut QuantMat,
+    g: &mut [f64],
+    workers: usize,
+    min_muladds: usize,
+) {
+    assert_eq!(a.len(), m * n, "gram_q8: a is not m×n");
+    assert_eq!(g.len(), n * n, "gram_q8: g is not n×n");
+    let use_simd = simd_enabled();
+    pack_transpose(a, m, n, pack);
+    quantize_rows(pack, n, m, qpack);
+    let qp: &QuantMat = qpack;
+    if workers <= 1 || n < 2 || n * (n + 1) / 2 * m < min_muladds {
+        gram_q8_rows(qp, n, 0, n, g, use_simd);
+    } else {
+        let rows_per = n.div_ceil(4 * workers).max(1);
+        let mut jobs = Vec::new();
+        let mut g_rest = &mut g[..];
+        let mut i0 = 0;
+        while i0 < n {
+            let rows = rows_per.min(n - i0);
+            let (g_t, gr) = std::mem::take(&mut g_rest).split_at_mut(rows * n);
+            g_rest = gr;
+            jobs.push((i0, g_t, rows));
+            i0 += rows;
+        }
+        crate::lift::engine::par_map(workers, jobs, |_, (i0, g_t, rows)| {
+            gram_q8_rows(qp, n, i0, rows, g_t, use_simd);
+        });
+    }
+    mirror_lower(g, n);
+}
+
+/// Upper-triangle rows `i0..i0+rows` of the quantized Gram into `g`.
+fn gram_q8_rows(qp: &QuantMat, n: usize, i0: usize, rows: usize, g: &mut [f64], use_simd: bool) {
+    debug_assert_eq!(g.len(), rows * n);
+    for i in 0..rows {
+        for j in (i0 + i)..n {
+            g[i * n + j] = q8_dot_rows(qp, i0 + i, qp, j, use_simd);
+        }
+    }
+}
+
+/// Quantized product against a transposed right operand:
+/// C (ma×mb, f64) ≈ A · Bᵀ where `qa` holds A's rows and `qb` holds B's
+/// rows (both quantized along the shared reduction dimension). The
+/// subspace iteration uses this as `Y = Xᵀ · G` with G symmetric, so
+/// "Bᵀ" costs nothing. `c` is overwritten.
+pub fn matmul_q8(qa: &QuantMat, qb: &QuantMat, c: &mut [f64]) {
+    matmul_q8_tiled(qa, qb, c, 1, usize::MAX);
+}
+
+/// [`matmul_q8`] with intra-matrix parallelism over A's row tiles.
+pub fn matmul_q8_par(qa: &QuantMat, qb: &QuantMat, c: &mut [f64], workers: usize) {
+    matmul_q8_tiled(qa, qb, c, workers, PAR_MIN_MULADDS);
+}
+
+pub(crate) fn matmul_q8_tiled(
+    qa: &QuantMat,
+    qb: &QuantMat,
+    c: &mut [f64],
+    workers: usize,
+    min_muladds: usize,
+) {
+    let (ma, mb, k) = (qa.rows, qb.rows, qa.cols);
+    assert_eq!(qa.cols, qb.cols, "matmul_q8: reduction dims differ");
+    assert_eq!(c.len(), ma * mb, "matmul_q8: c is not ma×mb");
+    let use_simd = simd_enabled();
+    if workers <= 1 || ma < 2 || ma * k * mb < min_muladds {
+        matmul_q8_rows(qa, 0, ma, qb, c, use_simd);
+        return;
+    }
+    let rows_per = ma.div_ceil(workers.min(ma));
+    let mut jobs = Vec::new();
+    let mut c_rest = c;
+    let mut i0 = 0;
+    while i0 < ma {
+        let rows = rows_per.min(ma - i0);
+        let (c_t, cr) = std::mem::take(&mut c_rest).split_at_mut(rows * mb);
+        c_rest = cr;
+        jobs.push((i0, c_t, rows));
+        i0 += rows;
+    }
+    crate::lift::engine::par_map(workers, jobs, |_, (i0, c_t, rows)| {
+        matmul_q8_rows(qa, i0, rows, qb, c_t, use_simd);
+    });
+}
+
+/// Output rows `i0..i0+rows` of the quantized A·Bᵀ product.
+fn matmul_q8_rows(
+    qa: &QuantMat,
+    i0: usize,
+    rows: usize,
+    qb: &QuantMat,
+    c: &mut [f64],
+    use_simd: bool,
+) {
+    let mb = qb.rows;
+    debug_assert_eq!(c.len(), rows * mb);
+    for i in 0..rows {
+        for j in 0..mb {
+            c[i * mb + j] = q8_dot_rows(qa, i0 + i, qb, j, use_simd);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -893,5 +1227,147 @@ mod tests {
             assert_eq!(acc.len(), n);
         }
         assert!(acc.capacity() >= 12, "accumulator arena must be retained");
+    }
+
+    // ---- quantized scan tier (ISSUE 10) ----
+
+    /// Per-entry dequantization error is bounded by half a quantization
+    /// step (scale/2 = absmax/254 per block) — the contract every
+    /// downstream tolerance builds on.
+    #[test]
+    fn quantize_roundtrip_error_is_bounded_per_block() {
+        let mut rng = Rng::new(23);
+        for (rows, cols) in [(3usize, 130usize), (1, 64), (5, 63), (4, 1), (2, 200)] {
+            let src: Vec<f64> = (0..rows * cols).map(|_| rng.normal() as f64 * 3.0).collect();
+            let mut q = QuantMat::new();
+            quantize_rows(&src, rows, cols, &mut q);
+            for i in 0..rows {
+                let sc = q.row_scales(i);
+                let qr = q.row_q(i);
+                for l in 0..cols {
+                    let s = sc[l / QBLOCK] as f64;
+                    let deq = qr[l] as f64 * s;
+                    assert!(
+                        (deq - src[i * cols + l]).abs() <= 0.5 * s + 1e-12,
+                        "({rows},{cols}) entry ({i},{l}): {deq} vs {}",
+                        src[i * cols + l]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_zeroes_nonfinite_blocks_and_entries() {
+        // block 0 holds a NaN entry among finite ones (entry-level zero),
+        // block 1 is all-zero (scale 0), block 2 holds an inf (whole
+        // block zeroed because its absmax is non-finite)
+        let cols = 3 * QBLOCK;
+        let mut src = vec![0.0f64; cols];
+        src[0] = 2.0;
+        src[1] = f64::NAN;
+        src[2 * QBLOCK] = f64::INFINITY;
+        src[2 * QBLOCK + 1] = 5.0;
+        let mut q = QuantMat::new();
+        quantize_rows(&src, 1, cols, &mut q);
+        let qr = q.row_q(0);
+        let sc = q.row_scales(0);
+        assert_eq!(qr[0], 127, "finite absmax entry quantizes to ±127");
+        assert_eq!(qr[1], 0, "NaN entry must quantize to 0");
+        assert!(sc[0] > 0.0);
+        assert_eq!(sc[1], 0.0, "all-zero block gets scale 0");
+        assert_eq!(sc[2], 0.0, "non-finite block gets scale 0");
+        assert!(qr[2 * QBLOCK..].iter().all(|&x| x == 0));
+        // and the products stay finite: dot of the row with itself
+        let d = q8_dot_rows(&q, 0, &q, 0, false);
+        assert!(d.is_finite(), "q8 dot leaked a non-finite value: {d}");
+    }
+
+    /// The int8 dots are exact integers, so scalar and SIMD must agree
+    /// BITWISE (not just to tolerance) across block-tail residues.
+    #[test]
+    fn q8_simd_matches_scalar_bitwise() {
+        let simd = simd_supported();
+        let mut rng = Rng::new(29);
+        for (m, n) in [(37usize, 12usize), (64, 3), (1, 7), (7, 1), (130, 9), (79, 5), (200, 6)] {
+            let a: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut pack = Vec::new();
+            let mut qp = QuantMat::new();
+            pack_transpose(&a, m, n, &mut pack);
+            quantize_rows(&pack, n, m, &mut qp);
+            let mut gs = vec![0.0f64; n * n];
+            let mut gv = vec![1.0f64; n * n];
+            gram_q8_rows(&qp, n, 0, n, &mut gs, false);
+            mirror_lower(&mut gs, n);
+            gram_q8_rows(&qp, n, 0, n, &mut gv, simd);
+            mirror_lower(&mut gv, n);
+            assert!(bits_eq(&gs, &gv), "q8 gram parity broke at ({m},{n})");
+        }
+        // the A·Bᵀ kernel too, with a reduction dim that leaves both a
+        // 16-lane tail and a QBLOCK tail
+        let (ma, mb, k) = (5usize, 4usize, 77usize);
+        let a: Vec<f64> = (0..ma * k).map(|_| rng.normal() as f64).collect();
+        let b: Vec<f64> = (0..mb * k).map(|_| rng.normal() as f64).collect();
+        let (mut qa, mut qb) = (QuantMat::new(), QuantMat::new());
+        quantize_rows(&a, ma, k, &mut qa);
+        quantize_rows(&b, mb, k, &mut qb);
+        let mut cs = vec![0.0f64; ma * mb];
+        let mut cv = vec![1.0f64; ma * mb];
+        matmul_q8_rows(&qa, 0, ma, &qb, &mut cs, false);
+        matmul_q8_rows(&qa, 0, ma, &qb, &mut cv, simd);
+        assert!(bits_eq(&cs, &cv), "q8 matmul parity broke");
+    }
+
+    /// Same tile-ownership contract as the f64 tier: any worker count is
+    /// bit-identical to serial (threshold forced to 0).
+    #[test]
+    fn q8_tiled_matches_serial_bitwise_for_any_worker_count() {
+        let mut rng = Rng::new(31);
+        let (m, n) = (41usize, 14usize);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut pack = Vec::new();
+        let mut qp = QuantMat::new();
+        let mut want = vec![0.0f64; n * n];
+        gram_q8(&a, m, n, &mut pack, &mut qp, &mut want);
+        for w in [1usize, 2, 3, 16] {
+            let mut g = vec![1.0f64; n * n];
+            gram_q8_tiled(&a, m, n, &mut pack, &mut qp, &mut g, w, 0);
+            assert!(bits_eq(&g, &want), "q8 gram tiling diverged at {w} workers");
+        }
+        let (ma, mb, k) = (13usize, 11usize, 70usize);
+        let av: Vec<f64> = (0..ma * k).map(|_| rng.normal() as f64).collect();
+        let bv: Vec<f64> = (0..mb * k).map(|_| rng.normal() as f64).collect();
+        let (mut qa, mut qb) = (QuantMat::new(), QuantMat::new());
+        quantize_rows(&av, ma, k, &mut qa);
+        quantize_rows(&bv, mb, k, &mut qb);
+        let mut want_c = vec![0.0f64; ma * mb];
+        matmul_q8(&qa, &qb, &mut want_c);
+        for w in [2usize, 5, 32] {
+            let mut c = vec![1.0f64; ma * mb];
+            matmul_q8_tiled(&qa, &qb, &mut c, w, 0);
+            assert!(bits_eq(&c, &want_c), "q8 matmul tiling diverged at {w} workers");
+        }
+    }
+
+    /// The quantized Gram tracks the f64 Gram to the blockwise error
+    /// bound — the numeric basis of the LIFT_QSCAN_TOL selection gate.
+    #[test]
+    fn q8_gram_tracks_f64_gram() {
+        let mut rng = Rng::new(37);
+        let (m, n) = (130usize, 9usize);
+        let a: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut pack = Vec::new();
+        let mut g64 = vec![0.0f64; n * n];
+        gram_f64(&a, m, n, &mut pack, &mut g64);
+        let mut qp = QuantMat::new();
+        let mut gq = vec![0.0f64; n * n];
+        gram_q8(&a, m, n, &mut pack, &mut qp, &mut gq);
+        let scale = g64.iter().fold(0.0f64, |s, x| s.max(x.abs()));
+        for (x, y) in gq.iter().zip(&g64) {
+            assert!(
+                (x - y).abs() <= 0.02 * scale,
+                "quantized Gram drifted: {x} vs {y} (scale {scale})"
+            );
+        }
     }
 }

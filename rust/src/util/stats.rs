@@ -22,30 +22,53 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile (nearest-rank on a sorted copy), p in [0, 100].
+/// NaN entries sort last (`total_cmp`), so low/mid percentiles of a
+/// partially-poisoned series stay finite instead of panicking.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
     s[idx.min(s.len() - 1)]
 }
 
 /// Exact k-th largest magnitude threshold: |x| >= t holds for >= k entries.
 /// O(n) average (quickselect via select_nth_unstable).
+///
+/// NaN entries rank *below every finite magnitude* (not `total_cmp`'s
+/// above-infinity slot): a diverged weight must never become the
+/// threshold, or `|x| >= NaN` would silently select nothing. With at
+/// least `k` non-NaN entries the returned threshold is always non-NaN.
 pub fn topk_abs_threshold(xs: &[f32], k: usize) -> f32 {
     assert!(k > 0 && k <= xs.len(), "k={} n={}", k, xs.len());
     let mut mags: Vec<f32> = xs.iter().map(|x| x.abs()).collect();
     let idx = xs.len() - k;
-    let (_, kth, _) = mags.select_nth_unstable_by(idx, |a, b| a.partial_cmp(b).unwrap());
+    let (_, kth, _) = mags.select_nth_unstable_by(idx, |a, b| {
+        match (a.is_nan(), b.is_nan()) {
+            (true, true) => std::cmp::Ordering::Equal,
+            (true, false) => std::cmp::Ordering::Less,
+            (false, true) => std::cmp::Ordering::Greater,
+            (false, false) => a.total_cmp(b),
+        }
+    });
     *kth
 }
 
 /// Histogram with fixed bin count over [lo, hi]; out-of-range clamps.
+/// A degenerate range (`hi <= lo`, or a non-finite width) has bin
+/// width 0 — every sample clamps into bin 0 instead of dividing by zero.
 pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
     let mut h = vec![0usize; bins];
+    if bins == 0 {
+        return h;
+    }
     let w = (hi - lo) / bins as f32;
+    if !(w > 0.0 && w.is_finite()) {
+        h[0] = xs.len();
+        return h;
+    }
     for &x in xs {
         let b = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
         h[b] += 1;
@@ -109,5 +132,38 @@ mod tests {
         assert_eq!(h.iter().sum::<usize>(), 4);
         assert_eq!(h[0], 1); // -10 clamped into first bin
         assert_eq!(h[3], 2); // 0.5 and 10 in the last bin
+    }
+
+    #[test]
+    fn percentile_survives_nan() {
+        // regression (ISSUE 10): the NaN-panicking comparator lived here
+        let xs = [5.0, f64::NAN, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 33.0), 3.0);
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        // NaN sorts last, so p100 of a poisoned series is NaN — loud
+        assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    fn topk_threshold_ranks_nan_below_finite() {
+        // regression (ISSUE 10): one NaN weight panicked the selection
+        // hot path; now NaN is the smallest magnitude
+        let xs = [1.0f32, f32::NAN, 3.0, -2.0];
+        assert_eq!(topk_abs_threshold(&xs, 2), 2.0);
+        assert_eq!(topk_abs_threshold(&xs, 3), 1.0);
+        // only when k exceeds the finite count can the threshold be NaN
+        assert!(topk_abs_threshold(&xs, 4).is_nan());
+    }
+
+    #[test]
+    fn histogram_degenerate_range() {
+        // regression (ISSUE 10): hi == lo made the bin width 0 and
+        // routed every sample through a NaN/inf cast
+        let h = histogram(&[1.0, 5.0, 5.0], 5.0, 5.0, 4);
+        assert_eq!(h, vec![3, 0, 0, 0]);
+        let h = histogram(&[1.0], 2.0, -2.0, 3); // inverted range
+        assert_eq!(h, vec![1, 0, 0]);
+        assert!(histogram(&[1.0], 0.0, 1.0, 0).is_empty());
     }
 }

@@ -849,6 +849,7 @@ fn interrupted_toy_cell_resumes_from_its_checkpoint() {
         seed: 1,
         steps: 4,
         interval: 2,
+        qscan: false,
     };
     // straight run in its own directory
     let dir_straight = tmpdir("cell_straight");

@@ -78,6 +78,16 @@ fn golden_cell_ids_are_stable_across_axis_order_permutations() {
         let ids: Vec<String> = grid.expand().iter().map(|c| c.id()).collect();
         assert_eq!(ids, golden, "axis insertion order {perm:?} moved cell ids");
     }
+    // the qscan axis (ISSUE 10) defaults off, and an EXPLICIT
+    // qscan=false axis is the same cell set: every golden id must stay
+    // byte-identical, so pre-qscan ledgers keep resolving
+    let mut grid = Grid::new(6);
+    for ax in golden_axes() {
+        grid = grid.with_axis(ax);
+    }
+    let grid = grid.with_axis(Axis::Qscan(vec![false]));
+    let ids: Vec<String> = grid.expand().iter().map(|c| c.id()).collect();
+    assert_eq!(ids, golden, "explicit qscan=false moved cell ids");
 }
 
 // ---- ledger v1 -> v2 ----------------------------------------------------

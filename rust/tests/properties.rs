@@ -651,6 +651,7 @@ fn prop_any_spec_field_change_changes_the_id() {
             seed: rng.below(64) as u64,
             steps: 1 + rng.below(64),
             interval: 1 + rng.below(64),
+            qscan: rng.below(2) == 1,
         };
         let id = base.id();
         let variants = vec![
@@ -661,6 +662,7 @@ fn prop_any_spec_field_change_changes_the_id() {
             CellSpec { seed: base.seed + 1, ..base.clone() },
             CellSpec { steps: base.steps + 1, ..base.clone() },
             CellSpec { interval: base.interval + 1, ..base.clone() },
+            CellSpec { qscan: !base.qscan, ..base.clone() },
         ];
         for v in variants {
             ensure(
@@ -669,6 +671,52 @@ fn prop_any_spec_field_change_changes_the_id() {
             )?;
         }
         Ok(())
+    });
+}
+
+#[test]
+fn prop_qscan_mask_overlap_meets_contract() {
+    // the quantized scan's documented tolerance contract
+    // (eigh::LIFT_QSCAN_TOL): across shapes, ranks, and spectral decays
+    // the int8 scan's top-k selection must overlap the f64 scan's by at
+    // least the contract floor. Override the floor with the env var
+    // LIFT_QSCAN_TOL to probe the actual margin.
+    let tol = std::env::var("LIFT_QSCAN_TOL")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(eigh::LIFT_QSCAN_TOL);
+    check("qscan selection contract", |rng| {
+        let m = 40 + rng.below(33);
+        let n = 40 + rng.below(33);
+        let r = 2 + rng.below(4);
+        // low-rank signal with a random spectral decay + small additive
+        // noise — the regime the paper's rank-reduce scan runs in
+        let qa = random_orthonormal(rng, m, r);
+        let qb = random_orthonormal(rng, n, r);
+        let decay = 0.4 + 0.05 * rng.below(10) as f64;
+        let mut a = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                let mut sv = 1.0f64;
+                for c in 0..r {
+                    acc += sv * qa[i * r + c] as f64 * qb[j * r + c] as f64;
+                    sv *= decay;
+                }
+                a[i * n + j] = acc as f32 + rng.normal() * 0.02;
+            }
+        }
+        let mut s64 = eigh::EighScratch::new();
+        let (wr64, _) = eigh::lowrank_approx_warm(&a, m, n, r, None, &mut s64);
+        let mut sq = eigh::EighScratch::new();
+        sq.set_qscan(true);
+        let (wrq, _) = eigh::lowrank_approx_warm(&a, m, n, r, None, &mut sq);
+        let k = budget_for(m, n, 2);
+        let ov = mask_overlap(&topk_indices(&wr64, k), &topk_indices(&wrq, k));
+        ensure(
+            ov >= tol,
+            format!("({m},{n}) r={r} decay={decay:.2}: qscan overlap {ov:.4} < {tol}"),
+        )
     });
 }
 
